@@ -1,0 +1,38 @@
+"""E2 — paper Figure 5: three Cauchy sub-streams (highest/lowest/middle
+median); frugal algorithms must chase each NEW distribution's quantile
+("memoryless" adaptation). Other algorithms are omitted, as in the paper.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.streams import dynamic_cauchy_stream
+from .common import frugal_run, save_result, csv_line
+from repro.core.reference import relative_mass_error
+
+
+def run(quick: bool = True, seed: int = 0):
+    n_per = 6_000 if quick else 20_000
+    stream, segs = dynamic_cauchy_stream(n_per, rng=np.random.default_rng(seed))
+    payload = {"n_per": n_per, "segments": {}}
+    lines = []
+    for q in (0.5, 0.9):
+        seg_res = {}
+        for algo in ("1u", "2u"):
+            est, trace = frugal_run(stream, q, algo, seed,
+                                    trace_every=1)
+            # error vs the CURRENT segment's own distribution at each
+            # segment end (Use-Distrib curve in the paper)
+            errs = {}
+            for s in range(3):
+                seg_items = sorted(stream[segs == s].tolist())
+                end_idx = (s + 1) * n_per - 1
+                errs[f"seg{s}_end_err"] = relative_mass_error(
+                    trace[end_idx], seg_items, q)
+            seg_res[f"frugal{algo}"] = errs
+            lines.append(csv_line(
+                f"dynamic_cauchy_q{int(q * 100)}_frugal{algo}", 0.0,
+                ";".join(f"{k}={v:+.3f}" for k, v in errs.items())))
+        payload["segments"][str(q)] = seg_res
+    save_result("e2_dynamic_cauchy", payload)
+    return lines, payload

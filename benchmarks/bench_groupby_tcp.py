@@ -1,0 +1,73 @@
+"""E3 — paper Figures 6-7: GROUPBY over 419 TCP-flow streams (sizes and
+durations), per-(site, month). Real trace [5] is offline-unavailable; the
+generator is distribution-matched (see data/streams.py + EXPERIMENTS.md).
+
+Metric: cumulative fraction of streams whose FINAL estimate is within ±0.1
+relative mass error (the paper's headline: >90% for 2U on size medians).
+
+The frugal fleet runs VECTORIZED over all groups in one [T, G] JAX pass
+(NaN-padded ragged) — the systems point of the paper; GK/q-digest/Selection
+run per-stream sequentially (they cannot vectorize).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import GroupedQuantileSketch
+from repro.core.reference import relative_mass_error
+from repro.data.streams import tcp_like_group_streams, pad_ragged
+from .common import baseline_run, save_result, csv_line, fraction_within
+
+
+def _frugal_fleet(streams, q, algo, seed=0):
+    items = pad_ragged(streams)
+    sk = GroupedQuantileSketch.create(len(streams), quantile=q, algo=algo)
+    sk = sk.process(jnp.asarray(items), jax.random.PRNGKey(seed))
+    return np.asarray(sk.m)
+
+
+def run(quick: bool = True, seed: int = 0):
+    kinds = {"size": {}, "duration": {}}
+    lines = []
+    n_sites = 30 if quick else 100
+    n_base = 40 if quick else 419  # baseline-algo subsample (python-speed)
+    for kind in kinds:
+        streams = tcp_like_group_streams(
+            num_sites=n_sites, num_months=6, kind=kind,
+            rng=np.random.default_rng(seed + hash(kind) % 100))
+        sorted_streams = [sorted(s.tolist()) for s in streams]
+        res = {}
+        for q in (0.5, 0.9):
+            qres = {}
+            for algo in ("1u", "2u"):
+                ests = _frugal_fleet(streams, q, algo, seed)
+                errs = [relative_mass_error(float(e), ss, q)
+                        for e, ss in zip(ests, sorted_streams)]
+                qres[f"frugal{algo}"] = {
+                    "frac_within_0.1": fraction_within(errs, 0.1),
+                    "frac_within_0.05": fraction_within(errs, 0.05),
+                    "n_streams": len(errs),
+                    "memory_words_per_group": 1 if algo == "1u" else 2,
+                }
+            for algo in ("gk20", "qdigest20", "selection"):
+                errs = []
+                for s, ss in zip(streams[:n_base], sorted_streams[:n_base]):
+                    est, mem = baseline_run(s, q, algo, seed)
+                    errs.append(relative_mass_error(float(est), ss, q))
+                qres[algo] = {
+                    "frac_within_0.1": fraction_within(errs, 0.1),
+                    "frac_within_0.05": fraction_within(errs, 0.05),
+                    "n_streams": len(errs),
+                    "memory_words_per_group": mem,
+                }
+            res[str(q)] = qres
+            for algo, r in qres.items():
+                lines.append(csv_line(
+                    f"tcp_{kind}_q{int(q * 100)}_{algo}", 0.0,
+                    f"frac01={r['frac_within_0.1']:.3f};"
+                    f"mem={r['memory_words_per_group']}"))
+        kinds[kind] = res
+    save_result("e3_groupby_tcp", kinds)
+    return lines, kinds

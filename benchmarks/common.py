@@ -1,0 +1,84 @@
+"""Shared benchmark machinery: algorithm battery + error metrics + timing."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.baselines import GKSummary, QDigest, Selection, Reservoir
+from repro.core.reference import (
+    frugal1u_scalar, frugal2u_scalar, relative_mass_error)
+
+ART_DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       "artifacts", "bench")
+
+
+def frugal_run(stream: np.ndarray, q: float, algo: str, seed: int = 0,
+               trace_every: Optional[int] = None):
+    """Scalar paper-faithful frugal run; returns (estimate, trace)."""
+    rng = np.random.default_rng(seed)
+    rands = rng.random(len(stream))
+    trace: List[float] = [] if trace_every else None
+    fn = frugal1u_scalar if algo == "1u" else frugal2u_scalar
+    est = fn(stream, rands, quantile=q, trace=trace)
+    if trace_every:
+        trace = trace[::trace_every]
+    return est, trace
+
+
+def baseline_run(stream: np.ndarray, q: float, algo: str, seed: int = 0):
+    if algo == "gk20":
+        a = GKSummary(eps=0.001, max_tuples=20)
+    elif algo == "qdigest20":
+        a = QDigest(sigma=int(max(np.max(stream), 2)) + 1, b=20)
+    elif algo == "selection":
+        a = Selection(quantile=q, seed=seed)
+    elif algo == "reservoir20":
+        a = Reservoir(k=20, seed=seed)
+    else:
+        raise ValueError(algo)
+    a.extend(stream)
+    return a.query(q), a.memory_words
+
+
+ALGOS = ("frugal1u", "frugal2u", "gk20", "qdigest20", "selection", "reservoir20")
+
+
+def battery(stream: np.ndarray, q: float, seed: int = 0,
+            algos=ALGOS) -> Dict[str, Dict]:
+    """Run every algorithm on one stream; relative mass error of the final
+    estimate (the paper's §7 metric)."""
+    sorted_stream = sorted(stream.tolist())
+    out = {}
+    for algo in algos:
+        t0 = time.perf_counter()
+        if algo.startswith("frugal"):
+            est, _ = frugal_run(stream, q, algo[-2:], seed)
+            mem = 1 if algo == "frugal1u" else 2
+        else:
+            est, mem = baseline_run(stream, q, algo, seed)
+        dt = time.perf_counter() - t0
+        out[algo] = {
+            "estimate": float(est),
+            "mass_error": relative_mass_error(float(est), sorted_stream, q),
+            "memory_words": int(mem),
+            "us_per_item": dt / max(len(stream), 1) * 1e6,
+        }
+    return out
+
+
+def fraction_within(errors: List[float], band: float = 0.1) -> float:
+    return float(np.mean([abs(e) <= band for e in errors]))
+
+
+def save_result(name: str, payload: Dict):
+    os.makedirs(ART_DIR, exist_ok=True)
+    with open(os.path.join(ART_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+
+
+def csv_line(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.3f},{derived}"

@@ -1,0 +1,50 @@
+"""Benchmark harness — one module per paper table/figure (see DESIGN.md §7).
+
+Prints ``name,us_per_call,derived`` CSV lines; full payloads land in
+artifacts/bench/*.json. ``--full`` uses the paper's exact stream sizes
+(minutes of CPU); default quick mode keeps CI-speed.
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale stream sizes (slow)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. e1,e6")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (
+        bench_static_cauchy, bench_dynamic_cauchy, bench_groupby_tcp,
+        bench_combined_stream, bench_groupby_twitter,
+        bench_convergence_theory, bench_kernel_throughput)
+
+    suite = {
+        "e1": ("static_cauchy (paper Fig 4)", bench_static_cauchy.run),
+        "e2": ("dynamic_cauchy (paper Fig 5)", bench_dynamic_cauchy.run),
+        "e3": ("groupby_tcp (paper Figs 6-7)", bench_groupby_tcp.run),
+        "e4": ("combined_stream (paper Figs 8-9)", bench_combined_stream.run),
+        "e5": ("groupby_twitter (paper Figs 10-11)", bench_groupby_twitter.run),
+        "e6": ("theory Thm1/Thm2 (paper §4)", bench_convergence_theory.run),
+        "e8": ("kernel_throughput (ours)", bench_kernel_throughput.run),
+    }
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    for key, (desc, fn) in suite.items():
+        if only and key not in only:
+            continue
+        t0 = time.time()
+        lines, _ = fn(quick=quick)
+        for ln in lines:
+            print(ln)
+        print(f"# {key} [{desc}] done in {time.time() - t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

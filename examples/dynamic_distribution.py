@@ -1,0 +1,34 @@
+"""The paper's "memoryless" property (Fig 5 / Fig 9): when the stream's
+distribution changes, frugal estimates chase the NEW quantile immediately —
+no window to age out, no summary to rebuild.
+
+    PYTHONPATH=src python examples/dynamic_distribution.py
+"""
+import numpy as np
+
+from repro.data.streams import dynamic_cauchy_stream
+from repro.core.reference import frugal1u_scalar, frugal2u_scalar
+
+
+def main():
+    stream, segs = dynamic_cauchy_stream(20_000, rng=np.random.default_rng(0))
+    rng = np.random.default_rng(1)
+    rands = rng.random(len(stream))
+
+    tr1, tr2 = [], []
+    frugal1u_scalar(stream, rands, quantile=0.5, trace=tr1)
+    frugal2u_scalar(stream, rands, quantile=0.5, trace=tr2)
+
+    seg_meds = [np.median(stream[segs == s]) for s in range(3)]
+    print("segment medians:", [f"{m:.0f}" for m in seg_meds])
+    print(f"{'item':>8} {'seg':>4} {'true med':>9} {'1U est':>9} {'2U est':>9}")
+    n = len(stream)
+    for i in range(n // 10 - 1, n, n // 10):
+        s = int(segs[i])
+        print(f"{i:>8} {s:>4} {seg_meds[s]:>9.0f} {tr1[i]:>9.0f} {tr2[i]:>9.0f}")
+    print("\n2U makes the 'sharp turns' of paper Fig 5; 1U leaves the "
+          "near-linear chase of paper Fig 9.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Quickstart: frugal streaming quantiles in 30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import GroupedQuantileSketch
+
+rng = np.random.default_rng(0)
+
+# ---- one stream, one word of memory (paper Algorithm 2) -------------------
+from repro.core.reference import frugal1u_scalar, relative_mass_error
+
+stream = rng.lognormal(5.0, 1.0, size=50_000)
+est = frugal1u_scalar(stream, rng.random(len(stream)), quantile=0.5)
+err = relative_mass_error(est, sorted(stream.tolist()), 0.5)
+print(f"Frugal-1U median ≈ {est:.1f}  (true {np.median(stream):.1f}, "
+      f"mass error {err:+.3f}, memory = 1 word)")
+
+# ---- a GROUPBY fleet: 10,000 streams, 2 words each (Algorithm 3) ----------
+G, T = 10_000, 3_000
+scales = rng.uniform(3.0, 8.0, G)
+items = rng.lognormal(scales[None, :], 1.0, size=(T, G)).astype(np.float32)
+
+sk = GroupedQuantileSketch.create(G, quantile=0.9, algo="2u")
+sk = sk.process(jnp.asarray(items), jax.random.PRNGKey(0))
+
+true_q90 = np.quantile(items, 0.9, axis=0)
+rel = np.abs(np.asarray(sk.m) / true_q90 - 1.0)
+print(f"Fleet of {G} q90 sketches: median |rel err| = "
+      f"{np.median(rel):.2%}, total state = {2 * G * 4 / 1024:.0f} KiB "
+      f"(a t=20 GK summary per group would need "
+      f"{60 * G * 4 / 1024 / 1024:.1f} MiB)")

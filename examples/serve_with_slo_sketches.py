@@ -1,0 +1,49 @@
+"""End-to-end serving driver: batched requests through the KV-cache engine
+with per-route frugal SLO sketches (ttft q99 / per-token q50 / output-length
+q50 — 2 words per route×metric).
+
+    PYTHONPATH=src python examples/serve_with_slo_sketches.py --requests 24
+"""
+import argparse
+
+import numpy as np
+import jax
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--slots", type=int, default=4)
+    args = ap.parse_args()
+
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.models import build_model
+    from repro.serve import ServeEngine, Request
+
+    cfg = reduce_for_smoke(get_config(args.arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, batch_slots=args.slots, max_len=128)
+
+    rng = np.random.default_rng(0)
+    routes = ["chat", "code", "batch"]
+    for i in range(args.requests):
+        plen = int(rng.integers(2, 10))
+        eng.submit(Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size, plen).tolist(),
+            max_new_tokens=int(rng.integers(4, 16)),
+            route=routes[i % len(routes)]))
+
+    ticks = eng.run_until_drained()
+    print(f"served {len(eng.done)} requests in {ticks} engine ticks "
+          f"({args.slots} slots, continuous batching)")
+    print("\nper-route SLO sketches (frugal, 2 words per route-metric):")
+    for route, s in sorted(eng.stats_summary().items()):
+        print(f"  {route:6s}  ttft_q99={s['ttft_q99_ms']:8.1f}ms  "
+              f"tok_q50={s['tok_q50_ms']:6.1f}ms  len_q50={s['len_q50']:5.1f}")
+
+
+if __name__ == "__main__":
+    main()

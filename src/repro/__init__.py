@@ -1,0 +1,17 @@
+"""repro — Frugal Streaming for Estimating Quantiles (Ma, Muthukrishnan, Sandler 2014)
+as a production-grade multi-pod JAX training/serving framework.
+
+Layers:
+  repro.core      — the paper's contribution: Frugal-1U / Frugal-2U grouped
+                    quantile sketches (+ baselines GK, q-digest, Selection).
+  repro.kernels   — Pallas TPU kernels for the sketch-ingest hot path.
+  repro.models    — 10-architecture model zoo (dense/MoE/SSM/hybrid/enc-dec/VLM).
+  repro.monitor   — frugal telemetry woven into training/serving.
+  repro.train     — fault-tolerant trainer (checkpoint/restart, elastic).
+  repro.serve     — batched KV-cache serving engine with latency sketches.
+  repro.parallel  — DP/TP/PP/EP/SP sharding rules and collectives.
+  repro.launch    — production mesh, multi-pod dry-run, train/serve drivers.
+  repro.roofline  — compiled-artifact roofline analysis.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,34 @@
+"""The paper's primary contribution: frugal streaming quantile estimation.
+
+  frugal.py     — Frugal-1U / Frugal-2U, vectorized over groups (JAX).
+  reference.py  — scalar pure-Python transcriptions (bit-exact oracles).
+  sketch.py     — GroupedQuantileSketch, the framework-facing API.
+  batched.py    — binomial batch-update extension (beyond paper).
+  baselines/    — GK, q-digest, Selection, reservoir, exact (paper §6).
+"""
+
+from .frugal import (
+    Frugal1UState,
+    Frugal2UState,
+    frugal1u_init,
+    frugal1u_process,
+    frugal1u_update,
+    frugal2u_init,
+    frugal2u_process,
+    frugal2u_update,
+)
+from .sketch import GroupedQuantileSketch
+from .batched import batched_frugal2u_update
+
+__all__ = [
+    "Frugal1UState",
+    "Frugal2UState",
+    "frugal1u_init",
+    "frugal1u_process",
+    "frugal1u_update",
+    "frugal2u_init",
+    "frugal2u_process",
+    "frugal2u_update",
+    "GroupedQuantileSketch",
+    "batched_frugal2u_update",
+]

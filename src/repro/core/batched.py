@@ -1,0 +1,120 @@
+"""Batched frugal updates — the beyond-paper extension for tensor telemetry.
+
+The paper's algorithms consume one item per tick. Inside a training step, a
+group (e.g. a channel) receives B = batch*seq items *simultaneously*; a
+sequential scan over B is O(B) serialized VPU ticks and would dominate the
+step. Footnote 2 of the paper hints at multiplicative step schedules; we go a
+different route that preserves the fixed point exactly:
+
+  Binomial drift: given current estimate m̃, count
+      n⁺ = #{s_i > m̃},   n⁻ = #{s_i < m̃}
+  The sequential algorithm would flip a q-coin for each of the n⁺ larger items
+  and a (1-q)-coin for each of the n⁻ smaller ones (to first order, while m̃
+  moves little relative to the local CDF). We therefore draw
+      U⁺ ~ Binomial(n⁺, q),   U⁻ ~ Binomial(n⁻, 1-q)
+  and apply a single √B-damped net move
+      Δ = (U⁺ − U⁻) / √B · unit
+  where `unit` is 1 for 1U / the adaptive step for 2U.
+
+Why /√B: E[U⁺−U⁻] = B·(q − F(m̃)) is the aggregate drift of B sequential
+ticks, but the sequential walk re-evaluates F(m̃) after *every* item
+(self-damping) while the batch holds m̃ fixed — applying the raw aggregate is
+an explicit-Euler step of effective size B, oscillation-unstable once
+B·f(m̃)·unit > 2 (f = local density). √B damping makes the feedback slope
+√B·f·unit ≪ 1 for realistic densities, caps per-call drift at √B·unit (burst
+robustness), and leaves equilibrium noise ≈ √(q(1-q)) per call — the same
+order as one sequential tick.
+
+Fixed point: E[Δ] = 0 ⟺ q·n⁺ = (1−q)·n⁻ ⟺ F(m̃) = q — identical to the
+paper's equilibrium (§3.2 rationale). Tests in tests/test_batched.py verify
+fixed-point agreement with the sequential oracle within the Thm-2 band.
+
+Binomial sampling uses the normal approximation with continuity correction for
+n > 16 (exact inverse-CDF bit-twiddling is wasteful on the VPU), falling back
+to a sum of Bernoullis for tiny n — both branch-free.
+"""
+from __future__ import annotations
+
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+
+from .frugal import Frugal2UState
+
+Array = jax.Array
+
+
+def _binomial_sample(key: Array, n: Array, p: Array) -> Array:
+    """Approximate Binomial(n, p) sample, shape = n.shape, branch-free.
+
+    Normal approx N(np, np(1-p)) with continuity correction, clipped to [0, n].
+    For n <= 16 the approximation error is immaterial for the sketch because
+    the drift is clipped to ±L anyway; property tests cover both regimes.
+    """
+    nf = n.astype(jnp.float32)
+    mean = nf * p
+    var = jnp.maximum(nf * p * (1.0 - p), 1e-6)
+    z = jax.random.normal(key, n.shape, dtype=jnp.float32)
+    samp = jnp.round(mean + z * jnp.sqrt(var))
+    return jnp.clip(samp, 0.0, nf)
+
+
+def batched_frugal2u_update(
+    state: Frugal2UState,
+    items: Array,          # [B, G] — B simultaneous items per group
+    key: Array,
+    quantile: Union[float, Array] = 0.5,
+    freeze_step: bool = False,
+) -> Frugal2UState:
+    """One binomial mega-tick ingesting B items/group at fixed m̃."""
+    dt = state.m.dtype
+    q = jnp.asarray(quantile, dtype=dt)
+    b = items.shape[0]
+
+    n_up = jnp.sum(items > state.m[None, :], axis=0)     # [G]
+    n_dn = jnp.sum(items < state.m[None, :], axis=0)     # [G]
+
+    k_up, k_dn = jax.random.split(key)
+    u_up = _binomial_sample(k_up, n_up, q)               # triggered increments
+    u_dn = _binomial_sample(k_dn, n_dn, 1.0 - q)         # triggered decrements
+
+    # √B damping: E[u⁺-u⁻] = B(q - F(m̃)), i.e. the *aggregate* drift of B
+    # sequential ticks — but those ticks re-evaluate F after every item
+    # (self-damping) while we hold m̃ fixed. Applying the raw aggregate is an
+    # explicit-Euler step of size B: unstable whenever B·f(m̃) > 2 (f = local
+    # density). Dividing by √B keeps the feedback slope √B·f ≪ 1 for any
+    # realistic density while preserving the fixed point E[move]=0 ⟺ F=q,
+    # and bounds the per-call drift to √B·unit (burst robustness).
+    sqrt_b = jnp.sqrt(jnp.asarray(b, jnp.float32)).astype(dt)
+    net = (u_up - u_dn) / jnp.maximum(sqrt_b, 1.0)       # [G] damped tick count
+
+    if freeze_step:
+        m = state.m + net
+        return Frugal2UState(m=m, step=state.step, sign=state.sign)
+
+    # 2U dynamics, batched: direction = sign(net); same-direction streaks grow
+    # step (additive f=1 per mega-tick), flips shrink/reset it — the batched
+    # analogue of paper lines 5 / 11-13.
+    direction = jnp.sign(net)
+    active = direction != 0
+    same_dir = (direction == state.sign) & active
+    step = jnp.where(
+        active, jnp.where(same_dir, state.step + 1.0, state.step - 1.0), state.step
+    )
+    step = jnp.where(active & (~same_dir) & (step > 1), 1.0, step)
+    unit = jnp.where(step > 0, jnp.ceil(step), 1.0)
+    m = state.m + net * unit
+
+    # Overshoot clamp to the empirical batch range (analogue of lines 7-10):
+    # never move past the most extreme item that could have triggered us.
+    hi = jnp.max(items, axis=0)
+    lo = jnp.min(items, axis=0)
+    over = (direction > 0) & (m > hi)
+    under = (direction < 0) & (m < lo)
+    step = jnp.where(over, step + (hi - m), step)
+    step = jnp.where(under, step + (m - lo), step)
+    m = jnp.where(over, hi, jnp.where(under, lo, m))
+
+    sign = jnp.where(active, jnp.where(direction > 0, 1.0, -1.0), state.sign).astype(dt)
+    return Frugal2UState(m=m, step=step.astype(dt), sign=sign)

@@ -1,0 +1,171 @@
+"""Frugal streaming quantile estimators, vectorized over groups (the paper's core).
+
+Implements, faithfully to Ma, Muthukrishnan & Sandler (2014):
+
+  * Frugal-1U  (Algorithm 2): one word of state per group.
+  * Frugal-2U  (Algorithm 3): estimate + adaptive step (+ sign bit), with the
+    paper's constant additive step function f(step) = 1.
+
+Both are written as pure-functional updates over a batch of G independent
+groups — the paper's GROUPBY setting — so state tensors have shape [G] and a
+stream tick consumes items[G] (one item per group) with uniforms rand[G].
+Sequential ingestion of a [T, G] block is a `lax.scan` of the tick.
+
+Semantics notes (kept bit-faithful to the paper's pseudocode):
+  * Algorithm 2, Frugal-1U: on item s —
+        if s > m  and rand > 1 - q:  m += 1
+        elif s < m and rand > q:     m -= 1
+  * Algorithm 3, Frugal-2U: adaptive step with overshoot clamp to the
+    triggering item (lines 7-10 / 18-21), direction-flip step reset
+    (lines 11-13 / 22-24), minimum move of 1 while step <= 0, and the applied
+    move ⌈step⌉. `sign` ∈ {+1, -1}.
+  * Estimates may leave the value domain (rank-quantile semantics, paper §2).
+
+All updates are branch-free `jnp.where` selects — one compare/select bundle
+per group per tick — which is exactly the VPU-friendly form the Pallas kernel
+(repro.kernels.frugal_update) implements with VMEM-resident state.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+ArrayLike = Union[Array, float, int]
+
+
+class Frugal1UState(NamedTuple):
+    """One unit of memory per group (paper Algorithm 1/2)."""
+
+    m: Array  # [G] quantile estimate
+
+
+class Frugal2UState(NamedTuple):
+    """Two units of memory (+ sign bit) per group (paper Algorithm 3)."""
+
+    m: Array     # [G] quantile estimate
+    step: Array  # [G] adaptive step size
+    sign: Array  # [G] +1 / -1 direction of last update
+
+
+def frugal1u_init(num_groups: int, init: ArrayLike = 0.0, dtype=jnp.float32) -> Frugal1UState:
+    """Paper initializes m̃ = 0; `init` may also be the first stream item (§5)."""
+    m = jnp.broadcast_to(jnp.asarray(init, dtype=dtype), (num_groups,)).astype(dtype)
+    return Frugal1UState(m=m)
+
+
+def frugal2u_init(num_groups: int, init: ArrayLike = 0.0, dtype=jnp.float32) -> Frugal2UState:
+    m = jnp.broadcast_to(jnp.asarray(init, dtype=dtype), (num_groups,)).astype(dtype)
+    return Frugal2UState(m=m, step=jnp.ones_like(m), sign=jnp.ones_like(m))
+
+
+def frugal1u_update(
+    state: Frugal1UState,
+    items: Array,
+    rand: Array,
+    quantile: ArrayLike = 0.5,
+) -> Frugal1UState:
+    """One stream tick of Frugal-1U for every group (paper Algorithm 2).
+
+    Args:
+      state: current estimates, shape [G].
+      items: one stream item per group, shape [G].
+      rand:  uniforms in [0, 1), shape [G].
+      quantile: target h/k in (0, 1); scalar or per-group [G].
+    """
+    q = jnp.asarray(quantile, dtype=state.m.dtype)
+    up = (items > state.m) & (rand > 1.0 - q)
+    down = (items < state.m) & (rand > q)
+    m = state.m + up.astype(state.m.dtype) - down.astype(state.m.dtype)
+    return Frugal1UState(m=m)
+
+
+def frugal2u_update(
+    state: Frugal2UState,
+    items: Array,
+    rand: Array,
+    quantile: ArrayLike = 0.5,
+) -> Frugal2UState:
+    """One stream tick of Frugal-2U for every group (paper Algorithm 3, f(step)=1).
+
+    Branch-free transcription; the two branches (lines 4-14 and 15-26) are
+    computed and selected with masks. Overshoot clamp keeps the estimate
+    inside the empirical domain when step has grown large.
+    """
+    dt = state.m.dtype
+    one = jnp.ones((), dt)
+    q = jnp.asarray(quantile, dtype=dt)
+
+    up = (items > state.m) & (rand > 1.0 - q)
+    down = (items < state.m) & (rand > q)
+
+    # ---- increment branch (paper lines 4-14) ----
+    step_u = state.step + jnp.where(state.sign > 0, one, -one)          # line 5
+    m_u = state.m + jnp.where(step_u > 0, jnp.ceil(step_u), one)        # line 6
+    osh_u = m_u > items                                                 # line 7
+    step_u = jnp.where(osh_u, step_u + (items - m_u), step_u)           # line 8
+    m_u = jnp.where(osh_u, items, m_u)                                  # line 9
+    step_u = jnp.where((state.sign < 0) & (step_u > 1), one, step_u)    # lines 11-13
+
+    # ---- decrement branch (paper lines 15-26) ----
+    step_d = state.step + jnp.where(state.sign < 0, one, -one)          # line 16
+    m_d = state.m - jnp.where(step_d > 0, jnp.ceil(step_d), one)        # line 17
+    osh_d = m_d < items                                                 # line 18
+    step_d = jnp.where(osh_d, step_d + (m_d - items), step_d)           # line 19
+    m_d = jnp.where(osh_d, items, m_d)                                  # line 20
+    step_d = jnp.where((state.sign > 0) & (step_d > 1), one, step_d)    # lines 22-24
+
+    m = jnp.where(up, m_u, jnp.where(down, m_d, state.m))
+    step = jnp.where(up, step_u, jnp.where(down, step_d, state.step))
+    sign = jnp.where(up, one, jnp.where(down, -one, state.sign))
+    return Frugal2UState(m=m, step=step, sign=sign)
+
+
+def _uniforms(key: Array, shape) -> Array:
+    return jax.random.uniform(key, shape, dtype=jnp.float32)
+
+
+def frugal1u_process(
+    state: Frugal1UState,
+    items: Array,
+    key: Optional[Array] = None,
+    rand: Optional[Array] = None,
+    quantile: ArrayLike = 0.5,
+    return_trace: bool = False,
+) -> Tuple[Frugal1UState, Optional[Array]]:
+    """Sequentially ingest a [T, G] block (scan of ticks). Provide `key` or `rand`."""
+    if rand is None:
+        assert key is not None, "need key or rand"
+        rand = _uniforms(key, items.shape)
+
+    def tick(s, xs):
+        it, rn = xs
+        s2 = frugal1u_update(s, it, rn, quantile)
+        return s2, (s2.m if return_trace else None)
+
+    state, trace = jax.lax.scan(tick, state, (items, rand))
+    return state, trace
+
+
+def frugal2u_process(
+    state: Frugal2UState,
+    items: Array,
+    key: Optional[Array] = None,
+    rand: Optional[Array] = None,
+    quantile: ArrayLike = 0.5,
+    return_trace: bool = False,
+) -> Tuple[Frugal2UState, Optional[Array]]:
+    """Sequentially ingest a [T, G] block (scan of ticks). Provide `key` or `rand`."""
+    if rand is None:
+        assert key is not None, "need key or rand"
+        rand = _uniforms(key, items.shape)
+
+    def tick(s, xs):
+        it, rn = xs
+        s2 = frugal2u_update(s, it, rn, quantile)
+        return s2, (s2.m if return_trace else None)
+
+    state, trace = jax.lax.scan(tick, state, (items, rand))
+    return state, trace

@@ -1,0 +1,128 @@
+"""GroupedQuantileSketch — the framework-facing API over Frugal-1U/2U.
+
+A sketch is a pytree of [G]-shaped arrays (1 or 2 words per group, exactly as
+the paper prescribes) plus static metadata. It is:
+
+  * vmappable / pjit-shardable: G lives on the mesh ('pod','data') axes so a
+    fleet of millions of groups costs G * 2 words total, partitioned;
+  * updatable inside a jitted train/serve step (pure function of state);
+  * NOT mergeable: frugal sketches have no merge operator (unlike GK /
+    q-digest). The framework therefore *partitions* groups across hosts and
+    never replicates a sketch — see repro/monitor for the wiring.
+
+Ingestion modes:
+  * `update(items[G], rand[G])`          — one item per group (paper setting);
+  * `process(items[T, G], key)`          — T sequential ticks (lax.scan);
+  * `ingest_tensor(x[T, G], key, ...)`   — batched binomial update (beyond-paper
+    extension, repro.core.batched) for tensor telemetry where T items per
+    group arrive simultaneously each step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from . import frugal
+from .batched import batched_frugal2u_update
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GroupedQuantileSketch:
+    """Per-group streaming quantile state (1 or 2 memory words per group)."""
+
+    # --- dynamic (pytree leaves) ---
+    m: Array                      # [G] estimate
+    step: Optional[Array]         # [G] (2U only)
+    sign: Optional[Array]         # [G] (2U only)
+    quantile: Array               # scalar or [G] target h/k
+    # --- static ---
+    algo: str = dataclasses.field(metadata=dict(static=True), default="2u")
+
+    @property
+    def num_groups(self) -> int:
+        return self.m.shape[0]
+
+    @property
+    def estimate(self) -> Array:
+        """Current quantile estimates, shape [G]."""
+        return self.m
+
+    def memory_words(self) -> int:
+        """Persistent words per group — 1 (1U) or 2 (2U, sign is a bit)."""
+        return 1 if self.algo == "1u" else 2
+
+    # ------------------------------------------------------------------ init
+    @staticmethod
+    def create(
+        num_groups: int,
+        quantile: Union[float, Array] = 0.5,
+        algo: str = "2u",
+        init: Union[float, Array] = 0.0,
+        dtype=jnp.float32,
+    ) -> "GroupedQuantileSketch":
+        if algo not in ("1u", "2u"):
+            raise ValueError(f"algo must be '1u' or '2u', got {algo!r}")
+        m = jnp.broadcast_to(jnp.asarray(init, dtype), (num_groups,)).astype(dtype)
+        q = jnp.asarray(quantile, dtype)
+        if algo == "1u":
+            return GroupedQuantileSketch(m=m, step=None, sign=None, quantile=q, algo="1u")
+        return GroupedQuantileSketch(
+            m=m, step=jnp.ones_like(m), sign=jnp.ones_like(m), quantile=q, algo="2u"
+        )
+
+    # ---------------------------------------------------------------- update
+    def _as_state(self):
+        if self.algo == "1u":
+            return frugal.Frugal1UState(self.m)
+        return frugal.Frugal2UState(self.m, self.step, self.sign)
+
+    def _with_state(self, st) -> "GroupedQuantileSketch":
+        if self.algo == "1u":
+            return dataclasses.replace(self, m=st.m)
+        return dataclasses.replace(self, m=st.m, step=st.step, sign=st.sign)
+
+    def update(self, items: Array, rand: Array) -> "GroupedQuantileSketch":
+        """One tick: one item per group. items/rand shape [G]."""
+        if self.algo == "1u":
+            st = frugal.frugal1u_update(self._as_state(), items, rand, self.quantile)
+        else:
+            st = frugal.frugal2u_update(self._as_state(), items, rand, self.quantile)
+        return self._with_state(st)
+
+    def process(self, items: Array, key: Array) -> "GroupedQuantileSketch":
+        """Sequential ingest of [T, G] (paper-exact semantics, lax.scan)."""
+        if self.algo == "1u":
+            st, _ = frugal.frugal1u_process(self._as_state(), items, key=key, quantile=self.quantile)
+        else:
+            st, _ = frugal.frugal2u_process(self._as_state(), items, key=key, quantile=self.quantile)
+        return self._with_state(st)
+
+    def ingest_tensor(self, x: Array, key: Array, group_axis: int = -1) -> "GroupedQuantileSketch":
+        """Batched binomial update from an arbitrary tensor (beyond-paper ext).
+
+        All axes except `group_axis` are flattened into the per-group item
+        batch. Designed for activation/grad telemetry inside train_step:
+        one vectorized reduction, no T-long scan.
+        """
+        x = jnp.moveaxis(x, group_axis, -1)
+        x = x.reshape(-1, x.shape[-1])  # [B, G]
+        if self.algo == "1u":
+            # 1U batched = 2U batched with step frozen at 1.
+            st2 = frugal.Frugal2UState(self.m, jnp.ones_like(self.m), jnp.ones_like(self.m))
+            st2 = batched_frugal2u_update(st2, x, key, self.quantile, freeze_step=True)
+            return dataclasses.replace(self, m=st2.m)
+        st = batched_frugal2u_update(self._as_state(), x, key, self.quantile)
+        return self._with_state(st)
+
+
+@partial(jax.jit, static_argnames=("algo",))
+def sketch_update_jit(sk: GroupedQuantileSketch, items: Array, rand: Array, algo: str = "2u"):
+    del algo
+    return sk.update(items, rand)

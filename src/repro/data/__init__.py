@@ -1,0 +1,15 @@
+"""Data substrate: paper stream generators + LM token pipeline."""
+
+from .streams import (
+    cauchy_stream,
+    dynamic_cauchy_stream,
+    tcp_like_group_streams,
+    twitter_like_interval_streams,
+)
+
+__all__ = [
+    "cauchy_stream",
+    "dynamic_cauchy_stream",
+    "tcp_like_group_streams",
+    "twitter_like_interval_streams",
+]

@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the frugal-sketch hot path.
+
+  frugal_update.py — pl.pallas_call kernels (grouped Frugal-1U/2U, VMEM-
+                     resident state, sequential-T/parallel-G grid).
+  ops.py           — jit'd wrappers: padding, dtype, interpret selection.
+  ref.py           — pure-jnp lax.scan oracles for bit-exact validation.
+"""
+
+from .ops import (
+    frugal1u_update_blocked,
+    frugal2u_update_blocked,
+    frugal1u_update_auto,
+    frugal2u_update_auto,
+)
+
+__all__ = [
+    "frugal1u_update_blocked",
+    "frugal2u_update_blocked",
+    "frugal1u_update_auto",
+    "frugal2u_update_auto",
+]

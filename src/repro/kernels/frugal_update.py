@@ -1,0 +1,187 @@
+"""Pallas TPU kernels for grouped frugal quantile updates (the hot path).
+
+TPU-native layout (see DESIGN.md §3): groups ride the 128-lane minor
+dimension; the serial dependence on m̃ runs as a fori_loop over the T stream
+ticks *inside* the kernel while per-group state stays resident in VMEM.
+HBM traffic is the unavoidable O(T·G·4B) item streaming plus O(G) state i/o —
+i.e. the kernel sits on the memory roofline by construction.
+
+Grid: (G_blocks, T_blocks). The T dimension is a sequential revisit of the
+same state block ("arbitrary" semantics); the G dimension is parallel.
+State blocks are [1, BG] 2-D tiles (TPU prefers >=2-D); item/rand blocks are
+[BT, BG].
+
+Padding contract (see ops.py): G is padded with anything (state lanes are
+dropped on return); T is padded with NaN items — NaN compares False in both
+directions, so a padded tick is a natural no-op, bit-identical to not
+ingesting it.
+
+Quantile is a [1, G] VMEM operand (not SMEM scalar) so per-group targets are
+supported for free — a fleet can track q50 for some groups and q99 for others
+in one call (used by repro.monitor).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------- bodies
+def _tick_1u(m, s, r, q):
+    """One Frugal-1U tick, vectorized over the lane dim (paper Alg. 2)."""
+    up = (s > m) & (r > 1.0 - q)
+    down = (s < m) & (r > q)
+    return m + up.astype(m.dtype) - down.astype(m.dtype)
+
+
+def _tick_2u(m, step, sign, s, r, q):
+    """One Frugal-2U tick, vectorized over the lane dim (paper Alg. 3)."""
+    one = jnp.ones((), m.dtype)
+    up = (s > m) & (r > 1.0 - q)
+    down = (s < m) & (r > q)
+
+    step_u = step + jnp.where(sign > 0, one, -one)
+    m_u = m + jnp.where(step_u > 0, jnp.ceil(step_u), one)
+    osh_u = m_u > s
+    step_u = jnp.where(osh_u, step_u + (s - m_u), step_u)
+    m_u = jnp.where(osh_u, s, m_u)
+    step_u = jnp.where((sign < 0) & (step_u > 1), one, step_u)
+
+    step_d = step + jnp.where(sign < 0, one, -one)
+    m_d = m - jnp.where(step_d > 0, jnp.ceil(step_d), one)
+    osh_d = m_d < s
+    step_d = jnp.where(osh_d, step_d + (m_d - s), step_d)
+    m_d = jnp.where(osh_d, s, m_d)
+    step_d = jnp.where((sign > 0) & (step_d > 1), one, step_d)
+
+    m2 = jnp.where(up, m_u, jnp.where(down, m_d, m))
+    step2 = jnp.where(up, step_u, jnp.where(down, step_d, step))
+    sign2 = jnp.where(up, one, jnp.where(down, -one, sign))
+    return m2, step2, sign2
+
+
+# -------------------------------------------------------------------- kernels
+def _frugal1u_kernel(q_ref, items_ref, rand_ref, m_in_ref, m_out_ref, *, block_t):
+    t_blk = pl.program_id(1)
+
+    @pl.when(t_blk == 0)
+    def _seed():
+        m_out_ref[...] = m_in_ref[...]
+
+    q = q_ref[0, :]
+
+    def body(i, m):
+        return _tick_1u(m, items_ref[i, :], rand_ref[i, :], q)
+
+    m = jax.lax.fori_loop(0, block_t, body, m_out_ref[0, :])
+    m_out_ref[0, :] = m
+
+
+def _frugal2u_kernel(
+    q_ref, items_ref, rand_ref, m_in_ref, step_in_ref, sign_in_ref,
+    m_out_ref, step_out_ref, sign_out_ref, *, block_t,
+):
+    t_blk = pl.program_id(1)
+
+    @pl.when(t_blk == 0)
+    def _seed():
+        m_out_ref[...] = m_in_ref[...]
+        step_out_ref[...] = step_in_ref[...]
+        sign_out_ref[...] = sign_in_ref[...]
+
+    q = q_ref[0, :]
+
+    def body(i, carry):
+        m, step, sign = carry
+        return _tick_2u(m, step, sign, items_ref[i, :], rand_ref[i, :], q)
+
+    m, step, sign = jax.lax.fori_loop(
+        0, block_t, body, (m_out_ref[0, :], step_out_ref[0, :], sign_out_ref[0, :])
+    )
+    m_out_ref[0, :] = m
+    step_out_ref[0, :] = step
+    sign_out_ref[0, :] = sign
+
+
+# ------------------------------------------------------------------ callables
+def frugal1u_pallas(
+    items: Array,   # [T, G] float32 (NaN = no-op tick)
+    rand: Array,    # [T, G] float32 uniforms
+    m: Array,       # [G] float32
+    quantile: Array,  # [G] float32
+    *,
+    block_g: int = 128,
+    block_t: int = 256,
+    interpret: bool = False,
+) -> Array:
+    """Grouped Frugal-1U over a [T, G] item block. Returns updated m [G].
+
+    Shapes must be pre-padded: T % block_t == 0, G % block_g == 0
+    (ops.py handles padding & unpadding).
+    """
+    t, g = items.shape
+    assert t % block_t == 0 and g % block_g == 0, (t, g, block_t, block_g)
+    grid = (g // block_g, t // block_t)
+
+    out = pl.pallas_call(
+        functools.partial(_frugal1u_kernel, block_t=block_t),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_g), lambda gi, ti: (0, gi)),      # quantile
+            pl.BlockSpec((block_t, block_g), lambda gi, ti: (ti, gi)),  # items
+            pl.BlockSpec((block_t, block_g), lambda gi, ti: (ti, gi)),  # rand
+            pl.BlockSpec((1, block_g), lambda gi, ti: (0, gi)),      # m in
+        ],
+        out_specs=pl.BlockSpec((1, block_g), lambda gi, ti: (0, gi)),
+        out_shape=jax.ShapeDtypeStruct((1, g), m.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(quantile[None, :], items, rand, m[None, :])
+    return out[0]
+
+
+def frugal2u_pallas(
+    items: Array,     # [T, G] float32 (NaN = no-op tick)
+    rand: Array,      # [T, G] float32 uniforms
+    m: Array,         # [G] float32
+    step: Array,      # [G] float32
+    sign: Array,      # [G] float32 (+1/-1)
+    quantile: Array,  # [G] float32
+    *,
+    block_g: int = 128,
+    block_t: int = 256,
+    interpret: bool = False,
+):
+    """Grouped Frugal-2U over a [T, G] item block. Returns (m, step, sign)."""
+    t, g = items.shape
+    assert t % block_t == 0 and g % block_g == 0, (t, g, block_t, block_g)
+    grid = (g // block_g, t // block_t)
+
+    state_spec = pl.BlockSpec((1, block_g), lambda gi, ti: (0, gi))
+    stream_spec = pl.BlockSpec((block_t, block_g), lambda gi, ti: (ti, gi))
+
+    m2, step2, sign2 = pl.pallas_call(
+        functools.partial(_frugal2u_kernel, block_t=block_t),
+        grid=grid,
+        in_specs=[state_spec, stream_spec, stream_spec,
+                  state_spec, state_spec, state_spec],
+        out_specs=[state_spec, state_spec, state_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, g), m.dtype),
+            jax.ShapeDtypeStruct((1, g), step.dtype),
+            jax.ShapeDtypeStruct((1, g), sign.dtype),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(quantile[None, :], items, rand, m[None, :], step[None, :], sign[None, :])
+    return m2[0], step2[0], sign2[0]

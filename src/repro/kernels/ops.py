@@ -1,0 +1,110 @@
+"""Jit'd public wrappers around the Pallas frugal kernels.
+
+Handles:
+  * padding G up to the lane block (extra lanes carry dummy state, dropped on
+    return) and T up to the tick block (padded ticks are NaN items = no-ops);
+  * dtype management (items/rand cast to the state dtype inside);
+  * interpret-mode selection: on CPU (no TPU) the kernels run in
+    ``interpret=True`` so the whole framework works end-to-end off-TPU.
+
+The `*_auto` entry points pick Pallas on TPU and the pure-jnp reference
+elsewhere unless forced — monitors call these.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .frugal_update import frugal1u_pallas, frugal2u_pallas
+
+Array = jax.Array
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:  # pragma: no cover - device init failure
+        return False
+
+
+def _pad_stream(items: Array, rand: Array, block_t: int, block_g: int):
+    t, g = items.shape
+    tp = (-t) % block_t
+    gp = (-g) % block_g
+    if tp or gp:
+        items = jnp.pad(items, ((0, tp), (0, gp)), constant_values=jnp.nan)
+        rand = jnp.pad(rand, ((0, tp), (0, gp)), constant_values=0.5)
+    return items, rand
+
+
+def _pad_state(x: Array, block_g: int, fill: float):
+    g = x.shape[0]
+    gp = (-g) % block_g
+    if gp:
+        x = jnp.pad(x, (0, gp), constant_values=fill)
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("block_g", "block_t", "interpret"))
+def frugal1u_update_blocked(
+    items: Array, rand: Array, m: Array, quantile: Array,
+    *, block_g: int = 128, block_t: int = 256, interpret: bool = True,
+) -> Array:
+    """Frugal-1U over a [T, G] block via the Pallas kernel. Returns m [G]."""
+    g = m.shape[0]
+    dt = m.dtype
+    items = items.astype(dt)
+    rand = rand.astype(dt)
+    quantile = jnp.broadcast_to(jnp.asarray(quantile, dt), (g,))
+    items, rand = _pad_stream(items, rand, block_t, block_g)
+    m_p = _pad_state(m, block_g, 0.0)
+    q_p = _pad_state(quantile, block_g, 0.5)
+    out = frugal1u_pallas(items, rand, m_p, q_p,
+                          block_g=block_g, block_t=block_t, interpret=interpret)
+    return out[:g]
+
+
+@functools.partial(jax.jit, static_argnames=("block_g", "block_t", "interpret"))
+def frugal2u_update_blocked(
+    items: Array, rand: Array, m: Array, step: Array, sign: Array, quantile: Array,
+    *, block_g: int = 128, block_t: int = 256, interpret: bool = True,
+):
+    """Frugal-2U over a [T, G] block via the Pallas kernel.
+
+    Returns (m, step, sign), each [G].
+    """
+    g = m.shape[0]
+    dt = m.dtype
+    items = items.astype(dt)
+    rand = rand.astype(dt)
+    quantile = jnp.broadcast_to(jnp.asarray(quantile, dt), (g,))
+    items, rand = _pad_stream(items, rand, block_t, block_g)
+    m_p = _pad_state(m, block_g, 0.0)
+    step_p = _pad_state(step, block_g, 1.0)
+    sign_p = _pad_state(sign, block_g, 1.0)
+    q_p = _pad_state(quantile, block_g, 0.5)
+    m2, step2, sign2 = frugal2u_pallas(
+        items, rand, m_p, step_p, sign_p, q_p,
+        block_g=block_g, block_t=block_t, interpret=interpret)
+    return m2[:g], step2[:g], sign2[:g]
+
+
+def frugal1u_update_auto(items, rand, m, quantile, **kw):
+    """Pallas on TPU, jnp reference elsewhere (same semantics either way)."""
+    if _on_tpu():
+        return frugal1u_update_blocked(items, rand, m, quantile,
+                                       interpret=False, **kw)
+    q = jnp.broadcast_to(jnp.asarray(quantile, m.dtype), m.shape)
+    return ref.frugal1u_ref(items.astype(m.dtype), rand.astype(m.dtype), m, q)
+
+
+def frugal2u_update_auto(items, rand, m, step, sign, quantile, **kw):
+    if _on_tpu():
+        return frugal2u_update_blocked(items, rand, m, step, sign, quantile,
+                                       interpret=False, **kw)
+    q = jnp.broadcast_to(jnp.asarray(quantile, m.dtype), m.shape)
+    return ref.frugal2u_ref(items.astype(m.dtype), rand.astype(m.dtype),
+                            m, step, sign, q)

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the Pallas kernels (required ref.py).
+
+Straight lax.scan transcriptions of the paper's algorithms — no Pallas, no
+blocking — used by the kernel test sweep for bit-exact comparison (both sides
+consume the same fed-in uniforms).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def frugal1u_ref(items: Array, rand: Array, m: Array, quantile: Array) -> Array:
+    """[T, G] sequential Frugal-1U; returns updated m [G]."""
+
+    def tick(m, xs):
+        s, r = xs
+        up = (s > m) & (r > 1.0 - quantile)
+        down = (s < m) & (r > quantile)
+        return m + up.astype(m.dtype) - down.astype(m.dtype), None
+
+    m, _ = jax.lax.scan(tick, m, (items, rand))
+    return m
+
+
+def frugal2u_ref(
+    items: Array, rand: Array, m: Array, step: Array, sign: Array, quantile: Array
+):
+    """[T, G] sequential Frugal-2U; returns (m, step, sign)."""
+    one = jnp.ones((), m.dtype)
+
+    def tick(carry, xs):
+        m, step, sign = carry
+        s, r = xs
+        up = (s > m) & (r > 1.0 - quantile)
+        down = (s < m) & (r > quantile)
+
+        step_u = step + jnp.where(sign > 0, one, -one)
+        m_u = m + jnp.where(step_u > 0, jnp.ceil(step_u), one)
+        osh_u = m_u > s
+        step_u = jnp.where(osh_u, step_u + (s - m_u), step_u)
+        m_u = jnp.where(osh_u, s, m_u)
+        step_u = jnp.where((sign < 0) & (step_u > 1), one, step_u)
+
+        step_d = step + jnp.where(sign < 0, one, -one)
+        m_d = m - jnp.where(step_d > 0, jnp.ceil(step_d), one)
+        osh_d = m_d < s
+        step_d = jnp.where(osh_d, step_d + (m_d - s), step_d)
+        m_d = jnp.where(osh_d, s, m_d)
+        step_d = jnp.where((sign > 0) & (step_d > 1), one, step_d)
+
+        m2 = jnp.where(up, m_u, jnp.where(down, m_d, m))
+        step2 = jnp.where(up, step_u, jnp.where(down, step_d, step))
+        sign2 = jnp.where(up, one, jnp.where(down, -one, sign))
+        return (m2, step2, sign2), None
+
+    (m, step, sign), _ = jax.lax.scan(tick, (m, step, sign), (items, rand))
+    return m, step, sign

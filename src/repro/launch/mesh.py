@@ -1,0 +1,47 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; 'pod' is the DCN axis
+(data parallel across pods; gradient all-reduce is hierarchical: reduce-
+scatter over ICI 'data', all-reduce over DCN 'pod').
+
+Functions, never module-level constants — importing this module must not
+touch jax device state (device count is locked at first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 512 if multi_pod else 256
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"production mesh needs {n} devices, found {len(devices)} — "
+            "the dry-run launcher must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before any "
+            "jax import")
+    import numpy as np
+    return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)
+
+
+def make_test_mesh(n_devices: int | None = None):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = n_devices or len(jax.devices())
+    model = 1
+    for cand in (4, 2, 1):
+        if n % cand == 0:
+            model = cand
+            break
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def mesh_info(mesh) -> dict:
+    return {
+        "axes": dict(mesh.shape),
+        "n_devices": mesh.size,
+        "multi_pod": "pod" in mesh.shape,
+    }

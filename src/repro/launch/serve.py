@@ -1,0 +1,45 @@
+"""Serving driver (CPU-real, reduced config) — see also launch/dryrun.py for
+the full-config decode_32k / long_500k lowering.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --requests 16
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    import numpy as np
+    import jax
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.models import build_model
+    from repro.serve import ServeEngine, Request
+
+    cfg = reduce_for_smoke(get_config(args.arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, batch_slots=args.slots, max_len=128,
+                      temperature=args.temperature)
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        eng.submit(Request(
+            rid=i, prompt=rng.integers(0, cfg.vocab_size, 4).tolist(),
+            max_new_tokens=args.max_new, route="default"))
+    ticks = eng.run_until_drained()
+    print(json.dumps({
+        "arch": args.arch, "served": len(eng.done), "ticks": ticks,
+        "stats": eng.stats_summary(),
+    }, indent=1))
+
+
+if __name__ == "__main__":
+    main()

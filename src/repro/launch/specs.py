@@ -1,0 +1,205 @@
+"""input_specs + lowering targets for every (arch × shape) dry-run cell.
+
+ShapeDtypeStruct stand-ins only — weak-type-correct, shardable, zero device
+allocation. Shapes per the assignment:
+
+  train_4k     seq 4,096   global_batch 256   (train_step)
+  prefill_32k  seq 32,768  global_batch 32    (prefill forward, last-token logits)
+  decode_32k   seq 32,768  global_batch 128   (serve_step, KV cache of 32k)
+  long_500k    seq 524,288 global_batch 1     (serve_step; SSM/hybrid only)
+
+Modality stubs: whisper gets precomputed frame embeddings [B, S_enc, D];
+qwen2-vl text path carries 3-D M-RoPE position ids (vision patches would
+supply real (t,h,w) ids — backbone compute identical).
+
+Skip table (recorded in DESIGN.md §Arch-applicability + EXPERIMENTS.md):
+  long_500k  -> pure full-attention archs skipped (quadratic); runs for
+                zamba2-2.7b, rwkv6-1.6b.
+  whisper    -> prefill_32k = 32k-frame encoder pass + 448-token decoder;
+                decode_32k  = decoder step with a 32k self-attn cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import build_model
+
+SDS = jax.ShapeDtypeStruct
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32_768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32_768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524_288, batch=1, kind="decode"),
+}
+
+LONG_CAPABLE = {"zamba2-2.7b", "rwkv6-1.6b"}
+
+# §Perf hillclimb variants: name -> config overrides (see EXPERIMENTS.md §Perf)
+VARIANTS = {
+    "baseline": {},
+    # H1: rwkv6 memory
+    "rwkv_factorized": {"rwkv_factorized": True},
+    "rwkv_factorized_u8": {"rwkv_factorized": True, "rwkv_subchunk": 8},
+    "rwkv_factorized_u32": {"rwkv_factorized": True, "rwkv_subchunk": 32},
+    # H2: yi-6b collectives
+    "onehot_xent": {"onehot_xent": True},
+    "seq_residual": {"seq_sharded_residual": True},
+    "vocab_nofsdp": {"exclude_vocab_fsdp": True},           # sharding-level
+    "h2_combo": {"seq_sharded_residual": True, "exclude_vocab_fsdp": True},
+    # H3: gemma2 local attention
+    "blocked_local": {"local_block_attn": True},
+    "local_decode_slice": {"local_decode_slice": True},
+    # iteration-2 combos
+    "h1_combo": {"rwkv_factorized": True, "seq_sharded_residual": True,
+                 "exclude_vocab_fsdp": True},
+    "h3_combo": {"local_block_attn": True, "seq_sharded_residual": True,
+                 "exclude_vocab_fsdp": True},
+}
+
+
+def cell_supported(arch: str, shape: str) -> Tuple[bool, str]:
+    cfg = get_config(arch)
+    if shape == "long_500k" and cfg.name not in LONG_CAPABLE:
+        return False, ("full quadratic attention at 524k decode is infeasible "
+                       "by design; sub-quadratic archs only (see DESIGN.md)")
+    return True, ""
+
+
+def _tok(b, s):
+    return SDS((b, s), jnp.int32)
+
+
+def input_specs(arch: str, shape: str) -> Dict[str, Any]:
+    """Abstract batch for the given cell (training batch or serve operands)."""
+    cfg = get_config(arch)
+    p = SHAPES[shape]
+    b, s = p["batch"], p["seq"]
+    if p["kind"] == "train":
+        if cfg.is_encdec:
+            return {"frames": SDS((b, s, cfg.d_model), jnp.bfloat16),
+                    "tokens": _tok(b, 448), "targets": _tok(b, 448)}
+        batch = {"tokens": _tok(b, s), "targets": _tok(b, s)}
+        if cfg.pos_type == "mrope":
+            batch["positions"] = SDS((b, 3, s), jnp.int32)
+        return batch
+    if p["kind"] == "prefill":
+        if cfg.is_encdec:
+            return {"frames": SDS((b, s, cfg.d_model), jnp.bfloat16),
+                    "tokens": _tok(b, 448)}
+        batch = {"tokens": _tok(b, s)}
+        if cfg.pos_type == "mrope":
+            batch["positions"] = SDS((b, 3, s), jnp.int32)
+        return batch
+    # decode: one new token against a cache of length s
+    return {"tokens": _tok(b, 1), "pos": SDS((), jnp.int32)}
+
+
+def abstract_params(model):
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def abstract_caches(model, cfg, batch: int, max_len: int):
+    def build():
+        return model.init_cache(batch, max_len, jnp.bfloat16)
+    return jax.eval_shape(build)
+
+
+def probe_overrides(cfg, shape: str, n_units: int,
+                    one_chunk: bool = True) -> dict:
+    """Config overrides for the shallow UNROLLED cost probes (XLA counts
+    while-loop bodies once; probes have trip-count-1 loops everywhere so
+    cost_analysis is exact, then dryrun extrapolates linearly in depth).
+
+    one_chunk=True  -> attention in a single chunk (FLOPs-exact probes; the
+                       S² score tensor is symbolic only — never allocated).
+    one_chunk=False -> PRODUCTION chunk sizes (collective-exact probes: the
+                       chunked-attention kv scan contains no collectives, so
+                       per-layer collective bytes are measured exactly while
+                       score-tensor resharding artifacts of the one-chunk
+                       form are avoided).
+    """
+    p = SHAPES[shape]
+    s = p["seq"]
+    ov = dict(unroll_layers=True)
+    # depth: n_units repeating units (plus any prefix layers, kept as-is)
+    if cfg.is_encdec:
+        ov.update(enc_layers=n_units, dec_layers=n_units)
+    elif cfg.layer_pattern:
+        ov.update(num_layers=n_units * len(cfg.layer_pattern))
+    elif cfg.window_pattern:
+        ov.update(num_layers=n_units * len(cfg.window_pattern))
+    else:
+        ov.update(num_layers=n_units + cfg.moe_first_dense)
+    if one_chunk:
+        if p["kind"] == "decode":
+            ov.update(decode_chunk=s)
+        else:
+            ov.update(attn_chunk=max(s, 448 if cfg.is_encdec else s))
+    return ov
+
+
+def build_cell(arch: str, shape: str, overrides: Optional[dict] = None):
+    """Returns (fn, abstract_args, donate) ready for jit/lower.
+
+    fn signature varies by kind:
+      train:   fn(state, batch)
+      prefill: fn(params, batch)
+      decode:  fn(params, tokens, caches, pos[, memory])
+    """
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    model = build_model(cfg)
+    p = SHAPES[shape]
+    b, s = p["batch"], p["seq"]
+
+    if p["kind"] == "train":
+        from repro.optim import Optimizer, warmup_cosine
+        from repro.train.train_state import abstract_train_state
+        from repro.train.steps import make_train_step
+
+        opt = Optimizer(kind="adamw", lr_fn=warmup_cosine(3e-4, 100, 10_000))
+        batch = input_specs(arch, shape)
+        state = abstract_train_state(model, opt, jax.random.PRNGKey(0),
+                                     example_batch=batch)
+        step = make_train_step(model, opt)
+        return step, (state, batch), (0,)
+
+    params = abstract_params(model)
+    if p["kind"] == "prefill":
+        batch = input_specs(arch, shape)
+        if cfg.is_encdec:
+            def prefill(params, batch):
+                logits, _ = model.forward(params, batch["frames"], batch["tokens"])
+                return logits[:, -1:]
+            return prefill, (params, batch), ()
+
+        def prefill(params, batch):
+            logits, _ = model.forward(params, tokens=batch["tokens"],
+                                      positions=batch.get("positions"),
+                                      last_only=True)
+            return logits
+        return prefill, (params, batch), ()
+
+    # decode
+    if cfg.is_encdec:
+        caches = abstract_caches(model, cfg, b, s)
+        memory = SDS((b, cfg.enc_seq_len, cfg.d_model), jnp.bfloat16)
+
+        def serve_step(params, tokens, caches, pos, memory):
+            return model.decode_step(params, tokens, caches, pos, memory)
+        args = (params, _tok(b, 1), caches, SDS((), jnp.int32), memory)
+        return serve_step, args, (2,)
+
+    caches = abstract_caches(model, cfg, b, s)
+
+    def serve_step(params, tokens, caches, pos):
+        return model.decode_step(params, tokens, caches, pos)
+    args = (params, _tok(b, 1), caches, SDS((), jnp.int32))
+    return serve_step, args, (2,)

@@ -1,0 +1,109 @@
+"""Training driver.
+
+Two modes:
+  * CPU-real (default): REDUCED config, real parameters, real steps — the
+    end-to-end example path (also used by the fault-tolerance tests):
+        PYTHONPATH=src python -m repro.launch.train --arch yi-6b \
+            --steps 200 --batch 8 --seq 64 --ckpt-dir /tmp/ckpt
+  * --full: FULL config against the production mesh — only sensible inside
+    the dry-run container via launch/dryrun.py (this flag just prints what
+    would be lowered).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--clip", default="quantile", choices=["quantile", "global"])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-out", default=None)
+    ap.add_argument("--die-at-step", type=int, default=None,
+                    help="fault-injection: hard-exit mid-run (tests)")
+    args = ap.parse_args()
+
+    import dataclasses
+    import jax
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.models import build_model
+    from repro.optim import Optimizer, warmup_cosine
+    from repro.train import create_train_state, make_train_step
+    from repro.train.trainer import Trainer
+    from repro.data.pipeline import DataConfig, SyntheticCorpus
+
+    cfg = reduce_for_smoke(get_config(args.arch))
+    cfg = dataclasses.replace(cfg, max_seq_len=max(cfg.max_seq_len, args.seq))
+    model = build_model(cfg)
+    opt = Optimizer(kind="adamw",
+                    lr_fn=warmup_cosine(args.lr, 10, args.steps))
+
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                    batch_size=args.batch, seed=args.seed)
+    corpus = SyntheticCorpus(dc)
+
+    example = next(corpus.iterate())
+    if cfg.is_encdec:
+        import jax.numpy as jnp
+        def wrap(it):
+            for b in it:
+                frames = jax.random.normal(
+                    jax.random.fold_in(jax.random.PRNGKey(0), int(b["tokens"][0, 0])),
+                    (args.batch, 16, cfg.d_model), jnp.float32)
+                yield {"frames": frames, "tokens": b["tokens"],
+                       "targets": b["targets"]}
+        example = next(wrap(corpus.iterate()))
+        data_iter = wrap(corpus.iterate())
+    else:
+        data_iter = corpus.iterate()
+
+    state = create_train_state(model, opt, jax.random.PRNGKey(args.seed),
+                               example_batch=example)
+    step_fn = make_train_step(model, opt, clip_mode=args.clip)
+
+    trainer = Trainer(model, opt, step_fn, data_iter,
+                      ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+    state = trainer.restore_or_init(state)
+
+    if args.die_at_step is not None:
+        # fault-injection path: run until the poison step then hard-exit
+        start = int(state.step)
+        for i in range(start, args.steps):
+            if i >= args.die_at_step:
+                print(f"[fault-injection] dying at step {i}", flush=True)
+                os._exit(42)
+            batch = next(data_iter)
+            state, metrics = trainer.train_step(state, batch)
+            if trainer.ckpt_dir and (i + 1) % trainer.ckpt_every == 0:
+                from repro.train import checkpoint as ckpt_lib
+                ckpt_lib.save_checkpoint(trainer.ckpt_dir, i + 1, state)
+        return
+
+    state = trainer.run(state, args.steps)
+    losses = [m["loss"] for m in trainer.metrics_history]
+    out = {
+        "arch": args.arch,
+        "first_loss": losses[0] if losses else None,
+        "last_loss": losses[-1] if losses else None,
+        "steps": len(losses),
+        "stragglers": sum(m["straggler"] for m in trainer.metrics_history),
+        "final_step": int(state.step),
+    }
+    print(json.dumps(out))
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump({"summary": out, "history": trainer.metrics_history}, f)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Model zoo: unified config + 10-architecture layer/block library."""
+
+from .config import ModelConfig
+from .model import build_model
+from .causal_lm import CausalLM
+from .encdec import EncDecLM
+
+__all__ = ["ModelConfig", "build_model", "CausalLM", "EncDecLM"]

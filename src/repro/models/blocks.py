@@ -1,0 +1,271 @@
+"""Block composition: layer kinds -> residual blocks -> scan-stacked stacks.
+
+The model is a sequence of *stages*. A stage is (unit_kinds, n_units):
+`unit_kinds` is the static tuple of layer kinds inside one repeating unit
+(e.g. gemma2: ('attn_local', 'attn_global'); zamba2: ('attn_shared',
+'mamba'×5)); units are stacked along a leading axis and executed under
+lax.scan — one traced unit per stage keeps the HLO compact regardless of
+depth (52-layer granite lowers the same size as a 2-layer toy).
+
+Per-block telemetry (activation absmax/rms, MoE expert load) is returned as
+scan outputs and feeds the frugal sketches in repro.monitor — groups =
+layer × channel-block × statistic, exactly the paper's GROUPBY setting.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import attention as attn_lib
+from .layers import mla as mla_lib
+from .layers import mamba2 as mamba_lib
+from .layers import moe as moe_lib
+from .layers import rwkv6 as rwkv_lib
+from .layers.mlp import mlp_init, mlp
+from .layers.norm import norm_init, apply_norm
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------- kinds
+def kind_window(cfg, kind: str) -> int:
+    if kind == "attn_local":
+        return cfg.window_pattern[0] if cfg.window_pattern else 4096
+    return 0
+
+
+def block_init(key, cfg, kind: str, dtype=jnp.float32) -> Dict[str, Any]:
+    """One residual block's parameters for a given layer kind."""
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {"norm1": norm_init(cfg, cfg.d_model, dtype)}
+    if kind in ("attn", "attn_local", "attn_global"):
+        p["attn"] = attn_lib.attention_init(ks[0], cfg, dtype)
+        p["norm2"] = norm_init(cfg, cfg.d_model, dtype)
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.gated_mlp, dtype)
+        if cfg.post_norms:
+            p["post_norm1"] = norm_init(cfg, cfg.d_model, dtype)
+            p["post_norm2"] = norm_init(cfg, cfg.d_model, dtype)
+    elif kind == "mla":
+        p["attn"] = mla_lib.mla_init(ks[0], cfg, dtype)
+        p["norm2"] = norm_init(cfg, cfg.d_model, dtype)
+        p["mlp"] = mlp_init(ks[1], cfg.d_model,
+                            cfg.first_dense_d_ff or cfg.d_ff, cfg.gated_mlp, dtype)
+    elif kind == "mla_moe":
+        p["attn"] = mla_lib.mla_init(ks[0], cfg, dtype)
+        p["norm2"] = norm_init(cfg, cfg.d_model, dtype)
+        p["moe"] = moe_lib.moe_init(ks[1], cfg, dtype)
+    elif kind == "moe":
+        p["attn"] = attn_lib.attention_init(ks[0], cfg, dtype)
+        p["norm2"] = norm_init(cfg, cfg.d_model, dtype)
+        p["moe"] = moe_lib.moe_init(ks[1], cfg, dtype)
+    elif kind == "mamba":
+        p["mamba"] = mamba_lib.mamba2_init(ks[0], cfg, dtype)
+    elif kind == "rwkv":
+        p["tm"] = rwkv_lib.rwkv6_init(ks[0], cfg, dtype)
+        p["norm2"] = norm_init(cfg, cfg.d_model, dtype)
+    elif kind == "enc_attn":
+        p["attn"] = attn_lib.attention_init(ks[0], cfg, dtype)
+        p["norm2"] = norm_init(cfg, cfg.d_model, dtype)
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.gated_mlp, dtype)
+    elif kind == "dec_cross":
+        p["attn"] = attn_lib.attention_init(ks[0], cfg, dtype)
+        p["cross"] = attn_lib.cross_attention_init(ks[1], cfg, dtype)
+        p["norm_x"] = norm_init(cfg, cfg.d_model, dtype)
+        p["norm2"] = norm_init(cfg, cfg.d_model, dtype)
+        p["mlp"] = mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.gated_mlp, dtype)
+    else:
+        raise ValueError(f"unknown layer kind {kind!r}")
+    return p
+
+
+def _stats(x: Array, extra: Optional[Dict] = None) -> Dict[str, Array]:
+    s = {
+        "absmax": jnp.max(jnp.abs(x.astype(jnp.float32))),
+        "rms": jnp.sqrt(jnp.mean(jnp.square(x.astype(jnp.float32)))),
+    }
+    if extra:
+        s.update(extra)
+    return s
+
+
+def block_apply(
+    params, x: Array, cfg, kind: str,
+    cos=None, sin=None, memory=None, q_offset: int = 0,
+) -> Tuple[Array, Dict[str, Array]]:
+    """Full-sequence residual block."""
+    extra = None
+    if kind in ("attn", "attn_local", "attn_global", "enc_attn"):
+        h = apply_norm(cfg, params["norm1"], x)
+        if kind == "enc_attn":
+            a = attn_lib.cross_attention(params["attn"], h, h, cfg,
+                                         chunk=cfg.attn_chunk)  # bidirectional
+        else:
+            a = attn_lib.attention(params["attn"], h, cfg, cos, sin,
+                                   window=kind_window(cfg, kind),
+                                   q_offset=q_offset, chunk=cfg.attn_chunk)
+        if cfg.post_norms:
+            a = apply_norm(cfg, params["post_norm1"], a)
+        x = x + a
+        h = apply_norm(cfg, params["norm2"], x)
+        m = mlp(params["mlp"], h, cfg.act, cfg.gated_mlp)
+        if cfg.post_norms:
+            m = apply_norm(cfg, params["post_norm2"], m)
+        x = x + m
+    elif kind in ("mla", "mla_moe"):
+        h = apply_norm(cfg, params["norm1"], x)
+        a = mla_lib.mla_attention(params["attn"], h, cfg, cos, sin,
+                                  q_offset=q_offset, chunk=cfg.attn_chunk)
+        x = x + a
+        h = apply_norm(cfg, params["norm2"], x)
+        if kind == "mla":
+            x = x + mlp(params["mlp"], h, cfg.act, cfg.gated_mlp)
+        else:
+            mo, moe_aux = moe_lib.moe_block(params["moe"], h, cfg)
+            x = x + mo
+            extra = {"aux_loss": moe_aux["aux_loss"],
+                     "expert_load": moe_aux["expert_load"],
+                     "drop_fraction": moe_aux["drop_fraction"]}
+    elif kind == "moe":
+        h = apply_norm(cfg, params["norm1"], x)
+        a = attn_lib.attention(params["attn"], h, cfg, cos, sin,
+                               q_offset=q_offset, chunk=cfg.attn_chunk)
+        x = x + a
+        h = apply_norm(cfg, params["norm2"], x)
+        mo, moe_aux = moe_lib.moe_block(params["moe"], h, cfg)
+        x = x + mo
+        extra = {"aux_loss": moe_aux["aux_loss"],
+                 "expert_load": moe_aux["expert_load"],
+                 "drop_fraction": moe_aux["drop_fraction"]}
+    elif kind == "mamba":
+        h = apply_norm(cfg, params["norm1"], x)
+        x = x + mamba_lib.mamba2_forward(params["mamba"], h, cfg)
+    elif kind == "rwkv":
+        h = apply_norm(cfg, params["norm1"], x)
+        tm, _, _ = rwkv_lib.rwkv6_timemix_chunked(params["tm"], h, cfg)
+        x = x + tm
+        h = apply_norm(cfg, params["norm2"], x)
+        cm, _ = rwkv_lib.rwkv6_channelmix(params["tm"], h, cfg)
+        x = x + cm
+    elif kind == "dec_cross":
+        h = apply_norm(cfg, params["norm1"], x)
+        a = attn_lib.attention(params["attn"], h, cfg, cos, sin, q_offset=q_offset)
+        x = x + a
+        h = apply_norm(cfg, params["norm_x"], x)
+        x = x + attn_lib.cross_attention(params["cross"], h, memory, cfg,
+                                         chunk=cfg.attn_chunk)
+        h = apply_norm(cfg, params["norm2"], x)
+        x = x + mlp(params["mlp"], h, cfg.act, cfg.gated_mlp)
+    else:
+        raise ValueError(kind)
+    return x, _stats(x, extra)
+
+
+# ------------------------------------------------------------- decode blocks
+def block_cache_init(cfg, kind: str, batch: int, max_len: int, dtype):
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    if kind in ("attn", "attn_local", "attn_global", "moe", "dec_cross"):
+        c = {"k": jnp.zeros((batch, max_len, hkv, hd), dtype),
+             "v": jnp.zeros((batch, max_len, hkv, hd), dtype)}
+        return c
+    if kind in ("mla", "mla_moe"):
+        return {"ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+                "kr": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype)}
+    if kind == "mamba":
+        return mamba_lib.mamba2_init_cache(cfg, batch, jnp.float32)
+    if kind == "rwkv":
+        nh = cfg.d_model // cfg.rwkv_head_size
+        return {"wkv": jnp.zeros((batch, nh, cfg.rwkv_head_size, cfg.rwkv_head_size),
+                                 jnp.float32),
+                "x_tm": jnp.zeros((batch, 1, cfg.d_model), dtype),
+                "x_cm": jnp.zeros((batch, 1, cfg.d_model), dtype)}
+    raise ValueError(kind)
+
+
+def block_decode(
+    params, x: Array, cache, pos, cfg, kind: str,
+    cos=None, sin=None, memory=None,
+) -> Tuple[Array, Any, Dict[str, Array]]:
+    """One-token decode through a residual block, updating its cache."""
+    extra = None
+    if kind in ("attn", "attn_local", "attn_global", "moe", "dec_cross"):
+        h = apply_norm(cfg, params["norm1"], x)
+        a, ck, cv = attn_lib.attention_decode(
+            params["attn"], h, cache["k"], cache["v"], pos, cfg, cos, sin,
+            window=kind_window(cfg, kind), chunk=cfg.decode_chunk)
+        cache = dict(cache, k=ck, v=cv)
+        if cfg.post_norms:
+            a = apply_norm(cfg, params["post_norm1"], a)
+        x = x + a
+        if kind == "dec_cross":
+            h = apply_norm(cfg, params["norm_x"], x)
+            x = x + attn_lib.cross_attention(params["cross"], h, memory, cfg,
+                                             chunk=cfg.attn_chunk)
+        h = apply_norm(cfg, params["norm2"], x)
+        if kind == "moe":
+            mo, moe_aux = moe_lib.moe_block(params["moe"], h, cfg)
+            x = x + mo
+            extra = {"expert_load": moe_aux["expert_load"]}
+        else:
+            m = mlp(params["mlp"], h, cfg.act, cfg.gated_mlp)
+            if cfg.post_norms:
+                m = apply_norm(cfg, params["post_norm2"], m)
+            x = x + m
+    elif kind in ("mla", "mla_moe"):
+        h = apply_norm(cfg, params["norm1"], x)
+        a, ckv, kr = mla_lib.mla_decode(
+            params["attn"], h, cache["ckv"], cache["kr"], pos, cfg, cos, sin,
+            chunk=cfg.decode_chunk)
+        cache = dict(cache, ckv=ckv, kr=kr)
+        x = x + a
+        h = apply_norm(cfg, params["norm2"], x)
+        if kind == "mla":
+            x = x + mlp(params["mlp"], h, cfg.act, cfg.gated_mlp)
+        else:
+            mo, moe_aux = moe_lib.moe_block(params["moe"], h, cfg)
+            x = x + mo
+            extra = {"expert_load": moe_aux["expert_load"]}
+    elif kind == "mamba":
+        h = apply_norm(cfg, params["norm1"], x)
+        out, cache = mamba_lib.mamba2_decode(params["mamba"], h, cache, cfg)
+        x = x + out
+    elif kind == "rwkv":
+        h = apply_norm(cfg, params["norm1"], x)
+        tm, wkv, x_tm = rwkv_lib.rwkv6_timemix_decode(
+            params["tm"], h, cfg, cache["wkv"], cache["x_tm"])
+        x = x + tm
+        h = apply_norm(cfg, params["norm2"], x)
+        cm, x_cm = rwkv_lib.rwkv6_channelmix(params["tm"], h, cfg, cache["x_cm"])
+        x = x + cm
+        cache = {"wkv": wkv, "x_tm": x_tm, "x_cm": x_cm}
+    else:
+        raise ValueError(kind)
+    return x, cache, _stats(x, extra)
+
+
+# ------------------------------------------------------------------- stages
+def stage_unit_kinds(cfg) -> Tuple[Tuple[str, ...], int, Tuple[str, ...]]:
+    """Returns (prefix_kinds, n_scan_units, unit_kinds) for the decoder stack.
+
+    prefix_kinds are unstacked leading layers (deepseek's first dense layer);
+    the rest is n_scan_units repetitions of unit_kinds under lax.scan.
+    """
+    if cfg.layer_pattern:                       # hybrid (zamba2)
+        unit = tuple(cfg.layer_pattern)
+        assert cfg.num_layers % len(unit) == 0
+        return (), cfg.num_layers // len(unit), unit
+    if cfg.family == "ssm":
+        return (), cfg.num_layers, ("rwkv",)
+    if cfg.moe_experts:
+        attn_kind = "mla_moe" if cfg.use_mla else "moe"
+        prefix = ("mla",) * cfg.moe_first_dense if cfg.use_mla \
+            else ("attn",) * cfg.moe_first_dense
+        n = cfg.num_layers - cfg.moe_first_dense
+        return prefix, n, (attn_kind,)
+    if cfg.window_pattern:                      # gemma2 local/global alternation
+        unit = tuple("attn_local" if w else "attn_global" for w in cfg.window_pattern)
+        assert cfg.num_layers % len(unit) == 0
+        return (), cfg.num_layers // len(unit), unit
+    return (), cfg.num_layers, ("attn",)

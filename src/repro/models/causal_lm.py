@@ -1,0 +1,278 @@
+"""Decoder-only causal LM covering dense / MoE / SSM / hybrid / VLM families.
+
+Params layout:
+  embed          token embedding (tied LM head optional)
+  pos            learned-position table (granite) if pos_type == 'learned'
+  prefix         list of unstacked leading blocks (deepseek dense layer 0)
+  stack          list aligned with unit_kinds; each entry is a pytree with
+                 leading dim n_units (lax.scan) — or {} for shared kinds
+  shared_block   the ONE shared attention block (zamba2) if configured
+  final_norm     output norm
+  lm_head        untied output projection (if not tied)
+
+All sequence compute flows through blocks.py; this file owns embedding,
+positions (RoPE / M-RoPE / learned / sinusoidal), the scan driver, loss, and
+the cache plumbing for decode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import blocks
+from .layers import embedding as emb_lib
+from .layers import rope as rope_lib
+from .layers.norm import norm_init, apply_norm, softcap
+
+Array = jax.Array
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _pdt(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+class CausalLM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.prefix_kinds, self.n_units, self.unit_kinds = blocks.stage_unit_kinds(cfg)
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        pdt = _pdt(cfg)
+        keys = jax.random.split(key, 8)
+        params: Dict[str, Any] = {
+            "embed": emb_lib.embedding_init(keys[0], cfg.vocab_size, cfg.d_model, pdt),
+            "final_norm": norm_init(cfg, cfg.d_model, pdt),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = emb_lib.embedding_init(keys[1], cfg.vocab_size,
+                                                       cfg.d_model, pdt)
+        if cfg.pos_type == "learned":
+            params["pos"] = emb_lib.learned_pos_init(keys[2], cfg.max_seq_len,
+                                                     cfg.d_model, pdt)
+        params["prefix"] = [
+            blocks.block_init(k, cfg, kind, pdt)
+            for k, kind in zip(jax.random.split(keys[3], max(1, len(self.prefix_kinds))),
+                               self.prefix_kinds)
+        ]
+        # stacked units
+        stack = []
+        shared_done = False
+        for i, kind in enumerate(self.unit_kinds):
+            if cfg.shared_attention and kind.startswith("attn"):
+                if not shared_done:
+                    params["shared_block"] = blocks.block_init(keys[4], cfg, kind, pdt)
+                    shared_done = True
+                stack.append({})           # placeholder, shared via closure
+                continue
+            unit_keys = jax.random.split(jax.random.fold_in(keys[5], i), self.n_units)
+            stack.append(jax.vmap(
+                lambda k: blocks.block_init(k, cfg, kind, pdt))(unit_keys))
+        params["stack"] = stack
+        return params
+
+    # ------------------------------------------------------------- positions
+    def _angles(self, positions, seq: int, batch: int):
+        """cos/sin for the rope dim of this arch (None for non-rope)."""
+        cfg = self.cfg
+        if cfg.pos_type == "mrope":
+            if positions is None:
+                p1 = jnp.arange(seq, dtype=jnp.int32)[None, None, :]
+                positions = jnp.broadcast_to(p1, (batch, 3, seq))
+            return rope_lib.mrope_angles(positions, cfg.head_dim, cfg.rope_theta,
+                                         cfg.mrope_sections)
+        if cfg.pos_type == "rope":
+            if positions is None:
+                positions = rope_lib.positions_from_segment(batch, seq)
+            dim = cfg.qk_rope_dim if cfg.use_mla else cfg.head_dim
+            return rope_lib.rope_angles(positions, dim, cfg.rope_theta)
+        return None, None
+
+    # --------------------------------------------------------------- forward
+    def forward(
+        self,
+        params,
+        tokens: Optional[Array] = None,     # [B, S] int32
+        embeds: Optional[Array] = None,     # [B, S, D] (vlm stub path)
+        positions: Optional[Array] = None,  # [B,S] or [B,3,S] for mrope
+        last_only: bool = False,            # prefill: logits for last pos only
+    ) -> Tuple[Array, Dict[str, Array]]:
+        cfg = self.cfg
+        dt = _dt(cfg)
+        if embeds is None:
+            x = emb_lib.embed(params["embed"], tokens, dt)
+        else:
+            x = embeds.astype(dt)
+        from repro.parallel.sharding import shard_activation
+        x = shard_activation(x, "btd")
+        b, s = x.shape[0], x.shape[1]
+        if cfg.embed_scale:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+        if cfg.pos_type == "learned":
+            pos_ids = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+            x = x + emb_lib.learned_pos(params["pos"], pos_ids, dt)
+        elif cfg.pos_type == "sinusoidal":
+            x = x + rope_lib.sinusoidal_embedding(s, cfg.d_model, dt)[None]
+        cos, sin = self._angles(positions, s, b)
+
+        stats_all = {}
+        for i, (p, kind) in enumerate(zip(params["prefix"], self.prefix_kinds)):
+            x, st = blocks.block_apply(p, x, cfg, kind, cos, sin)
+            stats_all[f"prefix{i}"] = st
+
+        # scan over stacked units
+        unit_kinds = self.unit_kinds
+        shared = params.get("shared_block")
+
+        def unit_body(x, unit_params):
+            sts = []
+            for kind, p in zip(unit_kinds, unit_params):
+                if cfg.shared_attention and kind.startswith("attn"):
+                    p = shared
+                x, st = blocks.block_apply(p, x, cfg, kind, cos, sin)
+                if cfg.seq_sharded_residual:
+                    from repro.parallel.sharding import shard_activation as _sa
+                    x = _sa(x, "btd_seq")   # H2b: RS here, AG at next use
+                sts.append(st)
+            return x, sts
+
+        body = jax.checkpoint(unit_body) if cfg.remat else unit_body
+        if self.n_units > 0 and unit_kinds:
+            x, unit_stats = jax.lax.scan(body, x, tuple(params["stack"]),
+                                         unroll=cfg.unroll_layers)
+            stats_all["stack"] = unit_stats
+
+        if last_only:
+            x = x[:, -1:]
+        x = apply_norm(cfg, params["final_norm"], x)
+        head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        logits = emb_lib.unembed(head, x)
+        logits = softcap(logits, cfg.final_softcap)
+        return logits, stats_all
+
+    # ------------------------------------------------------------------ loss
+    def loss(self, params, batch: Dict[str, Array]) -> Tuple[Array, Dict]:
+        """Next-token cross-entropy. batch: tokens|embeds, targets, (positions)."""
+        logits, stats = self.forward(
+            params,
+            tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"),
+            positions=batch.get("positions"),
+        )
+        targets = batch["targets"]
+        mask = batch.get("mask")
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        if self.cfg.onehot_xent:
+            # H2 (§Perf): gather on the vocab-sharded axis lowers to an
+            # all-gather of logp under SPMD; the one-hot contraction keeps
+            # the reduction local per vocab shard + a scalar psum.
+            onehot = jax.nn.one_hot(targets, logp.shape[-1], dtype=logp.dtype)
+            nll = -jnp.einsum("bsv,bsv->bs", logp, onehot)
+        else:
+            nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        if mask is not None:
+            loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        else:
+            loss = jnp.mean(nll)
+        aux_loss = _collect_aux_loss(stats)
+        return loss + aux_loss, {"ce_loss": loss, "aux_loss": aux_loss, "stats": stats}
+
+    # ----------------------------------------------------------------- cache
+    def init_cache(self, batch: int, max_len: int, dtype=None):
+        cfg = self.cfg
+        dt = dtype or _dt(cfg)
+        caches = {"prefix": [blocks.block_cache_init(cfg, k, batch, max_len, dt)
+                             for k in self.prefix_kinds]}
+        stack_caches = []
+        for kind in self.unit_kinds:
+            one = blocks.block_cache_init(cfg, kind, batch, max_len, dt)
+            stacked = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (self.n_units,) + a.shape).copy()
+                if self.n_units else a[None], one)
+            stack_caches.append(stacked)
+        caches["stack"] = stack_caches
+        return caches
+
+    def decode_step(
+        self, params, tokens: Array, caches, pos,
+        positions: Optional[Array] = None,
+    ):
+        """One token for the whole batch. tokens [B,1] (or embeds [B,1,D])."""
+        cfg = self.cfg
+        dt = _dt(cfg)
+        b = tokens.shape[0]
+        x = emb_lib.embed(params["embed"], tokens, dt)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+        if cfg.pos_type == "learned":
+            pos_ids = jnp.full((b, 1), pos, jnp.int32)
+            x = x + emb_lib.learned_pos(params["pos"], pos_ids, dt)
+        elif cfg.pos_type == "sinusoidal":
+            tbl = rope_lib.sinusoidal_embedding(cfg.max_seq_len, cfg.d_model, dt)
+            x = x + jax.lax.dynamic_slice_in_dim(tbl, pos, 1, 0)[None]
+        if cfg.pos_type == "mrope":
+            p = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b, 3, 1))
+            cos, sin = rope_lib.mrope_angles(p, cfg.head_dim, cfg.rope_theta,
+                                             cfg.mrope_sections)
+        elif cfg.pos_type == "rope":
+            p = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b, 1))
+            dim = cfg.qk_rope_dim if cfg.use_mla else cfg.head_dim
+            cos, sin = rope_lib.rope_angles(p, dim, cfg.rope_theta)
+        else:
+            cos = sin = None
+
+        new_prefix = []
+        for p, kind, c in zip(params["prefix"], self.prefix_kinds, caches["prefix"]):
+            x, c, _ = blocks.block_decode(p, x, c, pos, cfg, kind, cos, sin)
+            new_prefix.append(c)
+
+        unit_kinds = self.unit_kinds
+        shared = params.get("shared_block")
+
+        def unit_body(x, pc):
+            unit_params, unit_caches = pc
+            new_caches = []
+            for kind, p, c in zip(unit_kinds, unit_params, unit_caches):
+                if cfg.shared_attention and kind.startswith("attn"):
+                    p = shared
+                x, c, _ = blocks.block_decode(p, x, c, pos, cfg, kind, cos, sin)
+                new_caches.append(c)
+            return x, tuple(new_caches)
+
+        if self.n_units > 0 and unit_kinds:
+            x, new_stack = jax.lax.scan(
+                unit_body, x, (tuple(params["stack"]), tuple(caches["stack"])),
+                unroll=cfg.unroll_layers)
+        else:
+            new_stack = caches["stack"]
+
+        x = apply_norm(cfg, params["final_norm"], x)
+        head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        logits = emb_lib.unembed(head, x)
+        logits = softcap(logits, cfg.final_softcap)
+        return logits, {"prefix": new_prefix, "stack": list(new_stack)}
+
+
+def _collect_aux_loss(stats) -> Array:
+    total = jnp.zeros((), jnp.float32)
+
+    def add(st):
+        nonlocal total
+        if isinstance(st, dict) and "aux_loss" in st:
+            total = total + jnp.sum(st["aux_loss"])
+
+    for v in stats.values():
+        if isinstance(v, dict):
+            add(v)
+        elif isinstance(v, (list, tuple)):
+            for st in v:
+                add(st)
+    return total

@@ -1,0 +1,114 @@
+"""Whisper-style encoder-decoder LM.
+
+The conv audio frontend is a STUB per the assignment: `input_specs()` feeds
+precomputed frame embeddings [B, S_enc, D] (what the two conv-stride layers
+would produce). Encoder: bidirectional attention + sinusoidal positions.
+Decoder: causal self-attn + cross-attn + learned positions.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import blocks
+from .layers import embedding as emb_lib
+from .layers import rope as rope_lib
+from .layers.norm import norm_init, apply_norm
+
+Array = jax.Array
+
+
+class EncDecLM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        pdt = jnp.dtype(cfg.param_dtype)
+        ks = jax.random.split(key, 6)
+        enc_keys = jax.random.split(ks[0], cfg.enc_layers)
+        dec_keys = jax.random.split(ks[1], cfg.dec_layers)
+        return {
+            "embed": emb_lib.embedding_init(ks[2], cfg.vocab_size, cfg.d_model, pdt),
+            "dec_pos": emb_lib.learned_pos_init(ks[3], cfg.max_seq_len, cfg.d_model, pdt),
+            "enc_stack": jax.vmap(
+                lambda k: blocks.block_init(k, cfg, "enc_attn", pdt))(enc_keys),
+            "dec_stack": jax.vmap(
+                lambda k: blocks.block_init(k, cfg, "dec_cross", pdt))(dec_keys),
+            "enc_norm": norm_init(cfg, cfg.d_model, pdt),
+            "dec_norm": norm_init(cfg, cfg.d_model, pdt),
+        }
+
+    def encode(self, params, frames: Array) -> Array:
+        """frames [B, S_enc, D] (stub conv output) -> memory [B, S_enc, D]."""
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = frames.astype(dt)
+        x = x + rope_lib.sinusoidal_embedding(x.shape[1], cfg.d_model, dt)[None]
+
+        def body(x, p):
+            x, st = blocks.block_apply(p, x, cfg, "enc_attn")
+            return x, st
+
+        body = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body, x, params["enc_stack"], unroll=cfg.unroll_layers)
+        return apply_norm(cfg, params["enc_norm"], x)
+
+    def forward(self, params, frames: Array, dec_tokens: Array) -> Tuple[Array, Dict]:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        memory = self.encode(params, frames)
+        b, s = dec_tokens.shape
+        x = emb_lib.embed(params["embed"], dec_tokens, dt)
+        pos_ids = jnp.arange(s, dtype=jnp.int32)[None, :].repeat(b, 0)
+        x = x + emb_lib.learned_pos(params["dec_pos"], pos_ids, dt)
+
+        def body(x, p):
+            x, st = blocks.block_apply(p, x, cfg, "dec_cross", memory=memory)
+            return x, st
+
+        body = jax.checkpoint(body) if cfg.remat else body
+        x, stats = jax.lax.scan(body, x, params["dec_stack"],
+                                unroll=cfg.unroll_layers)
+        x = apply_norm(cfg, params["dec_norm"], x)
+        logits = emb_lib.unembed(params["embed"], x)  # whisper ties emb & head
+        return logits, {"stack": stats}
+
+    def loss(self, params, batch: Dict[str, Array]) -> Tuple[Array, Dict]:
+        logits, stats = self.forward(params, batch["frames"], batch["tokens"])
+        targets = batch["targets"]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        loss = jnp.mean(nll)
+        return loss, {"ce_loss": loss, "aux_loss": jnp.zeros((), jnp.float32),
+                      "stats": stats}
+
+    # ------------------------------------------------------------- decoding
+    def init_cache(self, batch: int, max_len: int, dtype=None):
+        cfg = self.cfg
+        dt = dtype or jnp.dtype(cfg.dtype)
+        one = blocks.block_cache_init(cfg, "dec_cross", batch, max_len, dt)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.dec_layers,) + a.shape).copy(), one)
+
+    def decode_step(self, params, tokens: Array, caches, pos, memory: Array):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        b = tokens.shape[0]
+        x = emb_lib.embed(params["embed"], tokens, dt)
+        pos_ids = jnp.full((b, 1), pos, jnp.int32)
+        x = x + emb_lib.learned_pos(params["dec_pos"], pos_ids, dt)
+
+        def body(x, pc):
+            p, c = pc
+            x, c, _ = blocks.block_decode(p, x, c, pos, cfg, "dec_cross",
+                                          memory=memory)
+            return x, c
+
+        x, new_caches = jax.lax.scan(body, x, (params["dec_stack"], caches),
+                                     unroll=cfg.unroll_layers)
+        x = apply_norm(cfg, params["dec_norm"], x)
+        logits = emb_lib.unembed(params["embed"], x)
+        return logits, new_caches

@@ -1,0 +1,1 @@
+"""Layer zoo shared by all 10 architectures."""

@@ -1,0 +1,262 @@
+"""Attention: GQA/MQA core with chunked (online-softmax) computation,
+sliding-window + logit-softcap variants, cross-attention, and KV-cache decode.
+
+Memory note: full [B, H, S, S] score materialization is impossible at the
+assigned shapes (32k prefill ⇒ 4.3 GB/device just for scores). All paths use
+blockwise online-softmax over KV chunks (FlashAttention recurrence in pure
+JAX lax.scan) so the per-device working set is O(S·chunk) — this is what
+makes the 32k/500k dry-run memory analyses meaningful. The per-chunk body is
+rematerialized under AD.
+
+Layout: q [B, S, Hq, D]; k/v [B, S, Hkv, D]; GQA groups q-heads over kv-heads
+without repeating KV (einsum carries the group dim).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .norm import softcap as _softcap
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def attention_init(key, cfg, dtype=jnp.float32):
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    return {
+        "wq": jax.random.normal(ks[0], (d, hq * hd), dtype) * s,
+        "wk": jax.random.normal(ks[1], (d, hkv * hd), dtype) * s,
+        "wv": jax.random.normal(ks[2], (d, hkv * hd), dtype) * s,
+        "wo": jax.random.normal(ks[3], (hq * hd, d), dtype) * (hq * hd) ** -0.5,
+    }
+
+
+def _chunk_attend(
+    q: Array,            # [B, Sq, Hkv, R, D]  (R = q heads per kv head)
+    k: Array,            # [B, Skv, Hkv, D]
+    v: Array,            # [B, Skv, Hkv, D]
+    q_pos: Array,        # [Sq] absolute positions of q tokens
+    kv_valid_len,        # scalar: kv positions >= this are masked (cache tail)
+    *,
+    causal: bool,
+    window: int,         # 0 = global
+    cap: float,
+    scale: float,
+    chunk: int,
+    kv_pos_offset=0,     # absolute position of k[:, 0] (sliced-cache reads)
+) -> Array:
+    """Blockwise online-softmax attention over KV chunks. Returns [B,Sq,Hkv,R,Dv].
+
+    Note k and v head dims may differ (MLA: key 192, value 128).
+    """
+    b, sq, hkv, r, dk = q.shape
+    dv = v.shape[-1]
+    skv = k.shape[1]
+    chunk = min(chunk, skv)
+    # pad kv to a chunk multiple; padded slots are masked by kv_valid_len
+    pad = (-skv) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = (skv + pad) // chunk
+    kc = k.reshape(b, n_chunks, chunk, hkv, dk).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, hkv, dv).transpose(1, 0, 2, 3, 4)
+
+    qf = (q * scale).astype(q.dtype)
+
+    def body(carry, xs):
+        acc, mx, den = carry
+        kj, vj, j = xs
+        kv_pos = kv_pos_offset + j * chunk + jnp.arange(chunk)     # [C]
+        s_ = jnp.einsum("bqhrd,bchd->bhrqc", qf, kj,
+                        preferred_element_type=jnp.float32)        # [B,Hkv,R,Sq,C]
+        if cap:
+            s_ = _softcap(s_, cap)
+        mask = kv_pos[None, :] < kv_valid_len                      # [1, C]
+        if causal:
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+        if window:
+            mask = mask & (q_pos[:, None] - kv_pos[None, :] < window)
+        s_ = jnp.where(mask[None, None, None, :, :], s_, NEG_INF)
+        m_new = jnp.maximum(mx, jnp.max(s_, axis=-1))              # [B,Hkv,R,Sq]
+        p = jnp.exp(s_ - m_new[..., None])
+        corr = jnp.exp(mx - m_new)
+        den_new = den * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhrqc,bchd->bhrqd", p.astype(vj.dtype), vj,
+            preferred_element_type=jnp.float32)
+        return (acc_new, m_new, den_new), None
+
+    acc0 = jnp.zeros((b, hkv, r, sq, dv), jnp.float32)
+    m0 = jnp.full((b, hkv, r, sq), NEG_INF, jnp.float32)
+    den0 = jnp.zeros((b, hkv, r, sq), jnp.float32)
+    if n_chunks == 1:
+        # single-chunk fast path: no while loop (also keeps the dry-run
+        # probes' cost_analysis exact — loop bodies are counted once by XLA)
+        (acc, mx, den), _ = body((acc0, m0, den0), (kc[0], vc[0], jnp.zeros((), jnp.int32)))
+    else:
+        (acc, mx, den), _ = jax.lax.scan(
+            jax.checkpoint(body), (acc0, m0, den0),
+            (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(den[..., None], 1e-30)                 # [B,Hkv,R,Sq,D]
+    return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)            # [B,Sq,Hkv,R,D]
+
+
+def _blocked_local_attend(
+    q: Array,   # [B, S, Hkv, R, D]
+    k: Array,   # [B, S, Hkv, D]
+    v: Array,
+    *,
+    window: int,
+    cap: float,
+    scale: float,
+) -> Array:
+    """H3 (§Perf): exact sliding-window attention in window-sized q blocks.
+
+    Block i's queries attend only kv blocks (i-1, i): for block size == w,
+    position p sees exactly (p-w, p] — identical math to the masked chunked
+    path, at 2wS instead of S² score work. Returns [B, S, Hkv, R, D]."""
+    b, s, hkv, r, d = q.shape
+    w = window
+    assert s % w == 0, (s, w)
+    nb = s // w
+    qb = (q * scale).reshape(b, nb, w, hkv, r, d)
+    kb = k.reshape(b, nb, w, hkv, d)
+    vb = v.reshape(b, nb, w, hkv, d)
+    k_prev = jnp.pad(kb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    v_prev = jnp.pad(vb, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    k2 = jnp.concatenate([k_prev, kb], axis=2)                # [b,nb,2w,hkv,d]
+    v2 = jnp.concatenate([v_prev, vb], axis=2)
+    s_ = jnp.einsum("bzihrd,bzjhd->bzhrij", qb, k2,
+                    preferred_element_type=jnp.float32)       # [b,nb,hkv,r,w,2w]
+    if cap:
+        s_ = _softcap(s_, cap)
+    ii = jnp.arange(w)[:, None]
+    jj = jnp.arange(2 * w)[None, :]
+    mask = (jj > ii) & (jj <= ii + w)                         # (p-w, p] window
+    blk0 = (jnp.arange(nb) > 0)[None, :, None, None, None, None]
+    mask_full = mask[None, None, None, None, :, :] & (
+        blk0 | (jj >= w)[None, None, None, None, :, :])      # zero-pad guard
+    s_ = jnp.where(mask_full, s_, NEG_INF)
+    p = jax.nn.softmax(s_, axis=-1)
+    out = jnp.einsum("bzhrij,bzjhd->bzihrd", p.astype(v2.dtype), v2,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, s, hkv, r, d).astype(q.dtype)
+
+
+def attention(
+    params,
+    x: Array,                     # [B, S, D]
+    cfg,
+    cos: Optional[Array] = None,  # [B, S, hd//2]
+    sin: Optional[Array] = None,
+    *,
+    window: int = 0,
+    q_offset: int = 0,
+    chunk: int = 1024,
+) -> Array:
+    """Full-sequence causal self-attention (training / prefill)."""
+    from .rope import apply_rope
+
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = x.dtype
+    q = jnp.einsum("bsd,de->bse", x, params["wq"].astype(dt)).reshape(b, s, hq, hd)
+    k = jnp.einsum("bsd,de->bse", x, params["wk"].astype(dt)).reshape(b, s, hkv, hd)
+    v = jnp.einsum("bsd,de->bse", x, params["wv"].astype(dt)).reshape(b, s, hkv, hd)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    scale = cfg.attn_scale if cfg.attn_scale else hd ** -0.5
+    qg = q.reshape(b, s, hkv, hq // hkv, hd)
+    if (window and cfg.local_block_attn and q_offset == 0
+            and s % window == 0 and s >= 2 * window):
+        out = _blocked_local_attend(qg, k, v, window=window,
+                                    cap=cfg.attn_softcap, scale=scale)
+    else:
+        q_pos = q_offset + jnp.arange(s)
+        out = _chunk_attend(
+            qg, k, v, q_pos, kv_valid_len=s + q_offset,
+            causal=True, window=window, cap=cfg.attn_softcap,
+            scale=scale, chunk=chunk)
+    out = out.reshape(b, s, hq * hd)
+    return jnp.einsum("bse,ed->bsd", out, params["wo"].astype(dt))
+
+
+def attention_decode(
+    params,
+    x: Array,                 # [B, 1, D] current token(s)
+    cache_k: Array,           # [B, L, Hkv, hd]
+    cache_v: Array,
+    pos,                      # scalar int: current absolute position
+    cfg,
+    cos: Optional[Array] = None,   # [B, 1, hd//2] at `pos`
+    sin: Optional[Array] = None,
+    *,
+    window: int = 0,
+    chunk: int = 2048,
+):
+    """One decode step: write new KV at `pos`, attend over cache[0..pos]."""
+    from .rope import apply_rope
+
+    b, s1, _ = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = x.dtype
+    q = jnp.einsum("bsd,de->bse", x, params["wq"].astype(dt)).reshape(b, s1, hq, hd)
+    k = jnp.einsum("bsd,de->bse", x, params["wk"].astype(dt)).reshape(b, s1, hkv, hd)
+    v = jnp.einsum("bsd,de->bse", x, params["wv"].astype(dt)).reshape(b, s1, hkv, hd)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), pos, 1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), pos, 1)
+    scale = cfg.attn_scale if cfg.attn_scale else hd ** -0.5
+    qg = q.reshape(b, s1, hkv, hq // hkv, hd)
+    q_pos = pos + jnp.arange(s1)
+    if window and cfg.local_decode_slice and cache_k.shape[1] > window:
+        # H3b (§Perf): a local layer only ever attends the last `window`
+        # positions — read a window-sized slice of the cache instead of the
+        # full 32k (write still lands in the full cache above).
+        start = jnp.clip(pos + s1 - window, 0, cache_k.shape[1] - window)
+        k_read = jax.lax.dynamic_slice_in_dim(cache_k, start, window, 1)
+        v_read = jax.lax.dynamic_slice_in_dim(cache_v, start, window, 1)
+        out = _chunk_attend(
+            qg, k_read.astype(dt), v_read.astype(dt), q_pos,
+            kv_valid_len=pos + s1, causal=True, window=window,
+            cap=cfg.attn_softcap, scale=scale, chunk=chunk,
+            kv_pos_offset=start)
+    else:
+        out = _chunk_attend(
+            qg, cache_k.astype(dt), cache_v.astype(dt), q_pos,
+            kv_valid_len=pos + s1, causal=True, window=window,
+            cap=cfg.attn_softcap, scale=scale, chunk=chunk)
+    out = out.reshape(b, s1, hq * hd)
+    return jnp.einsum("bse,ed->bsd", out, params["wo"].astype(dt)), cache_k, cache_v
+
+
+def cross_attention_init(key, cfg, dtype=jnp.float32):
+    return attention_init(key, cfg, dtype)
+
+
+def cross_attention(params, x: Array, memory: Array, cfg, *, chunk: int = 1024) -> Array:
+    """Decoder-side cross-attention over encoder memory (no mask, no rope)."""
+    b, s, _ = x.shape
+    sm = memory.shape[1]
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = x.dtype
+    q = jnp.einsum("bsd,de->bse", x, params["wq"].astype(dt)).reshape(b, s, hq, hd)
+    k = jnp.einsum("bsd,de->bse", memory, params["wk"].astype(dt)).reshape(b, sm, hkv, hd)
+    v = jnp.einsum("bsd,de->bse", memory, params["wv"].astype(dt)).reshape(b, sm, hkv, hd)
+    qg = q.reshape(b, s, hkv, hq // hkv, hd)
+    out = _chunk_attend(
+        qg, k, v, jnp.arange(s), kv_valid_len=sm,
+        causal=False, window=0, cap=0.0, scale=hd ** -0.5, chunk=chunk)
+    out = out.reshape(b, s, hq * hd)
+    return jnp.einsum("bse,ed->bsd", out, params["wo"].astype(dt))

@@ -1,0 +1,36 @@
+"""Token embeddings, output heads, and learned/sinusoidal position tables."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .rope import sinusoidal_embedding
+
+Array = jax.Array
+
+
+def embedding_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embed(params, tokens: Array, dtype) -> Array:
+    return params["table"].astype(dtype)[tokens]
+
+
+def unembed(params, x: Array) -> Array:
+    """Tied or untied LM head: x [B, S, D] @ table.T -> [B, S, V] (f32 logits)."""
+    return jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32),
+                      params["table"].astype(jnp.float32))
+
+
+def learned_pos_init(key, max_len: int, d: int, dtype=jnp.float32):
+    return {"pos_table": jax.random.normal(key, (max_len, d), dtype) * 0.02}
+
+
+def learned_pos(params, positions: Array, dtype) -> Array:
+    """positions [B, S] -> [B, S, D]."""
+    return params["pos_table"].astype(dtype)[positions]
+
+
+def sinusoidal_pos(seq: int, d: int, offset: int, dtype) -> Array:
+    return sinusoidal_embedding(offset + seq, d, dtype)[offset:]

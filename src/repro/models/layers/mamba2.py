@@ -1,0 +1,204 @@
+"""Mamba2 (SSD) layer — chunked state-space duality form (arXiv:2405.21060),
+as used by Zamba2's backbone (arXiv:2411.15242).
+
+Training path: chunked SSD — intra-chunk quadratic term + inter-chunk state
+recurrence via lax.scan over chunks. Per-chunk memory is O(chunk² · heads),
+the TPU-friendly middle ground between a T-long scan (serial) and the full
+quadratic (O(T²)).
+
+Decode path: O(1) recurrent state [B, H, P, N] — this is what makes the
+long_500k decode shape *possible* for zamba2/rwkv6 while pure-attention archs
+are skipped.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def mamba2_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    nh = d_in // cfg.ssm_headdim
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    return {
+        # projections for z (gate), x, B, C, dt
+        "in_proj": jax.random.normal(ks[0], (d, 2 * d_in + 2 * n + nh), dtype) * s,
+        "out_proj": jax.random.normal(ks[1], (d_in, d), dtype) * d_in ** -0.5,
+        "conv_w": jax.random.normal(ks[2], (cfg.conv_kernel, d_in + 2 * n), dtype) * 0.1,
+        "A_log": jnp.zeros((nh,), dtype),          # A = -exp(A_log) in (-1, 0)
+        "D": jnp.ones((nh,), dtype),
+        "dt_bias": jnp.zeros((nh,), dtype),
+        "norm_scale": jnp.zeros((d_in,), dtype),   # gated RMSNorm before out_proj
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n = cfg.ssm_state
+    nh = d_in // cfg.ssm_headdim
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:d_in + d_in + 2 * n]
+    dt = zxbcdt[..., -nh:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: Array, w: Array, state: Array = None):
+    """Depthwise causal conv over time. xbc [B, S, C], w [K, C].
+
+    Returns (out, new_state) where state is the last K-1 inputs [B, K-1, C].
+    """
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)                 # [B, S+K-1, C]
+    out = sum(xp[:, i:i + xbc.shape[1]] * w[i][None, None, :] for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else None
+    return jax.nn.silu(out), new_state
+
+
+def _ssd_chunked(x, dt, A, B, C, chunk):
+    """Chunked SSD. x [b,l,h,p]; dt [b,l,h]; A [h]; B,C [b,l,n].
+
+    Returns y [b,l,h,p] and final state [b,h,p,n].
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    nc = l // chunk
+    assert l % chunk == 0, (l, chunk)
+
+    a = dt * A[None, None, :]                                # [b,l,h] log-decay (<0)
+    xr = x.reshape(b, nc, chunk, h, p)
+    ar = a.reshape(b, nc, chunk, h)
+    Br = B.reshape(b, nc, chunk, n)
+    Cr = C.reshape(b, nc, chunk, n)
+    dtr = dt.reshape(b, nc, chunk, h)
+
+    a_cum = jnp.cumsum(ar, axis=2)                           # [b,nc,c,h]
+    # intra-chunk (diagonal block): L[i,j] = exp(a_cum[i]-a_cum[j]) for i>=j
+    seg = a_cum[:, :, :, None, :] - a_cum[:, :, None, :, :]  # [b,nc,i,j,h]
+    ii = jnp.arange(chunk)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    L = jnp.where(causal, jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bzin,bzjn->bzij", Cr, Br)               # [b,nc,i,j]
+    y_diag = jnp.einsum("bzij,bzijh,bzjh,bzjhp->bzihp",
+                        cb, L, dtr, xr)
+
+    # per-chunk input->state contribution
+    decay_to_end = jnp.exp(a_cum[:, :, -1:, :] - a_cum)      # [b,nc,c,h]
+    chunk_states = jnp.einsum("bzcn,bzch,bzch,bzchp->bzhpn",
+                              Br, decay_to_end, dtr, xr)     # [b,nc,h,p,n]
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])                # [b,nc,h]
+
+    # inter-chunk recurrence
+    def scan_fn(state, inp):
+        st_c, dec_c = inp                                    # [b,h,p,n], [b,h]
+        out_state = state                                    # state BEFORE this chunk
+        new_state = state * dec_c[:, :, None, None] + st_c
+        return new_state, out_state
+
+    init = jnp.zeros((b, h, p, n), x.dtype)
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (chunk_states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)       # [b,nc,h,p,n]
+
+    # contribution of carried-in state to each position
+    state_decay = jnp.exp(a_cum)                             # [b,nc,c,h]
+    y_off = jnp.einsum("bzcn,bzch,bzhpn->bzchp", Cr, state_decay, prev_states)
+
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, final_state
+
+
+def mamba2_forward(params, x_in: Array, cfg) -> Array:
+    """Training / prefill forward. x_in [B, S, D] -> [B, S, D]."""
+    b, s, d = x_in.shape
+    d_inr = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    hp = cfg.ssm_headdim
+    nh = d_inr // hp
+    dt_ = x_in.dtype
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x_in, params["in_proj"].astype(dt_))
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    xbc, _ = _causal_conv(xbc, params["conv_w"].astype(dt_))
+    xs, B, C = xbc[..., :d_inr], xbc[..., d_inr:d_inr + n], xbc[..., d_inr + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))     # [b,s,nh]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))                  # [nh]
+
+    xh = xs.reshape(b, s, nh, hp)
+    # pad sequence to a chunk multiple (masked by zero dt contribution)
+    pad = (-s) % cfg.ssm_chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    y, _ = _ssd_chunked(xh.astype(jnp.float32), dt, A,
+                        B.astype(jnp.float32), C.astype(jnp.float32),
+                        cfg.ssm_chunk)
+    y = y[:, :s].reshape(b, s, d_inr).astype(dt_)
+    y = y + xs * params["D"].astype(dt_).repeat(hp)[None, None, :]
+    # gated RMSNorm (mamba2 norm-before-out)
+    yn = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(yn.astype(jnp.float32)), -1, keepdims=True)
+    yn = (yn.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)
+          * (1.0 + params["norm_scale"].astype(jnp.float32))).astype(dt_)
+    return jnp.einsum("bse,ed->bsd", yn, params["out_proj"].astype(dt_))
+
+
+def mamba2_init_cache(cfg, batch: int, dtype=jnp.float32):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n = cfg.ssm_state
+    nh = d_in // cfg.ssm_headdim
+    return {
+        "ssm": jnp.zeros((batch, nh, cfg.ssm_headdim, n), dtype),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, d_in + 2 * n), dtype),
+    }
+
+
+def mamba2_decode(params, x_in: Array, cache: dict, cfg):
+    """One-token recurrent step. x_in [B, 1, D]; O(1) state (the long_500k path)."""
+    b, _, d = x_in.shape
+    d_inr = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    hp = cfg.ssm_headdim
+    nh = d_inr // hp
+    dt_ = x_in.dtype
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x_in, params["in_proj"].astype(dt_))
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    # conv state update
+    conv_in = jnp.concatenate([cache["conv"].astype(dt_), xbc], axis=1)
+    w = params["conv_w"].astype(dt_)
+    out = jnp.sum(conv_in * w[None, :, :], axis=1, keepdims=True)
+    xbc = jax.nn.silu(out)
+    new_conv = conv_in[:, 1:]
+
+    xs, B, C = xbc[..., :d_inr], xbc[..., d_inr:d_inr + n], xbc[..., d_inr + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))[:, 0]   # [b,nh]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dec = jnp.exp(dt * A[None, :])                                        # [b,nh]
+    xh = xs.reshape(b, nh, hp).astype(jnp.float32)
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt, B[:, 0].astype(jnp.float32), xh)
+    state = cache["ssm"].astype(jnp.float32) * dec[:, :, None, None] + dBx
+    y = jnp.einsum("bn,bhpn->bhp", C[:, 0].astype(jnp.float32), state)
+    y = y.reshape(b, 1, d_inr).astype(dt_)
+    y = y + xs * params["D"].astype(dt_).repeat(hp)[None, None, :]
+    yn = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(yn.astype(jnp.float32)), -1, keepdims=True)
+    yn = (yn.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)
+          * (1.0 + params["norm_scale"].astype(jnp.float32))).astype(dt_)
+    out = jnp.einsum("bse,ed->bsd", yn, params["out_proj"].astype(dt_))
+    return out, {"ssm": state.astype(cache["ssm"].dtype), "conv": new_conv.astype(cache["conv"].dtype)}

@@ -1,0 +1,122 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV is compressed to a rank-`kv_lora_rank` latent c_kv plus a single shared
+RoPE key head; per-head K_nope/V are up-projected from the latent. The decode
+cache stores only (c_kv, k_rope): 512+64 floats/token for V2-Lite vs
+2·16·128 = 4096 for vanilla GQA — the paper's 93% cache cut, reproduced here
+structurally. Attention itself reuses the chunked online-softmax core.
+
+V2-Lite: no q compression (q_lora_rank is null in the published config).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .attention import _chunk_attend
+from .rope import apply_rope
+
+Array = jax.Array
+
+
+def mla_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    h = cfg.num_heads
+    dc = cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 5)
+    s = d ** -0.5
+    return {
+        "wq": jax.random.normal(ks[0], (d, h * (dn + dr)), dtype) * s,
+        "wd_kv": jax.random.normal(ks[1], (d, dc + dr), dtype) * s,      # latent + shared rope k
+        "wu_k": jax.random.normal(ks[2], (dc, h * dn), dtype) * dc ** -0.5,
+        "wu_v": jax.random.normal(ks[3], (dc, h * dv), dtype) * dc ** -0.5,
+        "wo": jax.random.normal(ks[4], (h * dv, d), dtype) * (h * dv) ** -0.5,
+    }
+
+
+def _project_qkv(params, x, cfg, cos, sin):
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    dc, dn, dr, dv = cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    dt = x.dtype
+    q = jnp.einsum("bsd,de->bse", x, params["wq"].astype(dt)).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    ckv_kr = jnp.einsum("bsd,de->bse", x, params["wd_kv"].astype(dt))
+    c_kv, k_rope = ckv_kr[..., :dc], ckv_kr[..., dc:]
+    if cos is not None:
+        q_rope = apply_rope(q_rope, cos, sin)
+        k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _expand_latent(params, c_kv, cfg):
+    """Up-project the latent into per-head K_nope / V."""
+    b, s, _ = c_kv.shape
+    h, dn, dv = cfg.num_heads, cfg.qk_nope_dim, cfg.v_head_dim
+    dt = c_kv.dtype
+    k_nope = jnp.einsum("bsc,ce->bse", c_kv, params["wu_k"].astype(dt)).reshape(b, s, h, dn)
+    v = jnp.einsum("bsc,ce->bse", c_kv, params["wu_v"].astype(dt)).reshape(b, s, h, dv)
+    return k_nope, v
+
+
+def mla_attention(
+    params, x: Array, cfg,
+    cos: Optional[Array] = None, sin: Optional[Array] = None,
+    *, q_offset: int = 0, chunk: int = 1024,
+) -> Array:
+    """Full-sequence MLA (training / prefill)."""
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    dt = x.dtype
+    q_nope, q_rope, c_kv, k_rope = _project_qkv(params, x, cfg, cos, sin)
+    k_nope, v = _expand_latent(params, c_kv, cfg)
+    # assemble full q/k with the shared rope head broadcast over heads
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)                     # [B,S,H,dn+dr]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, dr))], axis=-1)
+    # pad v to match attend dims (v dim dv may differ from key dim)
+    scale = (dn + dr) ** -0.5
+    qg = q.reshape(b, s, h, 1, dn + dr)  # kv-heads == h (MLA is per-head K/V)
+    out = _chunk_attend(qg, k, v, q_offset + jnp.arange(s),
+                        kv_valid_len=s + q_offset, causal=True, window=0,
+                        cap=0.0, scale=scale, chunk=chunk)
+    out = out.reshape(b, s, h * dv)
+    return jnp.einsum("bse,ed->bsd", out, params["wo"].astype(dt))
+
+
+def mla_decode(
+    params, x: Array,
+    cache_ckv: Array,     # [B, L, dc]  latent cache
+    cache_kr: Array,      # [B, L, dr]  shared rope-key cache
+    pos, cfg,
+    cos: Optional[Array] = None, sin: Optional[Array] = None,
+    *, chunk: int = 2048,
+):
+    """One decode step with the COMPRESSED cache (the MLA contribution)."""
+    b, s1, _ = x.shape
+    h = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    dt = x.dtype
+    q_nope, q_rope, c_kv_new, k_rope_new = _project_qkv(params, x, cfg, cos, sin)
+    cache_ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache_ckv, c_kv_new.astype(cache_ckv.dtype), pos, 1)
+    cache_kr = jax.lax.dynamic_update_slice_in_dim(
+        cache_kr, k_rope_new.astype(cache_kr.dtype), pos, 1)
+    # expand latent -> per-head K/V for the whole cache (baseline; the
+    # absorbed-matmul optimization is the §Perf hillclimb for this arch)
+    k_nope, v = _expand_latent(params, cache_ckv.astype(dt), cfg)
+    l = cache_ckv.shape[1]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(cache_kr.astype(dt)[:, :, None, :], (b, l, h, dr))],
+        axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1).reshape(b, s1, h, 1, dn + dr)
+    out = _chunk_attend(q, k, v, pos + jnp.arange(s1), kv_valid_len=pos + s1,
+                        causal=True, window=0, cap=0.0,
+                        scale=(dn + dr) ** -0.5, chunk=chunk)
+    out = out.reshape(b, s1, h * dv)
+    return (jnp.einsum("bse,ed->bsd", out, params["wo"].astype(dt)),
+            cache_ckv, cache_kr)

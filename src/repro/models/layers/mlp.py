@@ -1,0 +1,42 @@
+"""Feed-forward blocks: gated (SiLU/GeLU GLU), plain GELU, squared-ReLU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _act(name: str, x: Array) -> Array:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if name == "relu2":  # minitron/nemotron squared ReLU
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(f"unknown act {name}")
+
+
+def mlp_init(key, d_model: int, d_ff: int, gated: bool, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d_model ** -0.5
+    s_out = d_ff ** -0.5
+    p = {
+        "w_in": jax.random.normal(k1, (d_model, d_ff), dtype) * s_in,
+        "w_out": jax.random.normal(k2, (d_ff, d_model), dtype) * s_out,
+    }
+    if gated:
+        p["w_gate"] = jax.random.normal(k3, (d_model, d_ff), dtype) * s_in
+    return p
+
+
+def mlp(params, x: Array, act: str, gated: bool) -> Array:
+    dt = x.dtype
+    h = jnp.einsum("bsd,df->bsf", x, params["w_in"].astype(dt))
+    if gated:
+        g = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(dt))
+        h = _act(act, g) * h
+    else:
+        h = _act(act, h)
+    return jnp.einsum("bsf,fd->bsd", h, params["w_out"].astype(dt))

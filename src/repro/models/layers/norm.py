@@ -1,0 +1,55 @@
+"""Normalization layers + logit softcapping."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.zeros((d,), dtype)}  # stored as (scale - 1): gemma style 0-init
+
+
+def rmsnorm(params, x: Array, eps: float = 1e-6, gemma: bool = True) -> Array:
+    """RMSNorm. gemma=True uses (1 + w) scaling (w 0-init); classic uses w
+    1-init — we always store the residual form so both are `1 + scale`."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + eps)
+    out = xf * (1.0 + params["scale"].astype(jnp.float32))
+    return out.astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.zeros((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = xf * (1.0 + params["scale"].astype(jnp.float32)) + params["bias"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+def norm_init(cfg, d: int, dtype=jnp.float32):
+    if cfg.norm_type == "layernorm":
+        return layernorm_init(d, dtype)
+    return rmsnorm_init(d, dtype)
+
+
+def apply_norm(cfg, params, x: Array) -> Array:
+    if cfg.norm_type == "layernorm":
+        return layernorm(params, x, cfg.norm_eps)
+    return rmsnorm(params, x, cfg.norm_eps)
+
+
+def softcap(x: Array, cap: float) -> Array:
+    """gemma2 logit soft-capping: cap * tanh(x / cap)."""
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)

@@ -1,0 +1,70 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE (multimodal rotary, arXiv:2409.12191): the head_dim/2 frequency slots
+are split into (temporal, height, width) sections; each section consumes the
+corresponding coordinate of the 3-D position id. For text, t == h == w == pos
+and M-RoPE degenerates to standard RoPE — which is how the dry-run lowers it
+(the vision frontend is a stub supplying patch embeddings + 3-D positions).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def rope_angles(positions: Array, dim: int, theta: float) -> Tuple[Array, Array]:
+    """positions [..., S] -> cos/sin [..., S, dim//2]."""
+    half = dim // 2
+    freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freq  # [..., S, half]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """x [B, S, H, D]; cos/sin [B, S, D//2] (or broadcastable)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos_ = cos[:, :, None, :].astype(x.dtype)
+    sin_ = sin[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * cos_ - x2 * sin_, x1 * sin_ + x2 * cos_], axis=-1)
+
+
+def mrope_angles(
+    positions: Array,  # [B, 3, S] (t, h, w) coordinates
+    dim: int,
+    theta: float,
+    sections: Tuple[int, ...],
+) -> Tuple[Array, Array]:
+    """M-RoPE cos/sin [B, S, dim//2]: frequency slots split across sections.
+
+    sections sums to dim//2 (e.g. (16, 24, 24) for head_dim 128).
+    """
+    half = dim // 2
+    assert sum(sections) == half, (sections, half)
+    freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    # [B, C=3, S, half]
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    # per-slot coordinate selector: out[b,s,j] = ang[b, sect_id[j], s, j]
+    sect_id = jnp.repeat(
+        jnp.arange(len(sections)), jnp.asarray(sections), total_repeat_length=half
+    )  # [half] static
+    onehot = jax.nn.one_hot(sect_id, len(sections), dtype=ang.dtype)  # [half, C]
+    ang = jnp.einsum("bcsh,hc->bsh", ang, onehot)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def positions_from_segment(batch: int, seq: int, offset: int = 0) -> Array:
+    return jnp.arange(offset, offset + seq, dtype=jnp.int32)[None, :].repeat(batch, 0)
+
+
+def sinusoidal_embedding(seq: int, dim: int, dtype=jnp.float32) -> Array:
+    """Whisper-style fixed sinusoidal table [seq, dim]."""
+    half = dim // 2
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    freq = jnp.exp(-jnp.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / (half - 1))
+    ang = pos * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)

@@ -1,0 +1,255 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free time-mix with
+data-dependent decay + channel-mix.
+
+Time-mix recurrence per head (head size N):
+    S_t = diag(w_t) S_{t-1} + k_tᵀ v_t
+    y_t = r_t · (S_{t-1} + diag(u·k_t)ᵀ? v_t)   — bonus term u on the current token
+with w_t = exp(-exp(w0 + LoRA(x_t))) ∈ (0,1) data-dependent per channel.
+
+Training path runs a CHUNKED form (like mamba2's SSD): within a chunk the
+quadratic decay-weighted attention, across chunks a state recurrence — per
+step memory O(chunk²·H) instead of a T-long serial scan. Decode is the O(1)
+state update (long_500k's enabling property).
+
+Token-shift interpolation (the 'lerp' of RWKV) uses learned per-channel mix
+coefficients; the 'ddlerp' LoRA data-dependence is included for w only (the
+dominant term), a faithful-but-lean reading of the Finch block.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def rwkv6_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    n = cfg.rwkv_head_size
+    nh = d // n
+    lora = 64
+    ks = jax.random.split(key, 10)
+    s = d ** -0.5
+    return {
+        # time-mix
+        "mix_r": jnp.full((d,), 0.5, dtype), "mix_k": jnp.full((d,), 0.5, dtype),
+        "mix_v": jnp.full((d,), 0.5, dtype), "mix_w": jnp.full((d,), 0.5, dtype),
+        "mix_g": jnp.full((d,), 0.5, dtype),
+        "wr": jax.random.normal(ks[0], (d, d), dtype) * s,
+        "wk": jax.random.normal(ks[1], (d, d), dtype) * s,
+        "wv": jax.random.normal(ks[2], (d, d), dtype) * s,
+        "wg": jax.random.normal(ks[3], (d, d), dtype) * s,
+        "wo": jax.random.normal(ks[4], (d, d), dtype) * s,
+        "w0": jnp.full((d,), -2.0, dtype),                     # base decay logit
+        "w_lora_a": jax.random.normal(ks[5], (d, lora), dtype) * s,
+        "w_lora_b": jax.random.normal(ks[6], (lora, d), dtype) * lora ** -0.5,
+        "u": jax.random.normal(ks[7], (nh, n), dtype) * 0.1,   # bonus
+        "ln_scale": jnp.zeros((d,), dtype),                    # per-head groupnorm
+        # channel-mix
+        "cmix_k": jnp.full((d,), 0.5, dtype),
+        "ck": jax.random.normal(ks[8], (d, cfg.d_ff), dtype) * s,
+        "cv": jax.random.normal(ks[9], (cfg.d_ff, d), dtype) * cfg.d_ff ** -0.5,
+    }
+
+
+def _factorized_intra(rc, kc, vc, wc, wcum, u, chunk: int, sub: int):
+    """H1: intra-chunk time-mix without the [c, c, n] decay tensor.
+
+    rc/kc/vc/wc/wcum: [nc, b, h, c, n] (wc = log decay, wcum = inclusive
+    cumsum). Splits the chunk into P = c/sub subchunks:
+      * exact pairwise form INSIDE each subchunk ([P, u, u, n] — u/c of the
+        baseline tensor);
+      * 3-factor bridge ACROSS subchunks: rd·D·kt with every exponent ≤ 0.
+    Returns (y_intra+cross [nc,b,h,c,m], y_bonus [nc,b,h,c,m]).
+    """
+    z, b, h, c, n = rc.shape
+    assert c % sub == 0, (c, sub)
+    P = c // sub
+    shp = (z, b, h, P, sub, n)
+    r_s, k_s, v_s = (t.reshape(shp) for t in (rc, kc, vc))
+    w_s = wc.reshape(shp)
+    wq_s = wcum.reshape(shp)
+
+    # ---- exact within-subchunk pairs (strictly lower triangular)
+    ii = jnp.arange(sub)
+    strict_s = (ii[:, None] > ii[None, :])[None, None, None, None, :, :]
+    di = wq_s[..., :, None, :] - wq_s[..., None, :, :] - w_s[..., :, None, :]
+    dec = jnp.where(strict_s[..., None], jnp.exp(di), 0.0)   # [z,b,h,P,u,u,n]
+    att_d = jnp.einsum("zbhpin,zbhpijn,zbhpjn->zbhpij", r_s, dec, k_s)
+    y_diag = jnp.einsum("zbhpij,zbhpjm->zbhpim", att_d, v_s)
+
+    # ---- cross-subchunk 3-factor bridges (all exponents <= 0, safe)
+    base = jnp.pad(wq_s[..., -1, :], ((0, 0),) * 3 + ((1, 0), (0, 0)))[..., :-1, :]
+    # base[p] = cum log-decay up to end of subchunk p-1 (0 for p = 0)
+    rd = r_s * jnp.exp(wq_s - w_s - base[..., None, :])        # T1 ≤ 0
+    end = wq_s[..., -1, :]                                     # [z,b,h,P,n]
+    kt = k_s * jnp.exp(end[..., None, :] - wq_s)               # T3 ≤ 0
+    bridge = jnp.exp(base[..., :, None, :] - end[..., None, :, :])  # [.,p,q,n] T2
+    pq_mask = (jnp.arange(P)[:, None] > jnp.arange(P)[None, :])
+    bridge = jnp.where(pq_mask[None, None, None, :, :, None], bridge, 0.0)
+    t1 = jnp.einsum("zbhpqn,zbhqjn->zbhpqjn", bridge, kt)      # [.,P,P,u,n]
+    att_x = jnp.einsum("zbhpin,zbhpqjn->zbhpiqj", rd, t1)      # [.,P,u,P,u]
+    y_cross = jnp.einsum("zbhpiqj,zbhqjm->zbhpim", att_x, v_s)
+
+    y = (y_diag + y_cross).reshape(z, b, h, c, n)
+    y_bonus = jnp.einsum("zbhin,hn,zbhin,zbhim->zbhim", rc, u, kc, vc)
+    return y, y_bonus
+
+
+def _token_shift(x: Array, last: Array = None):
+    """x [B,S,D] -> previous token's x (0 / cache for t=0)."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _project(params, x, x_prev, cfg):
+    dt = x.dtype
+    def mix(name):
+        m = params[f"mix_{name}"].astype(dt)
+        return x * m + x_prev * (1.0 - m)
+    r = jnp.einsum("bsd,de->bse", mix("r"), params["wr"].astype(dt))
+    k = jnp.einsum("bsd,de->bse", mix("k"), params["wk"].astype(dt))
+    v = jnp.einsum("bsd,de->bse", mix("v"), params["wv"].astype(dt))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", mix("g"), params["wg"].astype(dt)))
+    xw = mix("w")
+    w_logit = (params["w0"].astype(dt)
+               + jnp.einsum("bsd,dl,le->bse", xw, params["w_lora_a"].astype(dt),
+                            params["w_lora_b"].astype(dt)))
+    # w in (0,1): exp(-exp(logit)) — data-dependent per-channel decay
+    w = jnp.exp(-jnp.exp(w_logit.astype(jnp.float32)))
+    return r, k, v, g, w
+
+
+def _heads(x, nh, n):
+    b, s, d = x.shape
+    return x.reshape(b, s, nh, n)
+
+
+def rwkv6_timemix_chunked(params, x, cfg, state=None, x_last=None):
+    """Chunked parallel form. x [B,S,D]; returns (y, new_state, new_x_last).
+
+    state: [B, H, N, N] carried WKV state; x_last [B,1,D] for token shift.
+    """
+    b, s, d = x.shape
+    n = cfg.rwkv_head_size
+    nh = d // n
+    chunk = min(cfg.ssm_chunk or 128, s) or s
+    dt = x.dtype
+
+    x_prev = _token_shift(x, x_last)
+    r, k, v, g, w = _project(params, x, x_prev, cfg)
+    rh = _heads(r, nh, n).astype(jnp.float32)
+    kh = _heads(k, nh, n).astype(jnp.float32)
+    vh = _heads(v, nh, n).astype(jnp.float32)
+    wh = _heads(jnp.log(jnp.maximum(w, 1e-38)), nh, n)         # log-decay < 0
+    u = params["u"].astype(jnp.float32)                        # [H, N]
+
+    pad = (-s) % chunk
+    if pad:
+        rh = jnp.pad(rh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kh = jnp.pad(kh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        wh = jnp.pad(wh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    nc = sp // chunk
+    rc = rh.reshape(b, nc, chunk, nh, n).transpose(1, 0, 3, 2, 4)  # [nc,b,h,c,n]
+    kc = kh.reshape(b, nc, chunk, nh, n).transpose(1, 0, 3, 2, 4)
+    vc = vh.reshape(b, nc, chunk, nh, n).transpose(1, 0, 3, 2, 4)
+    wc = wh.reshape(b, nc, chunk, nh, n).transpose(1, 0, 3, 2, 4)
+
+    if state is None:
+        state = jnp.zeros((b, nh, n, n), jnp.float32)
+
+    ii = jnp.arange(chunk)
+    strict = (ii[:, None] > ii[None, :])[None, None, None, :, :]  # i attends j<i
+
+    # ---- phase 1 (chunk-parallel, heavy): intra-chunk attention + bonus and
+    # per-chunk state contributions. All einsums live OUTSIDE the recurrence
+    # scan (mamba2-SSD structure): correct XLA cost accounting AND exposed
+    # chunk parallelism on TPU.
+    wcum = jnp.cumsum(wc, axis=3)                              # [nc,b,h,c,n]
+    if cfg.rwkv_factorized:
+        # H1 (§Perf): subchunk-exact 3-factor decomposition — avoids the
+        # [c, c, n] decay tensor. Token j (subchunk q) reaching token i
+        # (subchunk p > q) decays by exp(T1 + T2 + T3) with
+        #   T1 = W[i] - w[i] - base_p   (within p, ≤ 0)
+        #   T2 = base_p - end_q         (whole subchunks between, ≤ 0)
+        #   T3 = end_q - W[j]           (within q, ≤ 0)
+        # so every factor is in (0, 1] — numerically safe — and the n-fold
+        # coupling collapses to per-subchunk [P, P, n] bridges.
+        att_intra, y_bonus_f = _factorized_intra(rc, kc, vc, wc, wcum, u,
+                                                 chunk, cfg.rwkv_subchunk)
+        y_intra = att_intra
+        y_bonus = y_bonus_f
+    else:
+        # token j's contribution reaching i (j<i) decays strictly between j
+        # and i: exp(wcum[i] - wcum[j] - w[i]) — matches decode exactly.
+        di = wcum[:, :, :, :, None, :] - wcum[:, :, :, None, :, :] \
+            - wc[:, :, :, :, None, :]
+        decay = jnp.where(strict[..., None], jnp.exp(di), 0.0)  # [nc,b,h,i,j,n]
+        att = jnp.einsum("zbhin,zbhijn,zbhjn->zbhij", rc, decay, kc)
+        y_intra = jnp.einsum("zbhij,zbhjm->zbhim", att, vc)
+        y_bonus = jnp.einsum("zbhin,hn,zbhin,zbhim->zbhim", rc, u, kc, vc)
+    dk = jnp.exp(wcum[:, :, :, -1:, :] - wcum)                 # decay j->end
+    chunk_states = jnp.einsum("zbhjn,zbhjn,zbhjm->zbhnm", kc, dk, vc)
+    chunk_decay = jnp.exp(wcum[:, :, :, -1, :])                # [nc,b,h,n]
+
+    # ---- phase 2 (sequential, light): carry the [b,h,n,n] state across
+    # chunks — the only op inside the scan is the O(n²) state update.
+    def carry_fn(st, xs):
+        st_c, dec_c = xs
+        return st * dec_c[..., None] + st_c, st
+
+    state, prev_states = jax.lax.scan(carry_fn, state, (chunk_states, chunk_decay))
+
+    # ---- phase 3 (chunk-parallel): carried-state contribution to each token.
+    dstate = jnp.exp(wcum - wc)                                # [nc,b,h,c,n]
+    y_state = jnp.einsum("zbhin,zbhin,zbhnm->zbhim", rc, dstate, prev_states)
+
+    yc = y_intra + y_bonus + y_state                           # [nc,b,h,c,m]
+    y = yc.transpose(1, 0, 3, 2, 4).reshape(b, sp, nh, n)[:, :s]  # [b,s,h,n]
+
+    # per-head groupnorm + gate + out
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    y = (y - mu) * jax.lax.rsqrt(var + 1e-5)
+    y = y.reshape(b, s, d).astype(dt) * (1.0 + params["ln_scale"].astype(dt))
+    y = y * g
+    out = jnp.einsum("bse,ed->bsd", y, params["wo"].astype(dt))
+    return out, state, x[:, -1:]
+
+
+def rwkv6_timemix_decode(params, x, cfg, state, x_last):
+    """O(1) decode step. x [B,1,D]; state [B,H,N,N]."""
+    b, _, d = x.shape
+    n = cfg.rwkv_head_size
+    nh = d // n
+    dt = x.dtype
+    r, k, v, g, w = _project(params, x, x_last, cfg)
+    rh = _heads(r, nh, n)[:, 0].astype(jnp.float32)            # [b,h,n]
+    kh = _heads(k, nh, n)[:, 0].astype(jnp.float32)
+    vh = _heads(v, nh, n)[:, 0].astype(jnp.float32)
+    whh = _heads(w, nh, n)[:, 0]                               # [b,h,n] in (0,1)
+    u = params["u"].astype(jnp.float32)
+    kv = jnp.einsum("bhn,bhm->bhnm", kh, vh)
+    y = jnp.einsum("bhn,bhnm->bhm", rh, state + u[None, :, :, None] * kv)
+    state = state * whh[..., None] + kv
+    mu = jnp.mean(y, -1, keepdims=True)
+    var = jnp.var(y, -1, keepdims=True)
+    y = (y - mu) * jax.lax.rsqrt(var + 1e-5)
+    y = y.reshape(b, 1, d).astype(dt) * (1.0 + params["ln_scale"].astype(dt))
+    y = y * g
+    out = jnp.einsum("bse,ed->bsd", y, params["wo"].astype(dt))
+    return out, state, x
+
+
+def rwkv6_channelmix(params, x, cfg, x_last=None):
+    """Channel-mix: token-shifted relu² MLP. Returns (out, new_x_last)."""
+    dt = x.dtype
+    x_prev = _token_shift(x, x_last)
+    m = params["cmix_k"].astype(dt)
+    xk = x * m + x_prev * (1.0 - m)
+    h = jnp.einsum("bsd,df->bsf", xk, params["ck"].astype(dt))
+    h = jnp.square(jax.nn.relu(h))
+    return jnp.einsum("bsf,fd->bsd", h, params["cv"].astype(dt)), x[:, -1:]

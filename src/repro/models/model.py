@@ -1,0 +1,12 @@
+"""Model registry: config -> model instance."""
+from __future__ import annotations
+
+from .causal_lm import CausalLM
+from .encdec import EncDecLM
+from .config import ModelConfig
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.is_encdec:
+        return EncDecLM(cfg)
+    return CausalLM(cfg)

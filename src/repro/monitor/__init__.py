@@ -1,0 +1,9 @@
+"""Frugal telemetry — the paper's GROUPBY quantile sketches woven into
+training and serving. 1-2 words per group, millions of groups, zero extra
+passes over the data."""
+
+from .registry import TrainMonitors, init_train_monitors, update_train_monitors
+from .moe_stats import expert_load_groups
+
+__all__ = ["TrainMonitors", "init_train_monitors", "update_train_monitors",
+           "expert_load_groups"]

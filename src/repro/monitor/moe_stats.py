@@ -1,0 +1,14 @@
+"""MoE router telemetry helpers: experts as the paper's GROUPBY groups."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def expert_load_groups(num_units: int, num_experts: int) -> int:
+    """Group count for per-(layer, expert) load sketches."""
+    return num_units * num_experts
+
+
+def load_imbalance(load_q99: jnp.ndarray, num_experts: int) -> jnp.ndarray:
+    """q99 load of the hottest expert relative to uniform (1/E)."""
+    return jnp.max(load_q99) * num_experts

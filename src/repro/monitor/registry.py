@@ -1,0 +1,119 @@
+"""Training-time frugal monitor fleet.
+
+Groups tracked every step (each step contributes ONE item per group — exactly
+the paper's stream model):
+
+  activation absmax   per (stage-unit × kind)      -> q50 & q99 sketches
+  activation rms      per (stage-unit × kind)      -> q50 sketch
+  expert load         per (stage-unit × expert)    -> q50 & q99 sketches (MoE)
+  step wall-time      per host                     -> q99 sketch (straggler
+                                                      detection, trainer-side)
+
+Total persistent state: 2 words per group (Frugal-2U), e.g. deepseek-v2-lite:
+26 units × 64 experts × 2 sketches + 2×26 activation groups ≈ 3.4k words —
+versus > 70k words for a t=20 GK summary per group (paper §6.1) and an
+unbounded window for exact percentile tracking.
+
+The sketches live inside TrainState and update INSIDE the jitted train_step
+(pure function), so telemetry costs a handful of VPU compare/selects — no
+host round-trip, no extra pass.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.frugal import Frugal2UState, frugal2u_update
+
+Array = jax.Array
+
+
+class TrainMonitors(NamedTuple):
+    act_absmax_q99: Optional[Frugal2UState]   # [n_act_groups]
+    act_rms_q50: Optional[Frugal2UState]      # [n_act_groups]
+    expert_load_q99: Optional[Frugal2UState]  # [n_moe_groups] ([] if no MoE)
+    n_act_groups: Array                       # static-ish ints kept as arrays
+    n_moe_groups: Array
+
+
+def _mk_sketch(g: int, init: float = 0.0) -> Frugal2UState:
+    m = jnp.full((g,), init, jnp.float32)
+    return Frugal2UState(m=m, step=jnp.ones_like(m), sign=jnp.ones_like(m))
+
+
+def _flatten_stats(stats: Dict[str, Any]):
+    """Model stats pytree -> (absmax [G], rms [G], expert_load [Gm] or None).
+
+    Scan-stacked stage stats arrive as lists of dicts with [n_units]-shaped
+    leaves; prefix stats as scalar dicts.
+    """
+    absmax, rms, loads = [], [], []
+
+    def visit(st):
+        if not isinstance(st, dict):
+            return
+        if "absmax" in st:
+            absmax.append(jnp.ravel(st["absmax"]))
+        if "rms" in st:
+            rms.append(jnp.ravel(st["rms"]))
+        if "expert_load" in st and st["expert_load"] is not None:
+            loads.append(jnp.ravel(st["expert_load"]))
+
+    for v in stats.values():
+        if isinstance(v, dict):
+            visit(v)
+        elif isinstance(v, (list, tuple)):
+            for st in v:
+                visit(st)
+    a = jnp.concatenate(absmax) if absmax else jnp.zeros((0,))
+    r = jnp.concatenate(rms) if rms else jnp.zeros((0,))
+    l = jnp.concatenate(loads) if loads else None
+    return a, r, l
+
+
+def init_train_monitors(model, params, example_batch) -> TrainMonitors:
+    """Shape-infer group counts with eval_shape (no FLOPs)."""
+    def probe(p, b):
+        _, aux = model.loss(p, b)
+        return _flatten_stats(aux["stats"])
+
+    a, r, l = jax.eval_shape(probe, params, example_batch)
+    n_act = a.shape[0]
+    n_moe = 0 if l is None else l.shape[0]
+    return TrainMonitors(
+        act_absmax_q99=_mk_sketch(n_act),
+        act_rms_q50=_mk_sketch(n_act),
+        expert_load_q99=_mk_sketch(n_moe) if n_moe else None,
+        n_act_groups=jnp.asarray(n_act),
+        n_moe_groups=jnp.asarray(n_moe),
+    )
+
+
+def update_train_monitors(
+    mon: TrainMonitors, stats: Dict[str, Any], key: Array
+) -> TrainMonitors:
+    """One frugal tick per group from this step's stats (inside train_step)."""
+    a, r, l = _flatten_stats(stats)
+    k1, k2, k3 = jax.random.split(key, 3)
+    absmax_sk = frugal2u_update(
+        mon.act_absmax_q99, a, jax.random.uniform(k1, a.shape), 0.99)
+    rms_sk = frugal2u_update(
+        mon.act_rms_q50, r, jax.random.uniform(k2, r.shape), 0.5)
+    moe_sk = mon.expert_load_q99
+    if moe_sk is not None and l is not None:
+        moe_sk = frugal2u_update(
+            moe_sk, l, jax.random.uniform(k3, l.shape), 0.99)
+    return mon._replace(act_absmax_q99=absmax_sk, act_rms_q50=rms_sk,
+                        expert_load_q99=moe_sk)
+
+
+def monitor_summary(mon: TrainMonitors) -> Dict[str, Array]:
+    out = {
+        "act_absmax_q99": mon.act_absmax_q99.m,
+        "act_rms_q50": mon.act_rms_q50.m,
+    }
+    if mon.expert_load_q99 is not None:
+        out["expert_load_q99"] = mon.expert_load_q99.m
+    return out

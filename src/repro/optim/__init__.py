@@ -1,0 +1,12 @@
+"""Optimizer substrate: AdamW / Lion, schedules, clipping (incl. frugal
+quantile clipping — the paper's sketch applied to gradient-norm streams)."""
+
+from .optimizer import adamw_init, adamw_update, lion_init, lion_update, Optimizer
+from .schedule import warmup_cosine, constant
+from .clipping import clip_by_global_norm, QuantileClipState, quantile_clip
+
+__all__ = [
+    "adamw_init", "adamw_update", "lion_init", "lion_update", "Optimizer",
+    "warmup_cosine", "constant",
+    "clip_by_global_norm", "QuantileClipState", "quantile_clip",
+]

@@ -1,0 +1,97 @@
+"""AdamW and Lion, pure-pytree implementations (no external deps).
+
+Optimizer state shards exactly like params (the sharding rules map leaves by
+path; mu/nu mirror the param tree).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return AdamWState(mu=zeros, nu=jax.tree.map(jnp.copy, zeros),
+                      count=jnp.zeros((), jnp.int32))
+
+
+def adamw_update(
+    grads, state: AdamWState, params,
+    lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+    weight_decay: float = 0.1,
+):
+    count = state.count + 1
+    cf = count.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** cf
+    bc2 = 1.0 - b2 ** cf
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        step = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(mu=new_mu, nu=new_nu, count=count)
+
+
+class LionState(NamedTuple):
+    mu: Any
+    count: jax.Array
+
+
+def lion_init(params) -> LionState:
+    return LionState(
+        mu=jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params),
+        count=jnp.zeros((), jnp.int32))
+
+
+def lion_update(grads, state: LionState, params, lr,
+                b1: float = 0.9, b2: float = 0.99, weight_decay: float = 0.1):
+    def upd(g, m, p):
+        g = g.astype(jnp.float32)
+        update = jnp.sign(b1 * m + (1 - b1) * g) + weight_decay * p.astype(jnp.float32)
+        m = b2 * m + (1 - b2) * g
+        return (p.astype(jnp.float32) - lr * update).astype(p.dtype), m
+
+    out = jax.tree.map(upd, grads, state.mu, params)
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, LionState(mu=new_mu, count=state.count + 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """Thin dispatcher so the trainer is optimizer-agnostic."""
+    kind: str = "adamw"
+    lr_fn: Callable = None
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+
+    def init(self, params):
+        return adamw_init(params) if self.kind == "adamw" else lion_init(params)
+
+    def update(self, grads, state, params, step):
+        lr = self.lr_fn(step) if self.lr_fn else 3e-4
+        if self.kind == "adamw":
+            return adamw_update(grads, state, params, lr,
+                                b1=self.b1, b2=self.b2,
+                                weight_decay=self.weight_decay)
+        return lion_update(grads, state, params, lr,
+                           b1=self.b1, b2=self.b2, weight_decay=self.weight_decay)

@@ -1,0 +1,18 @@
+"""Distribution substrate: sharding rules, collectives, pipeline stages,
+gradient compression."""
+
+from .sharding import (
+    param_shardings,
+    batch_shardings,
+    dp_axes,
+    set_activation_mesh,
+    shard_activation,
+)
+
+__all__ = [
+    "param_shardings",
+    "batch_shardings",
+    "dp_axes",
+    "set_activation_mesh",
+    "shard_activation",
+]

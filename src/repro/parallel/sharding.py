@@ -1,0 +1,199 @@
+"""Logical-axis sharding rules (MaxText-style, path-based).
+
+Meshes:
+  single-pod: (data=16, model=16)            — 256 chips
+  multi-pod:  (pod=2, data=16, model=16)     — 512 chips
+
+Rules (TP on 'model', DP on ('pod','data')):
+  embeddings / lm head [V, D]       -> ('model', None)   vocab-sharded
+  learned positions   [L, D]        -> ('model', None)
+  attn/mla q,k,v,up-projections     -> (..., 'model')    column-parallel
+  attn/mla out, mlp down            -> ('model', ...)    row-parallel
+  MoE expert tensors [E, ., .]      -> ('model', None, None)  EP
+  router / norms / small vectors    -> replicated
+  scan-stacked leaves               -> same rule shifted right by the layer dim
+
+Divisibility guard: a dim is only sharded if divisible by the axis size;
+otherwise that dim falls back to replication (e.g. granite's MQA kv=1).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------- rule table
+# name -> (sharded_dim_from_right, ...) semantics:
+#   'col': last dim on 'model';  'row': first non-layer dim on 'model';
+#   'vocab': dim 0 on 'model';   'expert': dim 0 (after layer dim) on 'model';
+#   'rep': replicated.
+_RULES = [
+    (r"^(table|pos_table)$", "vocab"),
+    (r"^(wq|wk|wv|w_in|w_gate|ck|wr|wg|in_proj|wu_k|wu_v)$", "col"),
+    (r"^(wo|w_out|out_proj|cv)$", "row"),
+    (r"^(router|wd_kv|w_lora_a|w_lora_b|conv_w|A_log|D|dt_bias|w0|u)$", "rep"),
+    (r"^(scale|bias|norm_scale|ln_scale|mix_.*|cmix_.*)$", "rep"),
+]
+
+
+def _leaf_rule(name: str) -> str:
+    for pat, rule in _RULES:
+        if re.match(pat, name):
+            return rule
+    return "rep"
+
+
+def _spec_for(rule: str, ndim: int, shape, n_layer_dims: int,
+              model_size: int, data_size: int = 1) -> P:
+    """Build a PartitionSpec honoring divisibility.
+
+    TP on 'model' per the rule table, PLUS FSDP/ZeRO-style sharding over
+    'data': scan-stacked params shard their LAYER dim over 'data' when
+    divisible (each data shard owns L/data layers + their optimizer state;
+    the scan's per-layer dynamic-slice becomes an overlappable per-layer
+    all-gather — the standard weight-gathered SPMD pattern). When the layer
+    count doesn't divide, fall back to sharding the first unsharded large
+    dim over 'data'.
+    """
+    spec = [None] * ndim
+
+    def ok(dim_idx, size):
+        return shape[dim_idx] % size == 0 and shape[dim_idx] >= size
+
+    if rule == "vocab":
+        if ndim >= 2 and ok(0, model_size):
+            spec[0] = "model"
+    elif rule == "col":
+        d = ndim - 1
+        # expert tensors with 3 real dims: [E, D, F] -> shard E (EP) instead
+        if ndim - n_layer_dims == 3:
+            if ok(n_layer_dims, model_size):
+                spec[n_layer_dims] = "model"
+        elif ok(d, model_size):
+            spec[d] = "model"
+    elif rule == "row":
+        d = n_layer_dims  # first real dim after stacked layer dims
+        if ok(d, model_size):
+            spec[d] = "model"
+    # ---- FSDP over 'data' (params + optimizer state residency / data_size)
+    if data_size > 1 and rule in ("vocab", "col", "row") and ndim >= 2:
+        if n_layer_dims and spec[0] is None and ok(0, data_size):
+            spec[0] = "data"                      # layer-dim ZeRO shard
+        else:
+            for d in range(n_layer_dims, ndim):   # first shardable free dim
+                if spec[d] is None and ok(d, data_size):
+                    spec[d] = "data"
+                    break
+    return P(*spec)
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            names.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            names.append(f"[{k.idx}]")
+        else:
+            names.append(str(k))
+    return tuple(names)
+
+
+def param_spec_tree(params, model_size: int, data_size: int = 1,
+                    exclude_vocab_fsdp: bool = False):
+    """PartitionSpec pytree for a model param tree (handles scan stacking).
+
+    exclude_vocab_fsdp (H2c, §Perf): embedding/unembedding tables FSDP-shard
+    their d_model dim over 'data' by default; that turns the embed/unembed
+    contractions into data-axis all-reduces of f32 residual-sized activations
+    every step. Excluding the (small) vocab tables from FSDP trades ~65 MB of
+    per-device residency for those collectives.
+    """
+    def spec(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        in_stack = any(n in ("stack", "enc_stack", "dec_stack") for n in names)
+        n_layer_dims = 1 if in_stack else 0
+        rule = _leaf_rule(name)
+        ds = data_size
+        if exclude_vocab_fsdp and rule == "vocab":
+            ds = 1
+        return _spec_for(rule, leaf.ndim, leaf.shape, n_layer_dims,
+                         model_size, ds)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def param_shardings(params, mesh: Mesh, fsdp: bool = True,
+                    exclude_vocab_fsdp: bool = False):
+    model_size = mesh.shape.get("model", 1)
+    data_size = mesh.shape.get("data", 1) if fsdp else 1
+    specs = param_spec_tree(params, model_size, data_size, exclude_vocab_fsdp)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+# ------------------------------------------------------------------- batches
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def batch_spec_tree(batch, mesh: Mesh):
+    dp = dp_axes(mesh)
+
+    def spec(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        return P(dp, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec, batch)
+
+
+def batch_shardings(batch, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        batch_spec_tree(batch, mesh))
+
+
+# --------------------------------------------- activation constraints (hook)
+_ACTIVE_MESH: Optional[Mesh] = None
+
+
+def set_activation_mesh(mesh: Optional[Mesh]):
+    """Launch code installs the mesh; model code then emits
+    with_sharding_constraint at the annotated hot spots. No-op when unset so
+    smoke tests / single-device runs are untouched."""
+    global _ACTIVE_MESH
+    _ACTIVE_MESH = mesh
+
+
+def shard_activation(x, kind: str):
+    """kind: 'btd' token activations, 'moe_buf' [E,C,D], 'kv_cache' [B,L,H,D]."""
+    mesh = _ACTIVE_MESH
+    if mesh is None:
+        return x
+    dp = dp_axes(mesh)
+    model = mesh.shape.get("model", 1)
+    if kind == "btd" and x.ndim == 3:
+        spec = P(dp, None, None)
+    elif kind == "btd_seq" and x.ndim == 3:
+        # H2b sequence parallelism: residual stream sharded over 'model' on
+        # the seq dim between blocks (XLA turns the per-block 2x all-reduce
+        # into all-gather + reduce-scatter)
+        spec = P(dp, "model" if x.shape[1] % model == 0 else None, None)
+    elif kind == "moe_buf" and x.ndim == 3 and x.shape[0] % model == 0:
+        spec = P("model", None, None)
+    elif kind == "moe_buf4" and x.ndim == 4:
+        # [B, E, C, D]: batch over dp, experts over model (EP)
+        dp_total = 1
+        for a in dp:
+            dp_total *= mesh.shape.get(a, 1)
+        spec = P(dp if x.shape[0] % dp_total == 0 else None,
+                 "model" if x.shape[1] % model == 0 else None, None, None)
+    elif kind == "kv_cache" and x.ndim == 4:
+        heads_ok = x.shape[2] % model == 0
+        spec = P(dp, None, "model" if heads_ok else None, None)
+    else:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,6 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+
+from .hlo_parse import collective_bytes
+from .analysis import roofline_terms, HW
+
+__all__ = ["collective_bytes", "roofline_terms", "HW"]

@@ -1,0 +1,5 @@
+"""Serving substrate: batched KV-cache engine + frugal SLO telemetry."""
+
+from .engine import ServeEngine, Request
+
+__all__ = ["ServeEngine", "Request"]

@@ -1,0 +1,6 @@
+"""Training substrate: state, steps, trainer loop, checkpointing, elasticity."""
+
+from .train_state import TrainState, create_train_state
+from .steps import make_train_step, make_serve_step
+
+__all__ = ["TrainState", "create_train_state", "make_train_step", "make_serve_step"]

@@ -1,0 +1,120 @@
+"""Fault-tolerant checkpointing: atomic, sharded, keep-k, resumable.
+
+Layout (one directory per step):
+    <dir>/step_000042/
+        manifest.json      — step, pytree structure, leaf shapes/dtypes, mesh
+        shard_<host>.npz   — this host's param/optimizer leaves (flat index)
+    <dir>/step_000042.COMMITTED   — empty marker, written LAST (atomic rename)
+
+Crash-safety: writers write into step_X.tmp/, fsync, rename to step_X/, then
+create the COMMITTED marker. Readers only consider steps with markers. A
+preempted/killed trainer restarts from the newest committed step (tested in
+tests/test_fault_tolerance.py by killing a trainer subprocess mid-run).
+
+Elastic re-sharding: leaves are stored UNSHARDED per host here (single-host
+container); `restore` accepts any device mesh and re-places leaves with the
+target shardings — the 8→4 device elastic test exercises exactly that path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(ckpt_dir: str, step: int, state: Any, keep: int = 3,
+                    host_id: int = 0) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    name = f"step_{step:08d}"
+    tmp = os.path.join(ckpt_dir, name + ".tmp")
+    final = os.path.join(ckpt_dir, name)
+    marker = os.path.join(ckpt_dir, name + ".COMMITTED")
+    if os.path.exists(marker):
+        return final                             # idempotent re-save
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    if os.path.exists(final):                    # uncommitted leftover
+        shutil.rmtree(final)
+    os.makedirs(tmp)
+
+    leaves, treedef = _flatten(state)
+    arrs = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
+    np.savez(os.path.join(tmp, f"shard_{host_id}.npz"), **arrs)
+    manifest = {
+        "step": step,
+        "num_leaves": len(leaves),
+        "treedef": str(treedef),
+        "shapes": [list(np.shape(a)) for a in leaves],
+        "dtypes": [str(np.asarray(l).dtype) for l in leaves],
+        "format": 1,
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, final)                       # atomic on POSIX
+    with open(marker, "w") as f:                 # commit marker LAST
+        f.write("ok")
+        f.flush()
+        os.fsync(f.fileno())
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = committed_steps(ckpt_dir)
+    for s in steps[:-keep]:
+        name = f"step_{s:08d}"
+        shutil.rmtree(os.path.join(ckpt_dir, name), ignore_errors=True)
+        try:
+            os.remove(os.path.join(ckpt_dir, name + ".COMMITTED"))
+        except OSError:
+            pass
+
+
+def committed_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    steps = []
+    for fn in os.listdir(ckpt_dir):
+        if fn.endswith(".COMMITTED"):
+            steps.append(int(fn[len("step_"):-len(".COMMITTED")]))
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = committed_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, like: Any, step: Optional[int] = None,
+                       shardings: Any = None, host_id: int = 0) -> Tuple[Any, int]:
+    """Restore into the structure of `like`. `shardings` (optional pytree of
+    NamedSharding) re-places leaves onto a NEW mesh — the elastic path."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    data = np.load(os.path.join(path, f"shard_{host_id}.npz"))
+    leaves, treedef = _flatten(like)
+    restored = []
+    for i, ref in enumerate(leaves):
+        arr = data[f"leaf_{i}"]
+        if shardings is not None:
+            sh_leaves, _ = _flatten(shardings)
+            arr = jax.device_put(arr, sh_leaves[i])
+        else:
+            arr = jax.numpy.asarray(arr, dtype=ref.dtype) \
+                if hasattr(ref, "dtype") else arr
+        restored.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, restored), step

@@ -1,0 +1,43 @@
+"""Elastic scaling: re-shard a committed checkpoint onto a different mesh.
+
+The checkpoint format stores leaves unsharded (per host), so scaling from N
+to M devices is: build abstract state for the SAME config, compute shardings
+on the NEW mesh, restore with device_put against those shardings. No
+resharding pass over the data, no divisibility coupling between old and new
+meshes. Used by tests/test_fault_tolerance.py::test_elastic_reshard (8 -> 4
+host devices in a subprocess).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+
+from repro.parallel.sharding import param_shardings
+from . import checkpoint as ckpt_lib
+
+
+def reshard_restore(
+    ckpt_dir: str,
+    like_state: Any,
+    new_mesh,
+    step: Optional[int] = None,
+) -> Tuple[Any, int]:
+    """Restore `like_state`-shaped checkpoint, placed for `new_mesh`."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    rep = NamedSharding(new_mesh, P())
+    p_sh = param_shardings(like_state.params, new_mesh)
+    opt_sh = type(like_state.opt_state)(
+        mu=param_shardings(like_state.opt_state.mu, new_mesh),
+        nu=param_shardings(like_state.opt_state.nu, new_mesh),
+        count=rep)
+    mon_sh = jax.tree.map(lambda _: rep, like_state.monitors) \
+        if like_state.monitors is not None else None
+    qc_sh = jax.tree.map(lambda _: rep, like_state.qclip) \
+        if like_state.qclip is not None else None
+    shardings = type(like_state)(
+        params=p_sh, opt_state=opt_sh, step=rep, rng=rep,
+        monitors=mon_sh, qclip=qc_sh)
+    return ckpt_lib.restore_checkpoint(ckpt_dir, like_state, step=step,
+                                       shardings=shardings)

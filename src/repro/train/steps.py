@@ -1,0 +1,74 @@
+"""train_step / serve_step builders — the functions the dry-run lowers.
+
+train_step = forward + CE loss (+ MoE aux) -> grads -> frugal quantile clip
+(or global-norm) -> AdamW -> frugal monitor updates. Everything is one pure
+function of (TrainState, batch); the monitors' sketch updates are a handful
+of vectorized compare/selects fused into the step.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import Optimizer
+from repro.optim.clipping import clip_by_global_norm, quantile_clip
+from repro.monitor.registry import update_train_monitors
+from .train_state import TrainState
+
+
+def make_train_step(model, optimizer: Optimizer, clip_mode: str = "quantile",
+                    max_norm: float = 1.0):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def train_step(state: TrainState, batch: Dict[str, Any]):
+        rng, k_clip, k_mon = jax.random.split(state.rng, 3)
+
+        def loss_fn(p):
+            return model.loss(p, batch)
+
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(state.params)
+
+        qclip_state = state.qclip
+        if clip_mode == "quantile" and qclip_state is not None:
+            keys = sorted(grads.keys()) if isinstance(grads, dict) else None
+            blocks = [grads[k] for k in keys]
+            blocks, qclip_state, block_norms = quantile_clip(
+                blocks, qclip_state, k_clip)
+            grads = dict(zip(keys, blocks))
+            gnorm = jnp.sqrt(jnp.sum(jnp.square(block_norms)))
+        else:
+            grads, gnorm = clip_by_global_norm(grads, max_norm)
+
+        params, opt_state = optimizer.update(grads, state.opt_state,
+                                             state.params, state.step)
+
+        monitors = state.monitors
+        if monitors is not None:
+            monitors = update_train_monitors(monitors, aux["stats"], k_mon)
+
+        new_state = TrainState(params=params, opt_state=opt_state,
+                               step=state.step + 1, rng=rng,
+                               monitors=monitors, qclip=qclip_state)
+        metrics = {
+            "loss": loss,
+            "ce_loss": aux["ce_loss"],
+            "aux_loss": aux["aux_loss"],
+            "grad_norm": gnorm,
+        }
+        return new_state, metrics
+
+    return train_step
+
+
+def make_serve_step(model, encdec_memory: bool = False):
+    """Returns serve_step(params, tokens, caches, pos[, memory]) — one decode
+    token for the whole batch (the decode_* / long_* dry-run target)."""
+    if encdec_memory:
+        def serve_step(params, tokens, caches, pos, memory):
+            return model.decode_step(params, tokens, caches, pos, memory)
+    else:
+        def serve_step(params, tokens, caches, pos):
+            return model.decode_step(params, tokens, caches, pos)
+    return serve_step

@@ -1,0 +1,56 @@
+"""TrainState: params + optimizer + frugal monitors + RNG, one pytree."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import Optimizer
+from repro.optim.clipping import QuantileClipState, quantile_clip_init
+from repro.monitor.registry import TrainMonitors, init_train_monitors
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jax.Array
+    rng: jax.Array
+    monitors: Optional[TrainMonitors]
+    qclip: Optional[QuantileClipState]
+
+
+def create_train_state(
+    model, optimizer: Optimizer, key,
+    example_batch=None, with_monitors: bool = True,
+    with_quantile_clip: bool = True,
+) -> TrainState:
+    k_init, k_rng = jax.random.split(key)
+    params = model.init(k_init)
+    opt_state = optimizer.init(params)
+    monitors = None
+    if with_monitors and example_batch is not None:
+        monitors = init_train_monitors(model, params, example_batch)
+    qclip = None
+    if with_quantile_clip:
+        qclip = quantile_clip_init(_num_blocks(params))
+    return TrainState(params=params, opt_state=opt_state,
+                      step=jnp.zeros((), jnp.int32), rng=k_rng,
+                      monitors=monitors, qclip=qclip)
+
+
+def _num_blocks(params) -> int:
+    """Top-level param blocks = frugal clip groups."""
+    return len(params)
+
+
+def abstract_train_state(model, optimizer: Optimizer, key, example_batch=None,
+                         with_monitors: bool = True,
+                         with_quantile_clip: bool = True):
+    """ShapeDtypeStruct version of create_train_state (dry-run: no allocation)."""
+    def build(k):
+        return create_train_state(model, optimizer, k,
+                                  example_batch=example_batch,
+                                  with_monitors=with_monitors,
+                                  with_quantile_clip=with_quantile_clip)
+    return jax.eval_shape(build, key)

@@ -1,0 +1,18 @@
+# NOTE: do NOT set XLA_FLAGS / host device count here. Smoke tests and
+# benchmarks must see the single real CPU device; only launch/dryrun.py
+# forces 512 placeholder devices (in its own process).
+import os
+import sys
+
+# Make `src/` importable without installation (PYTHONPATH=src also works).
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,151 @@
+"""Per-architecture smoke tests: REDUCED same-family configs, one real
+forward + loss + grad step and one decode step on CPU; asserts shapes + no
+NaNs. Full configs are exercised only by the dry-run (ShapeDtypeStruct)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, reduce_for_smoke
+from repro.models import build_model
+
+B, S = 2, 64
+
+
+def _batch_for(cfg, key):
+    ks = jax.random.split(key, 3)
+    if cfg.is_encdec:
+        return {
+            "frames": jax.random.normal(ks[0], (B, 32, cfg.d_model), jnp.float32),
+            "tokens": jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size),
+            "targets": jax.random.randint(ks[2], (B, S), 0, cfg.vocab_size),
+        }
+    batch = {
+        "tokens": jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size),
+        "targets": jax.random.randint(ks[2], (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.pos_type == "mrope":
+        p = jnp.arange(S, dtype=jnp.int32)[None, None, :]
+        batch["positions"] = jnp.broadcast_to(p, (B, 3, S))
+    return batch
+
+
+@pytest.fixture(scope="module")
+def arch_state():
+    return {}
+
+
+def _setup(arch):
+    cfg = reduce_for_smoke(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_loss(arch):
+    cfg, model, params = _setup(arch)
+    batch = _batch_for(cfg, jax.random.PRNGKey(1))
+    loss, aux = jax.jit(model.loss)(params, batch)
+    assert np.isfinite(float(loss)), f"{arch}: non-finite loss {loss}"
+    assert float(loss) > 0.0
+    # logits shape check via forward
+    if cfg.is_encdec:
+        logits, _ = model.forward(params, batch["frames"], batch["tokens"])
+    else:
+        logits, _ = model.forward(params, tokens=batch["tokens"],
+                                  positions=batch.get("positions"))
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_grad_step(arch):
+    cfg, model, params = _setup(arch)
+    batch = _batch_for(cfg, jax.random.PRNGKey(2))
+
+    def loss_fn(p):
+        l, _ = model.loss(p, batch)
+        return l
+
+    grads = jax.jit(jax.grad(loss_fn))(params)
+    flat = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in flat), f"{arch}: NaN grads"
+    # at least one nonzero grad per major component
+    gnorm = sum(float(jnp.sum(jnp.square(g))) for g in flat)
+    assert gnorm > 0.0, f"{arch}: zero gradient"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step(arch):
+    cfg, model, params = _setup(arch)
+    max_len = 32
+    if cfg.is_encdec:
+        frames = jax.random.normal(jax.random.PRNGKey(3), (B, 16, cfg.d_model))
+        memory = model.encode(params, frames)
+        caches = model.init_cache(B, max_len)
+        tok = jnp.zeros((B, 1), jnp.int32)
+        logits, caches = jax.jit(
+            lambda p, t, c, m: model.decode_step(p, t, c, 0, m)
+        )(params, tok, caches, memory)
+    else:
+        caches = model.init_cache(B, max_len)
+        tok = jnp.zeros((B, 1), jnp.int32)
+        logits, caches = jax.jit(
+            lambda p, t, c: model.decode_step(p, t, c, 0)
+        )(params, tok, caches)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{arch}: NaN decode logits"
+
+
+@pytest.mark.parametrize("arch", ["rwkv6-1.6b", "zamba2-2.7b"])
+def test_ssm_decode_matches_forward(arch):
+    """Recurrent decode must match the chunked-parallel forward teacher-forced
+    (the correctness core of the long_500k path)."""
+    cfg, model, params = _setup(arch)
+    T = 12
+    toks = jax.random.randint(jax.random.PRNGKey(4), (1, T), 0, cfg.vocab_size)
+    logits_par, _ = model.forward(params, tokens=toks)
+    caches = model.init_cache(1, T)
+    outs = []
+    for t in range(T):
+        lg, caches = model.decode_step(params, toks[:, t:t + 1], caches, t)
+        outs.append(lg[:, 0])
+    logits_seq = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(logits_par, np.float32), np.asarray(logits_seq, np.float32),
+        rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "gemma2-9b", "deepseek-v2-lite-16b"])
+def test_attn_decode_matches_forward(arch):
+    """KV-cache decode must reproduce teacher-forced forward logits.
+
+    MoE archs: capacity drops differ between batched forward (many tokens
+    contend per expert) and one-token decode — that's inherent to
+    capacity-factor routing, not a bug. We raise the capacity so no tokens
+    drop and routing parity is what's tested.
+    """
+    import dataclasses
+
+    cfg, model, params = _setup(arch)
+    if cfg.moe_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=16.0)
+        from repro.models import build_model as _bm
+        model = _bm(cfg)
+    T = 8
+    toks = jax.random.randint(jax.random.PRNGKey(5), (1, T), 0, cfg.vocab_size)
+    batch_pos = None
+    if cfg.pos_type == "mrope":
+        p = jnp.arange(T, dtype=jnp.int32)[None, None, :]
+        batch_pos = jnp.broadcast_to(p, (1, 3, T))
+    logits_par, _ = model.forward(params, tokens=toks, positions=batch_pos)
+    caches = model.init_cache(1, T)
+    outs = []
+    for t in range(T):
+        lg, caches = model.decode_step(params, toks[:, t:t + 1], caches, t)
+        outs.append(lg[:, 0])
+    logits_seq = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(logits_par, np.float32), np.asarray(logits_seq, np.float32),
+        rtol=2e-2, atol=2e-2)

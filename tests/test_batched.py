@@ -1,0 +1,87 @@
+"""Batched binomial frugal updates (beyond-paper ext): fixed-point agreement
+with the sequential paper algorithm, and tensor-ingest API."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import GroupedQuantileSketch, Frugal2UState, batched_frugal2u_update
+from repro.core.reference import relative_mass_error
+
+
+def test_batched_fixed_point_median():
+    """Feeding batches from a fixed distribution, the batched sketch must
+    settle at the same F(m)=q fixed point as the sequential walk (Thm 2 band)."""
+    rng = np.random.default_rng(0)
+    G, B, steps = 8, 256, 400
+    sk = GroupedQuantileSketch.create(G, quantile=0.5, algo="2u", init=0.0)
+    key = jax.random.PRNGKey(0)
+    all_items = []
+    for t in range(steps):
+        x = rng.normal(200.0, 50.0, size=(B, G)).astype(np.float32)
+        all_items.append(x)
+        key, sub = jax.random.split(key)
+        sk = sk.ingest_tensor(jnp.asarray(x), sub, group_axis=-1)
+    pooled = np.concatenate(all_items, axis=0)
+    for g in range(G):
+        err = relative_mass_error(float(sk.m[g]), sorted(pooled[:, g].tolist()), 0.5)
+        assert abs(err) < 0.06, f"group {g}: batched fixed point off by {err:.3f}"
+
+
+@pytest.mark.parametrize("q", [0.1, 0.9])
+def test_batched_fixed_point_tail_quantiles(q):
+    rng = np.random.default_rng(1)
+    G, B, steps = 4, 512, 500
+    sk = GroupedQuantileSketch.create(G, quantile=q, algo="2u", init=100.0)
+    key = jax.random.PRNGKey(1)
+    pooled = []
+    for t in range(steps):
+        x = rng.lognormal(5.0, 1.0, size=(B, G)).astype(np.float32)
+        pooled.append(x)
+        key, sub = jax.random.split(key)
+        sk = sk.ingest_tensor(jnp.asarray(x), sub)
+    pooled = np.concatenate(pooled, 0)
+    for g in range(G):
+        err = relative_mass_error(float(sk.m[g]), sorted(pooled[:, g].tolist()), q)
+        assert abs(err) < 0.08, f"q={q} group {g}: err {err:.3f}"
+
+
+def test_batched_drift_is_bounded():
+    """|Δm| per mega-tick ≤ √B·unit — no burst can fling the estimate."""
+    G, B = 16, 1024
+    st0 = Frugal2UState(
+        m=jnp.zeros(G), step=jnp.ones(G), sign=jnp.ones(G))
+    # adversarial burst: every item enormous
+    items = jnp.full((B, G), 1e9, dtype=jnp.float32)
+    st1 = batched_frugal2u_update(st0, items, jax.random.PRNGKey(2), 0.5)
+    max_move = float(jnp.max(jnp.abs(st1.m - st0.m)))
+    # step grew 1 -> 2 on the first same-direction tick, so unit = 2
+    assert max_move <= np.sqrt(B) * 2.0 + 1.0
+
+
+def test_ingest_tensor_group_axis():
+    """group_axis selects which dim is 'channels'; others flatten to items."""
+    sk = GroupedQuantileSketch.create(8, quantile=0.5)
+    x = jnp.arange(4 * 16 * 8, dtype=jnp.float32).reshape(4, 16, 8)
+    out = sk.ingest_tensor(x, jax.random.PRNGKey(3), group_axis=-1)
+    assert out.m.shape == (8,)
+    out2 = sk.ingest_tensor(x.transpose(2, 0, 1), jax.random.PRNGKey(3), group_axis=0)
+    assert out2.m.shape == (8,)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), b=st.sampled_from([1, 4, 64]))
+def test_property_batched_never_escapes_batch_hull(seed, b):
+    """Invariant: post-update estimate stays within [min(batch∪m), max(batch∪m)]."""
+    rng = np.random.default_rng(seed)
+    G = 4
+    st0 = Frugal2UState(
+        m=jnp.asarray(rng.normal(0, 10, G), jnp.float32),
+        step=jnp.asarray(rng.uniform(1, 20, G), jnp.float32),
+        sign=jnp.asarray(rng.choice([-1.0, 1.0], G), jnp.float32))
+    items = jnp.asarray(rng.normal(0, 10, (b, G)), jnp.float32)
+    st1 = batched_frugal2u_update(st0, items, jax.random.PRNGKey(seed % 1000), 0.5)
+    lo = jnp.minimum(jnp.min(items, 0), st0.m) - 1e-3
+    hi = jnp.maximum(jnp.max(items, 0), st0.m) + 1e-3
+    assert bool(jnp.all(st1.m >= lo) & jnp.all(st1.m <= hi))

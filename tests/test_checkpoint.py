@@ -1,0 +1,59 @@
+"""Checkpointing: atomic commit, keep-k GC, exact restore."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.train import checkpoint as ck
+
+
+def _state(step):
+    return {"w": jnp.arange(12.0).reshape(3, 4) * (step + 1),
+            "b": jnp.ones((4,)) * step,
+            "step": jnp.asarray(step)}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    d = str(tmp_path)
+    ck.save_checkpoint(d, 10, _state(10))
+    restored, step = ck.restore_checkpoint(d, _state(0))
+    assert step == 10
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(_state(10)["w"]))
+
+
+def test_only_committed_checkpoints_visible(tmp_path):
+    d = str(tmp_path)
+    ck.save_checkpoint(d, 5, _state(5))
+    # simulate a crash mid-write: tmp dir exists, no marker
+    os.makedirs(os.path.join(d, "step_00000009.tmp"))
+    # and a dir without marker (crashed between rename and marker)
+    os.makedirs(os.path.join(d, "step_00000008"))
+    assert ck.committed_steps(d) == [5]
+    _, step = ck.restore_checkpoint(d, _state(0))
+    assert step == 5
+
+
+def test_keep_k_gc(tmp_path):
+    d = str(tmp_path)
+    for s in (10, 20, 30, 40, 50):
+        ck.save_checkpoint(d, s, _state(s), keep=2)
+    assert ck.committed_steps(d) == [40, 50]
+    restored, step = ck.restore_checkpoint(d, _state(0))
+    assert step == 50
+
+
+def test_restore_specific_step(tmp_path):
+    d = str(tmp_path)
+    for s in (1, 2, 3):
+        ck.save_checkpoint(d, s, _state(s), keep=5)
+    restored, step = ck.restore_checkpoint(d, _state(0), step=2)
+    assert step == 2
+    assert float(restored["b"][0]) == 2.0
+
+
+def test_restore_empty_dir_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        ck.restore_checkpoint(str(tmp_path), _state(0))

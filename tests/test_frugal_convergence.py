@@ -1,0 +1,123 @@
+"""Statistical behaviour per the paper's analysis (§4) and experiments (§7).
+
+These are deterministic given fixed seeds; thresholds carry slack over the
+theory since Thm 1/2 are asymptotic.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    frugal1u_init, frugal1u_process, frugal2u_init, frugal2u_process,
+)
+from repro.core.reference import relative_mass_error
+from repro.data.streams import cauchy_stream, dynamic_cauchy_stream
+
+
+def _mass_err(est, stream, q):
+    return relative_mass_error(float(est), sorted(stream.tolist()), q)
+
+
+def test_thm1_linear_approach_speed_1u():
+    """Thm 1: starting M away, the estimate crosses the quantile vicinity in
+    O(M) steps. Uniform integers on [0, 200): median 100, delta ~ 1/200.
+    T = M|log eps|/delta with M=100, eps=.05, delta=.005 -> ~6e4. We check the
+    estimate has crossed within that budget (it should take ~2*M steps since
+    every below-median item drives up with prob ~ 1/2 + delta)."""
+    rng = np.random.default_rng(7)
+    n = 60_000
+    items = rng.integers(0, 200, size=n).astype(np.float32)
+    st = frugal1u_init(1)
+    st, trace = frugal1u_process(
+        st, jnp.asarray(items)[:, None], key=jax.random.PRNGKey(0),
+        quantile=0.5, return_trace=True)
+    trace = np.asarray(trace)[:, 0]
+    first_cross = np.argmax(trace >= 95.0)
+    assert trace.max() >= 95.0, "never approached the median"
+    assert first_cross < n // 2, f"approach too slow: {first_cross}"
+
+
+def test_thm2_stability_band_1u():
+    """Thm 2: once at the quantile, the estimate stays within a
+    O(sqrt(delta log t)) mass band. Uniform ints [0,200): delta=0.005,
+    t=30000 -> band ~ 2*sqrt(.005*ln(3e4/.05)) ~ 0.36 in mass. We assert the
+    much tighter empirical band of 0.1 mass over the last half."""
+    rng = np.random.default_rng(8)
+    n = 60_000
+    items = rng.integers(0, 200, size=n).astype(np.float32)
+    st = frugal1u_init(1, init=100.0)  # start at the true median
+    st, trace = frugal1u_process(
+        st, jnp.asarray(items)[:, None], key=jax.random.PRNGKey(1),
+        quantile=0.5, return_trace=True)
+    trace = np.asarray(trace)[:, 0][n // 2:]
+    sorted_items = sorted(items.tolist())
+    errs = [abs(relative_mass_error(m, sorted_items, 0.5)) for m in trace[::500]]
+    assert max(errs) < 0.1, f"stability band violated: {max(errs):.3f}"
+
+
+@pytest.mark.parametrize("q", [0.5, 0.9])
+def test_2u_converges_on_cauchy(q):
+    """Paper Fig. 4: Frugal-2U reaches the Cauchy quantile from 0 within 3e4
+    items despite the quantile being ~1e4 in value."""
+    stream = cauchy_stream(30_000, rng=np.random.default_rng(9)).astype(np.float32)
+    st = frugal2u_init(1)
+    st, _ = frugal2u_process(st, jnp.asarray(stream)[:, None],
+                             key=jax.random.PRNGKey(2), quantile=q)
+    err = _mass_err(st.m[0], stream, q)
+    assert abs(err) < 0.05, f"2U mass error {err:.3f} at q={q}"
+
+
+def test_2u_faster_than_1u_on_large_quantiles():
+    """Paper Figs. 4/8/10: with quantile values ~1e4, 1U (step 1) cannot reach
+    in 3e4 steps while 2U can."""
+    stream = cauchy_stream(30_000, rng=np.random.default_rng(10)).astype(np.float32)
+    s1 = frugal1u_init(1)
+    s1, _ = frugal1u_process(s1, jnp.asarray(stream)[:, None],
+                             key=jax.random.PRNGKey(3), quantile=0.5)
+    s2 = frugal2u_init(1)
+    s2, _ = frugal2u_process(s2, jnp.asarray(stream)[:, None],
+                             key=jax.random.PRNGKey(3), quantile=0.5)
+    e1 = abs(_mass_err(s1.m[0], stream, 0.5))
+    e2 = abs(_mass_err(s2.m[0], stream, 0.5))
+    assert e2 < e1, f"2U ({e2:.3f}) should beat 1U ({e1:.3f}) here"
+    # 1U's ±1 walk covers at most ~T/2 expected distance: it is still short of
+    # the 1e4-valued median after 3e4 items, while 2U has converged.
+    assert e1 > 0.02, "1U unexpectedly converged — stream too easy for the claim"
+    assert e2 < 0.02, f"2U should have converged: {e2:.3f}"
+
+
+def test_memoryless_adaptation_to_distribution_change():
+    """Paper Fig. 5: after the underlying distribution switches, estimates
+    chase the NEW quantile (no need to outweigh old data)."""
+    stream, segs = dynamic_cauchy_stream(20_000, rng=np.random.default_rng(11))
+    stream = stream.astype(np.float32)
+    st = frugal2u_init(1)
+    st, trace = frugal2u_process(st, jnp.asarray(stream)[:, None],
+                                 key=jax.random.PRNGKey(4), quantile=0.5,
+                                 return_trace=True)
+    trace = np.asarray(trace)[:, 0]
+    # end of segment 0 (domain [2e4, 2.5e4]) -> near 22500
+    end0 = trace[19_999]
+    assert 20_000.0 <= end0 <= 25_000.0
+    # end of segment 1 (domain [1e4, 1.5e4]) -> moved DOWN toward 12500
+    end1 = trace[39_999]
+    assert end1 <= 16_000.0, f"failed to chase the new (lower) median: {end1}"
+    # end of segment 2 (domain [1.5e4, 2e4]) -> moved back UP
+    end2 = trace[-1]
+    assert 14_000.0 <= end2 <= 21_000.0, f"failed to chase the middle median: {end2}"
+
+
+def test_quantile_generality_multiple_targets():
+    """§3.2: one sketch per quantile target; all must land on target mass."""
+    rng = np.random.default_rng(12)
+    n = 80_000
+    items = rng.normal(500.0, 100.0, size=n).astype(np.float32)
+    qs = np.asarray([0.1, 0.25, 0.5, 0.75, 0.9], np.float32)
+    st = frugal2u_init(5, init=500.0)
+    st, _ = frugal2u_process(st, jnp.tile(jnp.asarray(items)[:, None], (1, 5)),
+                             key=jax.random.PRNGKey(5), quantile=qs)
+    sorted_items = sorted(items.tolist())
+    for i, q in enumerate(qs):
+        err = relative_mass_error(float(st.m[i]), sorted_items, float(q))
+        assert abs(err) < 0.05, f"q={q}: mass error {err:.3f}"

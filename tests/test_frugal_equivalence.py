@@ -1,0 +1,119 @@
+"""Vectorized JAX Frugal-1U/2U must agree bit-exactly with the paper's
+scalar pseudocode when fed the same uniforms (per-group independence)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    frugal1u_init,
+    frugal1u_process,
+    frugal2u_init,
+    frugal2u_process,
+)
+from repro.core.reference import frugal1u_scalar, frugal2u_scalar
+
+
+def _run_both_1u(stream, rands, q):
+    ref = frugal1u_scalar(list(stream), list(rands), quantile=q)
+    stt = frugal1u_init(1)
+    stt, _ = frugal1u_process(
+        stt, jnp.asarray(stream, jnp.float32)[:, None],
+        rand=jnp.asarray(rands, jnp.float32)[:, None], quantile=q,
+    )
+    return ref, float(stt.m[0])
+
+
+def _run_both_2u(stream, rands, q):
+    ref = frugal2u_scalar(list(stream), list(rands), quantile=q)
+    stt = frugal2u_init(1)
+    stt, _ = frugal2u_process(
+        stt, jnp.asarray(stream, jnp.float32)[:, None],
+        rand=jnp.asarray(rands, jnp.float32)[:, None], quantile=q,
+    )
+    return ref, float(stt.m[0])
+
+
+@pytest.mark.parametrize("q", [0.1, 0.25, 0.5, 0.75, 0.9])
+@pytest.mark.parametrize("algo", ["1u", "2u"])
+def test_jax_matches_scalar_random_integer_streams(q, algo, rng):
+    n = 500
+    stream = rng.integers(0, 100, size=n).astype(np.float64)
+    rands = rng.random(n)
+    run = _run_both_1u if algo == "1u" else _run_both_2u
+    ref, got = run(stream, rands, q)
+    assert got == pytest.approx(ref, abs=1e-4), f"{algo} diverged from paper pseudocode"
+
+
+@pytest.mark.parametrize("algo", ["1u", "2u"])
+def test_groups_are_independent(algo, rng):
+    """Each group's trajectory must equal a solo run of that group."""
+    n, G = 200, 8
+    streams = rng.integers(0, 50, size=(n, G)).astype(np.float64)
+    rands = rng.random((n, G))
+    if algo == "1u":
+        st = frugal1u_init(G)
+        st, _ = frugal1u_process(st, jnp.asarray(streams, jnp.float32),
+                                 rand=jnp.asarray(rands, jnp.float32), quantile=0.5)
+        for g in range(G):
+            ref = frugal1u_scalar(list(streams[:, g]), list(rands[:, g]), quantile=0.5)
+            assert float(st.m[g]) == pytest.approx(ref, abs=1e-4)
+    else:
+        st = frugal2u_init(G)
+        st, _ = frugal2u_process(st, jnp.asarray(streams, jnp.float32),
+                                 rand=jnp.asarray(rands, jnp.float32), quantile=0.5)
+        for g in range(G):
+            ref = frugal2u_scalar(list(streams[:, g]), list(rands[:, g]), quantile=0.5)
+            assert float(st.m[g]) == pytest.approx(ref, abs=1e-4)
+
+
+# --------------------------------------------------------- property testing
+stream_strat = st.lists(
+    st.integers(min_value=0, max_value=1000), min_size=1, max_size=120
+)
+rand_strat = st.randoms(use_true_random=False)
+
+
+@settings(max_examples=60, deadline=None)
+@given(stream=stream_strat, seed=st.integers(0, 2**31 - 1),
+       q=st.sampled_from([0.1, 0.5, 0.9]))
+def test_property_1u_equivalence(stream, seed, q):
+    r = np.random.default_rng(seed).random(len(stream))
+    ref, got = _run_both_1u(np.asarray(stream, np.float64), r, q)
+    assert got == pytest.approx(ref, abs=1e-4)
+
+
+@settings(max_examples=60, deadline=None)
+@given(stream=stream_strat, seed=st.integers(0, 2**31 - 1),
+       q=st.sampled_from([0.1, 0.5, 0.9]))
+def test_property_2u_equivalence(stream, seed, q):
+    r = np.random.default_rng(seed).random(len(stream))
+    ref, got = _run_both_2u(np.asarray(stream, np.float64), r, q)
+    assert got == pytest.approx(ref, abs=1e-4)
+
+
+@settings(max_examples=60, deadline=None)
+@given(stream=stream_strat, seed=st.integers(0, 2**31 - 1))
+def test_property_1u_moves_at_most_one(stream, seed):
+    """Invariant: Frugal-1U moves by exactly 0 or ±1 per item."""
+    r = np.random.default_rng(seed).random(len(stream))
+    trace = []
+    frugal1u_scalar(np.asarray(stream, np.float64), r, quantile=0.5, trace=trace)
+    prev = 0.0
+    for m in trace:
+        assert abs(m - prev) <= 1.0 + 1e-9
+        prev = m
+
+
+@settings(max_examples=60, deadline=None)
+@given(stream=stream_strat, seed=st.integers(0, 2**31 - 1))
+def test_property_2u_never_moves_past_trigger_item(stream, seed):
+    """Invariant (paper lines 7-10/18-21): an update clamps at the item."""
+    r = np.random.default_rng(seed).random(len(stream))
+    trace = []
+    frugal2u_scalar(np.asarray(stream, np.float64), r, quantile=0.5, trace=trace)
+    prev = 0.0
+    for s_i, m in zip(stream, trace):
+        lo, hi = min(prev, s_i), max(prev, s_i)
+        assert lo - 1e-9 <= m <= hi + 1e-9, "2U estimate escaped [prev, item] hull"
+        prev = m

@@ -1,0 +1,129 @@
+"""Pallas kernel validation: shape/dtype sweep vs the pure-jnp ref oracle
+(interpret mode executes the kernel body on CPU; equality must be bit-exact
+since both sides consume identical fed-in uniforms)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import frugal1u_update_blocked, frugal2u_update_blocked
+from repro.kernels import ref
+
+pytestmark = pytest.mark.kernel
+
+
+def _mk(t, g, seed=0, dtype=np.float32, domain=200):
+    rng = np.random.default_rng(seed)
+    items = rng.integers(0, domain, size=(t, g)).astype(dtype)
+    rand = rng.random((t, g)).astype(dtype)
+    m = rng.integers(0, domain, size=g).astype(dtype)
+    return jnp.asarray(items), jnp.asarray(rand), jnp.asarray(m)
+
+
+SHAPES = [
+    (1, 1), (7, 3), (64, 128), (256, 128), (300, 130),  # non-multiples too
+    (512, 256), (1024, 64), (33, 257),
+]
+
+
+@pytest.mark.parametrize("t,g", SHAPES)
+@pytest.mark.parametrize("q", [0.1, 0.5, 0.9])
+def test_frugal1u_kernel_matches_ref(t, g, q):
+    items, rand, m = _mk(t, g, seed=t * 1000 + g)
+    qv = jnp.full((g,), q, jnp.float32)
+    got = frugal1u_update_blocked(items, rand, m, qv, interpret=True)
+    want = ref.frugal1u_ref(items, rand, m, qv)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("t,g", SHAPES)
+@pytest.mark.parametrize("q", [0.1, 0.5, 0.9])
+def test_frugal2u_kernel_matches_ref(t, g, q):
+    items, rand, m = _mk(t, g, seed=t * 7 + g)
+    step = jnp.ones((g,), jnp.float32)
+    sign = jnp.ones((g,), jnp.float32)
+    qv = jnp.full((g,), q, jnp.float32)
+    got = frugal2u_update_blocked(items, rand, m, step, sign, qv, interpret=True)
+    want = ref.frugal2u_ref(items, rand, m, step, sign, qv)
+    for a, b, name in zip(got, want, ("m", "step", "sign")):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=0, atol=0,
+                                   err_msg=f"{name} mismatch at ({t},{g},q={q})")
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_dtype_sweep(dtype):
+    """Items may arrive bf16 (activations); state math runs in f32."""
+    t, g = 128, 128
+    rng = np.random.default_rng(3)
+    items = jnp.asarray(rng.integers(0, 50, (t, g)), dtype)
+    rand = jnp.asarray(rng.random((t, g)), jnp.float32)
+    m = jnp.zeros((g,), jnp.float32)
+    qv = jnp.full((g,), 0.5, jnp.float32)
+    got = frugal1u_update_blocked(items, rand, m, qv, interpret=True)
+    want = ref.frugal1u_ref(items.astype(jnp.float32), rand, m, qv)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+def test_kernel_block_shape_sweep():
+    """Block shapes must not change results (tiling-invariance)."""
+    t, g = 512, 384
+    items, rand, m = _mk(t, g, seed=11)
+    qv = jnp.full((g,), 0.7, jnp.float32)
+    ref_out = np.asarray(ref.frugal1u_ref(items, rand, m, qv))
+    for bg in (128, 256):
+        for bt in (64, 256, 512):
+            got = frugal1u_update_blocked(items, rand, m, qv,
+                                          block_g=bg, block_t=bt, interpret=True)
+            np.testing.assert_allclose(np.asarray(got), ref_out, rtol=0, atol=0,
+                                       err_msg=f"block ({bt},{bg})")
+
+
+def test_kernel_nan_padding_is_noop():
+    """NaN ticks must leave state untouched (the ragged/padding contract)."""
+    t, g = 64, 128
+    items, rand, m = _mk(t, g, seed=5)
+    qv = jnp.full((g,), 0.5, jnp.float32)
+    out1 = frugal1u_update_blocked(items, rand, m, qv, interpret=True)
+    # append a NaN block
+    items2 = jnp.concatenate([items, jnp.full((32, g), jnp.nan, jnp.float32)])
+    rand2 = jnp.concatenate([rand, jnp.full((32, g), 0.99, jnp.float32)])
+    out2 = frugal1u_update_blocked(items2, rand2, m, qv, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=0, atol=0)
+
+
+def test_kernel_per_group_quantiles():
+    """One call, heterogeneous quantile targets across lanes."""
+    t, g = 2048, 8
+    rng = np.random.default_rng(9)
+    items = jnp.asarray(rng.integers(0, 1000, (t, g)), jnp.float32)
+    rand = jnp.asarray(rng.random((t, g)), jnp.float32)
+    m = jnp.full((g,), 500.0, jnp.float32)
+    qv = jnp.asarray([0.1, 0.2, 0.3, 0.4, 0.6, 0.7, 0.8, 0.9], jnp.float32)
+    step = jnp.ones((g,), jnp.float32)
+    sign = jnp.ones((g,), jnp.float32)
+    m2, _, _ = frugal2u_update_blocked(items, rand, m, step, sign, qv, interpret=True)
+    # final estimates must be ordered like their target quantiles (loose check)
+    est = np.asarray(m2)
+    assert est[0] < est[-1], f"q10 {est[0]} !< q90 {est[-1]}"
+    want = ref.frugal2u_ref(items, rand, m, step, sign, qv)
+    np.testing.assert_allclose(est, np.asarray(want[0]), rtol=0, atol=0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.integers(1, 80),
+    g=st.integers(1, 140),
+    seed=st.integers(0, 2**31 - 1),
+    q=st.sampled_from([0.25, 0.5, 0.75]),
+)
+def test_property_kernel_equals_ref_arbitrary_shapes(t, g, seed, q):
+    items, rand, m = _mk(t, g, seed=seed)
+    qv = jnp.full((g,), q, jnp.float32)
+    step = jnp.ones((g,), jnp.float32)
+    sign = jnp.ones((g,), jnp.float32)
+    got = frugal2u_update_blocked(items, rand, m, step, sign, qv,
+                                  block_g=128, block_t=64, interpret=True)
+    want = ref.frugal2u_ref(items, rand, m, step, sign, qv)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=0, atol=0)

@@ -1,0 +1,97 @@
+"""§Perf hillclimb variants must be EXACT (or allclose) vs the baseline
+paths — optimizations that change numerics are bugs."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.models import build_model
+
+
+def _logits(cfg, toks, seed=0):
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    logits, _ = model.forward(params, tokens=toks)
+    return logits, model, params
+
+
+def test_h1_factorized_rwkv_matches_baseline():
+    cfg = reduce_for_smoke(get_config("rwkv6-1.6b"))
+    cfg = dataclasses.replace(cfg, ssm_chunk=32)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0, cfg.vocab_size)
+    base, _, _ = _logits(cfg, toks)
+    fact, _, _ = _logits(dataclasses.replace(
+        cfg, rwkv_factorized=True, rwkv_subchunk=8), toks)
+    np.testing.assert_allclose(np.asarray(base, np.float32),
+                               np.asarray(fact, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_h1_factorized_multiple_chunk_shapes():
+    for sub in (4, 8, 16):
+        cfg = reduce_for_smoke(get_config("rwkv6-1.6b"))
+        cfg = dataclasses.replace(cfg, ssm_chunk=16)
+        toks = jax.random.randint(jax.random.PRNGKey(2), (1, 48), 0,
+                                  cfg.vocab_size)
+        base, _, _ = _logits(cfg, toks)
+        fact, _, _ = _logits(dataclasses.replace(
+            cfg, rwkv_factorized=True, rwkv_subchunk=sub), toks)
+        np.testing.assert_allclose(np.asarray(base, np.float32),
+                                   np.asarray(fact, np.float32),
+                                   rtol=2e-3, atol=2e-3,
+                                   err_msg=f"subchunk {sub}")
+
+
+def test_h3_blocked_local_matches_masked_chunked():
+    cfg = reduce_for_smoke(get_config("gemma2-9b"))
+    # window 16, seq 64 -> 4 blocks; baseline masks inside chunked attention
+    cfg = dataclasses.replace(cfg, window_pattern=(16, 0), attn_chunk=16)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 64), 0, cfg.vocab_size)
+    base, _, _ = _logits(cfg, toks)
+    blk, _, _ = _logits(dataclasses.replace(cfg, local_block_attn=True), toks)
+    np.testing.assert_allclose(np.asarray(base, np.float32),
+                               np.asarray(blk, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_h3b_local_decode_slice_matches_full_cache():
+    """Windowed decode reading only the last `window` cache slots must equal
+    full-cache decode for local layers."""
+    cfg = reduce_for_smoke(get_config("gemma2-9b"))
+    cfg = dataclasses.replace(cfg, window_pattern=(8, 0), max_seq_len=64)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(7))
+    cfg2 = dataclasses.replace(cfg, local_decode_slice=True)
+    model2 = build_model(cfg2)
+
+    T = 24
+    toks = jax.random.randint(jax.random.PRNGKey(8), (1, T), 0, cfg.vocab_size)
+    c1 = model.init_cache(1, 64)
+    c2 = model2.init_cache(1, 64)
+    outs1, outs2 = [], []
+    for t in range(T):
+        l1, c1 = model.decode_step(params, toks[:, t:t + 1], c1, t)
+        l2, c2 = model2.decode_step(params, toks[:, t:t + 1], c2, t)
+        outs1.append(np.asarray(l1, np.float32))
+        outs2.append(np.asarray(l2, np.float32))
+    np.testing.assert_allclose(np.stack(outs1), np.stack(outs2),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_h2_onehot_xent_matches_gather():
+    cfg = reduce_for_smoke(get_config("yi-6b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(4))
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(5), (2, 32), 0,
+                                     cfg.vocab_size),
+        "targets": jax.random.randint(jax.random.PRNGKey(6), (2, 32), 0,
+                                      cfg.vocab_size),
+    }
+    l1, _ = model.loss(params, batch)
+    model2 = build_model(dataclasses.replace(cfg, onehot_xent=True))
+    l2, _ = model2.loss(params, batch)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)

@@ -1,0 +1,117 @@
+"""Sharding rule units (device-free spec trees) + roofline/HLO-parser units."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.parallel.sharding import param_spec_tree
+from repro.roofline.hlo_parse import collective_bytes
+from repro.roofline.analysis import roofline_terms, model_flops
+
+
+@pytest.fixture(scope="module")
+def yi_specs():
+    cfg = get_config("yi-6b")
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    # yi-6b: 32 scan units -> layer dim FSDP-shards over 'data' (32 % 16 == 0)
+    return params, param_spec_tree(params, model_size=16, data_size=16)
+
+
+def test_embedding_vocab_sharded(yi_specs):
+    _, specs = yi_specs
+    assert specs["embed"]["table"] == P("model", "data")
+    assert specs["lm_head"]["table"] == P("model", "data")
+
+
+def test_attention_col_row_parallel_with_fsdp(yi_specs):
+    params, specs = yi_specs
+    blk = specs["stack"][0]
+    # TP on 'model' + ZeRO layer-dim shard on 'data' (32 units % 16 == 0)
+    assert blk["attn"]["wq"] == P("data", None, "model")
+    assert blk["attn"]["wk"] == P("data", None, "model")
+    assert blk["attn"]["wo"] == P("data", "model", None)
+    assert blk["mlp"]["w_in"] == P("data", None, "model")
+    assert blk["mlp"]["w_out"] == P("data", "model", None)
+    assert blk["norm1"]["scale"] == P(None, None)
+
+
+def test_attention_specs_without_fsdp(yi_specs):
+    params, _ = yi_specs
+    specs = param_spec_tree(params, model_size=16, data_size=1)
+    blk = specs["stack"][0]
+    assert blk["attn"]["wq"] == P(None, None, "model")
+    assert blk["attn"]["wo"] == P(None, "model", None)
+
+
+def test_moe_expert_sharding():
+    cfg = get_config("olmoe-1b-7b")
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = param_spec_tree(params, model_size=16, data_size=16)
+    blk = specs["stack"][0]
+    # experts [L, E, D, F] -> EP over 'model' on E, ZeRO over layer dim
+    assert blk["moe"]["w_in"] == P("data", "model", None, None)
+    assert blk["moe"]["w_out"] == P("data", "model", None, None)
+    # router is tiny -> replicated (rule 'rep', no FSDP)
+    assert blk["moe"]["router"] == P(None, None, None)
+
+
+def test_granite_fallback_fsdp_dim():
+    cfg = get_config("granite-20b")  # 52 units: 52 % 16 != 0 -> dim fallback
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = param_spec_tree(params, model_size=16, data_size=16)
+    blk = specs["stack"][0]
+    # layer dim not divisible: FSDP falls to the first free big dim
+    assert blk["attn"]["wk"] == P(None, "data", "model")
+    # learned positions table is vocab-style sharded + FSDP on d_model
+    assert specs["pos"]["pos_table"] == P("model", "data")
+
+
+# ------------------------------------------------------------------ roofline
+HLO_SAMPLE = """
+  %ar = f32[1024,256]{1,0} all-reduce(f32[1024,256]{1,0} %x), replica_groups={}
+  %ag.1 = bf16[512,128]{1,0} all-gather(bf16[256,128]{1,0} %y), dimensions={0}
+  %rs = f32[64]{0} reduce-scatter(f32[1024]{0} %z), dimensions={0}
+  %cp = (f32[32]{0}, f32[32]{0}) collective-permute-start(f32[32]{0} %w)
+  %cpd = f32[32]{0} collective-permute-done(%cp)
+  %a2a = f32[16,16]{1,0} all-to-all(f32[16,16]{1,0} %v), dimensions={0}
+"""
+
+
+def test_collective_parser():
+    total, by_op, counts = collective_bytes(HLO_SAMPLE)
+    assert counts == {"all-reduce": 1, "all-gather": 1, "reduce-scatter": 1,
+                      "collective-permute": 1, "all-to-all": 1}
+    assert by_op["all-reduce"] == 2 * 1024 * 256 * 4          # 2x size
+    assert by_op["all-gather"] == 512 * 128 * 2               # result bf16
+    assert by_op["reduce-scatter"] == 1024 * 4                # operand size
+    assert by_op["all-to-all"] == 16 * 16 * 4
+    # permute-start counted once (result tuple = 2 x 32 f32), done skipped
+    assert by_op["collective-permute"] == 2 * 32 * 4
+    assert total == sum(by_op.values())
+
+
+def test_roofline_term_math():
+    t = roofline_terms(197e12 * 0.5, 819e9 * 0.25, 50e9 * 4 * 2.0,
+                       model_flops_global=197e12 * 0.5 * 256 * 0.8,
+                       n_chips=256, links=4)
+    assert abs(t["compute_s"] - 0.5) < 1e-9
+    assert abs(t["memory_s"] - 0.25) < 1e-9
+    assert abs(t["collective_s"] - 2.0) < 1e-9
+    assert t["bound"] == "collective"
+    assert abs(t["useful_compute_ratio"] - 0.8) < 1e-9
+
+
+def test_model_flops_moe_uses_active_params():
+    dense = get_config("yi-6b")
+    moe = get_config("olmoe-1b-7b")
+    mf_dense = model_flops(dense, 1000, "train")
+    assert mf_dense == 6.0 * dense.n_params() * 1000
+    mf_moe = model_flops(moe, 1000, "train")
+    assert mf_moe == 6.0 * moe.n_active_params() * 1000
+    assert moe.n_active_params() < moe.n_params() / 3

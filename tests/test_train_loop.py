@@ -1,0 +1,80 @@
+"""End-to-end training on the synthetic corpus: loss decreases, frugal
+monitors and quantile clipping engage, straggler detector fires."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.models import build_model
+from repro.optim import Optimizer, warmup_cosine
+from repro.train import create_train_state, make_train_step
+from repro.train.trainer import Trainer, StepTimeMonitor
+from repro.data.pipeline import DataConfig, SyntheticCorpus
+from repro.monitor.registry import monitor_summary
+
+
+@pytest.fixture(scope="module")
+def trained():
+    cfg = reduce_for_smoke(get_config("yi-6b"))
+    model = build_model(cfg)
+    opt = Optimizer(kind="adamw", lr_fn=warmup_cosine(2e-3, 10, 150))
+    corpus = SyntheticCorpus(DataConfig(vocab_size=cfg.vocab_size,
+                                        seq_len=48, batch_size=8))
+    it = corpus.iterate()
+    example = next(it)
+    state = create_train_state(model, opt, jax.random.PRNGKey(0),
+                               example_batch=example)
+    step_fn = make_train_step(model, opt, clip_mode="quantile")
+    trainer = Trainer(model, opt, step_fn, it, log_every=1000)
+    state = trainer.run(state, 120)
+    return state, trainer
+
+
+def test_loss_decreases(trained):
+    state, trainer = trained
+    losses = [m["loss"] for m in trainer.metrics_history]
+    first = np.mean(losses[:10])
+    last = np.mean(losses[-10:])
+    assert last < first - 0.3, f"no learning: {first:.3f} -> {last:.3f}"
+    assert np.isfinite(losses[-1])
+
+
+def test_monitors_learned_activation_quantiles(trained):
+    state, _ = trained
+    summ = monitor_summary(state.monitors)
+    # after 120 steps the absmax q99 sketches must have moved off 0 and be
+    # positive (activations exist)
+    q99 = np.asarray(summ["act_absmax_q99"])
+    assert q99.shape[0] > 0
+    assert np.all(q99 > 0.0), q99
+    q50 = np.asarray(summ["act_rms_q50"])
+    assert np.all(q50 > 0.0)
+    assert np.all(q50 <= q99 * 50)  # sane ordering at sketch scale
+
+
+def test_quantile_clip_state_engaged(trained):
+    state, _ = trained
+    # the grad-norm sketches must have adapted (m moved off init 1.0 for at
+    # least some blocks) and warmup counted up
+    assert int(state.qclip.warmup) == 120
+    m = np.asarray(state.qclip.sketch.m)
+    assert np.any(np.abs(m - 1.0) > 1e-3)
+
+
+def test_step_counter_and_rng_advance(trained):
+    state, _ = trained
+    assert int(state.step) == 120
+
+
+def test_straggler_detector_flags_outlier():
+    mon = StepTimeMonitor(margin=1.5)
+    rng = np.random.default_rng(0)
+    flags = []
+    for i in range(200):
+        dt = 0.10 + rng.normal(0, 0.005)
+        flags.append(mon.observe(max(dt, 1e-3)))
+    assert not any(flags[50:]), "false straggler flags on steady stream"
+    assert mon.observe(0.5)  # 5x slower step must flag
+    # and q99 estimate should be near the true ~100ms scale
+    assert 50 < mon.q99_ms < 200
