@@ -2,15 +2,30 @@
 adaptation. Compares per-item update cost of
 
   * scalar Python (the paper's C-style loop, 1 group at a time),
-  * vectorized jnp scan fleet (G groups simultaneously),
-  * Pallas kernel in interpret mode (counts kernel-body ops on CPU; on real
-    TPU the same kernel streams items at HBM bandwidth),
+  * vectorized jnp scan fleet, rand-MATERIALIZING (the deprecated path: a
+    [T, G] uniforms tensor is generated up front and streamed next to the
+    items — 2x the hot-path bytes),
+  * vectorized jnp scan fleet, FUSED (uniforms counter-hashed per tick on
+    the fly, repro.core.rng — the bandwidth-optimal path),
+  * the blocked Pallas kernel, rand-operand vs fused, in interpret mode
+    (counts kernel-body semantics on CPU; on real TPU the fused kernel
+    streams items at HBM bandwidth with zero uniform traffic),
 
 at growing group counts. The point: frugal state is the ONLY quantile
-summary whose per-group update vectorizes across millions of groups.
+summary whose per-group update vectorizes across millions of groups, and
+fusing the RNG removes the last non-item byte from the stream.
+
+Results land in artifacts/bench/e8_kernel_throughput.json AND in the
+repo-root BENCH_kernel_throughput.json so the perf trajectory is tracked
+PR-over-PR. The fused/rand speedup at G >= 4096 is checked against the
+GATE_FUSED_SPEEDUP target below: the payload records `gate_met`, and run()
+prints a loud warning when the target is missed (not a hard test assert —
+wall-clock on shared CI is too noisy; inspect the JSON on an unloaded box).
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
@@ -19,14 +34,32 @@ import jax.numpy as jnp
 
 from repro.core.reference import frugal2u_scalar
 from repro.core import frugal2u_init, frugal2u_process
+from repro.kernels import (
+    frugal2u_update_blocked,
+    frugal2u_update_blocked_fused,
+)
 from .common import save_result, csv_line
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(_ROOT, "BENCH_kernel_throughput.json")
+
+# Minimum fused/rand speedup expected at G >= 4096 on the jnp path.
+GATE_FUSED_SPEEDUP = 1.5
+
+
+def _time(fn, *args, reps: int = 3) -> float:
+    jax.block_until_ready(fn(*args))  # compile / warm up, fully drained
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
 
 
 def run(quick: bool = True, seed: int = 0):
     rng = np.random.default_rng(seed)
     t_items = 2_000 if quick else 10_000
     lines = []
-    payload = {}
+    payload = {"t_items": t_items}
 
     # scalar python (1 group)
     stream = rng.integers(0, 1000, t_items).astype(float)
@@ -37,21 +70,74 @@ def run(quick: bool = True, seed: int = 0):
     payload["scalar_python_us_per_item"] = scalar_us
     lines.append(csv_line("kernel_scalar_python", scalar_us, "groups=1"))
 
-    # vectorized fleet
+    # vectorized fleets: rand-materializing (old) vs fused (on-the-fly RNG)
+    key = jax.random.PRNGKey(0)
+    proc_rand = jax.jit(lambda s, x, k: frugal2u_process(
+        s, x, rand=jax.random.uniform(k, x.shape, dtype=jnp.float32))[0])
+    proc_fused = jax.jit(lambda s, x, k: frugal2u_process(s, x, key=k)[0])
+
     for g in (256, 4096) if quick else (256, 4096, 65_536):
         items = jnp.asarray(rng.integers(0, 1000, (t_items, g)), jnp.float32)
         st = frugal2u_init(g)
 
-        proc = jax.jit(lambda s, x, k: frugal2u_process(s, x, key=k)[0])
-        k = jax.random.PRNGKey(0)
-        proc(st, items, k)  # compile
-        t0 = time.perf_counter()
-        r = proc(st, items, k)
-        jax.block_until_ready(r)
-        dt = time.perf_counter() - t0
-        us_pi = dt / (t_items * g) * 1e6
-        payload[f"jnp_fleet_g{g}_us_per_item"] = us_pi
-        lines.append(csv_line(f"kernel_jnp_fleet_g{g}", us_pi,
-                              f"groups={g};speedup_vs_scalar={scalar_us / us_pi:.0f}x"))
+        dt_rand = _time(proc_rand, st, items, key)
+        dt_fused = _time(proc_fused, st, items, key)
+        us_rand = dt_rand / (t_items * g) * 1e6
+        us_fused = dt_fused / (t_items * g) * 1e6
+        speedup = us_rand / us_fused
+        payload[f"jnp_fleet_g{g}_us_per_item"] = us_rand
+        payload[f"jnp_fleet_fused_g{g}_us_per_item"] = us_fused
+        payload[f"jnp_fused_speedup_g{g}"] = speedup
+        lines.append(csv_line(f"kernel_jnp_fleet_g{g}", us_rand,
+                              f"groups={g};speedup_vs_scalar={scalar_us / us_rand:.0f}x"))
+        lines.append(csv_line(f"kernel_jnp_fused_g{g}", us_fused,
+                              f"groups={g};speedup_vs_rand={speedup:.2f}x"))
+
+    # blocked Pallas kernel (interpret mode on CPU), old vs fused operands.
+    # Interpret emulation is slow, so a smaller slab — the number that matters
+    # is the fused/rand ratio, which tracks operand traffic.
+    kt, kg = (256, 512) if quick else (1024, 1024)
+    items_k = jnp.asarray(rng.integers(0, 1000, (kt, kg)), jnp.float32)
+    rand_k = jnp.asarray(rng.random((kt, kg)), jnp.float32)
+    m0 = jnp.zeros((kg,), jnp.float32)
+    st1 = jnp.ones((kg,), jnp.float32)
+    qv = jnp.full((kg,), 0.5, jnp.float32)
+
+    dt_kold = _time(
+        lambda: frugal2u_update_blocked(items_k, rand_k, m0, st1, st1, qv,
+                                        interpret=True), reps=2)
+    dt_kfused = _time(
+        lambda: frugal2u_update_blocked_fused(items_k, m0, st1, st1, qv,
+                                              jnp.int32(seed), interpret=True),
+        reps=2)
+    payload["pallas_interpret_g%d_rand_us_per_item" % kg] = \
+        dt_kold / (kt * kg) * 1e6
+    payload["pallas_interpret_g%d_fused_us_per_item" % kg] = \
+        dt_kfused / (kt * kg) * 1e6
+    payload["pallas_interpret_fused_speedup"] = dt_kold / dt_kfused
+    lines.append(csv_line(f"kernel_pallas_interp_rand_g{kg}",
+                          dt_kold / (kt * kg) * 1e6, f"groups={kg}"))
+    lines.append(csv_line(f"kernel_pallas_interp_fused_g{kg}",
+                          dt_kfused / (kt * kg) * 1e6,
+                          f"groups={kg};speedup_vs_rand={dt_kold / dt_kfused:.2f}x"))
+
+    big_g_speedups = [v for k, v in payload.items()
+                      if k.startswith("jnp_fused_speedup_g")
+                      and int(k.rsplit("_g", 1)[1]) >= 4096]
+    payload["gate_fused_speedup_min"] = GATE_FUSED_SPEEDUP
+    payload["gate_met"] = bool(big_g_speedups
+                               and min(big_g_speedups) >= GATE_FUSED_SPEEDUP)
+    if not payload["gate_met"]:
+        lines.append(csv_line("kernel_GATE_MISSED", min(big_g_speedups or [0]),
+                              f"fused speedup below {GATE_FUSED_SPEEDUP}x at "
+                              "G>=4096 — rerun unloaded; investigate if it persists"))
+
     save_result("e8_kernel_throughput", payload)
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
     return lines, payload
+
+
+if __name__ == "__main__":
+    for line in run(quick=True)[0]:
+        print(line)

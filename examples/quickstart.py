@@ -20,6 +20,8 @@ print(f"Frugal-1U median ≈ {est:.1f}  (true {np.median(stream):.1f}, "
       f"mass error {err:+.3f}, memory = 1 word)")
 
 # ---- a GROUPBY fleet: 10,000 streams, 2 words each (Algorithm 3) ----------
+# process() is the FUSED path: uniforms are counter-hashed on the fly from
+# the key — no [T, G] random tensor is ever allocated (DESIGN.md §4).
 G, T = 10_000, 3_000
 scales = rng.uniform(3.0, 8.0, G)
 items = rng.lognormal(scales[None, :], 1.0, size=(T, G)).astype(np.float32)
@@ -33,3 +35,15 @@ print(f"Fleet of {G} q90 sketches: median |rel err| = "
       f"{np.median(rel):.2%}, total state = {2 * G * 4 / 1024:.0f} KiB "
       f"(a t=20 GK summary per group would need "
       f"{60 * G * 4 / 1024 / 1024:.1f} MiB)")
+
+# ---- unbounded streams: chunked fused ingest, O(chunk·G) transient --------
+# Bit-identical to the one-shot process() above for ANY chunking.
+from repro.core import ingest_stream
+
+sk2 = GroupedQuantileSketch.create(G, quantile=0.9, algo="2u")
+sk2 = ingest_stream(sk2, (items[i:i + 500] for i in range(0, T, 500)),
+                    jax.random.PRNGKey(0), chunk_t=1024)
+assert np.array_equal(np.asarray(sk2.m), np.asarray(sk.m)), \
+    "chunked ingest must reproduce the one-shot trajectory bit-for-bit"
+print(f"ingest_stream over {T // 500} chunks: bit-identical to one-shot, "
+      f"serialized state = {sk2.memory_words() * G} words (packed 2U)")

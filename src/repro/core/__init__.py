@@ -4,6 +4,9 @@
   reference.py  — scalar pure-Python transcriptions (bit-exact oracles).
   sketch.py     — GroupedQuantileSketch, the framework-facing API.
   batched.py    — binomial batch-update extension (beyond paper).
+  rng.py        — counter-based on-chip RNG shared with the Pallas kernels.
+  packing.py    — (step, sign) -> one int32 word (true 2-words-per-group 2U).
+  streaming.py  — chunked fused-kernel ingest for unbounded streams.
   baselines/    — GK, q-digest, Selection, reservoir, exact (paper §6).
 """
 
@@ -17,8 +20,16 @@ from .frugal import (
     frugal2u_process,
     frugal2u_update,
 )
-from .sketch import GroupedQuantileSketch
+from .sketch import GroupedQuantileSketch, PackedSketchState
 from .batched import batched_frugal2u_update
+from .packing import (
+    PackedFrugal2UState,
+    pack_frugal2u,
+    pack_step_sign,
+    unpack_frugal2u,
+    unpack_step_sign,
+)
+from .streaming import ingest_array, ingest_stream
 
 __all__ = [
     "Frugal1UState",
@@ -30,5 +41,13 @@ __all__ = [
     "frugal2u_process",
     "frugal2u_update",
     "GroupedQuantileSketch",
+    "PackedSketchState",
     "batched_frugal2u_update",
+    "PackedFrugal2UState",
+    "pack_frugal2u",
+    "pack_step_sign",
+    "unpack_frugal2u",
+    "unpack_step_sign",
+    "ingest_array",
+    "ingest_stream",
 ]

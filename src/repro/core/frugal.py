@@ -32,6 +32,8 @@ from typing import NamedTuple, Optional, Tuple, Union
 import jax
 import jax.numpy as jnp
 
+from . import rng
+
 Array = jax.Array
 ArrayLike = Union[Array, float, int]
 
@@ -123,8 +125,48 @@ def frugal2u_update(
     return Frugal2UState(m=m, step=step, sign=sign)
 
 
-def _uniforms(key: Array, shape) -> Array:
-    return jax.random.uniform(key, shape, dtype=jnp.float32)
+def _fused_scan(update_fn, state, items, seed, quantile, return_trace, t_offset):
+    """Scan ticks with counter-hashed uniforms generated per tick — the
+    fused ingest path. No [T, G] uniforms tensor is ever materialized, and
+    the (seed, absolute tick, group) keying makes the trajectory bit-identical
+    to the fused Pallas kernel / kernels.ref fused oracles for the same seed
+    (see core.rng, DESIGN.md §4)."""
+    seed = jnp.asarray(seed, jnp.int32)
+    t, g = items.shape
+    g_ids = jnp.arange(g, dtype=jnp.int32)
+    t0 = jnp.asarray(t_offset, jnp.int32)
+
+    def tick(s, xs):
+        it, i = xs
+        r = rng.counter_uniform(seed, t0 + i, g_ids)
+        s2 = update_fn(s, it, r, quantile)
+        return s2, (s2.m if return_trace else None)
+
+    return jax.lax.scan(tick, state, (items, jnp.arange(t, dtype=jnp.int32)))
+
+
+def frugal1u_process_seeded(
+    state: Frugal1UState, items: Array, seed, quantile: ArrayLike = 0.5,
+    return_trace: bool = False, t_offset: ArrayLike = 0,
+) -> Tuple[Frugal1UState, Optional[Array]]:
+    """Fused [T, G] ingest from a raw int32 counter seed (kernel discipline).
+
+    This is THE off-TPU implementation of the fused ingest path — kernels/
+    ops.py dispatches here when no TPU is present, so the algorithm lives in
+    exactly one jnp transcription (plus the Pallas kernel body, which the
+    equivalence tests pin bit-exactly against it).
+    """
+    return _fused_scan(frugal1u_update, state, items, seed, quantile,
+                       return_trace, t_offset)
+
+
+def frugal2u_process_seeded(
+    state: Frugal2UState, items: Array, seed, quantile: ArrayLike = 0.5,
+    return_trace: bool = False, t_offset: ArrayLike = 0,
+) -> Tuple[Frugal2UState, Optional[Array]]:
+    """Fused [T, G] Frugal-2U ingest from a raw int32 counter seed."""
+    return _fused_scan(frugal2u_update, state, items, seed, quantile,
+                       return_trace, t_offset)
 
 
 def frugal1u_process(
@@ -134,11 +176,19 @@ def frugal1u_process(
     rand: Optional[Array] = None,
     quantile: ArrayLike = 0.5,
     return_trace: bool = False,
+    t_offset: ArrayLike = 0,
 ) -> Tuple[Frugal1UState, Optional[Array]]:
-    """Sequentially ingest a [T, G] block (scan of ticks). Provide `key` or `rand`."""
+    """Sequentially ingest a [T, G] block (scan of ticks).
+
+    With `key`, uniforms are counter-hashed on the fly (fused path: no
+    [T, G] rand tensor; `t_offset` is the absolute stream tick of items[0]
+    for chunked ingestion). Passing an explicit `rand` tensor is the
+    deprecated fed-uniform path, kept for oracle tests.
+    """
     if rand is None:
         assert key is not None, "need key or rand"
-        rand = _uniforms(key, items.shape)
+        return frugal1u_process_seeded(state, items, rng.seed_from_key(key),
+                                       quantile, return_trace, t_offset)
 
     def tick(s, xs):
         it, rn = xs
@@ -156,11 +206,17 @@ def frugal2u_process(
     rand: Optional[Array] = None,
     quantile: ArrayLike = 0.5,
     return_trace: bool = False,
+    t_offset: ArrayLike = 0,
 ) -> Tuple[Frugal2UState, Optional[Array]]:
-    """Sequentially ingest a [T, G] block (scan of ticks). Provide `key` or `rand`."""
+    """Sequentially ingest a [T, G] block (scan of ticks).
+
+    With `key`, uniforms are counter-hashed on the fly (fused path — see
+    frugal1u_process). Explicit `rand` is the deprecated fed-uniform path.
+    """
     if rand is None:
         assert key is not None, "need key or rand"
-        rand = _uniforms(key, items.shape)
+        return frugal2u_process_seeded(state, items, rng.seed_from_key(key),
+                                       quantile, return_trace, t_offset)
 
     def tick(s, xs):
         it, rn = xs

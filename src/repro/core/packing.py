@@ -1,0 +1,103 @@
+"""Two words per group, for real: pack Frugal-2U's (step, sign) into one int32.
+
+The paper counts Frugal-2U as "two units of memory plus one bit". The naive
+layout stores three [G] float32 arrays (m, step, sign) — three words. This
+module packs (step, sign) into a single int32 word so the serialized /
+kernel-operand state is exactly m + packed = 2 words per group, matching
+GroupedQuantileSketch.memory_words().
+
+Encoding — the float32 exponent field never uses its full range for real
+step values, so the direction bit hides in unused exponent space:
+
+  * step == 0 (or |step| < 2^-63, flushed):  packed = sign<0 ? 0x80000000 : 0
+    (the float sign bit carries the direction; step's own sign is moot at 0).
+  * normal step, |step| in [2^-63, 2^32):    biased exponent e in [64, 158].
+      sign > 0:  packed = bits(step)                  (e' = e in [64, 158])
+      sign < 0:  packed = bits(step) + (96 << 23)     (e' = e+96 in [160, 254])
+    The two e' ranges are disjoint, so decode is exact: e' >= 160 means
+    sign = -1 and subtracting the offset restores step's bits verbatim.
+
+Round-trip is bit-exact for every step magnitude in {0} ∪ [2^-63, 2^32)
+(property-tested in tests/test_frugal_equivalence.py). step arises from ±1
+increments and data-scale overshoot corrections, so the smallest nonzero
+magnitude a float32 cancellation can leave is ~ data_scale · 2^-24 — below
+2^-63 only for streams scaled under ~2^-39, and above 2^32 only for streams
+beyond float32's useful range. Out-of-domain magnitudes degrade safely rather
+than corrupt: < 2^-63 flushes to zero, >= 2^32 saturates (direction kept).
+
+All int32 bit arithmetic — the same expressions run inside the Pallas TPU
+kernel body (frugal2u_pallas_fused carries ONE packed state word per group
+next to m) and in plain jnp for checkpoint serialization.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_EXP_SHIFT = 23
+_EXP_MASK = np.int32(0xFF)
+_EXP_OFFSET = np.int32(96 << 23)        # +96 biased-exponent steps
+_EXP_MIN = np.int32(64)                 # |step| >= 2^-63
+_NEG_THRESHOLD = np.int32(160)          # decoded e' >= 160  =>  sign < 0
+_ZERO_NEG = np.int32(np.uint32(0x80000000).view(np.int32))
+# Largest float32 below 2^32 (biased exponent 158): out-of-domain magnitudes
+# saturate here at pack time instead of overflowing the exponent field into
+# the sign bit (which would corrupt both value and direction).
+_MAX_STEP = np.float32(2.0 ** 32 * (1.0 - 2.0 ** -24))
+
+
+def pack_step_sign(step: Array, sign: Array) -> Array:
+    """(step f32, sign ±1 f32) -> one int32 word per group.
+
+    Magnitudes >= 2^32 saturate to the largest in-domain float (direction
+    preserved); magnitudes < 2^-63 flush to zero. In-domain values round-trip
+    bit-exactly.
+    """
+    step = jnp.clip(jnp.asarray(step, jnp.float32), -_MAX_STEP, _MAX_STEP)
+    sb = jax.lax.bitcast_convert_type(step, jnp.int32)
+    e = jax.lax.shift_right_logical(sb, _EXP_SHIFT) & _EXP_MASK
+    neg = jnp.asarray(sign, jnp.float32) < 0
+    tiny = e < _EXP_MIN                               # zero/subnormal/flushed
+    packed_tiny = jnp.where(neg, _ZERO_NEG, np.int32(0))
+    packed_norm = sb + jnp.where(neg, _EXP_OFFSET, np.int32(0))
+    return jnp.where(tiny, packed_tiny, packed_norm)
+
+
+def unpack_step_sign(packed: Array) -> Tuple[Array, Array]:
+    """Inverse of pack_step_sign: int32 word -> (step f32, sign ±1 f32)."""
+    packed = jnp.asarray(packed, jnp.int32)
+    e = jax.lax.shift_right_logical(packed, _EXP_SHIFT) & _EXP_MASK
+    is_zero = e == 0
+    is_neg_dir = e >= _NEG_THRESHOLD
+    sb = jnp.where(is_zero, np.int32(0),
+                   jnp.where(is_neg_dir, packed - _EXP_OFFSET, packed))
+    step = jax.lax.bitcast_convert_type(sb, jnp.float32)
+    neg = is_neg_dir | (is_zero & (packed < 0))       # bit31 carries sign at 0
+    sign = jnp.where(neg, jnp.float32(-1.0), jnp.float32(1.0))
+    return step, sign
+
+
+class PackedFrugal2UState(NamedTuple):
+    """Serialized Frugal-2U fleet: exactly two words per group."""
+
+    m: Array           # [G] float32 estimate
+    step_sign: Array   # [G] int32, (step, sign) packed
+
+
+def pack_frugal2u(state) -> PackedFrugal2UState:
+    """core.frugal.Frugal2UState -> 2-words-per-group serialized form."""
+    return PackedFrugal2UState(
+        m=state.m, step_sign=pack_step_sign(state.step, state.sign))
+
+
+def unpack_frugal2u(packed: PackedFrugal2UState):
+    from .frugal import Frugal2UState  # local import: packing has no dep cycle
+
+    step, sign = unpack_step_sign(packed.step_sign)
+    return Frugal2UState(m=packed.m, step=step.astype(packed.m.dtype),
+                         sign=sign.astype(packed.m.dtype))

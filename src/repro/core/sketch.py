@@ -10,26 +10,43 @@ the paper prescribes) plus static metadata. It is:
     q-digest). The framework therefore *partitions* groups across hosts and
     never replicates a sketch — see repro/monitor for the wiring.
 
-Ingestion modes:
+Ingestion modes (all key-only — no uniforms tensor is ever materialized;
+see core.rng and DESIGN.md §4):
   * `update(items[G], rand[G])`          — one item per group (paper setting);
-  * `process(items[T, G], key)`          — T sequential ticks (lax.scan);
+  * `process(items[T, G], key)`          — T sequential ticks (fused lax.scan:
+    uniforms counter-hashed per tick from the key);
   * `ingest_tensor(x[T, G], key, ...)`   — batched binomial update (beyond-paper
     extension, repro.core.batched) for tensor telemetry where T items per
-    group arrive simultaneously each step.
+    group arrive simultaneously each step;
+  * `core.streaming.ingest_stream/_array` — chunked fused-kernel ingest for
+    streams that must never be resident as one [T, G] block.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional, Union
+from typing import NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
 from . import frugal
+from . import packing
 from .batched import batched_frugal2u_update
 
 Array = jax.Array
+
+
+class PackedSketchState(NamedTuple):
+    """Serialized sketch payload: 1 (1U) or 2 (2U) words per group.
+
+    For 2U, (step, sign) live in ONE int32 word (core.packing) — the on-disk
+    and kernel-operand form of the paper's "two units of memory + one bit".
+    """
+
+    m: Array                      # [G] float32
+    step_sign: Optional[Array]    # [G] int32 (2U only, packed)
+    quantile: Array
 
 
 @jax.tree_util.register_dataclass
@@ -55,8 +72,36 @@ class GroupedQuantileSketch:
         return self.m
 
     def memory_words(self) -> int:
-        """Persistent words per group — 1 (1U) or 2 (2U, sign is a bit)."""
+        """Persistent words per group — 1 (1U) or 2 (2U).
+
+        For 2U this is literal, not rounded: the serialized / kernel-operand
+        form is m [f32] + one int32 word holding (step, sign) packed into
+        unused float32 exponent space (see `packed` / core.packing). The
+        unpacked (m, step, sign) triple held by this dataclass is an API-level
+        view, reconstructed bit-exactly from the two words.
+        """
         return 1 if self.algo == "1u" else 2
+
+    # -------------------------------------------------------- serialization
+    def packed(self) -> PackedSketchState:
+        """Two-words-per-group serialized form (checkpoint / wire format)."""
+        if self.algo == "1u":
+            return PackedSketchState(m=self.m, step_sign=None,
+                                     quantile=self.quantile)
+        return PackedSketchState(
+            m=self.m, step_sign=packing.pack_step_sign(self.step, self.sign),
+            quantile=self.quantile)
+
+    @staticmethod
+    def from_packed(p: PackedSketchState) -> "GroupedQuantileSketch":
+        """Bit-exact inverse of `packed` (for in-domain step magnitudes)."""
+        if p.step_sign is None:
+            return GroupedQuantileSketch(m=p.m, step=None, sign=None,
+                                         quantile=p.quantile, algo="1u")
+        step, sign = packing.unpack_step_sign(p.step_sign)
+        return GroupedQuantileSketch(
+            m=p.m, step=step.astype(p.m.dtype), sign=sign.astype(p.m.dtype),
+            quantile=p.quantile, algo="2u")
 
     # ------------------------------------------------------------------ init
     @staticmethod
@@ -97,7 +142,14 @@ class GroupedQuantileSketch:
         return self._with_state(st)
 
     def process(self, items: Array, key: Array) -> "GroupedQuantileSketch":
-        """Sequential ingest of [T, G] (paper-exact semantics, lax.scan)."""
+        """Sequential ingest of [T, G] (paper-exact semantics, fused lax.scan).
+
+        Uniforms are counter-hashed per tick from `key` (core.rng) — no
+        [T, G] rand tensor is built, and the trajectory is bit-identical to
+        the fused Pallas kernel / core.streaming chunked ingest for the same
+        key. For streams too long to hold as one block, use
+        core.streaming.ingest_stream.
+        """
         if self.algo == "1u":
             st, _ = frugal.frugal1u_process(self._as_state(), items, key=key, quantile=self.quantile)
         else:

@@ -1,0 +1,148 @@
+"""Chunked streaming ingest — unbounded streams over the fused kernels.
+
+The paper's setting is an unbounded stream; a single resident [T, G] block
+caps T at device memory. This module drives the fused (on-chip RNG) kernels
+chunk-by-chunk so a 10^8-item stream is ingested with O(chunk_t · G) transient
+memory and O(G) persistent state — no [T, G] items block and, thanks to the
+fused RNG, never any [T, G] uniforms block at all.
+
+Determinism: uniforms are counter-hashed on (seed_from_key(key), absolute
+tick, group) — see core.rng. Because the tick index is absolute (a running
+`t_offset` is threaded through the chunks), the final sketch state is
+bit-identical for ANY chunk_t, and identical to a single unchunked
+`sketch.process(items, key)` call over the concatenated stream. Property
+tests in tests/test_streaming.py pin this down.
+
+Entry points:
+
+  * ``ingest_stream(sketch, chunks, key, chunk_t=4096)`` — host-side iterator
+    of [t_i, G] arrays (any t_i; a TCP tap, a file reader, a generator). A
+    re-chunker buffers them into exact [chunk_t, G] device blocks so the
+    jitted kernel compiles once; the final partial block is NaN-padded
+    (padded ticks are bit-exact no-ops, see kernels/ops.py).
+  * ``ingest_array(sketch, items, key, chunk_t=4096)`` — device-resident
+    [T, G] array, lax.scan over chunk_t-sized slabs: constant compiled size,
+    O(chunk_t · G) live working set.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Union
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import rng as crng
+from .sketch import GroupedQuantileSketch
+
+Array = jax.Array
+
+
+def _apply_chunk(sk: GroupedQuantileSketch, chunk: Array, seed, t_offset):
+    """One fused-kernel call over a [chunk_t, G] block at absolute t_offset."""
+    from repro.kernels import ops  # lazy: kernels imports core (no cycle at runtime)
+
+    if sk.algo == "1u":
+        m = ops.frugal1u_update_auto_fused(
+            chunk, sk.m, sk.quantile, seed=seed, t_offset=t_offset)
+        return dataclasses.replace(sk, m=m)
+    m, step, sign = ops.frugal2u_update_auto_fused(
+        chunk, sk.m, sk.step, sk.sign, sk.quantile, seed=seed, t_offset=t_offset)
+    return dataclasses.replace(sk, m=m, step=step, sign=sign)
+
+
+def _as_2d(chunk, num_groups: int) -> np.ndarray:
+    chunk = np.asarray(chunk, np.float32)
+    if chunk.ndim == 1:
+        if num_groups != 1:
+            raise ValueError(
+                f"1-D chunk for a {num_groups}-group sketch; pass [t, G] blocks")
+        chunk = chunk[:, None]
+    if chunk.ndim != 2 or chunk.shape[1] != num_groups:
+        raise ValueError(f"chunk shape {chunk.shape} != [t, {num_groups}]")
+    return chunk
+
+
+def ingest_stream(
+    sketch: GroupedQuantileSketch,
+    chunks: Iterable,
+    key: Array,
+    chunk_t: int = 4096,
+) -> GroupedQuantileSketch:
+    """Ingest an unbounded host-side stream of [t_i, G] blocks.
+
+    Memory: one [chunk_t, G] staging buffer; persistent state stays 1-2 words
+    per group. The result is bit-identical for any chunk_t and to an
+    unchunked `sketch.process` of the concatenated stream under the same key.
+    Past 2^31 ticks the int32 counter wraps (core.rng.wrap_i32): ingestion
+    continues unbounded, with the uniform stream repeating every 2^32 ticks.
+    """
+    if chunk_t <= 0:
+        raise ValueError(f"chunk_t must be positive, got {chunk_t}")
+    g = sketch.num_groups
+    seed = crng.seed_from_key(key)
+    buf = np.empty((chunk_t, g), np.float32)
+    fill = 0          # valid rows currently staged in buf
+    t_offset = 0      # absolute stream tick of buf[0]
+
+    for chunk in chunks:
+        chunk = _as_2d(chunk, g)
+        pos = 0
+        while pos < chunk.shape[0]:
+            take = min(chunk_t - fill, chunk.shape[0] - pos)
+            buf[fill:fill + take] = chunk[pos:pos + take]
+            fill += take
+            pos += take
+            if fill == chunk_t:
+                # Hand jax a numpy copy it can own: the staging buffer is
+                # reused while the (async) chunk computation is in flight,
+                # and CPU jax may zero-copy a numpy array it believes
+                # immutable — aliasing `buf` here is a data race.
+                sketch = _apply_chunk(sketch, jnp.asarray(buf.copy()),
+                                      seed, crng.wrap_i32(t_offset))
+                t_offset += chunk_t
+                fill = 0
+
+    if fill:  # final partial block: NaN ticks are bit-exact no-ops
+        buf[fill:] = np.nan
+        sketch = _apply_chunk(sketch, jnp.asarray(buf.copy()), seed,
+                              crng.wrap_i32(t_offset))
+    return sketch
+
+
+def ingest_array(
+    sketch: GroupedQuantileSketch,
+    items: Union[Array, np.ndarray],
+    key: Array,
+    chunk_t: int = 4096,
+) -> GroupedQuantileSketch:
+    """Ingest a device-resident [T, G] array in chunk_t-sized slabs.
+
+    Equivalent (bit-exact) to ingest_stream over any chunking of `items` and
+    to `sketch.process(items, key)`; use it when the stream already fits on
+    device but you want a bounded compiled working set.
+    """
+    if chunk_t <= 0:
+        raise ValueError(f"chunk_t must be positive, got {chunk_t}")
+    items = jnp.asarray(items, jnp.float32)
+    if items.ndim == 1:
+        items = items[:, None]
+    t, g = items.shape
+    if g != sketch.num_groups:
+        raise ValueError(f"items G={g} != sketch groups {sketch.num_groups}")
+    seed = crng.seed_from_key(key)
+
+    pad = (-t) % chunk_t
+    if pad:
+        items = jnp.pad(items, ((0, pad), (0, 0)), constant_values=jnp.nan)
+    n = items.shape[0] // chunk_t
+    slabs = items.reshape(n, chunk_t, g)
+    offsets = jnp.arange(n, dtype=jnp.int32) * chunk_t
+
+    def body(sk, xs):
+        slab, off = xs
+        return _apply_chunk(sk, slab, seed, off), None
+
+    sketch, _ = jax.lax.scan(body, sketch, (slabs, offsets))
+    return sketch

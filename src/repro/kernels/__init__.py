@@ -1,7 +1,8 @@
 """Pallas TPU kernels for the frugal-sketch hot path.
 
   frugal_update.py — pl.pallas_call kernels (grouped Frugal-1U/2U, VMEM-
-                     resident state, sequential-T/parallel-G grid).
+                     resident state, sequential-T/parallel-G grid). Fused
+                     variants generate uniforms on-chip (no rand operand).
   ops.py           — jit'd wrappers: padding, dtype, interpret selection.
   ref.py           — pure-jnp lax.scan oracles for bit-exact validation.
 """
@@ -11,6 +12,10 @@ from .ops import (
     frugal2u_update_blocked,
     frugal1u_update_auto,
     frugal2u_update_auto,
+    frugal1u_update_blocked_fused,
+    frugal2u_update_blocked_fused,
+    frugal1u_update_auto_fused,
+    frugal2u_update_auto_fused,
 )
 
 __all__ = [
@@ -18,4 +23,8 @@ __all__ = [
     "frugal2u_update_blocked",
     "frugal1u_update_auto",
     "frugal2u_update_auto",
+    "frugal1u_update_blocked_fused",
+    "frugal2u_update_blocked_fused",
+    "frugal1u_update_auto_fused",
+    "frugal2u_update_auto_fused",
 ]

@@ -3,18 +3,33 @@
 TPU-native layout (see DESIGN.md §3): groups ride the 128-lane minor
 dimension; the serial dependence on m̃ runs as a fori_loop over the T stream
 ticks *inside* the kernel while per-group state stays resident in VMEM.
-HBM traffic is the unavoidable O(T·G·4B) item streaming plus O(G) state i/o —
-i.e. the kernel sits on the memory roofline by construction.
+
+Two generations of kernels live here:
+
+  * ``frugal{1,2}u_pallas`` — the original operand-fed form: uniforms arrive
+    as a ``rand[T, G]`` HBM operand streamed next to the items. HBM traffic is
+    O(2·T·G·4B): HALF the input bandwidth is spent on random numbers.
+    Kept as the oracle for the fed-uniform test sweep; deprecated for ingest.
+
+  * ``frugal{1,2}u_pallas_fused`` — uniforms are generated *inside* the kernel
+    body from a counter hash keyed on (seed, absolute tick, absolute group)
+    (repro.core.rng, DESIGN.md §4). The seed and stream tick offset ride a
+    2-element SMEM scalar-prefetch operand; HBM traffic drops to O(T·G·4B)
+    items + O(G) state — the bandwidth floor for ingesting T·G items. The 2U
+    fused kernel additionally carries its (step, sign) state as ONE packed
+    int32 word per group (repro.core.packing), so state I/O is exactly the
+    paper's two words per group.
 
 Grid: (G_blocks, T_blocks). The T dimension is a sequential revisit of the
 same state block ("arbitrary" semantics); the G dimension is parallel.
-State blocks are [1, BG] 2-D tiles (TPU prefers >=2-D); item/rand blocks are
-[BT, BG].
+State blocks are [1, BG] 2-D tiles (TPU prefers >=2-D); item blocks [BT, BG].
 
 Padding contract (see ops.py): G is padded with anything (state lanes are
 dropped on return); T is padded with NaN items — NaN compares False in both
 directions, so a padded tick is a natural no-op, bit-identical to not
-ingesting it.
+ingesting it. The fused kernels key the hash on absolute indices, so padding
+never perturbs the uniforms consumed by real ticks and results are invariant
+to block shape and chunk boundaries.
 
 Quantile is a [1, G] VMEM operand (not SMEM scalar) so per-group targets are
 supported for free — a fleet can track q50 for some groups and q99 for others
@@ -29,7 +44,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import rng as crng
+from repro.core import packing
+
 Array = jax.Array
+
+# jax renamed TPUCompilerParams -> CompilerParams across versions.
+_CompilerParams = getattr(pltpu, "TPUCompilerParams", None) or pltpu.CompilerParams
+
+
+def _compiler_params():
+    return _CompilerParams(dimension_semantics=("parallel", "arbitrary"))
 
 
 # --------------------------------------------------------------------- bodies
@@ -66,7 +91,7 @@ def _tick_2u(m, step, sign, s, r, q):
     return m2, step2, sign2
 
 
-# -------------------------------------------------------------------- kernels
+# ----------------------------------------------------- kernels (operand rand)
 def _frugal1u_kernel(q_ref, items_ref, rand_ref, m_in_ref, m_out_ref, *, block_t):
     t_blk = pl.program_id(1)
 
@@ -109,6 +134,67 @@ def _frugal2u_kernel(
     sign_out_ref[0, :] = sign
 
 
+# ----------------------------------------------------- kernels (fused on-chip RNG)
+def _lane_ids(g_blk, block_g):
+    """Absolute group index per lane ([block_g] int32; 2-D iota for Mosaic)."""
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, block_g), 1)[0]
+    return g_blk * block_g + iota
+
+
+def _frugal1u_fused_kernel(
+    seed_ref, q_ref, items_ref, m_in_ref, m_out_ref, *, block_t, block_g,
+):
+    g_blk = pl.program_id(0)
+    t_blk = pl.program_id(1)
+
+    @pl.when(t_blk == 0)
+    def _seed():
+        m_out_ref[...] = m_in_ref[...]
+
+    q = q_ref[0, :]
+    seed = seed_ref[0]
+    t0 = seed_ref[1] + t_blk * block_t          # absolute stream tick of row 0
+    g_ids = _lane_ids(g_blk, block_g)
+
+    def body(i, m):
+        r = crng.counter_uniform(seed, t0 + i, g_ids)
+        return _tick_1u(m, items_ref[i, :], r, q)
+
+    m = jax.lax.fori_loop(0, block_t, body, m_out_ref[0, :])
+    m_out_ref[0, :] = m
+
+
+def _frugal2u_fused_kernel(
+    seed_ref, q_ref, items_ref, m_in_ref, packed_in_ref,
+    m_out_ref, packed_out_ref, *, block_t, block_g,
+):
+    g_blk = pl.program_id(0)
+    t_blk = pl.program_id(1)
+
+    @pl.when(t_blk == 0)
+    def _seed():
+        m_out_ref[...] = m_in_ref[...]
+        packed_out_ref[...] = packed_in_ref[...]
+
+    q = q_ref[0, :]
+    seed = seed_ref[0]
+    t0 = seed_ref[1] + t_blk * block_t
+    g_ids = _lane_ids(g_blk, block_g)
+
+    # State crosses block boundaries as (m, packed): two VMEM words per lane.
+    step0, sign0 = packing.unpack_step_sign(packed_out_ref[0, :])
+
+    def body(i, carry):
+        m, step, sign = carry
+        r = crng.counter_uniform(seed, t0 + i, g_ids)
+        return _tick_2u(m, step, sign, items_ref[i, :], r, q)
+
+    m, step, sign = jax.lax.fori_loop(
+        0, block_t, body, (m_out_ref[0, :], step0, sign0))
+    m_out_ref[0, :] = m
+    packed_out_ref[0, :] = packing.pack_step_sign(step, sign)
+
+
 # ------------------------------------------------------------------ callables
 def frugal1u_pallas(
     items: Array,   # [T, G] float32 (NaN = no-op tick)
@@ -120,7 +206,10 @@ def frugal1u_pallas(
     block_t: int = 256,
     interpret: bool = False,
 ) -> Array:
-    """Grouped Frugal-1U over a [T, G] item block. Returns updated m [G].
+    """Grouped Frugal-1U over a [T, G] item block with FED uniforms.
+
+    Deprecated for ingestion (the rand operand doubles HBM traffic) — use
+    frugal1u_pallas_fused. Kept as the fed-uniform validation oracle.
 
     Shapes must be pre-padded: T % block_t == 0, G % block_g == 0
     (ops.py handles padding & unpadding).
@@ -140,9 +229,7 @@ def frugal1u_pallas(
         ],
         out_specs=pl.BlockSpec((1, block_g), lambda gi, ti: (0, gi)),
         out_shape=jax.ShapeDtypeStruct((1, g), m.dtype),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")
-        ),
+        compiler_params=_compiler_params(),
         interpret=interpret,
     )(quantile[None, :], items, rand, m[None, :])
     return out[0]
@@ -160,7 +247,7 @@ def frugal2u_pallas(
     block_t: int = 256,
     interpret: bool = False,
 ):
-    """Grouped Frugal-2U over a [T, G] item block. Returns (m, step, sign)."""
+    """Grouped Frugal-2U with FED uniforms (deprecated — see frugal2u_pallas_fused)."""
     t, g = items.shape
     assert t % block_t == 0 and g % block_g == 0, (t, g, block_t, block_g)
     grid = (g // block_g, t // block_t)
@@ -179,9 +266,95 @@ def frugal2u_pallas(
             jax.ShapeDtypeStruct((1, g), step.dtype),
             jax.ShapeDtypeStruct((1, g), sign.dtype),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")
-        ),
+        compiler_params=_compiler_params(),
         interpret=interpret,
     )(quantile[None, :], items, rand, m[None, :], step[None, :], sign[None, :])
     return m2[0], step2[0], sign2[0]
+
+
+def _seed_operand(seed, t_offset) -> Array:
+    """[2] int32 scalar-prefetch operand: (counter seed, stream tick offset)."""
+    return jnp.stack([jnp.asarray(seed, jnp.int32),
+                      jnp.asarray(t_offset, jnp.int32)])
+
+
+def frugal1u_pallas_fused(
+    items: Array,     # [T, G] float32 (NaN = no-op tick)
+    m: Array,         # [G] float32
+    quantile: Array,  # [G] float32
+    seed,             # int32 scalar — counter RNG seed
+    *,
+    t_offset=0,       # absolute stream tick of items[0] (chunked ingest)
+    block_g: int = 128,
+    block_t: int = 256,
+    interpret: bool = False,
+) -> Array:
+    """Grouped Frugal-1U with fused on-chip RNG: no rand operand, half the
+    HBM input traffic. Uniform for tick (t, g) is counter-hashed from
+    (seed, t_offset + t, g) — results are bit-identical to
+    kernels.ref.frugal1u_ref_fused and invariant to block shape / chunking.
+    """
+    t, g = items.shape
+    assert t % block_t == 0 and g % block_g == 0, (t, g, block_t, block_g)
+    grid = (g // block_g, t // block_t)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_g), lambda gi, ti, *_: (0, gi)),      # quantile
+            pl.BlockSpec((block_t, block_g), lambda gi, ti, *_: (ti, gi)),  # items
+            pl.BlockSpec((1, block_g), lambda gi, ti, *_: (0, gi)),      # m in
+        ],
+        out_specs=pl.BlockSpec((1, block_g), lambda gi, ti, *_: (0, gi)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_frugal1u_fused_kernel, block_t=block_t, block_g=block_g),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, g), m.dtype),
+        compiler_params=_compiler_params(),
+        interpret=interpret,
+    )(_seed_operand(seed, t_offset), quantile[None, :], items, m[None, :])
+    return out[0]
+
+
+def frugal2u_pallas_fused(
+    items: Array,      # [T, G] float32 (NaN = no-op tick)
+    m: Array,          # [G] float32
+    packed: Array,     # [G] int32 — (step, sign) packed, core.packing
+    quantile: Array,   # [G] float32
+    seed,              # int32 scalar
+    *,
+    t_offset=0,
+    block_g: int = 128,
+    block_t: int = 256,
+    interpret: bool = False,
+):
+    """Grouped Frugal-2U, fused RNG + packed state: exactly two state words
+    per group cross HBM (m, packed). Returns (m, packed), each [G]."""
+    t, g = items.shape
+    assert t % block_t == 0 and g % block_g == 0, (t, g, block_t, block_g)
+    grid = (g // block_g, t // block_t)
+
+    state_f32 = pl.BlockSpec((1, block_g), lambda gi, ti, *_: (0, gi))
+    state_i32 = pl.BlockSpec((1, block_g), lambda gi, ti, *_: (0, gi))
+    stream_spec = pl.BlockSpec((block_t, block_g), lambda gi, ti, *_: (ti, gi))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[state_f32, stream_spec, state_f32, state_i32],
+        out_specs=[state_f32, state_i32],
+    )
+    m2, packed2 = pl.pallas_call(
+        functools.partial(_frugal2u_fused_kernel, block_t=block_t, block_g=block_g),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((1, g), m.dtype),
+            jax.ShapeDtypeStruct((1, g), jnp.int32),
+        ],
+        compiler_params=_compiler_params(),
+        interpret=interpret,
+    )(_seed_operand(seed, t_offset), quantile[None, :], items, m[None, :],
+      packed[None, :])
+    return m2[0], packed2[0]

@@ -7,8 +7,19 @@ Handles:
   * interpret-mode selection: on CPU (no TPU) the kernels run in
     ``interpret=True`` so the whole framework works end-to-end off-TPU.
 
-The `*_auto` entry points pick Pallas on TPU and the pure-jnp reference
-elsewhere unless forced — monitors call these.
+Entry points:
+
+  * ``frugal{1,2}u_update_blocked_fused`` — the hot path. Takes a counter
+    seed (int32 scalar) + stream tick offset instead of a ``rand`` tensor;
+    uniforms are generated on-chip (DESIGN.md §4). Results are bit-identical
+    to ``kernels.ref.frugal{1,2}u_ref_fused`` and invariant to block shape
+    and chunk boundaries (absolute-index keying).
+  * ``frugal{1,2}u_update_auto_fused`` — Pallas-fused on TPU, fused jnp ref
+    elsewhere; accepts a JAX PRNG key (or a raw int seed). Monitors and
+    ``core.streaming`` call these.
+  * ``frugal{1,2}u_update_blocked`` / ``*_update_auto`` — DEPRECATED shims
+    for the old rand-operand path; kept for the fed-uniform test sweep and
+    back-compat. New code should never materialize uniforms.
 """
 from __future__ import annotations
 
@@ -17,8 +28,17 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import frugal
+from repro.core import packing
+from repro.core import rng as crng
+
 from . import ref
-from .frugal_update import frugal1u_pallas, frugal2u_pallas
+from .frugal_update import (
+    frugal1u_pallas,
+    frugal1u_pallas_fused,
+    frugal2u_pallas,
+    frugal2u_pallas_fused,
+)
 
 Array = jax.Array
 
@@ -30,13 +50,14 @@ def _on_tpu() -> bool:
         return False
 
 
-def _pad_stream(items: Array, rand: Array, block_t: int, block_g: int):
+def _pad_stream(items: Array, rand, block_t: int, block_g: int):
     t, g = items.shape
     tp = (-t) % block_t
     gp = (-g) % block_g
     if tp or gp:
         items = jnp.pad(items, ((0, tp), (0, gp)), constant_values=jnp.nan)
-        rand = jnp.pad(rand, ((0, tp), (0, gp)), constant_values=0.5)
+        if rand is not None:
+            rand = jnp.pad(rand, ((0, tp), (0, gp)), constant_values=0.5)
     return items, rand
 
 
@@ -48,12 +69,118 @@ def _pad_state(x: Array, block_g: int, fill: float):
     return x
 
 
+# ------------------------------------------------------------- fused (hot path)
+@functools.partial(jax.jit, static_argnames=("block_g", "block_t", "interpret"))
+def frugal1u_update_blocked_fused(
+    items: Array, m: Array, quantile: Array, seed, t_offset=0,
+    *, block_g: int = 128, block_t: int = 256, interpret: bool = True,
+) -> Array:
+    """Frugal-1U over a [T, G] block, uniforms fused on-chip. Returns m [G].
+
+    `seed` is an int32 counter seed (derive from a PRNG key with
+    core.rng.seed_from_key); `t_offset` is the absolute stream tick of
+    items[0] so chunked ingestion reproduces the unchunked trajectory.
+    """
+    g = m.shape[0]
+    dt = m.dtype
+    items = items.astype(dt)
+    quantile = jnp.broadcast_to(jnp.asarray(quantile, dt), (g,))
+    items, _ = _pad_stream(items, None, block_t, block_g)
+    m_p = _pad_state(m, block_g, 0.0)
+    q_p = _pad_state(quantile, block_g, 0.5)
+    out = frugal1u_pallas_fused(
+        items, m_p, q_p, seed, t_offset=t_offset,
+        block_g=block_g, block_t=block_t, interpret=interpret)
+    return out[:g]
+
+
+@functools.partial(jax.jit, static_argnames=("block_g", "block_t", "interpret"))
+def frugal2u_update_blocked_fused(
+    items: Array, m: Array, step: Array, sign: Array, quantile: Array,
+    seed, t_offset=0,
+    *, block_g: int = 128, block_t: int = 256, interpret: bool = True,
+):
+    """Frugal-2U over a [T, G] block, fused RNG + packed (step, sign) word.
+
+    Returns (m, step, sign), each [G]. The kernel's state I/O is exactly two
+    words per group (m + packed); the unpacked view here is API sugar.
+    """
+    g = m.shape[0]
+    dt = m.dtype
+    items = items.astype(dt)
+    quantile = jnp.broadcast_to(jnp.asarray(quantile, dt), (g,))
+    items, _ = _pad_stream(items, None, block_t, block_g)
+    m_p = _pad_state(m, block_g, 0.0)
+    step_p = _pad_state(step, block_g, 1.0)
+    sign_p = _pad_state(sign, block_g, 1.0)
+    q_p = _pad_state(quantile, block_g, 0.5)
+    packed = packing.pack_step_sign(step_p, sign_p)
+    m2, packed2 = frugal2u_pallas_fused(
+        items, m_p, packed, q_p, seed, t_offset=t_offset,
+        block_g=block_g, block_t=block_t, interpret=interpret)
+    step2, sign2 = packing.unpack_step_sign(packed2)
+    return m2[:g], step2.astype(dt)[:g], sign2.astype(dt)[:g]
+
+
+def _as_seed(key=None, seed=None):
+    if seed is not None:
+        return jnp.asarray(seed, jnp.int32)
+    assert key is not None, "need key= or seed="
+    return crng.seed_from_key(key)
+
+
+# Jit'd off-TPU dispatch targets: core.streaming calls the auto entry points
+# once per chunk, and an un-jitted lax.scan would re-trace its tick body on
+# every chunk (tens of seconds of pure tracing over a long stream). These run
+# core.frugal's scan — the single jnp transcription of the algorithm;
+# kernels/ref.py stays a test-only oracle.
+@jax.jit
+def _cpu1_fused(items, m, quantile, seed, t_offset):
+    st, _ = frugal.frugal1u_process_seeded(
+        frugal.Frugal1UState(m), items, seed, quantile, t_offset=t_offset)
+    return st.m
+
+
+@jax.jit
+def _cpu2_fused(items, m, step, sign, quantile, seed, t_offset):
+    st, _ = frugal.frugal2u_process_seeded(
+        frugal.Frugal2UState(m, step, sign), items, seed, quantile,
+        t_offset=t_offset)
+    return st.m, st.step, st.sign
+
+
+def frugal1u_update_auto_fused(items, m, quantile, key=None, *, seed=None,
+                               t_offset=0, **kw):
+    """Fused Pallas on TPU, fused jnp ref elsewhere — bit-identical results."""
+    s = _as_seed(key, seed)
+    if _on_tpu():
+        return frugal1u_update_blocked_fused(items, m, quantile, s, t_offset,
+                                             interpret=False, **kw)
+    q = jnp.broadcast_to(jnp.asarray(quantile, m.dtype), m.shape)
+    return _cpu1_fused(items.astype(m.dtype), m, q, s, t_offset)
+
+
+def frugal2u_update_auto_fused(items, m, step, sign, quantile, key=None, *,
+                               seed=None, t_offset=0, **kw):
+    s = _as_seed(key, seed)
+    if _on_tpu():
+        return frugal2u_update_blocked_fused(items, m, step, sign, quantile,
+                                             s, t_offset, interpret=False, **kw)
+    q = jnp.broadcast_to(jnp.asarray(quantile, m.dtype), m.shape)
+    return _cpu2_fused(items.astype(m.dtype), m, step, sign, q, s, t_offset)
+
+
+# ------------------------------------------------- deprecated rand-operand path
 @functools.partial(jax.jit, static_argnames=("block_g", "block_t", "interpret"))
 def frugal1u_update_blocked(
     items: Array, rand: Array, m: Array, quantile: Array,
     *, block_g: int = 128, block_t: int = 256, interpret: bool = True,
 ) -> Array:
-    """Frugal-1U over a [T, G] block via the Pallas kernel. Returns m [G]."""
+    """DEPRECATED: Frugal-1U with a materialized rand[T, G] operand.
+
+    Spends half the kernel's HBM input bandwidth streaming uniforms — use
+    frugal1u_update_blocked_fused. Kept for the fed-uniform test sweep.
+    """
     g = m.shape[0]
     dt = m.dtype
     items = items.astype(dt)
@@ -72,9 +199,9 @@ def frugal2u_update_blocked(
     items: Array, rand: Array, m: Array, step: Array, sign: Array, quantile: Array,
     *, block_g: int = 128, block_t: int = 256, interpret: bool = True,
 ):
-    """Frugal-2U over a [T, G] block via the Pallas kernel.
+    """DEPRECATED: Frugal-2U with a materialized rand[T, G] operand.
 
-    Returns (m, step, sign), each [G].
+    Returns (m, step, sign), each [G]. Use frugal2u_update_blocked_fused.
     """
     g = m.shape[0]
     dt = m.dtype
@@ -93,7 +220,7 @@ def frugal2u_update_blocked(
 
 
 def frugal1u_update_auto(items, rand, m, quantile, **kw):
-    """Pallas on TPU, jnp reference elsewhere (same semantics either way)."""
+    """DEPRECATED: rand-operand auto dispatch (use frugal1u_update_auto_fused)."""
     if _on_tpu():
         return frugal1u_update_blocked(items, rand, m, quantile,
                                        interpret=False, **kw)
@@ -102,6 +229,7 @@ def frugal1u_update_auto(items, rand, m, quantile, **kw):
 
 
 def frugal2u_update_auto(items, rand, m, step, sign, quantile, **kw):
+    """DEPRECATED: rand-operand auto dispatch (use frugal2u_update_auto_fused)."""
     if _on_tpu():
         return frugal2u_update_blocked(items, rand, m, step, sign, quantile,
                                        interpret=False, **kw)

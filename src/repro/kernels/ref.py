@@ -1,15 +1,60 @@
 """Pure-jnp oracles for the Pallas kernels (required ref.py).
 
 Straight lax.scan transcriptions of the paper's algorithms — no Pallas, no
-blocking — used by the kernel test sweep for bit-exact comparison (both sides
-consume the same fed-in uniforms).
+blocking — used by the kernel test sweep for bit-exact comparison. Test-only:
+the production off-TPU dispatch runs core.frugal instead (kernels/ops.py), so
+this file stays an independent transcription to validate against.
+
+Two flavours per algorithm, sharing one tick transcription within this file:
+
+  * ``frugal{1,2}u_ref``       — consumes fed-in ``rand[T, G]`` uniforms
+    (oracle for the deprecated operand-rand kernels).
+  * ``frugal{1,2}u_ref_fused`` — generates uniforms tick-by-tick from the
+    SAME counter hash the fused Pallas kernels use (repro.core.rng), keyed on
+    (seed, t_offset + t, g). Bit-exact against frugal{1,2}u_pallas_fused for
+    any block shape. No [T, G] uniforms tensor is ever materialized.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import rng as crng
+
 Array = jax.Array
+
+
+def _tick1u(m, s, r, quantile):
+    """One Frugal-1U tick (paper Alg. 2), shared by both oracle flavours."""
+    up = (s > m) & (r > 1.0 - quantile)
+    down = (s < m) & (r > quantile)
+    return m + up.astype(m.dtype) - down.astype(m.dtype)
+
+
+def _tick2u(m, step, sign, s, r, quantile):
+    """One Frugal-2U tick (paper Alg. 3), shared by both oracle flavours."""
+    one = jnp.ones((), m.dtype)
+    up = (s > m) & (r > 1.0 - quantile)
+    down = (s < m) & (r > quantile)
+
+    step_u = step + jnp.where(sign > 0, one, -one)
+    m_u = m + jnp.where(step_u > 0, jnp.ceil(step_u), one)
+    osh_u = m_u > s
+    step_u = jnp.where(osh_u, step_u + (s - m_u), step_u)
+    m_u = jnp.where(osh_u, s, m_u)
+    step_u = jnp.where((sign < 0) & (step_u > 1), one, step_u)
+
+    step_d = step + jnp.where(sign < 0, one, -one)
+    m_d = m - jnp.where(step_d > 0, jnp.ceil(step_d), one)
+    osh_d = m_d < s
+    step_d = jnp.where(osh_d, step_d + (m_d - s), step_d)
+    m_d = jnp.where(osh_d, s, m_d)
+    step_d = jnp.where((sign > 0) & (step_d > 1), one, step_d)
+
+    m2 = jnp.where(up, m_u, jnp.where(down, m_d, m))
+    step2 = jnp.where(up, step_u, jnp.where(down, step_d, step))
+    sign2 = jnp.where(up, one, jnp.where(down, -one, sign))
+    return m2, step2, sign2
 
 
 def frugal1u_ref(items: Array, rand: Array, m: Array, quantile: Array) -> Array:
@@ -17,9 +62,7 @@ def frugal1u_ref(items: Array, rand: Array, m: Array, quantile: Array) -> Array:
 
     def tick(m, xs):
         s, r = xs
-        up = (s > m) & (r > 1.0 - quantile)
-        down = (s < m) & (r > quantile)
-        return m + up.astype(m.dtype) - down.astype(m.dtype), None
+        return _tick1u(m, s, r, quantile), None
 
     m, _ = jax.lax.scan(tick, m, (items, rand))
     return m
@@ -29,32 +72,52 @@ def frugal2u_ref(
     items: Array, rand: Array, m: Array, step: Array, sign: Array, quantile: Array
 ):
     """[T, G] sequential Frugal-2U; returns (m, step, sign)."""
-    one = jnp.ones((), m.dtype)
 
     def tick(carry, xs):
-        m, step, sign = carry
         s, r = xs
-        up = (s > m) & (r > 1.0 - quantile)
-        down = (s < m) & (r > quantile)
-
-        step_u = step + jnp.where(sign > 0, one, -one)
-        m_u = m + jnp.where(step_u > 0, jnp.ceil(step_u), one)
-        osh_u = m_u > s
-        step_u = jnp.where(osh_u, step_u + (s - m_u), step_u)
-        m_u = jnp.where(osh_u, s, m_u)
-        step_u = jnp.where((sign < 0) & (step_u > 1), one, step_u)
-
-        step_d = step + jnp.where(sign < 0, one, -one)
-        m_d = m - jnp.where(step_d > 0, jnp.ceil(step_d), one)
-        osh_d = m_d < s
-        step_d = jnp.where(osh_d, step_d + (m_d - s), step_d)
-        m_d = jnp.where(osh_d, s, m_d)
-        step_d = jnp.where((sign > 0) & (step_d > 1), one, step_d)
-
-        m2 = jnp.where(up, m_u, jnp.where(down, m_d, m))
-        step2 = jnp.where(up, step_u, jnp.where(down, step_d, step))
-        sign2 = jnp.where(up, one, jnp.where(down, -one, sign))
-        return (m2, step2, sign2), None
+        return _tick2u(*carry, s, r, quantile), None
 
     (m, step, sign), _ = jax.lax.scan(tick, (m, step, sign), (items, rand))
+    return m, step, sign
+
+
+def frugal1u_ref_fused(
+    items: Array, m: Array, quantile: Array, seed, *, t_offset=0
+) -> Array:
+    """[T, G] sequential Frugal-1U with counter-hashed uniforms; returns m [G]."""
+    t, g = items.shape
+    seed = jnp.asarray(seed, jnp.int32)
+    t0 = jnp.asarray(t_offset, jnp.int32)
+    g_ids = jnp.arange(g, dtype=jnp.int32)
+
+    def tick(m, xs):
+        s, i = xs
+        r = crng.counter_uniform(seed, t0 + i, g_ids)
+        return _tick1u(m, s, r, quantile), None
+
+    m, _ = jax.lax.scan(tick, m, (items, jnp.arange(t, dtype=jnp.int32)))
+    return m
+
+
+def frugal2u_ref_fused(
+    items: Array, m: Array, step: Array, sign: Array, quantile: Array, seed,
+    *, t_offset=0,
+):
+    """[T, G] sequential Frugal-2U with counter-hashed uniforms.
+
+    Returns (m, step, sign). Bit-exact vs frugal2u_pallas_fused (which carries
+    the packed (step, sign) word — core.packing round-trips exactly).
+    """
+    t, g = items.shape
+    seed = jnp.asarray(seed, jnp.int32)
+    t0 = jnp.asarray(t_offset, jnp.int32)
+    g_ids = jnp.arange(g, dtype=jnp.int32)
+
+    def tick(carry, xs):
+        s, i = xs
+        r = crng.counter_uniform(seed, t0 + i, g_ids)
+        return _tick2u(*carry, s, r, quantile), None
+
+    (m, step, sign), _ = jax.lax.scan(
+        tick, (m, step, sign), (items, jnp.arange(t, dtype=jnp.int32)))
     return m, step, sign

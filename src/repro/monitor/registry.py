@@ -25,6 +25,7 @@ from typing import Any, Dict, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import rng as crng
 from repro.core.frugal import Frugal2UState, frugal2u_update
 
 Array = jax.Array
@@ -94,17 +95,22 @@ def init_train_monitors(model, params, example_batch) -> TrainMonitors:
 def update_train_monitors(
     mon: TrainMonitors, stats: Dict[str, Any], key: Array
 ) -> TrainMonitors:
-    """One frugal tick per group from this step's stats (inside train_step)."""
+    """One frugal tick per group from this step's stats (inside train_step).
+
+    Uniforms come from the counter-hash discipline (core.rng.tick_uniforms)
+    rather than materialized threefry draws — the same fused-RNG scheme the
+    ingest kernels use, a few int ops per group inside the jitted step.
+    """
     a, r, l = _flatten_stats(stats)
     k1, k2, k3 = jax.random.split(key, 3)
     absmax_sk = frugal2u_update(
-        mon.act_absmax_q99, a, jax.random.uniform(k1, a.shape), 0.99)
+        mon.act_absmax_q99, a, crng.tick_uniforms(k1, a.shape[0]), 0.99)
     rms_sk = frugal2u_update(
-        mon.act_rms_q50, r, jax.random.uniform(k2, r.shape), 0.5)
+        mon.act_rms_q50, r, crng.tick_uniforms(k2, r.shape[0]), 0.5)
     moe_sk = mon.expert_load_q99
     if moe_sk is not None and l is not None:
         moe_sk = frugal2u_update(
-            moe_sk, l, jax.random.uniform(k3, l.shape), 0.99)
+            moe_sk, l, crng.tick_uniforms(k3, l.shape[0]), 0.99)
     return mon._replace(act_absmax_q99=absmax_sk, act_rms_q50=rms_sk,
                         expert_load_q99=moe_sk)
 

@@ -15,6 +15,7 @@ from typing import Any, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import rng as crng
 from repro.core.frugal import Frugal2UState, frugal2u_update
 
 Array = jax.Array
@@ -54,7 +55,7 @@ def quantile_clip(
 ) -> Tuple[list, QuantileClipState, Array]:
     """Clip each block to margin × (frugal q95 of its grad-norm history)."""
     norms = jnp.stack([global_norm(b) for b in grads_blocks])      # [G]
-    rand = jax.random.uniform(key, norms.shape)
+    rand = crng.tick_uniforms(key, norms.shape[0])  # counter-hash, no threefry
     sketch = frugal2u_update(state.sketch, norms, rand, quantile)
     thresh = jnp.maximum(sketch.m * margin, 1e-6)
     engaged = state.warmup >= warmup_steps

@@ -26,6 +26,21 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 Array = jax.Array
 
+# jax.shard_map (kwarg check_vma) landed after 0.4.x; older jax ships it as
+# jax.experimental.shard_map.shard_map with the kwarg named check_rep.
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+else:  # pragma: no cover - exercised on jax<0.5 installs
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs, check=False):
+    """Version-portable shard_map with replication checking disabled."""
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: check})
+
 
 def bubble_fraction(num_stages: int, num_microbatches: int) -> float:
     return (num_stages - 1) / (num_microbatches + num_stages - 1)
@@ -86,7 +101,6 @@ def pipeline_forward(
         jax.tree.map(lambda _: P(axis), stage_params),
         P(),            # microbatch stream replicated
     )
-    fn = jax.shard_map(
-        per_stage, mesh=mesh, in_specs=in_specs, out_specs=P(),
-        check_vma=False)
+    fn = shard_map_compat(
+        per_stage, mesh=mesh, in_specs=in_specs, out_specs=P())
     return fn(stage_params, x)

@@ -25,6 +25,44 @@ from typing import Any, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.core.frugal import Frugal2UState
+from repro.core.packing import PackedFrugal2UState, pack_frugal2u, unpack_frugal2u
+
+
+def _pack_sketches(tree):
+    """Frugal-2U monitor fleets serialize as TWO words per group (m + packed
+    step/sign, core.packing) — the paper's memory claim holds on disk too."""
+    return jax.tree_util.tree_map(
+        lambda x: pack_frugal2u(x) if isinstance(x, Frugal2UState) else x,
+        tree, is_leaf=lambda x: isinstance(x, Frugal2UState))
+
+
+def _unpack_sketches(tree):
+    return jax.tree_util.tree_map(
+        lambda x: unpack_frugal2u(x) if isinstance(x, PackedFrugal2UState) else x,
+        tree, is_leaf=lambda x: isinstance(x, PackedFrugal2UState))
+
+
+def _pack_sketch_shardings(tree):
+    """Structure-only analogue of _pack_sketches for sharding pytrees: the
+    leaves are NamedShardings, so just re-nest them (step's placement serves
+    for the packed step_sign word)."""
+    return jax.tree_util.tree_map(
+        lambda x: PackedFrugal2UState(m=x.m, step_sign=x.step)
+        if isinstance(x, Frugal2UState) else x,
+        tree, is_leaf=lambda x: isinstance(x, Frugal2UState))
+
+
+def _pack_sketch_template(tree):
+    """Structure-only pack for the restore `like` tree: no math on leaves, so
+    abstract templates (ShapeDtypeStruct from eval_shape / dry-run builders)
+    work — restore only reads .shape/.dtype off `like`."""
+    return jax.tree_util.tree_map(
+        lambda x: PackedFrugal2UState(
+            m=x.m, step_sign=jax.ShapeDtypeStruct(x.step.shape, jax.numpy.int32))
+        if isinstance(x, Frugal2UState) else x,
+        tree, is_leaf=lambda x: isinstance(x, Frugal2UState))
+
 
 def _flatten(tree):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
@@ -46,7 +84,7 @@ def save_checkpoint(ckpt_dir: str, step: int, state: Any, keep: int = 3,
         shutil.rmtree(final)
     os.makedirs(tmp)
 
-    leaves, treedef = _flatten(state)
+    leaves, treedef = _flatten(_pack_sketches(state))
     arrs = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
     np.savez(os.path.join(tmp, f"shard_{host_id}.npz"), **arrs)
     manifest = {
@@ -55,7 +93,9 @@ def save_checkpoint(ckpt_dir: str, step: int, state: Any, keep: int = 3,
         "treedef": str(treedef),
         "shapes": [list(np.shape(a)) for a in leaves],
         "dtypes": [str(np.asarray(l).dtype) for l in leaves],
-        "format": 1,
+        # format 2: Frugal2UState nodes stored packed (2 leaves: m, step_sign)
+        # instead of unpacked (3 leaves) — see _pack_sketches.
+        "format": 2,
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
@@ -106,15 +146,32 @@ def restore_checkpoint(ckpt_dir: str, like: Any, step: Optional[int] = None,
             raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
     data = np.load(os.path.join(path, f"shard_{host_id}.npz"))
-    leaves, treedef = _flatten(like)
+    leaves, treedef = _flatten(_pack_sketch_template(like))
+
+    # Refuse mismatched layouts instead of zipping leaves by index into the
+    # wrong slots (e.g. a format-1 checkpoint stores Frugal2UState unpacked
+    # as 3 leaves; silently restoring it would shift every later leaf).
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    fmt = manifest.get("format", 1)
+    if manifest.get("num_leaves") != len(leaves):
+        raise ValueError(
+            f"checkpoint at {path} has {manifest.get('num_leaves')} leaves "
+            f"(format {fmt}) but the target structure expects {len(leaves)}; "
+            "format-1 checkpoints store Frugal-2U sketches unpacked and are "
+            "not readable by this version — re-save from the old layout.")
+
+    sh_leaves = None
+    if shardings is not None:
+        sh_leaves, _ = _flatten(_pack_sketch_shardings(shardings))
     restored = []
     for i, ref in enumerate(leaves):
         arr = data[f"leaf_{i}"]
-        if shardings is not None:
-            sh_leaves, _ = _flatten(shardings)
+        if sh_leaves is not None:
             arr = jax.device_put(arr, sh_leaves[i])
         else:
             arr = jax.numpy.asarray(arr, dtype=ref.dtype) \
                 if hasattr(ref, "dtype") else arr
         restored.append(arr)
-    return jax.tree_util.tree_unflatten(treedef, restored), step
+    packed = jax.tree_util.tree_unflatten(treedef, restored)
+    return _unpack_sketches(packed), step

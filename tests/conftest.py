@@ -13,6 +13,11 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line("markers", "kernel: Pallas kernel validation tests")
+    config.addinivalue_line("markers", "slow: long-running subprocess tests")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

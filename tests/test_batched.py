@@ -4,7 +4,14 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# Only the property tests need hypothesis; a missing dev dep must not kill
+# collection of the whole suite under `pytest -x` (see requirements-dev.txt).
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAS_HYPOTHESIS = False
 
 from repro.core import GroupedQuantileSketch, Frugal2UState, batched_frugal2u_update
 from repro.core.reference import relative_mass_error
@@ -70,18 +77,26 @@ def test_ingest_tensor_group_axis():
     assert out2.m.shape == (8,)
 
 
-@settings(max_examples=25, deadline=None)
-@given(seed=st.integers(0, 2**31 - 1), b=st.sampled_from([1, 4, 64]))
-def test_property_batched_never_escapes_batch_hull(seed, b):
-    """Invariant: post-update estimate stays within [min(batch∪m), max(batch∪m)]."""
-    rng = np.random.default_rng(seed)
-    G = 4
-    st0 = Frugal2UState(
-        m=jnp.asarray(rng.normal(0, 10, G), jnp.float32),
-        step=jnp.asarray(rng.uniform(1, 20, G), jnp.float32),
-        sign=jnp.asarray(rng.choice([-1.0, 1.0], G), jnp.float32))
-    items = jnp.asarray(rng.normal(0, 10, (b, G)), jnp.float32)
-    st1 = batched_frugal2u_update(st0, items, jax.random.PRNGKey(seed % 1000), 0.5)
-    lo = jnp.minimum(jnp.min(items, 0), st0.m) - 1e-3
-    hi = jnp.maximum(jnp.max(items, 0), st0.m) + 1e-3
-    assert bool(jnp.all(st1.m >= lo) & jnp.all(st1.m <= hi))
+if HAS_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), b=st.sampled_from([1, 4, 64]))
+    def test_property_batched_never_escapes_batch_hull(seed, b):
+        """Invariant: post-update estimate stays within [min(batch∪m), max(batch∪m)]."""
+        rng = np.random.default_rng(seed)
+        G = 4
+        st0 = Frugal2UState(
+            m=jnp.asarray(rng.normal(0, 10, G), jnp.float32),
+            step=jnp.asarray(rng.uniform(1, 20, G), jnp.float32),
+            sign=jnp.asarray(rng.choice([-1.0, 1.0], G), jnp.float32))
+        items = jnp.asarray(rng.normal(0, 10, (b, G)), jnp.float32)
+        st1 = batched_frugal2u_update(st0, items, jax.random.PRNGKey(seed % 1000), 0.5)
+        lo = jnp.minimum(jnp.min(items, 0), st0.m) - 1e-3
+        hi = jnp.maximum(jnp.max(items, 0), st0.m) + 1e-3
+        assert bool(jnp.all(st1.m >= lo) & jnp.all(st1.m <= hi))
+
+else:
+
+    def test_property_tests_need_hypothesis():
+        pytest.skip("hypothesis not installed — property tests not collected "
+                    "(pip install -r requirements-dev.txt)")

@@ -31,8 +31,19 @@ def test_groupby_many_streams_two_words_each():
             float(sk.m[g]), sorted(items[:, g].tolist()), 0.5)))
     frac_ok = np.mean([e <= 0.1 for e in errs])
     assert frac_ok >= 0.85, f"only {frac_ok:.0%} of groups within ±0.1 mass"
-    # the headline: total persistent memory = 2 words per group
+    # the headline: total persistent memory = 2 words per group — and that is
+    # the literal serialized size: (step, sign) pack into ONE int32 word, and
+    # the packed form reconstructs the working state bit-exactly.
     assert sk.memory_words() == 2
+    packed = sk.packed()
+    assert packed.step_sign.dtype == jnp.int32
+    words = (packed.m.size * packed.m.dtype.itemsize
+             + packed.step_sign.size * packed.step_sign.dtype.itemsize) // 4
+    assert words == sk.memory_words() * G
+    back = type(sk).from_packed(packed)
+    np.testing.assert_array_equal(np.asarray(back.m), np.asarray(sk.m))
+    np.testing.assert_array_equal(np.asarray(back.step), np.asarray(sk.step))
+    np.testing.assert_array_equal(np.asarray(back.sign), np.asarray(sk.sign))
 
 
 def test_groupby_heterogeneous_lengths_tcp_proxy():
