@@ -1,0 +1,156 @@
+"""E9 (ours) — sharded-fleet ingest throughput: the G axis past one device.
+
+The paper's GROUPBY scale story is millions of groups in one or two words
+each; PR 1 made the per-device hot path bandwidth-optimal, and
+parallel/group_sharding.py makes groups scale across a mesh with zero
+collectives during ingest. This bench sweeps G up to 2^20 over 1/2/4/8
+host devices (``--xla_force_host_platform_device_count``) and records
+aggregate items/s. Because the device count is locked at the first jax
+init, every mesh size runs in its own child process; the parent aggregates.
+
+Results land in artifacts/bench/e9_sharded_fleet.json AND repo-root
+BENCH_sharded_fleet.json (PR-over-PR trajectory). Gate: >= 2x aggregate
+items/s at G = 2^20 going 1 -> 8 devices (`gate_met` in the payload; a loud
+warning, not a hard assert — wall clock on shared CI is noisy). On real TPU
+meshes the expected scaling is linear in devices: ingest is embarrassingly
+parallel over groups, so the only ceiling is per-chip HBM bandwidth.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(_ROOT, "BENCH_sharded_fleet.json")
+
+GATE_SPEEDUP_1TO8 = 2.0
+DEVICE_COUNTS = (1, 2, 4, 8)
+GATE_G = 1 << 20
+
+
+def _child(n_devices: int, group_counts, t_items: int, seed: int) -> None:
+    """Measure sharded ingest on `n_devices` host devices; print one JSON."""
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from repro.parallel import ShardedGroupFleet, group_mesh
+
+    assert len(jax.devices()) >= n_devices, (
+        f"{len(jax.devices())} devices visible, need {n_devices} — "
+        "the parent must set XLA_FLAGS before the child's jax init")
+    mesh = group_mesh(n_devices)
+    rng = np.random.default_rng(seed)
+    out = {}
+    for g in group_counts:
+        t = t_items
+        # int32 draw: the default int64 would materialize a 4 GiB temp at
+        # G=2^20 in --full mode before the float32 cast
+        items = rng.integers(0, 1000, (t, g), dtype=np.int32) \
+            .astype(np.float32)
+        fleet = ShardedGroupFleet.create(g, quantile=0.5, algo="2u", mesh=mesh)
+        chunk_t = min(t, 4096)
+        # Pre-place the items on the mesh OUTSIDE the timer: the quantity
+        # under test is sharded ingest throughput, and in production each
+        # shard's telemetry is generated on (or streamed to) its own device —
+        # a host array being re-split into n column slices per call would
+        # charge the 1-device baseline nothing and the 8-device mesh a full
+        # host->device scatter, inverting the comparison.
+        placed = fleet._pad_items(items)
+
+        def run():
+            got = fleet.ingest_array(placed, seed=seed, chunk_t=chunk_t)
+            jax.block_until_ready(got.sketch.m)
+            return got
+
+        run()                                    # compile + warm up
+        # Per-rep timings with a median summary: this sweep runs on shared
+        # machines where a single co-tenant burst can halve one rep, and 1
+        # vs 8 devices run in different processes minutes apart — the median
+        # is the comparable steady-state number, `best` the least-
+        # interference one.
+        times = []
+        for _ in range(6):
+            t0 = time.perf_counter()
+            run()
+            times.append(time.perf_counter() - t0)
+        med = sorted(times)[len(times) // 2]
+        out[str(g)] = {"items_per_s": t * g / med,
+                       "items_per_s_best": t * g / min(times),
+                       "wall_s_median": med, "wall_s_all": times}
+    print(json.dumps({"n_devices": n_devices, "per_g": out}))
+
+
+def run(quick: bool = True, seed: int = 0):
+    group_counts = (1 << 14, 1 << 17, 1 << 20)
+    t_items = 128 if quick else 512
+    payload = {"t_items": t_items, "group_counts": list(group_counts),
+               "device_counts": list(DEVICE_COUNTS), "sweep": {}}
+    lines = []
+
+    for n in DEVICE_COUNTS:
+        env = dict(os.environ)
+        env["JAX_PLATFORMS"] = "cpu"
+        env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n} "
+                            + env.get("XLA_FLAGS", "")).strip()
+        env["PYTHONPATH"] = (os.path.join(_ROOT, "src")
+                             + os.pathsep + env.get("PYTHONPATH", ""))
+        cmd = [sys.executable, os.path.abspath(__file__), "--child", str(n),
+               "--t-items", str(t_items), "--seed", str(seed),
+               "--groups", ",".join(str(g) for g in group_counts)]
+        res = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                             cwd=_ROOT)
+        if res.returncode != 0:
+            raise RuntimeError(
+                f"sharded-fleet child (n={n}) failed:\n{res.stderr[-2000:]}")
+        child = json.loads(res.stdout.strip().splitlines()[-1])
+        payload["sweep"][str(n)] = child["per_g"]
+        for g, r in child["per_g"].items():
+            lines.append(f"sharded_fleet_d{n}_g{g},"
+                         f"{1e6 / r['items_per_s']:.5f},"
+                         f"devices={n};groups={g};"
+                         f"items_per_s={r['items_per_s'] / 1e6:.1f}M")
+
+    gk = str(GATE_G)
+    base = payload["sweep"]["1"][gk]["items_per_s"]
+    for n in DEVICE_COUNTS[1:]:
+        payload[f"speedup_1to{n}_g2pow20"] = \
+            payload["sweep"][str(n)][gk]["items_per_s"] / base
+    payload["gate_speedup_1to8_min"] = GATE_SPEEDUP_1TO8
+    payload["gate_met"] = bool(
+        payload["speedup_1to8_g2pow20"] >= GATE_SPEEDUP_1TO8)
+    lines.append(f"sharded_fleet_SPEEDUP_1to8,"
+                 f"{payload['speedup_1to8_g2pow20']:.3f},"
+                 f"gate>={GATE_SPEEDUP_1TO8}x;met={payload['gate_met']}")
+    if not payload["gate_met"]:
+        lines.append("sharded_fleet_GATE_MISSED,0,"
+                     "rerun unloaded; investigate if it persists")
+
+    try:
+        from .common import save_result
+    except ImportError:  # invoked as a script rather than -m benchmarks.*
+        sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+        from common import save_result
+    save_result("e9_sharded_fleet", payload)
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return lines, payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--child", type=int, default=None)
+    ap.add_argument("--t-items", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--groups", type=str, default="16384,131072,1048576")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.child is not None:
+        _child(args.child, [int(g) for g in args.groups.split(",")],
+               args.t_items, args.seed)
+    else:
+        for line in run(quick=not args.full)[0]:
+            print(line)

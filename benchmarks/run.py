@@ -1,4 +1,4 @@
-"""Benchmark harness — one module per paper table/figure (see DESIGN.md §7).
+"""Benchmark harness — one module per paper table/figure (see DESIGN.md §8).
 
 Prints ``name,us_per_call,derived`` CSV lines; full payloads land in
 artifacts/bench/*.json. ``--full`` uses the paper's exact stream sizes
@@ -21,7 +21,8 @@ def main() -> None:
     from benchmarks import (
         bench_static_cauchy, bench_dynamic_cauchy, bench_groupby_tcp,
         bench_combined_stream, bench_groupby_twitter,
-        bench_convergence_theory, bench_kernel_throughput)
+        bench_convergence_theory, bench_kernel_throughput,
+        bench_sharded_fleet)
 
     suite = {
         "e1": ("static_cauchy (paper Fig 4)", bench_static_cauchy.run),
@@ -31,6 +32,7 @@ def main() -> None:
         "e5": ("groupby_twitter (paper Figs 10-11)", bench_groupby_twitter.run),
         "e6": ("theory Thm1/Thm2 (paper §4)", bench_convergence_theory.run),
         "e8": ("kernel_throughput (ours)", bench_kernel_throughput.run),
+        "e9": ("sharded_fleet (ours)", bench_sharded_fleet.run),
     }
     only = set(args.only.split(",")) if args.only else None
 

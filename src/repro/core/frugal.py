@@ -125,15 +125,19 @@ def frugal2u_update(
     return Frugal2UState(m=m, step=step, sign=sign)
 
 
-def _fused_scan(update_fn, state, items, seed, quantile, return_trace, t_offset):
+def _fused_scan(update_fn, state, items, seed, quantile, return_trace, t_offset,
+                g_offset):
     """Scan ticks with counter-hashed uniforms generated per tick — the
     fused ingest path. No [T, G] uniforms tensor is ever materialized, and
-    the (seed, absolute tick, group) keying makes the trajectory bit-identical
-    to the fused Pallas kernel / kernels.ref fused oracles for the same seed
-    (see core.rng, DESIGN.md §4)."""
+    the (seed, absolute tick, absolute group) keying makes the trajectory
+    bit-identical to the fused Pallas kernel / kernels.ref fused oracles for
+    the same seed (see core.rng, DESIGN.md §4). `g_offset` is the absolute
+    group index of column 0 — a shard of a larger fleet passes its global
+    offset so the sharded trajectory matches the unsharded one bit-for-bit
+    (parallel/group_sharding.py)."""
     seed = jnp.asarray(seed, jnp.int32)
     t, g = items.shape
-    g_ids = jnp.arange(g, dtype=jnp.int32)
+    g_ids = jnp.asarray(g_offset, jnp.int32) + jnp.arange(g, dtype=jnp.int32)
     t0 = jnp.asarray(t_offset, jnp.int32)
 
     def tick(s, xs):
@@ -148,6 +152,7 @@ def _fused_scan(update_fn, state, items, seed, quantile, return_trace, t_offset)
 def frugal1u_process_seeded(
     state: Frugal1UState, items: Array, seed, quantile: ArrayLike = 0.5,
     return_trace: bool = False, t_offset: ArrayLike = 0,
+    g_offset: ArrayLike = 0,
 ) -> Tuple[Frugal1UState, Optional[Array]]:
     """Fused [T, G] ingest from a raw int32 counter seed (kernel discipline).
 
@@ -157,16 +162,17 @@ def frugal1u_process_seeded(
     equivalence tests pin bit-exactly against it).
     """
     return _fused_scan(frugal1u_update, state, items, seed, quantile,
-                       return_trace, t_offset)
+                       return_trace, t_offset, g_offset)
 
 
 def frugal2u_process_seeded(
     state: Frugal2UState, items: Array, seed, quantile: ArrayLike = 0.5,
     return_trace: bool = False, t_offset: ArrayLike = 0,
+    g_offset: ArrayLike = 0,
 ) -> Tuple[Frugal2UState, Optional[Array]]:
     """Fused [T, G] Frugal-2U ingest from a raw int32 counter seed."""
     return _fused_scan(frugal2u_update, state, items, seed, quantile,
-                       return_trace, t_offset)
+                       return_trace, t_offset, g_offset)
 
 
 def frugal1u_process(
@@ -177,18 +183,21 @@ def frugal1u_process(
     quantile: ArrayLike = 0.5,
     return_trace: bool = False,
     t_offset: ArrayLike = 0,
+    g_offset: ArrayLike = 0,
 ) -> Tuple[Frugal1UState, Optional[Array]]:
     """Sequentially ingest a [T, G] block (scan of ticks).
 
     With `key`, uniforms are counter-hashed on the fly (fused path: no
     [T, G] rand tensor; `t_offset` is the absolute stream tick of items[0]
-    for chunked ingestion). Passing an explicit `rand` tensor is the
+    for chunked ingestion, `g_offset` the absolute group index of column 0
+    for sharded fleets). Passing an explicit `rand` tensor is the
     deprecated fed-uniform path, kept for oracle tests.
     """
     if rand is None:
         assert key is not None, "need key or rand"
         return frugal1u_process_seeded(state, items, rng.seed_from_key(key),
-                                       quantile, return_trace, t_offset)
+                                       quantile, return_trace, t_offset,
+                                       g_offset)
 
     def tick(s, xs):
         it, rn = xs
@@ -207,6 +216,7 @@ def frugal2u_process(
     quantile: ArrayLike = 0.5,
     return_trace: bool = False,
     t_offset: ArrayLike = 0,
+    g_offset: ArrayLike = 0,
 ) -> Tuple[Frugal2UState, Optional[Array]]:
     """Sequentially ingest a [T, G] block (scan of ticks).
 
@@ -216,7 +226,8 @@ def frugal2u_process(
     if rand is None:
         assert key is not None, "need key or rand"
         return frugal2u_process_seeded(state, items, rng.seed_from_key(key),
-                                       quantile, return_trace, t_offset)
+                                       quantile, return_trace, t_offset,
+                                       g_offset)
 
     def tick(s, xs):
         it, rn = xs

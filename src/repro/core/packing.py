@@ -54,11 +54,15 @@ _MAX_STEP = np.float32(2.0 ** 32 * (1.0 - 2.0 ** -24))
 def pack_step_sign(step: Array, sign: Array) -> Array:
     """(step f32, sign ±1 f32) -> one int32 word per group.
 
-    Magnitudes >= 2^32 saturate to the largest in-domain float (direction
-    preserved); magnitudes < 2^-63 flush to zero. In-domain values round-trip
+    Magnitudes >= 2^32 (including ±inf) saturate to the largest in-domain
+    float (direction preserved); magnitudes < 2^-63 flush to zero, as does a
+    NaN step (a NaN's exponent bits would alias into the negative-direction
+    range and corrupt the decoded sign). In-domain values round-trip
     bit-exactly.
     """
-    step = jnp.clip(jnp.asarray(step, jnp.float32), -_MAX_STEP, _MAX_STEP)
+    step = jnp.asarray(step, jnp.float32)
+    step = jnp.where(jnp.isnan(step), jnp.float32(0.0),
+                     jnp.clip(step, -_MAX_STEP, _MAX_STEP))
     sb = jax.lax.bitcast_convert_type(step, jnp.int32)
     e = jax.lax.shift_right_logical(sb, _EXP_SHIFT) & _EXP_MASK
     neg = jnp.asarray(sign, jnp.float32) < 0

@@ -141,19 +141,26 @@ class GroupedQuantileSketch:
             st = frugal.frugal2u_update(self._as_state(), items, rand, self.quantile)
         return self._with_state(st)
 
-    def process(self, items: Array, key: Array) -> "GroupedQuantileSketch":
+    def process(self, items: Array, key: Array,
+                g_offset: int = 0) -> "GroupedQuantileSketch":
         """Sequential ingest of [T, G] (paper-exact semantics, fused lax.scan).
 
         Uniforms are counter-hashed per tick from `key` (core.rng) — no
         [T, G] rand tensor is built, and the trajectory is bit-identical to
         the fused Pallas kernel / core.streaming chunked ingest for the same
         key. For streams too long to hold as one block, use
-        core.streaming.ingest_stream.
+        core.streaming.ingest_stream; for fleets wider than one device, wrap
+        in parallel.group_sharding.ShardedGroupFleet (`g_offset` is the
+        absolute fleet index of this sketch's column 0 when it is one shard).
         """
         if self.algo == "1u":
-            st, _ = frugal.frugal1u_process(self._as_state(), items, key=key, quantile=self.quantile)
+            st, _ = frugal.frugal1u_process(self._as_state(), items, key=key,
+                                            quantile=self.quantile,
+                                            g_offset=g_offset)
         else:
-            st, _ = frugal.frugal2u_process(self._as_state(), items, key=key, quantile=self.quantile)
+            st, _ = frugal.frugal2u_process(self._as_state(), items, key=key,
+                                            quantile=self.quantile,
+                                            g_offset=g_offset)
         return self._with_state(st)
 
     def ingest_tensor(self, x: Array, key: Array, group_axis: int = -1) -> "GroupedQuantileSketch":

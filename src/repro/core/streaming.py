@@ -27,7 +27,7 @@ Entry points:
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Union
+from typing import Iterable, Optional, Union
 
 import numpy as np
 import jax
@@ -39,16 +39,19 @@ from .sketch import GroupedQuantileSketch
 Array = jax.Array
 
 
-def _apply_chunk(sk: GroupedQuantileSketch, chunk: Array, seed, t_offset):
+def _apply_chunk(sk: GroupedQuantileSketch, chunk: Array, seed, t_offset,
+                 g_offset=0):
     """One fused-kernel call over a [chunk_t, G] block at absolute t_offset."""
     from repro.kernels import ops  # lazy: kernels imports core (no cycle at runtime)
 
     if sk.algo == "1u":
         m = ops.frugal1u_update_auto_fused(
-            chunk, sk.m, sk.quantile, seed=seed, t_offset=t_offset)
+            chunk, sk.m, sk.quantile, seed=seed, t_offset=t_offset,
+            g_offset=g_offset)
         return dataclasses.replace(sk, m=m)
     m, step, sign = ops.frugal2u_update_auto_fused(
-        chunk, sk.m, sk.step, sk.sign, sk.quantile, seed=seed, t_offset=t_offset)
+        chunk, sk.m, sk.step, sk.sign, sk.quantile, seed=seed,
+        t_offset=t_offset, g_offset=g_offset)
     return dataclasses.replace(sk, m=m, step=step, sign=sign)
 
 
@@ -64,11 +67,50 @@ def _as_2d(chunk, num_groups: int) -> np.ndarray:
     return chunk
 
 
+def rechunk_blocks(chunks: Iterable, num_groups: int, chunk_t: int):
+    """Re-chunk a host stream of [t_i, G] blocks into exact [chunk_t, G]
+    numpy blocks, yielding (block, t_offset) with t_offset the absolute
+    stream tick of block[0] (int32-wrapped, see core.rng.wrap_i32). The final
+    partial block is NaN-padded (padded ticks are bit-exact no-ops). Shared
+    by `ingest_stream` and the sharded fleet's stream ingest
+    (parallel/group_sharding.py), so both see identical blocking.
+
+    Each yielded block is a fresh numpy array the consumer can hand to jax:
+    the staging buffer is reused while (async) chunk computations are in
+    flight, and CPU jax may zero-copy a numpy array it believes immutable —
+    aliasing the buffer would be a data race.
+    """
+    if chunk_t <= 0:
+        raise ValueError(f"chunk_t must be positive, got {chunk_t}")
+    buf = np.empty((chunk_t, num_groups), np.float32)
+    fill = 0          # valid rows currently staged in buf
+    t_offset = 0      # absolute stream tick of buf[0]
+
+    for chunk in chunks:
+        chunk = _as_2d(chunk, num_groups)
+        pos = 0
+        while pos < chunk.shape[0]:
+            take = min(chunk_t - fill, chunk.shape[0] - pos)
+            buf[fill:fill + take] = chunk[pos:pos + take]
+            fill += take
+            pos += take
+            if fill == chunk_t:
+                yield buf.copy(), crng.wrap_i32(t_offset)
+                t_offset += chunk_t
+                fill = 0
+
+    if fill:  # final partial block: NaN ticks are bit-exact no-ops
+        buf[fill:] = np.nan
+        yield buf.copy(), crng.wrap_i32(t_offset)
+
+
 def ingest_stream(
     sketch: GroupedQuantileSketch,
     chunks: Iterable,
     key: Array,
     chunk_t: int = 4096,
+    g_offset: int = 0,
+    t_offset: int = 0,
 ) -> GroupedQuantileSketch:
     """Ingest an unbounded host-side stream of [t_i, G] blocks.
 
@@ -77,51 +119,37 @@ def ingest_stream(
     unchunked `sketch.process` of the concatenated stream under the same key.
     Past 2^31 ticks the int32 counter wraps (core.rng.wrap_i32): ingestion
     continues unbounded, with the uniform stream repeating every 2^32 ticks.
+    `g_offset` shifts the RNG's group keys when this sketch is one shard of
+    a larger fleet (its column 0 is fleet group `g_offset`); `t_offset` is
+    the absolute stream tick of the first item — pass the running total when
+    continuing a stream across calls so the uniform stream never replays.
     """
-    if chunk_t <= 0:
-        raise ValueError(f"chunk_t must be positive, got {chunk_t}")
-    g = sketch.num_groups
     seed = crng.seed_from_key(key)
-    buf = np.empty((chunk_t, g), np.float32)
-    fill = 0          # valid rows currently staged in buf
-    t_offset = 0      # absolute stream tick of buf[0]
-
-    for chunk in chunks:
-        chunk = _as_2d(chunk, g)
-        pos = 0
-        while pos < chunk.shape[0]:
-            take = min(chunk_t - fill, chunk.shape[0] - pos)
-            buf[fill:fill + take] = chunk[pos:pos + take]
-            fill += take
-            pos += take
-            if fill == chunk_t:
-                # Hand jax a numpy copy it can own: the staging buffer is
-                # reused while the (async) chunk computation is in flight,
-                # and CPU jax may zero-copy a numpy array it believes
-                # immutable — aliasing `buf` here is a data race.
-                sketch = _apply_chunk(sketch, jnp.asarray(buf.copy()),
-                                      seed, crng.wrap_i32(t_offset))
-                t_offset += chunk_t
-                fill = 0
-
-    if fill:  # final partial block: NaN ticks are bit-exact no-ops
-        buf[fill:] = np.nan
-        sketch = _apply_chunk(sketch, jnp.asarray(buf.copy()), seed,
-                              crng.wrap_i32(t_offset))
+    for block, t0 in rechunk_blocks(chunks, sketch.num_groups, chunk_t):
+        sketch = _apply_chunk(sketch, jnp.asarray(block), seed,
+                              crng.wrap_i32(t_offset + t0), g_offset)
     return sketch
 
 
 def ingest_array(
     sketch: GroupedQuantileSketch,
     items: Union[Array, np.ndarray],
-    key: Array,
+    key: Optional[Array] = None,
     chunk_t: int = 4096,
+    g_offset: int = 0,
+    *,
+    seed=None,
+    t_offset=0,
 ) -> GroupedQuantileSketch:
     """Ingest a device-resident [T, G] array in chunk_t-sized slabs.
 
     Equivalent (bit-exact) to ingest_stream over any chunking of `items` and
     to `sketch.process(items, key)`; use it when the stream already fits on
-    device but you want a bounded compiled working set.
+    device but you want a bounded compiled working set. `g_offset` shifts the
+    RNG's group keys when this sketch is one shard of a larger fleet.
+    `seed` (a raw int32 counter seed) may replace `key` — the form used
+    inside shard_map bodies, where typed PRNG keys don't travel — and
+    `t_offset` shifts the absolute tick of items[0] (continuing a stream).
     """
     if chunk_t <= 0:
         raise ValueError(f"chunk_t must be positive, got {chunk_t}")
@@ -131,18 +159,25 @@ def ingest_array(
     t, g = items.shape
     if g != sketch.num_groups:
         raise ValueError(f"items G={g} != sketch groups {sketch.num_groups}")
-    seed = crng.seed_from_key(key)
+    if seed is None:
+        assert key is not None, "need key= or seed="
+        seed = crng.seed_from_key(key)
+    else:
+        seed = jnp.asarray(seed, jnp.int32)
 
     pad = (-t) % chunk_t
     if pad:
         items = jnp.pad(items, ((0, pad), (0, 0)), constant_values=jnp.nan)
     n = items.shape[0] // chunk_t
     slabs = items.reshape(n, chunk_t, g)
-    offsets = jnp.arange(n, dtype=jnp.int32) * chunk_t
+    if isinstance(t_offset, int):   # traced offsets (shard_map) are already i32
+        t_offset = crng.wrap_i32(t_offset)   # past-2^31 ticks wrap, not raise
+    offsets = jnp.asarray(t_offset, jnp.int32) \
+        + jnp.arange(n, dtype=jnp.int32) * chunk_t
 
     def body(sk, xs):
         slab, off = xs
-        return _apply_chunk(sk, slab, seed, off), None
+        return _apply_chunk(sk, slab, seed, off, g_offset), None
 
     sketch, _ = jax.lax.scan(body, sketch, (slabs, offsets))
     return sketch

@@ -135,10 +135,15 @@ def _frugal2u_kernel(
 
 
 # ----------------------------------------------------- kernels (fused on-chip RNG)
-def _lane_ids(g_blk, block_g):
-    """Absolute group index per lane ([block_g] int32; 2-D iota for Mosaic)."""
+def _lane_ids(g_blk, block_g, g0):
+    """Absolute group index per lane ([block_g] int32; 2-D iota for Mosaic).
+
+    `g0` is the fleet-global index of array column 0 — nonzero when this call
+    ingests one shard of a group-sharded fleet (parallel/group_sharding.py),
+    so every shard hashes uniforms at the same (seed, t, g) keys as the
+    unsharded fleet."""
     iota = jax.lax.broadcasted_iota(jnp.int32, (1, block_g), 1)[0]
-    return g_blk * block_g + iota
+    return g0 + g_blk * block_g + iota
 
 
 def _frugal1u_fused_kernel(
@@ -154,7 +159,7 @@ def _frugal1u_fused_kernel(
     q = q_ref[0, :]
     seed = seed_ref[0]
     t0 = seed_ref[1] + t_blk * block_t          # absolute stream tick of row 0
-    g_ids = _lane_ids(g_blk, block_g)
+    g_ids = _lane_ids(g_blk, block_g, seed_ref[2])
 
     def body(i, m):
         r = crng.counter_uniform(seed, t0 + i, g_ids)
@@ -179,7 +184,7 @@ def _frugal2u_fused_kernel(
     q = q_ref[0, :]
     seed = seed_ref[0]
     t0 = seed_ref[1] + t_blk * block_t
-    g_ids = _lane_ids(g_blk, block_g)
+    g_ids = _lane_ids(g_blk, block_g, seed_ref[2])
 
     # State crosses block boundaries as (m, packed): two VMEM words per lane.
     step0, sign0 = packing.unpack_step_sign(packed_out_ref[0, :])
@@ -272,10 +277,12 @@ def frugal2u_pallas(
     return m2[0], step2[0], sign2[0]
 
 
-def _seed_operand(seed, t_offset) -> Array:
-    """[2] int32 scalar-prefetch operand: (counter seed, stream tick offset)."""
+def _seed_operand(seed, t_offset, g_offset) -> Array:
+    """[3] int32 scalar-prefetch operand:
+    (counter seed, stream tick offset, fleet-global group offset)."""
     return jnp.stack([jnp.asarray(seed, jnp.int32),
-                      jnp.asarray(t_offset, jnp.int32)])
+                      jnp.asarray(t_offset, jnp.int32),
+                      jnp.asarray(g_offset, jnp.int32)])
 
 
 def frugal1u_pallas_fused(
@@ -285,14 +292,16 @@ def frugal1u_pallas_fused(
     seed,             # int32 scalar — counter RNG seed
     *,
     t_offset=0,       # absolute stream tick of items[0] (chunked ingest)
+    g_offset=0,       # absolute group index of column 0 (sharded fleets)
     block_g: int = 128,
     block_t: int = 256,
     interpret: bool = False,
 ) -> Array:
     """Grouped Frugal-1U with fused on-chip RNG: no rand operand, half the
     HBM input traffic. Uniform for tick (t, g) is counter-hashed from
-    (seed, t_offset + t, g) — results are bit-identical to
-    kernels.ref.frugal1u_ref_fused and invariant to block shape / chunking.
+    (seed, t_offset + t, g_offset + g) — results are bit-identical to
+    kernels.ref.frugal1u_ref_fused and invariant to block shape / chunking /
+    group sharding.
     """
     t, g = items.shape
     assert t % block_t == 0 and g % block_g == 0, (t, g, block_t, block_g)
@@ -314,7 +323,8 @@ def frugal1u_pallas_fused(
         out_shape=jax.ShapeDtypeStruct((1, g), m.dtype),
         compiler_params=_compiler_params(),
         interpret=interpret,
-    )(_seed_operand(seed, t_offset), quantile[None, :], items, m[None, :])
+    )(_seed_operand(seed, t_offset, g_offset), quantile[None, :], items,
+      m[None, :])
     return out[0]
 
 
@@ -326,6 +336,7 @@ def frugal2u_pallas_fused(
     seed,              # int32 scalar
     *,
     t_offset=0,
+    g_offset=0,
     block_g: int = 128,
     block_t: int = 256,
     interpret: bool = False,
@@ -355,6 +366,6 @@ def frugal2u_pallas_fused(
         ],
         compiler_params=_compiler_params(),
         interpret=interpret,
-    )(_seed_operand(seed, t_offset), quantile[None, :], items, m[None, :],
-      packed[None, :])
+    )(_seed_operand(seed, t_offset, g_offset), quantile[None, :], items,
+      m[None, :], packed[None, :])
     return m2[0], packed2[0]

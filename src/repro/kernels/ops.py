@@ -72,14 +72,16 @@ def _pad_state(x: Array, block_g: int, fill: float):
 # ------------------------------------------------------------- fused (hot path)
 @functools.partial(jax.jit, static_argnames=("block_g", "block_t", "interpret"))
 def frugal1u_update_blocked_fused(
-    items: Array, m: Array, quantile: Array, seed, t_offset=0,
+    items: Array, m: Array, quantile: Array, seed, t_offset=0, g_offset=0,
     *, block_g: int = 128, block_t: int = 256, interpret: bool = True,
 ) -> Array:
     """Frugal-1U over a [T, G] block, uniforms fused on-chip. Returns m [G].
 
     `seed` is an int32 counter seed (derive from a PRNG key with
     core.rng.seed_from_key); `t_offset` is the absolute stream tick of
-    items[0] so chunked ingestion reproduces the unchunked trajectory.
+    items[0] so chunked ingestion reproduces the unchunked trajectory;
+    `g_offset` is the absolute group index of column 0 so a group-sharded
+    fleet reproduces the single-device trajectory (group_sharding.py).
     """
     g = m.shape[0]
     dt = m.dtype
@@ -89,7 +91,7 @@ def frugal1u_update_blocked_fused(
     m_p = _pad_state(m, block_g, 0.0)
     q_p = _pad_state(quantile, block_g, 0.5)
     out = frugal1u_pallas_fused(
-        items, m_p, q_p, seed, t_offset=t_offset,
+        items, m_p, q_p, seed, t_offset=t_offset, g_offset=g_offset,
         block_g=block_g, block_t=block_t, interpret=interpret)
     return out[:g]
 
@@ -97,7 +99,7 @@ def frugal1u_update_blocked_fused(
 @functools.partial(jax.jit, static_argnames=("block_g", "block_t", "interpret"))
 def frugal2u_update_blocked_fused(
     items: Array, m: Array, step: Array, sign: Array, quantile: Array,
-    seed, t_offset=0,
+    seed, t_offset=0, g_offset=0,
     *, block_g: int = 128, block_t: int = 256, interpret: bool = True,
 ):
     """Frugal-2U over a [T, G] block, fused RNG + packed (step, sign) word.
@@ -116,7 +118,7 @@ def frugal2u_update_blocked_fused(
     q_p = _pad_state(quantile, block_g, 0.5)
     packed = packing.pack_step_sign(step_p, sign_p)
     m2, packed2 = frugal2u_pallas_fused(
-        items, m_p, packed, q_p, seed, t_offset=t_offset,
+        items, m_p, packed, q_p, seed, t_offset=t_offset, g_offset=g_offset,
         block_g=block_g, block_t=block_t, interpret=interpret)
     step2, sign2 = packing.unpack_step_sign(packed2)
     return m2[:g], step2.astype(dt)[:g], sign2.astype(dt)[:g]
@@ -135,39 +137,42 @@ def _as_seed(key=None, seed=None):
 # core.frugal's scan — the single jnp transcription of the algorithm;
 # kernels/ref.py stays a test-only oracle.
 @jax.jit
-def _cpu1_fused(items, m, quantile, seed, t_offset):
+def _cpu1_fused(items, m, quantile, seed, t_offset, g_offset):
     st, _ = frugal.frugal1u_process_seeded(
-        frugal.Frugal1UState(m), items, seed, quantile, t_offset=t_offset)
+        frugal.Frugal1UState(m), items, seed, quantile, t_offset=t_offset,
+        g_offset=g_offset)
     return st.m
 
 
 @jax.jit
-def _cpu2_fused(items, m, step, sign, quantile, seed, t_offset):
+def _cpu2_fused(items, m, step, sign, quantile, seed, t_offset, g_offset):
     st, _ = frugal.frugal2u_process_seeded(
         frugal.Frugal2UState(m, step, sign), items, seed, quantile,
-        t_offset=t_offset)
+        t_offset=t_offset, g_offset=g_offset)
     return st.m, st.step, st.sign
 
 
 def frugal1u_update_auto_fused(items, m, quantile, key=None, *, seed=None,
-                               t_offset=0, **kw):
+                               t_offset=0, g_offset=0, **kw):
     """Fused Pallas on TPU, fused jnp ref elsewhere — bit-identical results."""
     s = _as_seed(key, seed)
     if _on_tpu():
         return frugal1u_update_blocked_fused(items, m, quantile, s, t_offset,
-                                             interpret=False, **kw)
+                                             g_offset, interpret=False, **kw)
     q = jnp.broadcast_to(jnp.asarray(quantile, m.dtype), m.shape)
-    return _cpu1_fused(items.astype(m.dtype), m, q, s, t_offset)
+    return _cpu1_fused(items.astype(m.dtype), m, q, s, t_offset, g_offset)
 
 
 def frugal2u_update_auto_fused(items, m, step, sign, quantile, key=None, *,
-                               seed=None, t_offset=0, **kw):
+                               seed=None, t_offset=0, g_offset=0, **kw):
     s = _as_seed(key, seed)
     if _on_tpu():
         return frugal2u_update_blocked_fused(items, m, step, sign, quantile,
-                                             s, t_offset, interpret=False, **kw)
+                                             s, t_offset, g_offset,
+                                             interpret=False, **kw)
     q = jnp.broadcast_to(jnp.asarray(quantile, m.dtype), m.shape)
-    return _cpu2_fused(items.astype(m.dtype), m, step, sign, q, s, t_offset)
+    return _cpu2_fused(items.astype(m.dtype), m, step, sign, q, s, t_offset,
+                       g_offset)
 
 
 # ------------------------------------------------- deprecated rand-operand path

@@ -82,13 +82,13 @@ def frugal2u_ref(
 
 
 def frugal1u_ref_fused(
-    items: Array, m: Array, quantile: Array, seed, *, t_offset=0
+    items: Array, m: Array, quantile: Array, seed, *, t_offset=0, g_offset=0
 ) -> Array:
     """[T, G] sequential Frugal-1U with counter-hashed uniforms; returns m [G]."""
     t, g = items.shape
     seed = jnp.asarray(seed, jnp.int32)
     t0 = jnp.asarray(t_offset, jnp.int32)
-    g_ids = jnp.arange(g, dtype=jnp.int32)
+    g_ids = jnp.asarray(g_offset, jnp.int32) + jnp.arange(g, dtype=jnp.int32)
 
     def tick(m, xs):
         s, i = xs
@@ -101,7 +101,7 @@ def frugal1u_ref_fused(
 
 def frugal2u_ref_fused(
     items: Array, m: Array, step: Array, sign: Array, quantile: Array, seed,
-    *, t_offset=0,
+    *, t_offset=0, g_offset=0,
 ):
     """[T, G] sequential Frugal-2U with counter-hashed uniforms.
 
@@ -111,7 +111,7 @@ def frugal2u_ref_fused(
     t, g = items.shape
     seed = jnp.asarray(seed, jnp.int32)
     t0 = jnp.asarray(t_offset, jnp.int32)
-    g_ids = jnp.arange(g, dtype=jnp.int32)
+    g_ids = jnp.asarray(g_offset, jnp.int32) + jnp.arange(g, dtype=jnp.int32)
 
     def tick(carry, xs):
         s, i = xs

@@ -1,5 +1,5 @@
 """Distribution substrate: sharding rules, collectives, pipeline stages,
-gradient compression."""
+gradient compression, group-sharded sketch fleets."""
 
 from .sharding import (
     param_shardings,
@@ -8,6 +8,11 @@ from .sharding import (
     set_activation_mesh,
     shard_activation,
 )
+from .group_sharding import (
+    GROUP_AXIS,
+    ShardedGroupFleet,
+    group_mesh,
+)
 
 __all__ = [
     "param_shardings",
@@ -15,4 +20,7 @@ __all__ = [
     "dp_axes",
     "set_activation_mesh",
     "shard_activation",
+    "GROUP_AXIS",
+    "ShardedGroupFleet",
+    "group_mesh",
 ]

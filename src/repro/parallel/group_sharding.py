@@ -1,0 +1,270 @@
+"""Group-axis sharding: scale the fleet's G axis past one device.
+
+The paper's GROUPBY setting makes groups embarrassingly parallel — every
+group's trajectory depends only on its own items and its own counter-hashed
+uniforms. This module shards the [G] state axis of a GroupedQuantileSketch
+across a 1-D device mesh with shard_map, so chunked ingest dispatches one
+fused kernel per shard with ZERO cross-device traffic: no collective appears
+anywhere in the ingest path (frugal sketches have no merge operator, and
+none is needed — each device owns its groups outright). Only `estimate()` /
+`unshard()` gather, and only when read.
+
+Bit-exactness contract (the spec, tested in tests/test_group_sharding.py):
+because the counter RNG keys uniforms on the ABSOLUTE (seed, tick, group)
+triple (core.rng, DESIGN.md §4), a shard that knows the fleet-global index
+of its column 0 (`g_offset = axis_index * shard_size`) hashes exactly the
+uniforms the unsharded fleet would — so any mesh shape, any chunking, and
+any ragged-G padding reproduce the single-device trajectory bit-for-bit.
+
+Ragged G: the fleet pads G up to a multiple of the mesh size. Pad lanes sit
+at the global tail (real groups keep their absolute indices), carry dummy
+state, and receive NaN items — a bit-exact no-op tick — then are dropped on
+read. The counter hash is stateless, so pad lanes "consuming" uniforms at
+tail keys perturbs nothing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Iterable, Optional, Union
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import rng as crng
+from repro.core import streaming
+from repro.core.sketch import GroupedQuantileSketch, PackedSketchState
+from .pipeline_parallel import shard_map_compat
+
+Array = jax.Array
+
+GROUP_AXIS = "groups"
+
+
+def group_mesh(num_devices: Optional[int] = None,
+               axis_name: str = GROUP_AXIS) -> Mesh:
+    """1-D mesh over the first `num_devices` devices (all by default)."""
+    devs = jax.devices()
+    n = num_devices or len(devs)
+    if n > len(devs):
+        raise ValueError(f"group_mesh needs {n} devices, found {len(devs)}")
+    return Mesh(np.asarray(devs[:n]), (axis_name,))
+
+
+def _pad_lane_fill(field: str) -> float:
+    # Pad lanes carry the same dummy state ops.py uses for block padding.
+    return {"m": 0.0, "step": 1.0, "sign": 1.0, "quantile": 0.5}[field]
+
+
+# One jitted shard_map per (mesh, algo, shard width, chunking) — cached so
+# repeated ingest calls hit the same compiled executable. Meshes hash by
+# device list + axis names, so a fleet reuses its entry across calls.
+@functools.lru_cache(maxsize=None)
+def _sharded_ingest_fn(mesh: Mesh, axis: str, algo: str, shard_g: int,
+                       chunk_t: int):
+    def body(items, m, step, sign, quantile, seed, t0):
+        g0 = jax.lax.axis_index(axis) * shard_g
+        if algo == "1u":
+            local = GroupedQuantileSketch(m=m, step=None, sign=None,
+                                          quantile=quantile, algo="1u")
+        else:
+            local = GroupedQuantileSketch(m=m, step=step, sign=sign,
+                                          quantile=quantile, algo="2u")
+        out = streaming.ingest_array(local, items, seed=seed, chunk_t=chunk_t,
+                                     g_offset=g0, t_offset=t0)
+        if algo == "1u":
+            return out.m, step, sign
+        return out.m, out.step, out.sign
+
+    state_spec = P(axis)
+    fn = shard_map_compat(
+        body, mesh=mesh,
+        in_specs=(P(None, axis), state_spec, state_spec, state_spec,
+                  state_spec, P(), P()),
+        out_specs=(state_spec, state_spec, state_spec))
+    return jax.jit(fn)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedGroupFleet:
+    """A GroupedQuantileSketch whose G axis lives sharded on a device mesh.
+
+    `sketch` holds globally-shaped [Gp] leaves placed with
+    NamedSharding(mesh, P('groups')) where Gp = ceil(G / mesh.size) ·
+    mesh.size; `num_groups` is the real (unpadded) G. All ingest entry
+    points are bit-identical to the unsharded single-device path.
+    """
+
+    sketch: GroupedQuantileSketch     # padded [Gp] leaves, device-placed
+    num_groups: int                   # real G (<= sketch.num_groups)
+    mesh: Mesh
+    axis: str = GROUP_AXIS
+
+    # ------------------------------------------------------------ properties
+    @property
+    def algo(self) -> str:
+        return self.sketch.algo
+
+    @property
+    def padded_groups(self) -> int:
+        return self.sketch.num_groups
+
+    @property
+    def shard_groups(self) -> int:
+        return self.sketch.num_groups // self.mesh.shape[self.axis]
+
+    def memory_words(self) -> int:
+        """Persistent words per group — 1 (1U) or 2 (2U), same as unsharded."""
+        return self.sketch.memory_words()
+
+    # -------------------------------------------------------------- creation
+    @staticmethod
+    def create(num_groups: int,
+               quantile: Union[float, Array] = 0.5,
+               algo: str = "2u",
+               init: Union[float, Array] = 0.0,
+               mesh: Optional[Mesh] = None,
+               axis: str = GROUP_AXIS) -> "ShardedGroupFleet":
+        mesh = mesh if mesh is not None else group_mesh(axis_name=axis)
+        sk = GroupedQuantileSketch.create(num_groups, quantile=quantile,
+                                          algo=algo, init=init)
+        return ShardedGroupFleet.from_sketch(sk, mesh, axis=axis)
+
+    @staticmethod
+    def from_sketch(sketch: GroupedQuantileSketch, mesh: Optional[Mesh] = None,
+                    axis: str = GROUP_AXIS) -> "ShardedGroupFleet":
+        """Shard an existing (host / single-device) sketch across `mesh`."""
+        mesh = mesh if mesh is not None else group_mesh(axis_name=axis)
+        g = sketch.num_groups
+        n = mesh.shape[axis]
+        gp = -(-g // n) * n
+        sharding = NamedSharding(mesh, P(axis))
+
+        def place(x, field):
+            x = jnp.broadcast_to(jnp.asarray(x, jnp.float32), (g,))
+            if gp != g:
+                x = jnp.pad(x, (0, gp - g),
+                            constant_values=_pad_lane_fill(field))
+            return jax.device_put(x, sharding)
+
+        m = place(sketch.m, "m")
+        q = place(sketch.quantile, "quantile")
+        if sketch.algo == "1u":
+            padded = GroupedQuantileSketch(m=m, step=None, sign=None,
+                                           quantile=q, algo="1u")
+        else:
+            padded = GroupedQuantileSketch(
+                m=m, step=place(sketch.step, "step"),
+                sign=place(sketch.sign, "sign"), quantile=q, algo="2u")
+        return ShardedGroupFleet(sketch=padded, num_groups=g, mesh=mesh,
+                                 axis=axis)
+
+    # ---------------------------------------------------------------- ingest
+    def _pad_items(self, items) -> Array:
+        """Pad columns to the mesh multiple and place on the mesh. Accepts
+        [T, G] (real groups) or an already-padded/placed [T, Gp] array —
+        idempotent, so callers may pre-place items once and re-ingest them
+        (device_put onto the sharding they already carry is a no-op)."""
+        items = jnp.asarray(items, jnp.float32)
+        if items.ndim == 1:
+            items = items[:, None]
+        gp = self.padded_groups
+        if items.ndim != 2 or items.shape[1] not in (self.num_groups, gp):
+            raise ValueError(
+                f"items shape {items.shape} != [T, {self.num_groups}]")
+        if items.shape[1] != gp:  # pad lanes get NaN items: bit-exact no-ops
+            items = jnp.pad(items, ((0, 0), (0, gp - items.shape[1])),
+                            constant_values=jnp.nan)
+        return jax.device_put(items, NamedSharding(self.mesh, P(None, self.axis)))
+
+    def _run_sharded(self, items: Array, seed, t0, chunk_t: int
+                     ) -> "ShardedGroupFleet":
+        fn = _sharded_ingest_fn(self.mesh, self.axis, self.algo,
+                                self.shard_groups, chunk_t)
+        sk = self.sketch
+        one = jnp.ones((self.padded_groups,), jnp.float32)
+        step = sk.step if sk.step is not None else one
+        sign = sk.sign if sk.sign is not None else one
+        m, step, sign = fn(items, sk.m, step, sign, sk.quantile,
+                           jnp.asarray(seed, jnp.int32),
+                           jnp.asarray(t0, jnp.int32))
+        if self.algo == "1u":
+            new = dataclasses.replace(sk, m=m)
+        else:
+            new = dataclasses.replace(sk, m=m, step=step, sign=sign)
+        return dataclasses.replace(self, sketch=new)
+
+    def ingest_array(self, items, key: Optional[Array] = None,
+                     chunk_t: int = 4096, *, seed=None,
+                     t_offset: int = 0) -> "ShardedGroupFleet":
+        """Sharded equivalent of core.streaming.ingest_array: every device
+        scans its own [chunk_t, G/n] slabs; no collectives. Bit-identical to
+        the unsharded call for the same key. `t_offset` is the absolute
+        stream tick of items[0] — pass the running total when continuing a
+        stream across calls, otherwise a same-seed second call would replay
+        the first call's uniforms."""
+        if chunk_t <= 0:
+            raise ValueError(f"chunk_t must be positive, got {chunk_t}")
+        if seed is None:
+            assert key is not None, "need key= or seed="
+            seed = crng.seed_from_key(key)
+        return self._run_sharded(self._pad_items(items), seed,
+                                 crng.wrap_i32(t_offset), chunk_t)
+
+    def ingest_stream(self, chunks: Iterable, key: Optional[Array] = None,
+                      chunk_t: int = 4096, *, seed=None, t_offset: int = 0
+                      ) -> "ShardedGroupFleet":
+        """Sharded equivalent of core.streaming.ingest_stream: the same host
+        re-chunker (identical blocking), one sharded fused dispatch per
+        [chunk_t, G] block. `t_offset` continues an earlier stream's tick
+        counter (see ingest_array)."""
+        if seed is None:
+            assert key is not None, "need key= or seed="
+            seed = crng.seed_from_key(key)
+        fleet = self
+        for block, t0 in streaming.rechunk_blocks(chunks, self.num_groups,
+                                                  chunk_t):
+            fleet = fleet._run_sharded(fleet._pad_items(block), seed,
+                                       crng.wrap_i32(t_offset + t0), chunk_t)
+        return fleet
+
+    # ----------------------------------------------------------------- reads
+    def estimate(self) -> np.ndarray:
+        """Current per-group estimates [G] — the one gathering read."""
+        return np.asarray(jax.device_get(self.sketch.m))[:self.num_groups]
+
+    def unshard(self) -> GroupedQuantileSketch:
+        """Gather the fleet back into a host-resident unsharded sketch."""
+        g = self.num_groups
+
+        def take(x):
+            return jnp.asarray(np.asarray(jax.device_get(x))[:g])
+
+        sk = self.sketch
+        if self.algo == "1u":
+            return GroupedQuantileSketch(m=take(sk.m), step=None, sign=None,
+                                         quantile=take(sk.quantile), algo="1u")
+        return GroupedQuantileSketch(m=take(sk.m), step=take(sk.step),
+                                     sign=take(sk.sign),
+                                     quantile=take(sk.quantile), algo="2u")
+
+    # -------------------------------------------------------- serialization
+    def packed(self) -> PackedSketchState:
+        """Checkpoint payload: 1-2 words per REAL group (pad lanes dropped)."""
+        return self.unshard().packed()
+
+    @staticmethod
+    def from_packed(p: PackedSketchState, mesh: Optional[Mesh] = None,
+                    axis: str = GROUP_AXIS) -> "ShardedGroupFleet":
+        return ShardedGroupFleet.from_sketch(
+            GroupedQuantileSketch.from_packed(p), mesh, axis=axis)
+
+    def state_shardings(self):
+        """NamedSharding pytree matching `packed()` — feed to
+        train.checkpoint.restore_checkpoint(shardings=...) to re-place a
+        saved fleet directly onto this mesh (elastic restore)."""
+        sh = NamedSharding(self.mesh, P(self.axis))
+        return PackedSketchState(
+            m=sh, step_sign=None if self.algo == "1u" else sh, quantile=sh)

@@ -1,5 +1,6 @@
 """Serving substrate: batched KV-cache engine + frugal SLO telemetry."""
 
 from .engine import ServeEngine, Request
+from .slo import SLOFleet, DEFAULT_METRICS
 
-__all__ = ["ServeEngine", "Request"]
+__all__ = ["ServeEngine", "Request", "SLOFleet", "DEFAULT_METRICS"]

@@ -8,20 +8,24 @@ function the decode_* dry-run cells lower). Finished sequences free slots.
 
 Frugal integration (the paper's GROUPBY story, serving edition): per route we
 track q50/q99 of (a) time-to-first-token, (b) per-token decode latency, and
-(c) output length — each 2 words of state per (route × metric) via scalar
-Frugal-2U ticks. A fleet-wide deployment with 1e6 routes costs 12 MB of SLO
-state instead of per-route histograms.
+(c) output length — each 2 words of state per (route × metric) lane of ONE
+SLOFleet (serve/slo.py), updated on the shared vectorized frugal path with
+counter-RNG lane streams. A fleet-wide deployment with 1e6 routes costs
+24 MB of SLO sketch state (2 words × 4 B × 3 lanes/route, + one tick word
+per lane in checkpoints) instead of per-route histograms — and one jitted
+tick per engine step instead of a Python loop per event.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
 import time
 from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from .slo import SLOFleet
 
 
 @dataclasses.dataclass
@@ -37,54 +41,6 @@ class Request:
     t_done: float = 0.0
 
 
-class _Frugal2UScalar:
-    """Scalar Frugal-2U (paper Alg. 3) — 2 persistent words per metric."""
-
-    def __init__(self, q: float, seed: int = 0):
-        self.q = q
-        self.m = 0.0
-        self.step = 1.0
-        self.sign = 1.0
-        self._rng = np.random.default_rng(seed)
-
-    def update(self, x: float):
-        r = self._rng.random()
-        q, m, step, sign = self.q, self.m, self.step, self.sign
-        if x > m and r > 1 - q:
-            step += 1.0 if sign > 0 else -1.0
-            m += math.ceil(step) if step > 0 else 1.0
-            if m > x:
-                step += x - m
-                m = x
-            if sign < 0 and step > 1:
-                step = 1.0
-            sign = 1.0
-        elif x < m and r > q:
-            step += 1.0 if sign < 0 else -1.0
-            m -= math.ceil(step) if step > 0 else 1.0
-            if m < x:
-                step += m - x
-                m = x
-            if sign > 0 and step > 1:
-                step = 1.0
-            sign = -1.0
-        self.m, self.step, self.sign = m, step, sign
-
-
-class RouteStats:
-    def __init__(self, seed: int = 0):
-        self.ttft_q99_ms = _Frugal2UScalar(0.99, seed)
-        self.tok_q50_ms = _Frugal2UScalar(0.5, seed + 1)
-        self.len_q50 = _Frugal2UScalar(0.5, seed + 2)
-
-    def summary(self) -> Dict[str, float]:
-        return {
-            "ttft_q99_ms": self.ttft_q99_ms.m,
-            "tok_q50_ms": self.tok_q50_ms.m,
-            "len_q50": self.len_q50.m,
-        }
-
-
 class ServeEngine:
     def __init__(self, model, params, batch_slots: int = 4, max_len: int = 512,
                  temperature: float = 0.0, seed: int = 0):
@@ -98,7 +54,9 @@ class ServeEngine:
         self.slot_pos = np.zeros(batch_slots, dtype=np.int64)
         self.queue: List[Request] = []
         self.done: List[Request] = []
-        self.route_stats: Dict[str, RouteStats] = {}
+        # Per-(route, metric) Frugal-2U lanes, one fleet; lane RNG streams
+        # derive from the counter hash on the absolute lane index.
+        self.slo = SLOFleet(seed=seed)
         self._rng = np.random.default_rng(seed)
         self._decode = jax.jit(
             lambda p, t, c, pos: model.decode_step(p, t, c, pos))
@@ -107,11 +65,6 @@ class ServeEngine:
     def submit(self, req: Request):
         req.t_submit = time.time()
         self.queue.append(req)
-
-    def _stats(self, route: str) -> RouteStats:
-        if route not in self.route_stats:
-            self.route_stats[route] = RouteStats(seed=len(self.route_stats))
-        return self.route_stats[route]
 
     # ------------------------------------------------------------ internals
     def _admit(self):
@@ -132,8 +85,8 @@ class ServeEngine:
                         self.params, tok_arr, self.caches, int(self.slot_pos[slot]))
                     self.slot_pos[slot] += 1
                 req.t_first = time.time()
-                self._stats(req.route).ttft_q99_ms.update(
-                    (req.t_first - req.t_submit) * 1e3)
+                self.slo.observe(req.route, "ttft_q99_ms",
+                                 (req.t_first - req.t_submit) * 1e3)
 
     def _sample(self, logits_row: np.ndarray) -> int:
         if self.temperature <= 0:
@@ -165,12 +118,14 @@ class ServeEngine:
             tok = self._sample(logits_np[i])
             r.output.append(tok)
             self.slot_pos[i] += 1
-            self._stats(r.route).tok_q50_ms.update(dt_ms)
+            self.slo.observe(r.route, "tok_q50_ms", dt_ms)
             if len(r.output) >= r.max_new_tokens or self.slot_pos[i] >= self.max_len - 1:
                 r.t_done = time.time()
-                self._stats(r.route).len_q50.update(float(len(r.output)))
+                self.slo.observe(r.route, "len_q50", float(len(r.output)))
                 self.done.append(r)
                 self.slot_req[i] = None
+        # One vectorized frugal tick batch for everything this step observed.
+        self.slo.flush()
         return len(active)
 
     def run_until_drained(self, max_ticks: int = 10_000):
@@ -182,4 +137,4 @@ class ServeEngine:
         return ticks
 
     def stats_summary(self) -> Dict[str, Dict[str, float]]:
-        return {route: st.summary() for route, st in self.route_stats.items()}
+        return self.slo.summaries()

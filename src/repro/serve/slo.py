@@ -1,0 +1,325 @@
+"""SLOFleet — per-route serving SLO quantiles on the vectorized frugal path.
+
+Replaces the engine's per-route scalar Python loops (`_Frugal2UScalar` /
+`RouteStats`, each with its own numpy Generator) with ONE Frugal-2U fleet
+whose group lanes are (route × metric) pairs: lane = route_idx · n_metrics +
+metric_idx. Updates run through `core.frugal.frugal2u_update` — the same
+vectorized tick every other consumer uses — so a serve step's worth of SLO
+observations costs one jitted compare/select bundle over all lanes instead
+of len(events) Python interpreter round-trips.
+
+RNG discipline: each lane keeps its own tick counter and draws uniform
+`counter_uniform(seed, tick_g, g)` (core.rng) — keyed on the ABSOLUTE lane
+index, so every (route, metric) pair gets an independent, reproducible
+uniform stream by construction. This also fixes the legacy seeding bug where
+route N's third metric (seeded `len(route_stats)+2`) shared a numpy seed
+with route N+2's first metric.
+
+Events arrive scalar (one request finishing, one decode tick) and are
+buffered host-side; `flush()` packs them into per-round [C]-lane batches
+(NaN for lanes without an event — a bit-exact no-op tick, the same padding
+contract as the kernels) and applies them vectorized. A lane's k-th event
+always consumes uniform (seed, k, lane) regardless of batching, so the
+trajectory equals the paper's scalar Algorithm 3 run per lane.
+
+Memory: sketch state is exactly 2 words per (route × metric) lane — `m`
+plus the packed (step, sign) word (core.packing) — in checkpoints, via the
+standard format-2 manifest (train/checkpoint.py packs the Frugal2UState
+node). A 10⁶-route deployment with 3 metrics holds 24 MB of quantile
+state (2 words × 4 B × 3 × 10⁶ lanes); checkpoints add one int32 tick
+word per lane (the lane's RNG stream position — irreducible if restored
+fleets must continue their exact trajectories) for 36 MB on disk. The
+fleet state is a pytree of [C]-lane arrays, so it shards over a group
+mesh (parallel/group_sharding.py) like any other sketch fleet.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import rng as crng
+from repro.core.frugal import Frugal2UState, frugal2u_update
+
+Array = jax.Array
+
+# (metric name, target quantile) — the serving SLO trio.
+DEFAULT_METRICS: Tuple[Tuple[str, float], ...] = (
+    ("ttft_q99_ms", 0.99),
+    ("tok_q50_ms", 0.5),
+    ("len_q50", 0.5),
+)
+
+
+@jax.jit
+def _slo_round(m, step, sign, ticks, quantile, items, mask, seed):
+    """One vectorized tick over all lanes: lanes with NaN items are no-ops
+    and keep their tick counter (mask 0), so each lane's uniform stream is
+    dense in its own event count."""
+    g_ids = jnp.arange(m.shape[0], dtype=jnp.int32)
+    r = crng.counter_uniform(seed, ticks, g_ids)
+    st = frugal2u_update(Frugal2UState(m, step, sign), items, r, quantile)
+    return st.m, st.step, st.sign, ticks + mask
+
+
+@jax.jit
+def _slo_round_sparse(m_s, step_s, sign_s, ticks_s, q_s, lanes, items, mask,
+                      seed):
+    """The same tick on a gathered O(events) lane slice — uniforms still key
+    on the ABSOLUTE lane index and the lane's own tick, so the trajectory is
+    bit-identical to the dense round."""
+    r = crng.counter_uniform(seed, ticks_s, lanes)
+    st = frugal2u_update(Frugal2UState(m_s, step_s, sign_s), items, r, q_s)
+    return st.m, st.step, st.sign, ticks_s + mask
+
+
+class SLOFleet:
+    """Routes × metrics Frugal-2U lanes with buffered vectorized updates."""
+
+    def __init__(self, metrics: Sequence[Tuple[str, float]] = DEFAULT_METRICS,
+                 seed: int = 0, capacity: int = 64):
+        if not metrics:
+            raise ValueError("need at least one (name, quantile) metric")
+        self.metrics = tuple((str(n), float(q)) for n, q in metrics)
+        self.n_metrics = len(self.metrics)
+        self._metric_idx = {n: i for i, (n, _) in enumerate(self.metrics)}
+        if len(self._metric_idx) != self.n_metrics:
+            raise ValueError(f"duplicate metric names in {metrics}")
+        self.seed = int(seed)
+        self._routes: Dict[str, int] = {}
+        self._pending: List[Tuple[int, float]] = []
+        self._alloc(max(1, int(capacity)))
+
+    # ------------------------------------------------------------- capacity
+    def _tile_q(self, n_routes: int) -> np.ndarray:
+        """Per-lane quantile targets for `n_routes` routes — the single
+        definition of the lane layout (route-major, metric-minor)."""
+        return np.tile(np.asarray([q for _, q in self.metrics], np.float32),
+                       n_routes)
+
+    def _alloc(self, cap_routes: int):
+        c = cap_routes * self.n_metrics
+        self._cap_routes = cap_routes
+        self._m = jnp.zeros((c,), jnp.float32)
+        self._step = jnp.ones((c,), jnp.float32)
+        self._sign = jnp.ones((c,), jnp.float32)
+        self._ticks = jnp.zeros((c,), jnp.int32)
+        self._q = jnp.asarray(self._tile_q(cap_routes))
+
+    def _grow(self, min_routes: int):
+        """Double route capacity. Lane ids are route_idx·n_metrics+metric_idx
+        — independent of capacity — so growth appends lanes without touching
+        any existing lane's RNG stream."""
+        new_cap = self._cap_routes
+        while new_cap < min_routes:
+            new_cap *= 2
+        pad = (new_cap - self._cap_routes) * self.n_metrics
+        qs = self._tile_q(new_cap - self._cap_routes)
+        self._m = jnp.concatenate([self._m, jnp.zeros((pad,), jnp.float32)])
+        self._step = jnp.concatenate([self._step, jnp.ones((pad,), jnp.float32)])
+        self._sign = jnp.concatenate([self._sign, jnp.ones((pad,), jnp.float32)])
+        self._ticks = jnp.concatenate([self._ticks, jnp.zeros((pad,), jnp.int32)])
+        self._q = jnp.concatenate([self._q, jnp.asarray(qs)])
+        self._cap_routes = new_cap
+
+    # --------------------------------------------------------------- routes
+    @property
+    def num_routes(self) -> int:
+        return len(self._routes)
+
+    @property
+    def num_lanes(self) -> int:
+        return self.num_routes * self.n_metrics
+
+    def routes(self) -> List[str]:
+        return sorted(self._routes, key=self._routes.get)
+
+    def ensure_route(self, route: str) -> int:
+        idx = self._routes.get(route)
+        if idx is None:
+            idx = len(self._routes)
+            self._routes[route] = idx
+            if idx + 1 > self._cap_routes:
+                self._grow(idx + 1)
+        return idx
+
+    def ensure_routes(self, routes: Iterable[str]):
+        """Bulk registration (fleet-wide deployments register routes up
+        front; a Python-level ensure per route would dominate at 10⁶)."""
+        seen = self._routes
+        new = dict.fromkeys(r for r in routes if r not in seen)  # dedupe, ordered
+        base = len(seen)
+        for i, r in enumerate(new):
+            seen[r] = base + i
+        if seen and len(seen) > self._cap_routes:
+            self._grow(len(seen))
+
+    def lane(self, route: str, metric: str) -> int:
+        # metric lookup FIRST: a typo'd metric must raise before the route
+        # side-effect registers anything (phantom lanes would enter
+        # summaries and checkpoints forever)
+        mi = self._metric_idx[metric]
+        return self.ensure_route(route) * self.n_metrics + mi
+
+    # --------------------------------------------------------------- events
+    def observe(self, route: str, metric: str, value: float):
+        """Buffer one observation; cheap (no device work until flush)."""
+        self._pending.append((self.lane(route, metric), float(value)))
+
+    # Below this many lanes a flush round just updates the whole [C] state
+    # (one fused op, simplest); above it, rounds gather/scatter only the
+    # event lanes so a handful of observations against a 10^6-route fleet
+    # never does O(capacity) work.
+    DENSE_LANES_MAX = 4096
+
+    def flush(self):
+        """Apply buffered events vectorized. Events for the SAME lane are
+        split into successive rounds (order preserved) so each consumes its
+        own tick's uniform; distinct lanes share a round. Dense and sparse
+        round paths are trajectory-identical (uniforms key on absolute lane
+        index + per-lane tick, regardless of how the batch is laid out)."""
+        if not self._pending:
+            return
+        events, self._pending = self._pending, []
+        # A lane's r-th event in this batch goes to round r (its events are
+        # already in arrival order), so round assignment is O(1) per event.
+        lane_counts: Dict[int, int] = {}
+        rounds: List[List[Tuple[int, float]]] = []
+        for lane, value in events:
+            r = lane_counts.get(lane, 0)
+            lane_counts[lane] = r + 1
+            if r == len(rounds):
+                rounds.append([])
+            rounds[r].append((lane, value))
+        c = self._cap_routes * self.n_metrics
+        seed = jnp.int32(self.seed)
+        if c <= self.DENSE_LANES_MAX:
+            for evs in rounds:
+                items = np.full((c,), np.nan, np.float32)
+                occ = np.zeros((c,), np.int32)
+                for lane, value in evs:
+                    items[lane] = value
+                    occ[lane] = 1
+                self._m, self._step, self._sign, self._ticks = _slo_round(
+                    self._m, self._step, self._sign, self._ticks, self._q,
+                    jnp.asarray(items), jnp.asarray(occ), seed)
+            return
+        for evs in rounds:
+            self._flush_round_sparse(evs, c, seed)
+
+    def _flush_round_sparse(self, evs: List[Tuple[int, float]], c: int, seed):
+        """O(events) round: gather the event lanes, tick them, scatter back.
+        The lane list is padded to a power of two (bounding jit recompiles)
+        with a lane that is NOT in the round, so the scatter writes every
+        padded slot's own unchanged state — no duplicate-index races."""
+        k = len(evs)
+        kp = 1 << max(0, (k - 1)).bit_length() if k > 1 else 1
+        if k == c:
+            kp = k   # every lane has an event: nothing free to pad with
+        lanes = np.fromiter((l for l, _ in evs), np.int32, k)
+        vals = np.fromiter((v for _, v in evs), np.float32, k)
+        if kp > k:
+            in_round = set(lanes.tolist())
+            pad_lane = next(i for i in range(c) if i not in in_round)
+            lanes = np.concatenate(
+                [lanes, np.full((kp - k,), pad_lane, np.int32)])
+            vals = np.concatenate(
+                [vals, np.full((kp - k,), np.nan, np.float32)])
+        mask = np.zeros((kp,), np.int32)
+        mask[:k] = 1
+        lanes_j = jnp.asarray(lanes)
+        m, step, sign, ticks = _slo_round_sparse(
+            self._m[lanes_j], self._step[lanes_j], self._sign[lanes_j],
+            self._ticks[lanes_j], self._q[lanes_j], lanes_j,
+            jnp.asarray(vals), jnp.asarray(mask), seed)
+        self._m = self._m.at[lanes_j].set(m)
+        self._step = self._step.at[lanes_j].set(step)
+        self._sign = self._sign.at[lanes_j].set(sign)
+        self._ticks = self._ticks.at[lanes_j].set(ticks)
+
+    # ---------------------------------------------------------------- reads
+    def estimate(self, route: str, metric: str) -> float:
+        """Raises KeyError for an unregistered route (reads never register —
+        a dashboard typo must not allocate lanes or enter checkpoints)."""
+        self.flush()
+        lane = self._routes[route] * self.n_metrics + self._metric_idx[metric]
+        return float(self._m[lane])
+
+    def summary(self, route: str) -> Dict[str, float]:
+        self.flush()
+        idx = self._routes[route]
+        base = idx * self.n_metrics
+        m = np.asarray(self._m[base:base + self.n_metrics])
+        return {name: float(m[i]) for i, (name, _) in enumerate(self.metrics)}
+
+    def summaries(self) -> Dict[str, Dict[str, float]]:
+        self.flush()
+        out = {}
+        m = np.asarray(self._m)
+        for route, idx in self._routes.items():
+            base = idx * self.n_metrics
+            out[route] = {name: float(m[base + i])
+                          for i, (name, _) in enumerate(self.metrics)}
+        return out
+
+    def memory_words(self) -> int:
+        """Persistent SKETCH words per (route × metric) lane — 2, like the
+        paper (checkpoints add one int32 RNG-tick word per lane on top)."""
+        return 2
+
+    def state_words(self) -> int:
+        """Total persistent sketch words for the registered routes
+        (excluding the per-lane RNG tick word)."""
+        return self.memory_words() * self.num_lanes
+
+    # -------------------------------------------------------- serialization
+    def checkpoint_state(self) -> dict:
+        """Pytree for train.checkpoint.save_checkpoint: the Frugal2UState
+        node serializes as 2 words/lane (format-2 packing) plus the per-lane
+        RNG tick word; the route table rides as a uint8 JSON blob leaf so
+        the whole fleet is one pytree. The per-lane quantiles are NOT stored
+        — they are a pure tiling of the metrics list (already in the blob)
+        and are rebuilt on restore."""
+        self.flush()
+        blob = np.frombuffer(
+            json.dumps({"routes": self.routes(),
+                        "metrics": list(self.metrics),
+                        "seed": self.seed}).encode("utf-8"), np.uint8).copy()
+        return {
+            "sketch": Frugal2UState(m=self._m, step=self._step,
+                                    sign=self._sign),
+            "ticks": self._ticks,
+            "meta_blob": blob,
+        }
+
+    @classmethod
+    def from_checkpoint_state(cls, state: dict) -> "SLOFleet":
+        meta = json.loads(bytes(np.asarray(state["meta_blob"],
+                                           np.uint8)).decode("utf-8"))
+        fleet = cls(metrics=[tuple(mq) for mq in meta["metrics"]],
+                    seed=int(meta["seed"]), capacity=1)
+        sk = state["sketch"]
+        fleet._m = jnp.asarray(sk.m, jnp.float32)
+        fleet._step = jnp.asarray(sk.step, jnp.float32)
+        fleet._sign = jnp.asarray(sk.sign, jnp.float32)
+        fleet._ticks = jnp.asarray(state["ticks"], jnp.int32)
+        fleet._cap_routes = fleet._m.shape[0] // fleet.n_metrics
+        fleet._q = jnp.asarray(fleet._tile_q(fleet._cap_routes))
+        fleet._routes = {r: i for i, r in enumerate(meta["routes"])}
+        return fleet
+
+    def checkpoint_template(self) -> dict:
+        """Structure-only `like` tree for restore_checkpoint: abstract
+        leaves, no flush, no serialization — restore only reads structure
+        and dtypes (stored shapes win), so a template from ANY fleet with
+        the same metrics restores any capacity."""
+        c = self._cap_routes * self.n_metrics
+        f32 = jax.ShapeDtypeStruct((c,), jnp.float32)
+        return {
+            "sketch": Frugal2UState(m=f32, step=f32, sign=f32),
+            "ticks": jax.ShapeDtypeStruct((c,), jnp.int32),
+            "meta_blob": jax.ShapeDtypeStruct((0,), jnp.uint8),
+        }

@@ -1,0 +1,323 @@
+"""Sharded group fleet (parallel/group_sharding): the spec is bit-exactness.
+
+PR 1's counter RNG keys uniforms on the ABSOLUTE (seed, tick, group) triple,
+so a fleet sharded over any mesh must reproduce the single-device trajectory
+bit-for-bit — any mesh shape, any chunking, any ragged-G padding. The
+single-device tests here pin the g_offset plumbing (a shard is just a column
+slice ingested at its global offset); the multi-device tests run wherever
+>= 2 devices exist (the multi-device CI job forces 8 host devices via
+XLA_FLAGS) plus a subprocess proof that runs everywhere.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import GroupedQuantileSketch, ingest_array, ingest_stream
+from repro.parallel import ShardedGroupFleet, group_mesh
+from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+
+# Only the property tests need hypothesis; a missing dev dep must not kill
+# collection under -x.
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+N_DEV = len(jax.devices())
+multidevice = pytest.mark.skipif(
+    N_DEV < 2,
+    reason="needs >= 2 devices — run under "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+           "(the multi-device CI job does)")
+
+
+def _items(t, g, seed=0, domain=800):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, domain, (t, g)).astype(np.float32)
+
+
+# --------------------------------------------------- g_offset core invariant
+@pytest.mark.parametrize("algo", ["1u", "2u"])
+def test_g_offset_column_slices_reproduce_full_run(algo):
+    """A shard IS a column slice ingested at its global offset: ingesting
+    columns [a:b] with g_offset=a must equal the slice of the full run."""
+    t, g = 300, 29
+    items = _items(t, g, seed=1)
+    key = jax.random.PRNGKey(3)
+    full = GroupedQuantileSketch.create(g, quantile=0.7, algo=algo) \
+        .process(jnp.asarray(items), key)
+    for a, b in ((0, 7), (7, 20), (20, 29)):
+        part = GroupedQuantileSketch.create(b - a, quantile=0.7, algo=algo)
+        part = ingest_array(part, items[:, a:b], key, chunk_t=64, g_offset=a)
+        np.testing.assert_array_equal(np.asarray(full.m[a:b]),
+                                      np.asarray(part.m))
+        if algo == "2u":
+            np.testing.assert_array_equal(np.asarray(full.step[a:b]),
+                                          np.asarray(part.step))
+            np.testing.assert_array_equal(np.asarray(full.sign[a:b]),
+                                          np.asarray(part.sign))
+
+
+def test_g_offset_stream_matches_array():
+    t, g = 257, 11
+    items = _items(t, g, seed=2)
+    key = jax.random.PRNGKey(8)
+    sk = GroupedQuantileSketch.create(g, quantile=0.25, algo="2u")
+    a = ingest_array(sk, items, key, chunk_t=100, g_offset=5)
+    b = ingest_stream(sk, [items[:40], items[40:]], key, chunk_t=100,
+                      g_offset=5)
+    np.testing.assert_array_equal(np.asarray(a.m), np.asarray(b.m))
+    np.testing.assert_array_equal(np.asarray(a.step), np.asarray(b.step))
+
+
+# ------------------------------------------------------------ 1-device mesh
+@pytest.mark.parametrize("algo", ["1u", "2u"])
+def test_one_device_fleet_bit_identical(algo):
+    t, g = 500, 37
+    items = _items(t, g, seed=3)
+    key = jax.random.PRNGKey(9)
+    base = GroupedQuantileSketch.create(g, quantile=0.9, algo=algo) \
+        .process(jnp.asarray(items), key)
+    fleet = ShardedGroupFleet.create(g, quantile=0.9, algo=algo,
+                                     mesh=group_mesh(1))
+    fa = fleet.ingest_array(items, key, chunk_t=128)
+    np.testing.assert_array_equal(np.asarray(base.m), fa.estimate())
+    fs = fleet.ingest_stream([items[:123], items[123:]], key, chunk_t=99)
+    np.testing.assert_array_equal(np.asarray(base.m), fs.estimate())
+    if algo == "2u":
+        un = fa.unshard()
+        np.testing.assert_array_equal(np.asarray(base.step),
+                                      np.asarray(un.step))
+        np.testing.assert_array_equal(np.asarray(base.sign),
+                                      np.asarray(un.sign))
+
+
+def test_fleet_packed_checkpoint_roundtrip(tmp_path):
+    g = 48
+    items = _items(200, g, seed=4)
+    key = jax.random.PRNGKey(1)
+    fleet = ShardedGroupFleet.create(g, quantile=0.5, algo="2u",
+                                     mesh=group_mesh(1))
+    fleet = fleet.ingest_array(items, key, chunk_t=64)
+    save_checkpoint(str(tmp_path), 3, fleet.packed())
+    like = ShardedGroupFleet.create(g, quantile=0.5, algo="2u",
+                                    mesh=group_mesh(1)).packed()
+    restored, step = restore_checkpoint(str(tmp_path), like=like)
+    f2 = ShardedGroupFleet.from_packed(restored, mesh=group_mesh(1))
+    np.testing.assert_array_equal(fleet.estimate(), f2.estimate())
+    # trajectories continue identically after restore
+    more = _items(100, g, seed=5)
+    k2 = jax.random.PRNGKey(2)
+    np.testing.assert_array_equal(
+        fleet.ingest_array(more, k2, chunk_t=64).estimate(),
+        f2.ingest_array(more, k2, chunk_t=64).estimate())
+
+
+def test_t_offset_continuation_matches_one_shot():
+    """Continuing a stream across calls with a running t_offset must equal
+    one uninterrupted ingest — on the fleet AND the unsharded stream path
+    (without it, a same-seed second call would replay the first call's
+    uniforms)."""
+    t, g = 400, 13
+    items = _items(t, g, seed=9)
+    key = jax.random.PRNGKey(6)
+    base = GroupedQuantileSketch.create(g, quantile=0.5, algo="2u") \
+        .process(jnp.asarray(items), key)
+
+    fleet = ShardedGroupFleet.create(g, quantile=0.5, algo="2u",
+                                     mesh=group_mesh(1))
+    fleet = fleet.ingest_array(items[:150], key, chunk_t=64)
+    fleet = fleet.ingest_array(items[150:], key, chunk_t=64, t_offset=150)
+    np.testing.assert_array_equal(np.asarray(base.m), fleet.estimate())
+
+    fleet2 = ShardedGroupFleet.create(g, quantile=0.5, algo="2u",
+                                      mesh=group_mesh(1))
+    fleet2 = fleet2.ingest_stream([items[:70]], key, chunk_t=64)
+    fleet2 = fleet2.ingest_stream([items[70:]], key, chunk_t=64, t_offset=70)
+    np.testing.assert_array_equal(np.asarray(base.m), fleet2.estimate())
+
+    sk = GroupedQuantileSketch.create(g, quantile=0.5, algo="2u")
+    sk = ingest_stream(sk, [items[:70]], key, chunk_t=64)
+    sk = ingest_stream(sk, [items[70:]], key, chunk_t=64, t_offset=70)
+    np.testing.assert_array_equal(np.asarray(base.m), np.asarray(sk.m))
+
+
+def test_fleet_accepts_preplaced_padded_items():
+    """_pad_items is idempotent: benchmark-style pre-placed [T, Gp] arrays
+    re-ingest without re-validation errors, bit-identically — on a >= 2-way
+    mesh (the multi-device CI job) this exercises ragged G with Gp > G."""
+    t, g = 200, 13
+    items = _items(t, g, seed=10)
+    key = jax.random.PRNGKey(7)
+    fleet = ShardedGroupFleet.create(g, quantile=0.5, algo="2u",
+                                     mesh=group_mesh(2 if N_DEV >= 2 else 1))
+    placed = fleet._pad_items(items)
+    a = fleet.ingest_array(items, key, chunk_t=64)
+    b = fleet.ingest_array(placed, key, chunk_t=64)
+    np.testing.assert_array_equal(a.estimate(), b.estimate())
+
+
+def test_fleet_rejects_bad_item_shapes():
+    fleet = ShardedGroupFleet.create(8, mesh=group_mesh(1))
+    key = jax.random.PRNGKey(0)
+    with pytest.raises(ValueError):
+        fleet.ingest_array(np.zeros((10, 5), np.float32), key)
+    with pytest.raises(ValueError):
+        fleet.ingest_array(np.zeros((10, 8), np.float32), key, chunk_t=0)
+
+
+# ------------------------------------------------------------- multi-device
+def _mesh_sizes():
+    return [n for n in (2, 4, 8) if n <= N_DEV]
+
+
+@multidevice
+@pytest.mark.parametrize("algo", ["1u", "2u"])
+def test_sharded_bit_identical_across_mesh_sizes(algo):
+    """The acceptance bar: 2/4/8-way sharded ingest == single-device fused
+    path, bit-for-bit, for 1U and 2U — including ragged G (37 groups pad
+    differently for every mesh size)."""
+    t, g = 700, 37
+    items = _items(t, g, seed=6)
+    key = jax.random.PRNGKey(4)
+    base = GroupedQuantileSketch.create(g, quantile=0.5, algo=algo) \
+        .process(jnp.asarray(items), key)
+    for n in _mesh_sizes():
+        fleet = ShardedGroupFleet.create(g, quantile=0.5, algo=algo,
+                                         mesh=group_mesh(n))
+        fa = fleet.ingest_array(items, key, chunk_t=256)
+        np.testing.assert_array_equal(np.asarray(base.m), fa.estimate(),
+                                      err_msg=f"algo={algo} mesh={n}")
+        fs = fleet.ingest_stream([items[:50], items[50:400], items[400:]],
+                                 key, chunk_t=128)
+        np.testing.assert_array_equal(np.asarray(base.m), fs.estimate(),
+                                      err_msg=f"algo={algo} stream mesh={n}")
+        if algo == "2u":
+            un = fa.unshard()
+            np.testing.assert_array_equal(np.asarray(base.step),
+                                          np.asarray(un.step))
+
+
+@multidevice
+def test_slo_fleet_sharded_restore(tmp_path):
+    """SLOFleet checkpoints re-place onto a group mesh via restore's
+    shardings path (the Frugal2UState node maps through the packed-sharding
+    translation in train/checkpoint.py)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.frugal import Frugal2UState
+    from repro.serve import SLOFleet
+
+    fleet = SLOFleet(seed=3)   # capacity 64 x 3 lanes = 192, divides 2/4/8
+    rng = np.random.default_rng(1)
+    for i in range(200):
+        fleet.observe(f"r{i % 5}", "tok_q50_ms", float(rng.lognormal(3, .4)))
+    save_checkpoint(str(tmp_path), 1, fleet.checkpoint_state())
+    mesh = group_mesh(N_DEV)
+    sh = NamedSharding(mesh, jax.sharding.PartitionSpec("groups"))
+    shardings = {"sketch": Frugal2UState(m=sh, step=sh, sign=sh),
+                 "ticks": sh, "meta_blob": NamedSharding(mesh, P())}
+    state, _ = restore_checkpoint(str(tmp_path),
+                                  like=fleet.checkpoint_template(),
+                                  shardings=shardings)
+    restored = SLOFleet.from_checkpoint_state(state)
+    assert restored.summaries() == fleet.summaries()
+    for f in (fleet, restored):
+        f.observe("r1", "tok_q50_ms", 25.0)
+    assert fleet.estimate("r1", "tok_q50_ms") \
+        == restored.estimate("r1", "tok_q50_ms")
+
+
+@multidevice
+def test_sharded_restore_onto_mesh():
+    """Elastic path: a fleet saved from one mesh restores onto another via
+    state_shardings (G divisible) and from_packed (any G)."""
+    g = 64 * N_DEV
+    items = _items(150, g, seed=7)
+    key = jax.random.PRNGKey(5)
+    fleet = ShardedGroupFleet.create(g, mesh=group_mesh(N_DEV))
+    fleet = fleet.ingest_array(items, key, chunk_t=64)
+    sh = fleet.state_shardings()
+    assert sh.m.spec == jax.sharding.PartitionSpec("groups")
+    small = ShardedGroupFleet.from_packed(fleet.packed(), mesh=group_mesh(2))
+    np.testing.assert_array_equal(fleet.estimate(), small.estimate())
+
+
+if HAS_HYPOTHESIS:
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        g=st.integers(1, 23),
+        t=st.integers(1, 120),
+        chunk_t=st.integers(1, 64),
+        n_idx=st.integers(0, 3),
+        cut=st.integers(0, 119),
+        algo=st.sampled_from(["1u", "2u"]),
+    )
+    def test_property_any_mesh_and_chunking_is_bit_exact(
+            g, t, chunk_t, n_idx, cut, algo):
+        """Hypothesis sweep of the whole contract: ANY mesh size (from the
+        devices available) × ANY chunk_t × ANY producer slicing × ragged G
+        reproduces the unsharded one-shot trajectory bit-for-bit."""
+        n = [d for d in (1, 2, 4, 8) if d <= N_DEV][
+            n_idx % len([d for d in (1, 2, 4, 8) if d <= N_DEV])]
+        items = _items(t, g, seed=g * 131 + t)
+        key = jax.random.PRNGKey(g + 7 * t)
+        base = GroupedQuantileSketch.create(g, quantile=0.5, algo=algo) \
+            .process(jnp.asarray(items), key)
+        fleet = ShardedGroupFleet.create(g, quantile=0.5, algo=algo,
+                                         mesh=group_mesh(n))
+        cut = min(cut, t)
+        pieces = [items[:cut], items[cut:]] if 0 < cut < t else [items]
+        fs = fleet.ingest_stream(pieces, key, chunk_t=chunk_t)
+        np.testing.assert_array_equal(np.asarray(base.m), fs.estimate())
+        fa = fleet.ingest_array(items, key, chunk_t=chunk_t)
+        np.testing.assert_array_equal(np.asarray(base.m), fa.estimate())
+
+else:
+
+    def test_property_tests_need_hypothesis():
+        pytest.skip("hypothesis not installed — property tests not collected "
+                    "(pip install -r requirements-dev.txt)")
+
+
+# ------------------------------------------------- subprocess proof (slow)
+_SUBPROC_SCRIPT = r"""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import GroupedQuantileSketch
+from repro.parallel import ShardedGroupFleet, group_mesh
+assert len(jax.devices()) == 8, jax.devices()
+items = np.random.default_rng(0).integers(0, 500, (300, 21)).astype(np.float32)
+key = jax.random.PRNGKey(2)
+base = GroupedQuantileSketch.create(21, quantile=0.9, algo="2u").process(
+    jnp.asarray(items), key)
+fleet = ShardedGroupFleet.create(21, quantile=0.9, algo="2u",
+                                 mesh=group_mesh(8))
+out = fleet.ingest_array(items, key, chunk_t=64)
+np.testing.assert_array_equal(np.asarray(base.m), out.estimate())
+un = out.unshard()
+np.testing.assert_array_equal(np.asarray(base.step), np.asarray(un.step))
+print("SHARDED-OK")
+"""
+
+
+@pytest.mark.slow
+def test_eight_device_subprocess_bit_exact():
+    """Runs the 8-way sharding proof in a child process so it works even
+    when this pytest process initialized jax with one device."""
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                        + env.get("XLA_FLAGS", "")).strip()
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run([sys.executable, "-c", _SUBPROC_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stderr[-2000:]
+    assert "SHARDED-OK" in res.stdout

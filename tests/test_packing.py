@@ -1,0 +1,144 @@
+"""core.packing edge domains: the paper's "two words + one bit" claim must
+hold (or degrade safely) over the FULL float32 state space, not just the
+values a healthy run produces.
+
+Domains pinned here (see packing.py's encoding doc):
+  * in-domain |step| in {0} ∪ [2^-63, 2^32): bit-exact round-trip, both
+    directions, both step signs;
+  * |step| >= 2^32 (incl ±inf): saturates to the largest in-domain float,
+    step sign AND direction preserved;
+  * |step| < 2^-63 (subnormals, ±0): flushes to zero, direction preserved;
+  * NaN step: flushes to zero (a NaN's exponent would alias into the
+    negative-direction range and corrupt the decoded sign);
+  * NaN / ±inf ESTIMATES: `m` rides raw float32 next to the packed word —
+    PackedSketchState round-trips them bit-for-bit.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.packing import (
+    _MAX_STEP,
+    pack_step_sign,
+    unpack_step_sign,
+)
+from repro.core.sketch import GroupedQuantileSketch
+
+# Only the property tests need hypothesis; a missing dev dep must not kill
+# collection under -x.
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+
+def _roundtrip(step, sign):
+    s2, g2 = unpack_step_sign(pack_step_sign(jnp.float32(step),
+                                             jnp.float32(sign)))
+    return float(s2), float(g2)
+
+
+def _expected(step: float, sign: float):
+    """Reference semantics of the packed domain (mirrors the docstring)."""
+    direction = -1.0 if sign < 0 else 1.0
+    if np.isnan(step):
+        return 0.0, direction
+    clipped = float(np.clip(np.float32(step), -_MAX_STEP, _MAX_STEP))
+    if abs(clipped) < 2.0 ** -63:
+        return 0.0, direction
+    return clipped, direction
+
+
+@pytest.mark.parametrize("sign", [1.0, -1.0])
+@pytest.mark.parametrize("step", [
+    0.0, -0.0, 1.0, -1.0, 2.0 ** -63, -(2.0 ** -63), 0.75, 1e6,
+    float(_MAX_STEP), -float(_MAX_STEP), 3.5, 1234567.0,
+])
+def test_in_domain_bit_exact(step, sign):
+    s2, g2 = _roundtrip(step, sign)
+    exp_s, exp_g = _expected(step, sign)
+    assert s2 == exp_s and g2 == exp_g, (step, sign, s2, g2)
+
+
+@pytest.mark.parametrize("sign", [1.0, -1.0])
+@pytest.mark.parametrize("step", [
+    2.0 ** 32, -(2.0 ** 32), 1e38, float("inf"), float("-inf"),
+])
+def test_saturation_keeps_direction(step, sign):
+    s2, g2 = _roundtrip(step, sign)
+    assert abs(s2) == float(_MAX_STEP)
+    assert np.sign(s2) == np.sign(step)
+    assert g2 == sign
+
+
+@pytest.mark.parametrize("sign", [1.0, -1.0])
+@pytest.mark.parametrize("step", [2.0 ** -64, -(2.0 ** -64), 1e-40, 5e-324])
+def test_flush_to_zero_keeps_direction(step, sign):
+    s2, g2 = _roundtrip(step, sign)
+    assert s2 == 0.0
+    assert g2 == sign
+
+
+@pytest.mark.parametrize("sign", [1.0, -1.0])
+def test_nan_step_flushes_safely(sign):
+    s2, g2 = _roundtrip(float("nan"), sign)
+    assert s2 == 0.0
+    assert g2 == sign
+
+
+def test_nan_inf_estimates_roundtrip_bitwise():
+    """m is raw f32 next to the packed word: non-finite estimates survive
+    packed()/from_packed() bit-for-bit (frugal m CAN leave the finite range
+    only via non-finite stream items, but serialization must not care)."""
+    m = jnp.asarray([np.nan, np.inf, -np.inf, -0.0, 1.5], jnp.float32)
+    sk = GroupedQuantileSketch(
+        m=m, step=jnp.ones_like(m), sign=-jnp.ones_like(m),
+        quantile=jnp.float32(0.5), algo="2u")
+    back = GroupedQuantileSketch.from_packed(sk.packed())
+    np.testing.assert_array_equal(
+        np.asarray(m).view(np.int32), np.asarray(back.m).view(np.int32))
+    np.testing.assert_array_equal(np.asarray(back.sign), np.asarray(sk.sign))
+
+
+if HAS_HYPOTHESIS:
+
+    @settings(max_examples=300, deadline=None)
+    @given(bits=st.integers(-2 ** 31, 2 ** 31 - 1),
+           sign=st.sampled_from([1.0, -1.0]))
+    def test_property_full_int32_bit_space(bits, sign):
+        """Round-trip over EVERY float32 bit pattern as a step (covers the
+        full int32 range incl. subnormals, both zeros, inf, NaN payloads)."""
+        step = float(np.int32(bits).view(np.float32))
+        s2, g2 = _roundtrip(step, sign)
+        exp_s, exp_g = _expected(step, sign)
+        assert (s2, g2) == (exp_s, exp_g), (hex(bits & 0xFFFFFFFF), step, sign)
+
+    @settings(max_examples=200, deadline=None)
+    @given(step=st.floats(width=32, allow_nan=True, allow_infinity=True),
+           sign=st.sampled_from([1.0, -1.0]))
+    def test_property_float_space_saturate_or_exact(step, sign):
+        s2, g2 = _roundtrip(step, sign)
+        exp_s, exp_g = _expected(step, sign)
+        assert (s2, g2) == (exp_s, exp_g)
+
+    @settings(max_examples=100, deadline=None)
+    @given(exp=st.integers(-63, 31), mant=st.integers(0, 2 ** 23 - 1),
+           neg=st.booleans(), sign=st.sampled_from([1.0, -1.0]))
+    def test_property_in_domain_exponent_sweep_bit_exact(exp, mant, neg, sign):
+        """Dense coverage of the exact-round-trip domain [2^-63, 2^32) via
+        (exponent, mantissa) construction — every value must survive
+        bit-for-bit including step's own sign."""
+        step = np.float32((1.0 + mant * 2.0 ** -23) * 2.0 ** exp)
+        if neg:
+            step = -step
+        s2, g2 = _roundtrip(float(step), sign)
+        assert np.float32(s2).view(np.int32) == step.view(np.int32)
+        assert g2 == sign
+
+else:
+
+    def test_property_tests_need_hypothesis():
+        pytest.skip("hypothesis not installed — property tests not collected "
+                    "(pip install -r requirements-dev.txt)")

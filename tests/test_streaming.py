@@ -1,6 +1,9 @@
 """Chunked streaming ingest (core.streaming): determinism, chunk invariance,
 and equivalence with one-shot processing — the contracts that make the fused
 path safe to deploy against unbounded streams."""
+import os
+import time
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -112,6 +115,14 @@ def test_ingest_stream_survives_int32_tick_wraparound():
         seed=1, t_offset=crng.wrap_i32(2**31 + 3))
     assert m.shape == (4,)
     assert bool(jnp.all(jnp.isfinite(m)))
+    # both continuation entry points wrap a past-2^31 t_offset identically
+    # instead of raising OverflowError at the int32 conversion
+    sk = GroupedQuantileSketch.create(4, quantile=0.5, algo="2u")
+    items = np.ones((16, 4), np.float32)
+    key = jax.random.PRNGKey(0)
+    a = ingest_array(sk, items, key, chunk_t=8, t_offset=2**31 + 3)
+    b = ingest_stream(sk, [items], key, chunk_t=8, t_offset=2**31 + 3)
+    np.testing.assert_array_equal(np.asarray(a.m), np.asarray(b.m))
 
 
 def test_ingest_stream_rejects_bad_shapes():
@@ -123,6 +134,41 @@ def test_ingest_stream_rejects_bad_shapes():
         ingest_stream(sk, [np.zeros(10, np.float32)], key)  # 1-D but G=4
     with pytest.raises(ValueError):
         ingest_stream(sk, [np.zeros((10, 4), np.float32)], key, chunk_t=0)
+
+
+@pytest.mark.slow
+@pytest.mark.skipif(not os.environ.get("RUN_SOAK"),
+                    reason="long-stream soak (~10^8 items); opt in with "
+                           "RUN_SOAK=1 (see EXPERIMENTS.md)")
+def test_long_stream_soak_1e8_items():
+    """The EXPERIMENTS.md long-stream-soak owner: stream >= 10^8 items
+    (ticks × groups) through ingest_stream from a generator — no [T, G]
+    block ever resident, bounded memory, sane walltime, converged estimates.
+    SOAK_ITEMS overrides the default volume for bigger runs."""
+    total = int(float(os.environ.get("SOAK_ITEMS", 1e8)))
+    g, per = 4096, 4096
+    n_chunks = max(1, -(-total // (g * per)))   # ceil: stream >= `total`
+    key = jax.random.PRNGKey(0)
+    master = np.random.default_rng(42)
+
+    def producer():
+        for _ in range(n_chunks):
+            yield master.lognormal(5.0, 1.0, (per, g)).astype(np.float32)
+
+    sk = GroupedQuantileSketch.create(g, quantile=0.5, algo="2u", init=100.0)
+    t0 = time.perf_counter()
+    sk = ingest_stream(sk, producer(), key, chunk_t=4096)
+    wall = time.perf_counter() - t0
+    items = n_chunks * per * g
+    gb = items * 4 / 1e9
+    print(f"\nsoak: {items:.2e} items ({gb:.1f} GB) in {wall:.1f}s "
+          f"-> {items / wall / 1e6:.1f}M items/s, {gb / wall:.2f} GB/s")
+    m = np.asarray(sk.m)
+    # lognormal(5, 1) true median = e^5 ~ 148.4; after ~24k ticks every
+    # group must sit well inside the Thm-2 band around it
+    assert np.all(np.isfinite(m))
+    assert abs(np.median(m) - np.exp(5.0)) < 30.0
+    assert np.all(np.abs(m - np.exp(5.0)) < 80.0)
 
 
 def test_ingest_array_matches_stream_with_padding_tail():
