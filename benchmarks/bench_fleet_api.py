@@ -1,0 +1,155 @@
+"""E10 (ours) — fleet-facade overhead + multi-quantile lane scaling.
+
+The repro.api.QuantileFleet facade must be free: its `ingest` is cursor
+bookkeeping around the same fused kernels the legacy hand-threaded path
+dispatches, so per-item cost may not regress. Measured here at G = 4096:
+
+  * direct  — the pre-facade pattern: a Python loop over chunk_t slabs
+              calling kernels.ops.frugal2u_update_auto_fused with
+              hand-threaded (seed, t_offset),
+  * facade  — QuantileFleet.ingest of the same items/chunk_t.
+
+Gate: facade per-item cost ≤ 1.05× direct (recorded as `gate_met`; loud
+warning, not a hard assert — wall-clock on shared CI is too noisy, inspect
+the JSON on an unloaded box). The run also asserts the two trajectories
+are BIT-IDENTICAL — the speed comparison is meaningless if the facade
+computed something else.
+
+Second axis: Q = 1 vs Q = 4 quantile lanes per group (the multi-quantile
+lane plane). Lane-items/s should scale sub-linearly in Q on the wall clock
+(the [T, G] host block is reused for all lanes; only device work grows),
+recorded as `q4_vs_q1_lane_throughput_ratio`.
+
+Results land in artifacts/bench/e10_fleet_api.json AND repo-root
+BENCH_fleet_api.json for the PR-over-PR trajectory.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.api import FleetSpec, QuantileFleet
+from repro.core import GroupedQuantileSketch
+from repro.core import rng as crng
+from repro.kernels import frugal2u_update_auto_fused
+from .common import save_result, csv_line
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(_ROOT, "BENCH_fleet_api.json")
+
+# Maximum tolerated facade/direct per-item time ratio.
+GATE_MAX_OVERHEAD = 1.05
+
+
+def _direct_ingest(items, g, seed, chunk_t):
+    """The legacy pattern: hand-thread (seed, t_offset) through per-chunk
+    fused-kernel calls."""
+    sk = GroupedQuantileSketch.create(g, quantile=0.5, algo="2u")
+    m, step, sign = sk.m, sk.step, sk.sign
+    t = items.shape[0]
+    for t0 in range(0, t, chunk_t):
+        m, step, sign = frugal2u_update_auto_fused(
+            items[t0:t0 + chunk_t], m, step, sign, sk.quantile,
+            seed=seed, t_offset=t0)
+    return m
+
+
+def _median_time(fn, reps):
+    jax.block_until_ready(fn())               # warm-up / compile, drained
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def run(quick: bool = True, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    g = 4096
+    t_items = 2_000 if quick else 10_000
+    chunk_t = 512
+    reps = 5 if quick else 9
+    items = jnp.asarray(rng.integers(0, 1000, (t_items, g)), jnp.float32)
+    counter_seed = 17
+
+    spec = FleetSpec(num_groups=g, quantiles=(0.5,), backend="fused",
+                     chunk_t=chunk_t)
+    fleet0 = QuantileFleet.create(spec, seed=counter_seed)
+
+    # steady-state ingest: creation cost is one-time and excluded on both
+    # sides (the cursor advancing between reps changes t_offset VALUES only,
+    # not shapes, so the jitted path stays cached — as in production)
+    state = {"fleet": fleet0}
+
+    def facade():
+        state["fleet"] = state["fleet"].ingest(items)
+        return state["fleet"].state.m
+
+    def direct():
+        return _direct_ingest(items, g, counter_seed, chunk_t)
+
+    # correctness first: the comparison is void if trajectories diverge
+    np.testing.assert_array_equal(
+        np.asarray(QuantileFleet.create(spec, seed=counter_seed)
+                   .ingest(items).state.m),
+        np.asarray(direct()))
+
+    t_facade = _median_time(facade, reps)
+    t_direct = _median_time(direct, reps)
+    overhead = t_facade / t_direct
+    gate_met = overhead <= GATE_MAX_OVERHEAD
+
+    us_facade = t_facade / (t_items * g) * 1e6
+    us_direct = t_direct / (t_items * g) * 1e6
+
+    # ---- Q=1 vs Q=4 lane scaling ------------------------------------------
+    spec_q4 = FleetSpec(num_groups=g, quantiles=(0.25, 0.5, 0.9, 0.99),
+                        backend="fused", chunk_t=chunk_t)
+    state_q4 = {"fleet": QuantileFleet.create(spec_q4, seed=counter_seed)}
+
+    def facade_q4():
+        state_q4["fleet"] = state_q4["fleet"].ingest(items)
+        return state_q4["fleet"].state.m
+
+    t_q4 = _median_time(facade_q4, max(3, reps - 2))
+    # lane-items processed per second: Q=4 does 4x the lane work per item
+    q1_lane_rate = t_items * g / t_facade
+    q4_lane_rate = t_items * g * 4 / t_q4
+    q_ratio = q4_lane_rate / q1_lane_rate
+
+    payload = {
+        "g": g, "t_items": t_items, "chunk_t": chunk_t, "reps": reps,
+        "facade_s": t_facade, "direct_s": t_direct,
+        "facade_us_per_item": us_facade, "direct_us_per_item": us_direct,
+        "facade_overhead_ratio": overhead,
+        "gate_max_overhead": GATE_MAX_OVERHEAD, "gate_met": bool(gate_met),
+        "q1_s": t_facade, "q4_s": t_q4,
+        "q1_lane_items_per_s": q1_lane_rate,
+        "q4_lane_items_per_s": q4_lane_rate,
+        "q4_vs_q1_lane_throughput_ratio": q_ratio,
+        "bit_exact_vs_direct": True,
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=1)
+    save_result("e10_fleet_api", payload)
+
+    if not gate_met:
+        print(f"WARNING: facade overhead {overhead:.3f}x exceeds gate "
+              f"{GATE_MAX_OVERHEAD}x (see {BENCH_JSON}; re-check on an "
+              "unloaded machine)", flush=True)
+
+    lines = [
+        csv_line("fleet_api_direct", us_direct, f"g={g};chunk_t={chunk_t}"),
+        csv_line("fleet_api_facade", us_facade,
+                 f"overhead={overhead:.3f}x;gate_met={gate_met}"),
+        csv_line("fleet_api_q4_lanes", t_q4 / (t_items * g * 4) * 1e6,
+                 f"q4_vs_q1_lane_rate={q_ratio:.2f}x"),
+    ]
+    return lines, payload

@@ -41,7 +41,7 @@ def baseline_run(stream: np.ndarray, q: float, algo: str, seed: int = 0):
     else:
         raise ValueError(algo)
     a.extend(stream)
-    return a.query(q), a.memory_words
+    return a.query(q), a.memory_words()
 
 
 ALGOS = ("frugal1u", "frugal2u", "gk20", "qdigest20", "selection", "reservoir20")

@@ -22,7 +22,7 @@ def main() -> None:
         bench_static_cauchy, bench_dynamic_cauchy, bench_groupby_tcp,
         bench_combined_stream, bench_groupby_twitter,
         bench_convergence_theory, bench_kernel_throughput,
-        bench_sharded_fleet)
+        bench_sharded_fleet, bench_fleet_api)
 
     suite = {
         "e1": ("static_cauchy (paper Fig 4)", bench_static_cauchy.run),
@@ -33,6 +33,7 @@ def main() -> None:
         "e6": ("theory Thm1/Thm2 (paper §4)", bench_convergence_theory.run),
         "e8": ("kernel_throughput (ours)", bench_kernel_throughput.run),
         "e9": ("sharded_fleet (ours)", bench_sharded_fleet.run),
+        "e10": ("fleet_api overhead + Q-lanes (ours)", bench_fleet_api.run),
     }
     only = set(args.only.split(",")) if args.only else None
 

@@ -1,6 +1,7 @@
 """The paper's headline application at scale: per-group quantiles for a
 massive GROUPBY (e.g. median flow size per source IP, §1) with 2 words per
-group — vectorized over the fleet, shardable over a pod mesh.
+group — one QuantileFleet, shardable over a pod mesh, no keys or offsets to
+thread (the fleet's StreamCursor advances across ingest calls).
 
     PYTHONPATH=src python examples/groupby_quantiles.py [--groups 200000]
 """
@@ -9,9 +10,8 @@ import time
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
-from repro.core import GroupedQuantileSketch
+from repro.api import FleetSpec, QuantileFleet
 from repro.data.streams import tcp_like_group_streams, pad_ragged
 from repro.core.reference import relative_mass_error
 
@@ -28,25 +28,21 @@ def main():
     # heterogeneous per-group distributions (per-IP flow sizes)
     mu = rng.uniform(5.5, 9.0, G).astype(np.float32)
 
-    sk = GroupedQuantileSketch.create(G, quantile=0.5, algo="2u")
-    key = jax.random.PRNGKey(0)
-
-    @jax.jit
-    def ingest(sk, items, key):
-        return sk.process(items, key)
+    fleet = QuantileFleet.create(
+        FleetSpec(num_groups=G, quantiles=(0.5,), algo="2u",
+                  backend="fused", chunk_t=256), seed=0)
 
     t0 = time.time()
     chunk = 250
     for start in range(0, T, chunk):
         items = rng.lognormal(mu[None, :], 1.0,
                               size=(chunk, G)).astype(np.float32)
-        key, sub = jax.random.split(key)
-        sk = ingest(sk, jnp.asarray(items), sub)
-    jax.block_until_ready(sk.m)
+        fleet = fleet.ingest(items)   # cursor continues the uniform stream
+    jax.block_until_ready(fleet.state.m)   # ingest dispatches async
     dt = time.time() - t0
 
     true_median = np.exp(mu)  # lognormal median
-    est = np.asarray(sk.m)
+    est = fleet.estimate(quantile=0.5)
     rel = np.abs(est / true_median - 1.0)
     print(f"groups={G}  ticks={T}  wall={dt:.1f}s  "
           f"({T * G / dt / 1e6:.1f}M items/s on CPU)")
@@ -55,14 +51,15 @@ def main():
     print(f"sketch state: {2 * G * 4 / 1e6:.1f} MB for {G} groups "
           f"(GK t=20 would need {60 * G * 4 / 1e6:.0f} MB)")
 
-    # ragged real-ish group streams too (NaN-padded)
+    # ragged real-ish group streams too (NaN items are bit-exact no-ops)
     streams = tcp_like_group_streams(num_sites=20, num_months=2,
                                      rng=np.random.default_rng(1))
     items = pad_ragged(streams)
-    sk2 = GroupedQuantileSketch.create(len(streams), quantile=0.5, algo="2u")
-    sk2 = sk2.process(jnp.asarray(items), jax.random.PRNGKey(1))
+    fleet2 = QuantileFleet.create(
+        FleetSpec(num_groups=len(streams), quantiles=(0.5,)), seed=1)
+    fleet2 = fleet2.ingest(items)
     errs = [relative_mass_error(float(m), sorted(s.tolist()), 0.5)
-            for m, s in zip(np.asarray(sk2.m), streams)]
+            for m, s in zip(fleet2.estimate(quantile=0.5), streams)]
     ok = np.mean([abs(e) <= 0.1 for e in errs])
     print(f"ragged TCP-like fleet: {ok:.0%} of {len(streams)} groups within "
           f"±0.1 mass error")

@@ -1,49 +1,67 @@
-"""Quickstart: frugal streaming quantiles in 30 lines.
+"""Quickstart: the one fleet API for frugal streaming quantiles.
+
+One FleetSpec + QuantileFleet drives everything the paper promises —
+any quantile, for each of a large number of groups, in one or two words
+of memory per (group, quantile) lane — with no seeds or stream offsets
+to hand-thread: the fleet's StreamCursor advances itself.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
-import jax
-import jax.numpy as jnp
 
-from repro.core import GroupedQuantileSketch
+from repro.api import FleetSpec, QuantileFleet
 
 rng = np.random.default_rng(0)
 
-# ---- one stream, one word of memory (paper Algorithm 2) -------------------
+# ---- a GROUPBY fleet: 10,000 streams × 3 quantile targets ------------------
+# Each (group, quantile) lane is an independent paper-Algorithm-3 sketch:
+# 2 words of state, uniforms counter-hashed on the fly (no random tensor is
+# ever allocated — DESIGN.md §4).
+G, T = 10_000, 3_000
+spec = FleetSpec(num_groups=G, quantiles=(0.5, 0.9, 0.99), algo="2u")
+fleet = QuantileFleet.create(spec, seed=0)
+
+scales = rng.uniform(3.0, 8.0, G)
+items = rng.lognormal(scales[None, :], 1.0, size=(T, G)).astype(np.float32)
+fleet = fleet.ingest(items)                       # [T, G] block, cursor -> T
+
+est = fleet.estimate()                            # [G, Q]
+true_q90 = np.quantile(items, 0.9, axis=0)
+rel = np.abs(fleet.estimate(quantile=0.9) / true_q90 - 1.0)
+print(f"{G} groups x {spec.num_quantiles} quantiles: estimate plane "
+      f"{est.shape}, median |rel err| at q90 = {np.median(rel):.2%}, "
+      f"total state = {fleet.memory_words() * fleet.num_lanes * 4 / 1024:.0f} "
+      f"KiB (a t=20 GK summary per lane would need "
+      f"{60 * fleet.num_lanes * 4 / 1024 / 1024:.1f} MiB)")
+
+# ---- unbounded streams: same API, chunked fused ingest ---------------------
+# ingest_stream drives the fused kernels chunk-by-chunk (O(chunk_t x G)
+# transient memory) and is bit-identical to the one-shot ingest above for
+# ANY chunking — the cursor keys every uniform on its absolute stream tick.
+fleet2 = QuantileFleet.create(spec, seed=0)
+fleet2 = fleet2.ingest_stream(items[i:i + 500] for i in range(0, T, 500))
+assert np.array_equal(fleet2.estimate(), fleet.estimate()), \
+    "chunked ingest must reproduce the one-shot trajectory bit-for-bit"
+print(f"ingest_stream over {T // 500} chunks: bit-identical to one-shot, "
+      f"cursor at t={int(fleet2.cursor.t_offset)}")
+
+# ---- checkpoint / bit-exact resume -----------------------------------------
+import tempfile
+
+with tempfile.TemporaryDirectory() as ckpt_dir:
+    half = QuantileFleet.create(spec, seed=0).ingest(items[:T // 2])
+    half.checkpoint(ckpt_dir, step=1)             # format-3, 2 words/lane
+    resumed = QuantileFleet.restore(ckpt_dir, spec).ingest(items[T // 2:])
+assert np.array_equal(resumed.estimate(), fleet.estimate()), \
+    "a restored fleet continues its exact trajectory"
+print("checkpoint -> restore -> continue: bit-identical to the "
+      "uninterrupted run")
+
+# ---- the paper's scalar baseline, for contrast -----------------------------
 from repro.core.reference import frugal1u_scalar, relative_mass_error
 
 stream = rng.lognormal(5.0, 1.0, size=50_000)
-est = frugal1u_scalar(stream, rng.random(len(stream)), quantile=0.5)
-err = relative_mass_error(est, sorted(stream.tolist()), 0.5)
-print(f"Frugal-1U median ≈ {est:.1f}  (true {np.median(stream):.1f}, "
+est1 = frugal1u_scalar(stream, rng.random(len(stream)), quantile=0.5)
+err = relative_mass_error(est1, sorted(stream.tolist()), 0.5)
+print(f"scalar Frugal-1U median ≈ {est1:.1f}  (true {np.median(stream):.1f}, "
       f"mass error {err:+.3f}, memory = 1 word)")
-
-# ---- a GROUPBY fleet: 10,000 streams, 2 words each (Algorithm 3) ----------
-# process() is the FUSED path: uniforms are counter-hashed on the fly from
-# the key — no [T, G] random tensor is ever allocated (DESIGN.md §4).
-G, T = 10_000, 3_000
-scales = rng.uniform(3.0, 8.0, G)
-items = rng.lognormal(scales[None, :], 1.0, size=(T, G)).astype(np.float32)
-
-sk = GroupedQuantileSketch.create(G, quantile=0.9, algo="2u")
-sk = sk.process(jnp.asarray(items), jax.random.PRNGKey(0))
-
-true_q90 = np.quantile(items, 0.9, axis=0)
-rel = np.abs(np.asarray(sk.m) / true_q90 - 1.0)
-print(f"Fleet of {G} q90 sketches: median |rel err| = "
-      f"{np.median(rel):.2%}, total state = {2 * G * 4 / 1024:.0f} KiB "
-      f"(a t=20 GK summary per group would need "
-      f"{60 * G * 4 / 1024 / 1024:.1f} MiB)")
-
-# ---- unbounded streams: chunked fused ingest, O(chunk·G) transient --------
-# Bit-identical to the one-shot process() above for ANY chunking.
-from repro.core import ingest_stream
-
-sk2 = GroupedQuantileSketch.create(G, quantile=0.9, algo="2u")
-sk2 = ingest_stream(sk2, (items[i:i + 500] for i in range(0, T, 500)),
-                    jax.random.PRNGKey(0), chunk_t=1024)
-assert np.array_equal(np.asarray(sk2.m), np.asarray(sk.m)), \
-    "chunked ingest must reproduce the one-shot trajectory bit-for-bit"
-print(f"ingest_stream over {T // 500} chunks: bit-identical to one-shot, "
-      f"serialized state = {sk2.memory_words() * G} words (packed 2U)")

@@ -1,6 +1,8 @@
 """End-to-end serving driver: batched requests through the KV-cache engine
 with per-route frugal SLO sketches (ttft q99 / per-token q50 / output-length
-q50 — 2 words per route×metric).
+q50 — 2 words per route×metric). The SLO fleet is a repro.api.QuantileFleet
+under the hood: routes are its groups, the metric targets its quantile
+lanes, and each lane's event clock is the fleet's per-lane StreamCursor.
 
     PYTHONPATH=src python examples/serve_with_slo_sketches.py --requests 24
 """

@@ -1,7 +1,9 @@
 """End-to-end training driver: train an LM on the synthetic corpus with the
 full production loop — AdamW, frugal quantile gradient clipping, frugal
 activation/expert telemetry, checkpoint/restart — and print what the sketches
-learned.
+learned. The telemetry runs on repro.api.QuantileFleet monitors (jnp-backend
+fleets riding inside the jitted train step, cursors advancing once per
+step — see repro.monitor.registry).
 
     PYTHONPATH=src python examples/train_lm_with_frugal.py \
         --arch olmoe-1b-7b --steps 300

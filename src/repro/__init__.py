@@ -2,6 +2,9 @@
 as a production-grade multi-pod JAX training/serving framework.
 
 Layers:
+  repro.api       — ONE fleet API: FleetSpec + QuantileFleet (explicit
+                    stream cursors, multi-quantile lanes) over every
+                    backend below. Start here.
   repro.core      — the paper's contribution: Frugal-1U / Frugal-2U grouped
                     quantile sketches (+ baselines GK, q-digest, Selection).
   repro.kernels   — Pallas TPU kernels for the sketch-ingest hot path.
@@ -15,3 +18,22 @@ Layers:
 """
 
 __version__ = "1.0.0"
+
+# The facade names resolve lazily (PEP 562) so `import repro` stays free of
+# jax imports for config-only consumers; `from repro import QuantileFleet`
+# is the canonical first touch.
+_API_NAMES = ("FleetSpec", "StreamCursor", "QuantileFleet",
+              "QuantileEstimator", "FrugalEstimator")
+
+__all__ = list(_API_NAMES)
+
+
+def __getattr__(name):
+    if name in _API_NAMES:
+        from repro import api
+        return getattr(api, name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_API_NAMES))

@@ -1,0 +1,32 @@
+"""repro.api — the one fleet API (paper: "any quantile, one or two words").
+
+  spec.py       — FleetSpec (static fleet description: algo, quantile
+                  VECTOR, backend ∈ {jnp, fused, sharded}, chunk_t, mesh)
+                  and StreamCursor (explicit (seed, t_offset, g_offset)
+                  stream position — functional advance, checkpointable).
+  fleet.py      — QuantileFleet: ingest/ingest_stream/tick_lanes/estimate/
+                  grow/checkpoint over a (G × Q) multi-quantile lane plane,
+                  bit-identical across backends, Q=1 bit-identical to the
+                  legacy sketch entry points (now thin shims — DESIGN.md §9
+                  has the migration table).
+  estimators.py — FrugalEstimator: frugal lanes behind the baselines'
+                  QuantileEstimator protocol (one benchmark battery loop).
+  lint.py       — public-API export lint (CI step + tier-1 test).
+"""
+
+from repro.core.baselines.protocol import QuantileEstimator
+
+from .spec import BACKENDS, FleetSpec, StreamCursor
+from .fleet import QuantileFleet
+from .estimators import FrugalEstimator
+from .lint import check_public_api
+
+__all__ = [
+    "BACKENDS",
+    "FleetSpec",
+    "StreamCursor",
+    "QuantileFleet",
+    "QuantileEstimator",
+    "FrugalEstimator",
+    "check_public_api",
+]

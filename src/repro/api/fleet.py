@@ -1,0 +1,439 @@
+"""QuantileFleet — the one fleet API over every frugal backend.
+
+The paper's pitch is "estimate ANY quantile for each of a large number of
+groups with one or two words of memory". Before this facade the repo's
+public surface had fractured into five entry points (sketch.process,
+kernels.ops.*_auto_fused, core.streaming.ingest_stream/_array,
+parallel.ShardedGroupFleet, serve.SLOFleet), each hand-threading
+`(seed, t_offset, g_offset)` and each tracking a single quantile target.
+QuantileFleet folds them into one surface:
+
+    spec  = FleetSpec(num_groups=4096, quantiles=(0.5, 0.95, 0.99))
+    fleet = QuantileFleet.create(spec, seed=0)
+    fleet = fleet.ingest(items)          # [t, G] block; cursor auto-advances
+    fleet.estimate()                     # [G, Q] numpy
+    fleet.checkpoint(ckpt_dir, step=n)   # format-3, bit-exact resume
+
+Design points:
+
+  * **Explicit cursor.** Fleet state carries a StreamCursor(seed, t_offset,
+    g_offset) pytree; every ingest returns a new fleet whose cursor has
+    advanced. Users never thread offsets; checkpoints restore the cursor so
+    the resumed trajectory is bit-identical to the uninterrupted one.
+  * **Multi-quantile lanes.** quantiles=(q0..qQ-1) lays out a (G × Q) lane
+    plane, lane = g·Q + qi, flattened through the whole stack (scan, fused
+    kernels, lane-axis sharding). Each lane hashes its own uniform stream
+    off its ABSOLUTE lane id, so a Q=1 fleet is bit-identical to the legacy
+    single-target sketch and Q>1 estimates are invariant to chunking and to
+    how lanes land on devices.
+  * **Backend-pluggable.** backend ∈ {jnp, fused, sharded} selects the
+    execution engine; trajectories are bit-identical across all three (the
+    counter RNG keys on absolute (seed, tick, lane) — DESIGN.md §4).
+  * **Event-stream lanes.** A per-lane cursor (t_offset as an [L] vector)
+    supports sparse event ingestion — `tick_lanes` / `tick_lanes_sparse` —
+    where each lane's k-th event consumes uniform (seed, k, lane)
+    regardless of batching. serve.SLOFleet runs on exactly this.
+
+The facade is a registered pytree (spec static, state + cursor dynamic), so
+jnp-backend fleets ride inside jitted train/serve steps — the monitor
+fleets do.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Iterable, Optional, Union
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import frugal, streaming
+from repro.core import rng as crng
+from repro.core.sketch import GroupedQuantileSketch
+from repro.parallel.group_sharding import ShardedGroupFleet
+
+from .spec import FleetSpec, StreamCursor
+
+Array = jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("algo",))
+def _lane_tick(m, step, sign, ticks, q, items, mask, seed, g_offset,
+               algo="2u"):
+    """One vectorized tick over L lanes: uniforms key on (seed, per-lane or
+    scalar tick, absolute lane id); NaN items are bit-exact no-ops. `mask`
+    is accepted (and ignored) so dense event rounds share one signature with
+    the cursor advance."""
+    del mask
+    g_ids = jnp.asarray(g_offset, jnp.int32) \
+        + jnp.arange(m.shape[0], dtype=jnp.int32)
+    r = crng.counter_uniform(seed, ticks, g_ids)
+    if algo == "1u":
+        st = frugal.frugal1u_update(frugal.Frugal1UState(m), items, r, q)
+        return st.m, step, sign
+    st = frugal.frugal2u_update(frugal.Frugal2UState(m, step, sign), items,
+                                r, q)
+    return st.m, st.step, st.sign
+
+
+@functools.partial(jax.jit, static_argnames=("algo",))
+def _lane_tick_sparse(m_s, step_s, sign_s, ticks_s, q_s, lanes, items, seed,
+                      g_offset, algo="2u"):
+    """The same tick on a gathered O(events) lane slice — uniforms still key
+    on the ABSOLUTE lane index and the lane's own tick, so the trajectory is
+    bit-identical to the dense round."""
+    g_ids = jnp.asarray(g_offset, jnp.int32) + lanes
+    r = crng.counter_uniform(seed, ticks_s, g_ids)
+    if algo == "1u":
+        st = frugal.frugal1u_update(frugal.Frugal1UState(m_s), items, r, q_s)
+        return st.m, step_s, sign_s
+    st = frugal.frugal2u_update(frugal.Frugal2UState(m_s, step_s, sign_s),
+                                items, r, q_s)
+    return st.m, st.step, st.sign
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QuantileFleet:
+    """A (G × Q) fleet of frugal quantile lanes behind one ingest/query API.
+
+    Functional: every mutating call returns a new fleet. `state` is the lane
+    sketch (host/single-device for backends jnp/fused, lane-sharded for
+    backend sharded); `cursor` is the fleet's absolute stream position.
+    """
+
+    state: Union[GroupedQuantileSketch, ShardedGroupFleet]
+    cursor: StreamCursor
+    spec: FleetSpec = dataclasses.field(metadata=dict(static=True))
+
+    # -------------------------------------------------------------- creation
+    @classmethod
+    def create(cls, spec: FleetSpec, init: Union[float, Array] = 0.0,
+               seed: int = 0, key: Optional[Array] = None,
+               cursor: Optional[StreamCursor] = None,
+               per_lane_clock: bool = False) -> "QuantileFleet":
+        """Fresh fleet at stream position 0.
+
+        `seed` (or a JAX PRNG `key`) seeds the counter RNG. `per_lane_clock`
+        starts the cursor with a per-lane [L] tick vector — the event-stream
+        mode (`tick_lanes`); block ingest (`ingest`/`ingest_stream`) uses
+        the default scalar clock.
+        """
+        sk = GroupedQuantileSketch.create_lanes(
+            spec.num_groups, spec.quantiles, algo=spec.algo, init=init)
+        if cursor is None:
+            t0 = jnp.zeros((spec.num_lanes,), jnp.int32) if per_lane_clock \
+                else 0
+            cursor = StreamCursor.create(seed=seed, t_offset=t0, key=key)
+        state = cls._place(spec, sk)
+        return cls(state=state, cursor=cursor, spec=spec)
+
+    @staticmethod
+    def _place(spec: FleetSpec, sk: GroupedQuantileSketch):
+        if spec.backend == "sharded":
+            return ShardedGroupFleet.from_sketch(
+                sk, spec.mesh, lanes_per_group=spec.num_quantiles)
+        return sk
+
+    # ------------------------------------------------------------ properties
+    @property
+    def num_groups(self) -> int:
+        return self.spec.num_groups
+
+    @property
+    def num_quantiles(self) -> int:
+        return self.spec.num_quantiles
+
+    @property
+    def num_lanes(self) -> int:
+        return self.spec.num_lanes
+
+    @property
+    def algo(self) -> str:
+        return self.spec.algo
+
+    def memory_words(self) -> int:
+        """Persistent words per lane — 1 (1U) or 2 (packed 2U), the paper's
+        claim; Q targets per group cost Q·memory_words() words."""
+        return self.spec.memory_words()
+
+    def _lane_sketch(self) -> GroupedQuantileSketch:
+        """The [L]-lane sketch view of `state` (host-gathering if sharded)."""
+        if isinstance(self.state, ShardedGroupFleet):
+            return self.state.unshard()
+        return self.state
+
+    # ---------------------------------------------------------- block ingest
+    def _as_items(self, items) -> Array:
+        items = jnp.asarray(items, jnp.float32)
+        if items.ndim == 1:
+            items = items[:, None]
+        if items.ndim != 2 or items.shape[1] != self.num_groups:
+            raise ValueError(
+                f"items shape {items.shape} != [t, {self.num_groups}]")
+        return items
+
+    def _require_scalar_clock(self, what: str):
+        if self.cursor.per_lane:
+            raise ValueError(
+                f"{what} needs the scalar stream clock; this fleet uses a "
+                "per-lane cursor (event-stream mode) — use tick_lanes")
+
+    def ingest(self, items) -> "QuantileFleet":
+        """Ingest a [t, G] block (one item per group per tick); returns the
+        fleet advanced t ticks. Bit-identical for any split of a stream into
+        successive ingest calls, and across backends."""
+        self._require_scalar_clock("ingest")
+        items = self._as_items(items)
+        t = items.shape[0]
+        cur = self.cursor
+        q = self.num_quantiles
+        if isinstance(self.state, ShardedGroupFleet):
+            state = self.state.ingest_array(
+                items, seed=cur.seed, chunk_t=self.spec.chunk_t,
+                t_offset=int(cur.t_offset), g_offset=int(cur.g_offset))
+        elif self.spec.backend == "jnp":
+            state = self.state.process_seeded(
+                items, cur.seed, t_offset=cur.t_offset,
+                g_offset=cur.g_offset, lanes_per_group=q)
+        else:
+            state = streaming.ingest_array(
+                self.state, items, seed=cur.seed, chunk_t=self.spec.chunk_t,
+                t_offset=cur.t_offset, g_offset=cur.g_offset,
+                lanes_per_group=q)
+        return dataclasses.replace(self, state=state, cursor=cur.advance(t))
+
+    def ingest_stream(self, chunks: Iterable,
+                      chunk_t: Optional[int] = None) -> "QuantileFleet":
+        """Ingest an unbounded host-side stream of [t_i, G] blocks with
+        O(chunk_t · G) transient memory (core.streaming re-chunker under the
+        hood — identical blocking, bit-identical result to `ingest` of the
+        concatenated stream). The cursor advances by the number of REAL
+        items, so successive calls continue the uniform stream seamlessly."""
+        self._require_scalar_clock("ingest_stream")
+        chunk_t = chunk_t or self.spec.chunk_t
+        cur = self.cursor
+        counted = [0]
+
+        def counting():
+            for c in chunks:
+                # np.shape reads .shape off arrays (incl. device-resident
+                # jax arrays — no D2H copy); only shapeless host sequences
+                # get converted.
+                shape = np.shape(c)
+                counted[0] += shape[0] if shape else 1
+                yield c
+
+        if isinstance(self.state, ShardedGroupFleet):
+            state = self.state.ingest_stream(
+                counting(), seed=cur.seed, chunk_t=chunk_t,
+                t_offset=int(cur.t_offset), g_offset=int(cur.g_offset))
+        elif self.spec.backend == "jnp":
+            state = self.state
+            t_base = int(cur.t_offset)
+            for block, t0 in streaming.rechunk_blocks(
+                    counting(), self.num_groups, chunk_t):
+                state = state.process_seeded(
+                    jnp.asarray(block), cur.seed,
+                    t_offset=crng.wrap_i32(t_base + t0),
+                    g_offset=cur.g_offset,
+                    lanes_per_group=self.num_quantiles)
+        else:
+            state = streaming.ingest_stream(
+                self.state, counting(), seed=cur.seed, chunk_t=chunk_t,
+                t_offset=int(cur.t_offset), g_offset=cur.g_offset,
+                lanes_per_group=self.num_quantiles)
+        return dataclasses.replace(self, state=state,
+                                   cursor=cur.advance(counted[0]))
+
+    # ---------------------------------------------------------- event ingest
+    def tick_lanes(self, items, mask=None) -> "QuantileFleet":
+        """One vectorized tick over ALL L lanes from lane-level items [L]
+        (NaN = no event on that lane: a bit-exact no-op).
+
+        With a per-lane cursor, each lane's clock advances only where `mask`
+        is 1 (default: where items are non-NaN) — a lane's k-th event always
+        consumes uniform (seed, k, lane) regardless of batching. With the
+        scalar clock every lane shares the tick and the clock advances by 1
+        (block semantics — what the in-step monitor fleets use). jit-safe:
+        jnp-backend fleets may call this inside a traced step.
+        """
+        if isinstance(self.state, ShardedGroupFleet):
+            raise NotImplementedError(
+                "tick_lanes on a sharded fleet — use backend 'jnp'/'fused' "
+                "for event-stream lanes")
+        sk = self.state
+        items = jnp.asarray(items, jnp.float32)
+        if items.shape != (self.num_lanes,):
+            raise ValueError(
+                f"lane items shape {items.shape} != [{self.num_lanes}]")
+        cur = self.cursor
+        one = jnp.ones_like(sk.m)
+        step = sk.step if sk.step is not None else one
+        sign = sk.sign if sk.sign is not None else one
+        m, step, sign = _lane_tick(
+            sk.m, step, sign, cur.t_offset, sk.quantile, items, None,
+            cur.seed, cur.g_offset, algo=self.algo)
+        if self.algo == "1u":
+            state = dataclasses.replace(sk, m=m)
+        else:
+            state = dataclasses.replace(sk, m=m, step=step, sign=sign)
+        if cur.per_lane:
+            if mask is None:
+                mask = jnp.where(jnp.isnan(items), 0, 1).astype(jnp.int32)
+            cur = cur.advance_lanes(mask)
+        else:
+            cur = cur.advance(1)
+        return dataclasses.replace(self, state=state, cursor=cur)
+
+    def tick_lanes_sparse(self, lanes, items, mask=None) -> "QuantileFleet":
+        """O(events) event round: gather the named lanes, tick them, scatter
+        back — a handful of events against millions of lanes never does
+        O(L) work. Requires a per-lane cursor; `lanes` must not repeat
+        within one call (split same-lane events into successive rounds, in
+        arrival order — serve.SLOFleet.flush does exactly this). Lanes with
+        mask 0 (NaN item) scatter their own unchanged state back, so
+        callers may pad the lane list to a stable shape with any lane that
+        has no event this round."""
+        if isinstance(self.state, ShardedGroupFleet):
+            raise NotImplementedError("tick_lanes_sparse on a sharded fleet")
+        if not self.cursor.per_lane:
+            raise ValueError("tick_lanes_sparse needs a per-lane cursor "
+                             "(create with per_lane_clock=True)")
+        sk = self.state
+        cur = self.cursor
+        lanes = jnp.asarray(lanes, jnp.int32)
+        items = jnp.asarray(items, jnp.float32)
+        if mask is None:
+            mask = jnp.where(jnp.isnan(items), 0, 1).astype(jnp.int32)
+        one = jnp.ones_like(sk.m)
+        step_full = sk.step if sk.step is not None else one
+        sign_full = sk.sign if sk.sign is not None else one
+        m, step, sign = _lane_tick_sparse(
+            sk.m[lanes], step_full[lanes], sign_full[lanes],
+            cur.t_offset[lanes], jnp.broadcast_to(
+                jnp.asarray(sk.quantile, sk.m.dtype), sk.m.shape)[lanes],
+            lanes, items, cur.seed, cur.g_offset, algo=self.algo)
+        new_m = sk.m.at[lanes].set(m)
+        if self.algo == "1u":
+            state = dataclasses.replace(sk, m=new_m)
+        else:
+            state = dataclasses.replace(sk, step=step_full.at[lanes].set(step),
+                                        sign=sign_full.at[lanes].set(sign),
+                                        m=new_m)
+        ticks = cur.t_offset.at[lanes].add(mask)
+        return dataclasses.replace(self, state=state,
+                                   cursor=cur._replace(t_offset=ticks))
+
+    # ------------------------------------------------------------------ grow
+    def grow_groups(self, num_groups: int,
+                    init: Union[float, Array] = 0.0) -> "QuantileFleet":
+        """Append groups (capacity growth for dynamic fleets, e.g. serving
+        routes). Lane ids are group-major — independent of capacity — so
+        growth appends lanes WITHOUT touching any existing lane's state or
+        RNG stream (provably: the counter hash keys on absolute lane id)."""
+        if num_groups < self.num_groups:
+            raise ValueError(f"cannot shrink {self.num_groups} -> {num_groups}")
+        if num_groups == self.num_groups:
+            return self
+        if isinstance(self.state, ShardedGroupFleet):
+            raise NotImplementedError(
+                "grow_groups on a sharded fleet — unshard, grow, re-shard")
+        spec = dataclasses.replace(self.spec, num_groups=num_groups)
+        fresh = GroupedQuantileSketch.create_lanes(
+            num_groups - self.num_groups, spec.quantiles, algo=spec.algo,
+            init=init)
+        sk = self.state
+
+        def cat(a, b):
+            return None if a is None else jnp.concatenate([a, b])
+
+        state = dataclasses.replace(
+            sk, m=cat(sk.m, fresh.m), step=cat(sk.step, fresh.step),
+            sign=cat(sk.sign, fresh.sign),
+            quantile=jnp.concatenate([
+                jnp.broadcast_to(jnp.asarray(sk.quantile, sk.m.dtype),
+                                 sk.m.shape),
+                fresh.quantile]))
+        cur = self.cursor
+        if cur.per_lane:
+            pad = jnp.zeros((spec.num_lanes - self.num_lanes,), jnp.int32)
+            cur = cur._replace(t_offset=jnp.concatenate([cur.t_offset, pad]))
+        return QuantileFleet(state=state, cursor=cur, spec=spec)
+
+    # ----------------------------------------------------------------- reads
+    def estimate(self, quantile: Optional[float] = None) -> np.ndarray:
+        """Current estimates as [G, Q] numpy (the one gathering read); with
+        `quantile=` one tracked target's [G] column."""
+        if isinstance(self.state, ShardedGroupFleet):
+            m = self.state.estimate()
+        else:
+            m = np.asarray(jax.device_get(self.state.m))
+        plane = m.reshape(self.num_groups, self.num_quantiles)
+        if quantile is None:
+            return plane
+        return plane[:, self.spec.quantiles.index(float(quantile))]
+
+    # -------------------------------------------------------- serialization
+    def checkpoint_state(self) -> dict:
+        """Checkpoint pytree: the lane sketch (stored PACKED — 1-2 words per
+        lane, format 3) plus the cursor (int32 leaves). Bit-exact resume:
+        restoring and continuing reproduces the uninterrupted trajectory."""
+        return {"sketch": self._lane_sketch(), "cursor": self.cursor}
+
+    def checkpoint_template(self) -> dict:
+        """Structure-only `like` tree for train.checkpoint.restore_checkpoint
+        (abstract leaves; stored shapes win on restore)."""
+        return self.template_for(self.spec, per_lane_clock=self.cursor.per_lane)
+
+    @staticmethod
+    def template_for(spec: FleetSpec, per_lane_clock: bool = False) -> dict:
+        """`checkpoint_template` from a spec alone — no fleet, no array
+        allocation (restore of a 2^20-lane fleet should not build one just
+        to read shapes off it)."""
+        lanes = spec.num_lanes
+        f32 = jax.ShapeDtypeStruct((lanes,), jnp.float32)
+        i32s = jax.ShapeDtypeStruct((), jnp.int32)
+        if spec.algo == "1u":
+            sk = GroupedQuantileSketch(m=f32, step=None, sign=None,
+                                       quantile=f32, algo="1u")
+        else:
+            sk = GroupedQuantileSketch(m=f32, step=f32, sign=f32,
+                                       quantile=f32, algo="2u")
+        t_off = jax.ShapeDtypeStruct((lanes,), jnp.int32) \
+            if per_lane_clock else i32s
+        return {"sketch": sk,
+                "cursor": StreamCursor(seed=i32s, t_offset=t_off,
+                                       g_offset=i32s)}
+
+    @classmethod
+    def from_checkpoint_state(cls, state: dict,
+                              spec: FleetSpec) -> "QuantileFleet":
+        sk = state["sketch"]
+        if sk.num_groups != spec.num_lanes:
+            raise ValueError(
+                f"checkpoint holds {sk.num_groups} lanes but spec "
+                f"{spec.num_groups}x{spec.num_quantiles} expects "
+                f"{spec.num_lanes}")
+        cursor = StreamCursor(*(jnp.asarray(x, jnp.int32)
+                                for x in state["cursor"]))
+        return cls(state=cls._place(spec, sk), cursor=cursor, spec=spec)
+
+    def checkpoint(self, ckpt_dir: str, step: int, keep: int = 3) -> str:
+        """Write a committed format-3 checkpoint (train.checkpoint layout)."""
+        from repro.train import checkpoint as ckpt
+        return ckpt.save_checkpoint(ckpt_dir, step, self.checkpoint_state(),
+                                    keep=keep)
+
+    @classmethod
+    def restore(cls, ckpt_dir: str, spec: FleetSpec,
+                step: Optional[int] = None,
+                per_lane_clock: bool = False) -> "QuantileFleet":
+        """Load the newest committed checkpoint (or `step`) into a fleet
+        with `spec`'s backend/mesh — re-backending at restore time is free
+        because all backends share the trajectory."""
+        from repro.train import checkpoint as ckpt
+        like = cls.template_for(spec, per_lane_clock=per_lane_clock)
+        state, _ = ckpt.restore_checkpoint(ckpt_dir, like=like, step=step)
+        return cls.from_checkpoint_state(state, spec)

@@ -1,0 +1,60 @@
+"""Public-API lint: every name a subpackage exports must resolve.
+
+PR 2 nearly shipped an `__all__` entry in parallel/__init__.py that didn't
+exist — export drift that `import repro.parallel` alone never catches
+(Python validates `__all__` only on `from pkg import *`). This walker
+imports every SUBPACKAGE under `repro` (packages only: leaf modules like
+launch.dryrun have import-time side effects by design) and getattr-checks
+each `__all__` entry. CI runs it as a dedicated step; tests/test_public_api
+runs it in tier-1.
+"""
+from __future__ import annotations
+
+import importlib
+import pkgutil
+from typing import Dict, List, Tuple
+
+
+def iter_subpackages(package: str = "repro"):
+    """Yield (name, module) for `package` and every subpackage under it."""
+    pkg = importlib.import_module(package)
+    yield package, pkg
+    for info in pkgutil.walk_packages(pkg.__path__, prefix=package + "."):
+        if info.ispkg:
+            yield info.name, importlib.import_module(info.name)
+
+
+def check_public_api(package: str = "repro"
+                     ) -> Dict[str, List[str]]:
+    """Import every subpackage; assert each `__all__` name resolves.
+
+    Returns {subpackage: sorted __all__} for reporting. Raises
+    AssertionError naming every drifted export (all of them, not just the
+    first, so one CI run shows the full damage).
+    """
+    exported: Dict[str, List[str]] = {}
+    problems: List[Tuple[str, str]] = []
+    for name, mod in iter_subpackages(package):
+        names = getattr(mod, "__all__", None)
+        if names is None:
+            continue
+        exported[name] = sorted(names)
+        for n in names:
+            if not hasattr(mod, n):
+                problems.append((name, n))
+    if problems:
+        lines = "\n".join(f"  {pkg}.__all__ exports {n!r} which does not "
+                          "resolve" for pkg, n in problems)
+        raise AssertionError(f"public-API export drift:\n{lines}")
+    return exported
+
+
+def main() -> None:  # pragma: no cover - CI entry point
+    exported = check_public_api()
+    total = sum(len(v) for v in exported.values())
+    print(f"public API OK: {total} exports across {len(exported)} "
+          "subpackages resolve")
+
+
+if __name__ == "__main__":  # pragma: no cover
+    main()

@@ -1,0 +1,160 @@
+"""FleetSpec + StreamCursor — the configuration and stream-position types
+behind repro.api.QuantileFleet.
+
+`FleetSpec` is the single static description of a fleet: what algorithm, how
+many groups, WHICH quantiles (a vector — each group gets one lane per
+target), which backend executes ingest, and how streams are chunked/meshed.
+It is hashable and rides as static pytree metadata, so a QuantileFleet can
+live inside jitted steps.
+
+`StreamCursor` is the explicit stream position every legacy entry point used
+to hand-thread as loose `(seed, t_offset, g_offset)` arguments. It is a
+pytree of int32 leaves that advances *functionally* (ingest returns a fleet
+with a new cursor) and serializes into checkpoints, so a restored fleet
+continues its exact uniform stream — the facade's bit-exact-resume
+guarantee. `t_offset` may be a scalar (block streams: all lanes share the
+stream clock) or a per-lane [L] vector (event streams, e.g. serve SLO lanes,
+where each lane's k-th event consumes uniform (seed, k, lane)).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.core import rng as crng
+
+Array = jax.Array
+
+BACKENDS = ("jnp", "fused", "sharded")
+
+
+class StreamCursor(NamedTuple):
+    """Absolute position of a fleet in its uniform stream (int32 pytree).
+
+    seed     — counter-RNG seed (core.rng), scalar int32.
+    t_offset — absolute stream tick of the next item; scalar int32, or a
+               per-lane [L] int32 vector for event-stream fleets.
+    g_offset — absolute lane index of this fleet's lane 0 (non-zero when
+               the fleet is one shard / column-slice of a larger one).
+
+    int32 arithmetic wraps exactly like the in-kernel tick counter
+    (core.rng.wrap_i32), so advancing past 2^31 ticks stays bit-consistent
+    with unbounded ingestion.
+    """
+
+    seed: Array
+    t_offset: Array
+    g_offset: Array
+
+    @staticmethod
+    def create(seed=0, t_offset=0, g_offset=0,
+               key: Optional[Array] = None) -> "StreamCursor":
+        """Build a cursor from a raw int seed or a JAX PRNG `key`."""
+        if key is not None:
+            seed = crng.seed_from_key(key)
+        if isinstance(t_offset, int):
+            t_offset = crng.wrap_i32(t_offset)
+        return StreamCursor(
+            seed=jnp.asarray(seed, jnp.int32),
+            t_offset=jnp.asarray(t_offset, jnp.int32),
+            g_offset=jnp.asarray(g_offset, jnp.int32))
+
+    @property
+    def per_lane(self) -> bool:
+        """True when t_offset is a per-lane tick vector (event streams)."""
+        return jnp.ndim(self.t_offset) > 0
+
+    def advance(self, ticks) -> "StreamCursor":
+        """Cursor after `ticks` more stream items (scalar clock). int32 adds
+        wrap two's-complement, matching the kernel's tick counter."""
+        if isinstance(ticks, int):
+            ticks = crng.wrap_i32(ticks)
+        return self._replace(
+            t_offset=self.t_offset + jnp.asarray(ticks, jnp.int32))
+
+    def advance_lanes(self, mask) -> "StreamCursor":
+        """Cursor after one event round: lanes with mask 1 consumed a
+        uniform, lanes with mask 0 did not (per-lane clock)."""
+        return self._replace(
+            t_offset=self.t_offset + jnp.asarray(mask, jnp.int32))
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSpec:
+    """Static description of a QuantileFleet.
+
+    num_groups — G, independent streams (the paper's GROUPBY keys).
+    quantiles  — vector of targets per group; the fleet lays out a (G × Q)
+                 lane plane, lane = g·Q + qi, each lane 1-2 memory words.
+    algo       — "1u" (paper Alg. 2) or "2u" (paper Alg. 3).
+    backend    — "jnp"    : pure lax.scan ingest (runs anywhere, including
+                            inside an outer jit — monitors use this);
+                 "fused"  : chunked fused-kernel ingest (Pallas on TPU, the
+                            jitted jnp oracle elsewhere), O(chunk_t·G)
+                            transient memory for unbounded streams;
+                 "sharded": "fused" with the flattened lane axis sharded
+                            over `mesh` (parallel.group_sharding).
+                 All three produce bit-identical trajectories — the counter
+                 RNG keys on absolute (seed, tick, lane).
+    chunk_t    — tick-block size for chunked ingest ("fused"/"sharded").
+    mesh       — 1-D device mesh for "sharded" (default: all devices).
+
+    Hashable → usable as static pytree metadata / jit static argument.
+    """
+
+    num_groups: int
+    quantiles: Tuple[float, ...] = (0.5,)
+    algo: str = "2u"
+    backend: str = "fused"
+    chunk_t: int = 4096
+    mesh: Optional[Mesh] = None
+
+    def __post_init__(self):
+        qs = tuple(float(q) for q in np.atleast_1d(np.asarray(self.quantiles,
+                                                              np.float64)))
+        object.__setattr__(self, "quantiles", qs)
+        if self.num_groups <= 0:
+            raise ValueError(f"num_groups must be positive, got "
+                             f"{self.num_groups}")
+        if not qs:
+            raise ValueError("quantiles must name at least one target")
+        if any(not (0.0 < q < 1.0) for q in qs):
+            raise ValueError(f"quantiles must lie in (0, 1), got {qs}")
+        if self.algo not in ("1u", "2u"):
+            raise ValueError(f"algo must be '1u' or '2u', got {self.algo!r}")
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"backend must be one of {BACKENDS}, got {self.backend!r}")
+        if self.chunk_t <= 0:
+            raise ValueError(f"chunk_t must be positive, got {self.chunk_t}")
+        if self.mesh is not None and self.backend != "sharded":
+            raise ValueError("mesh= only applies to backend='sharded'")
+
+    # ------------------------------------------------------------ lane plane
+    @property
+    def num_quantiles(self) -> int:
+        return len(self.quantiles)
+
+    @property
+    def num_lanes(self) -> int:
+        """Flattened (G × Q) lane count; lane = g·Q + qi (group-major)."""
+        return self.num_groups * self.num_quantiles
+
+    def lane_quantiles(self) -> np.ndarray:
+        """[L] per-lane quantile targets (the Q-vector tiled per group)."""
+        return np.tile(np.asarray(self.quantiles, np.float32),
+                       self.num_groups)
+
+    def lane(self, group: int, quantile: float) -> int:
+        """Flat lane index of (group, quantile). Raises for an untracked
+        quantile — frugal sketches answer the targets they streamed for."""
+        return group * self.num_quantiles + self.quantiles.index(float(quantile))
+
+    def memory_words(self) -> int:
+        """Persistent words per lane — 1 (1U) or 2 (packed 2U)."""
+        return 1 if self.algo == "1u" else 2

@@ -13,6 +13,11 @@ vectorizes across millions of groups).
                           unknown-n variant with exponentially growing phases.
   reservoir.Reservoir   — k-item reservoir sample (extra baseline).
   exact.ExactQuantile   — stores everything; ground truth.
+  protocol              — QuantileEstimator, the shared
+                          insert/extend/query/memory_words interface every
+                          summary here answers (the frugal adapter is
+                          repro.api.FrugalEstimator), so benchmark
+                          harnesses drive all of them through one loop.
 """
 
 from .gk import GKSummary
@@ -20,5 +25,7 @@ from .qdigest import QDigest
 from .selection import Selection
 from .reservoir import Reservoir
 from .exact import ExactQuantile
+from .protocol import QuantileEstimator
 
-__all__ = ["GKSummary", "QDigest", "Selection", "Reservoir", "ExactQuantile"]
+__all__ = ["GKSummary", "QDigest", "Selection", "Reservoir", "ExactQuantile",
+           "QuantileEstimator"]

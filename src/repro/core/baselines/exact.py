@@ -24,6 +24,7 @@ class ExactQuantile:
         idx = min(int(q * n), n - 1)
         return self.sorted[idx]
 
-    @property
     def memory_words(self) -> int:
+        """QuantileEstimator protocol: summary size in words (here: all of
+        them — the exact oracle stores the stream)."""
         return len(self.sorted)

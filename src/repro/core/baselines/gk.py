@@ -85,6 +85,6 @@ class GKSummary:
                 return v
         return self.tuples[-1][0]
 
-    @property
     def memory_words(self) -> int:
+        """QuantileEstimator protocol: 3 words per (v, g, Δ) tuple."""
         return 3 * len(self.tuples)

@@ -84,6 +84,6 @@ class QDigest:
                 return float(hi)
         return float(items[-1][0]) if items else 0.0
 
-    @property
     def memory_words(self) -> int:
+        """QuantileEstimator protocol: 2 words per occupied bucket."""
         return 2 * len(self.counts)

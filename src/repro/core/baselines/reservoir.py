@@ -33,6 +33,6 @@ class Reservoir:
         idx = min(int(q * len(s)), len(s) - 1)
         return s[idx]
 
-    @property
     def memory_words(self) -> int:
+        """QuantileEstimator protocol: one word per reservoir slot."""
         return len(self.sample)

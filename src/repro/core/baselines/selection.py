@@ -86,6 +86,6 @@ class Selection:
             return self._cand
         return 0.0
 
-    @property
     def memory_words(self) -> int:
+        """QuantileEstimator protocol: (a, b, counters) — constant words."""
         return 5

@@ -126,7 +126,7 @@ def frugal2u_update(
 
 
 def _fused_scan(update_fn, state, items, seed, quantile, return_trace, t_offset,
-                g_offset):
+                g_offset, lanes_per_group=1):
     """Scan ticks with counter-hashed uniforms generated per tick — the
     fused ingest path. No [T, G] uniforms tensor is ever materialized, and
     the (seed, absolute tick, absolute group) keying makes the trajectory
@@ -134,14 +134,28 @@ def _fused_scan(update_fn, state, items, seed, quantile, return_trace, t_offset,
     the same seed (see core.rng, DESIGN.md §4). `g_offset` is the absolute
     group index of column 0 — a shard of a larger fleet passes its global
     offset so the sharded trajectory matches the unsharded one bit-for-bit
-    (parallel/group_sharding.py)."""
+    (parallel/group_sharding.py).
+
+    `lanes_per_group` > 1 is the multi-quantile lane plane (repro.api):
+    state holds L = G·Q lanes laid out group-major (lane = g·Q + qi), items
+    stay [T, G] and each tick broadcasts item g to that group's Q lanes —
+    the [T, L] repeated block is never materialized. Every lane hashes its
+    own uniform stream off its absolute lane id, so Q = 1 is bit-identical
+    to the plain grouped path."""
     seed = jnp.asarray(seed, jnp.int32)
     t, g = items.shape
-    g_ids = jnp.asarray(g_offset, jnp.int32) + jnp.arange(g, dtype=jnp.int32)
+    lanes = g * lanes_per_group
+    if state.m.shape[0] != lanes:
+        raise ValueError(
+            f"state has {state.m.shape[0]} lanes but items [{t}, {g}] x "
+            f"lanes_per_group={lanes_per_group} needs {lanes}")
+    g_ids = jnp.asarray(g_offset, jnp.int32) + jnp.arange(lanes, dtype=jnp.int32)
     t0 = jnp.asarray(t_offset, jnp.int32)
 
     def tick(s, xs):
         it, i = xs
+        if lanes_per_group > 1:
+            it = jnp.repeat(it, lanes_per_group)
         r = rng.counter_uniform(seed, t0 + i, g_ids)
         s2 = update_fn(s, it, r, quantile)
         return s2, (s2.m if return_trace else None)
@@ -152,27 +166,29 @@ def _fused_scan(update_fn, state, items, seed, quantile, return_trace, t_offset,
 def frugal1u_process_seeded(
     state: Frugal1UState, items: Array, seed, quantile: ArrayLike = 0.5,
     return_trace: bool = False, t_offset: ArrayLike = 0,
-    g_offset: ArrayLike = 0,
+    g_offset: ArrayLike = 0, lanes_per_group: int = 1,
 ) -> Tuple[Frugal1UState, Optional[Array]]:
     """Fused [T, G] ingest from a raw int32 counter seed (kernel discipline).
 
     This is THE off-TPU implementation of the fused ingest path — kernels/
     ops.py dispatches here when no TPU is present, so the algorithm lives in
     exactly one jnp transcription (plus the Pallas kernel body, which the
-    equivalence tests pin bit-exactly against it).
+    equivalence tests pin bit-exactly against it). `lanes_per_group` > 1
+    drives a G·Q multi-quantile lane plane off [T, G] items (see
+    _fused_scan / repro.api).
     """
     return _fused_scan(frugal1u_update, state, items, seed, quantile,
-                       return_trace, t_offset, g_offset)
+                       return_trace, t_offset, g_offset, lanes_per_group)
 
 
 def frugal2u_process_seeded(
     state: Frugal2UState, items: Array, seed, quantile: ArrayLike = 0.5,
     return_trace: bool = False, t_offset: ArrayLike = 0,
-    g_offset: ArrayLike = 0,
+    g_offset: ArrayLike = 0, lanes_per_group: int = 1,
 ) -> Tuple[Frugal2UState, Optional[Array]]:
     """Fused [T, G] Frugal-2U ingest from a raw int32 counter seed."""
     return _fused_scan(frugal2u_update, state, items, seed, quantile,
-                       return_trace, t_offset, g_offset)
+                       return_trace, t_offset, g_offset, lanes_per_group)
 
 
 def frugal1u_process(
@@ -184,20 +200,22 @@ def frugal1u_process(
     return_trace: bool = False,
     t_offset: ArrayLike = 0,
     g_offset: ArrayLike = 0,
+    lanes_per_group: int = 1,
 ) -> Tuple[Frugal1UState, Optional[Array]]:
     """Sequentially ingest a [T, G] block (scan of ticks).
 
     With `key`, uniforms are counter-hashed on the fly (fused path: no
     [T, G] rand tensor; `t_offset` is the absolute stream tick of items[0]
     for chunked ingestion, `g_offset` the absolute group index of column 0
-    for sharded fleets). Passing an explicit `rand` tensor is the
-    deprecated fed-uniform path, kept for oracle tests.
+    for sharded fleets; `lanes_per_group` > 1 drives a multi-quantile lane
+    plane). Passing an explicit `rand` tensor is the deprecated fed-uniform
+    path, kept for oracle tests.
     """
     if rand is None:
         assert key is not None, "need key or rand"
         return frugal1u_process_seeded(state, items, rng.seed_from_key(key),
                                        quantile, return_trace, t_offset,
-                                       g_offset)
+                                       g_offset, lanes_per_group)
 
     def tick(s, xs):
         it, rn = xs
@@ -217,6 +235,7 @@ def frugal2u_process(
     return_trace: bool = False,
     t_offset: ArrayLike = 0,
     g_offset: ArrayLike = 0,
+    lanes_per_group: int = 1,
 ) -> Tuple[Frugal2UState, Optional[Array]]:
     """Sequentially ingest a [T, G] block (scan of ticks).
 
@@ -227,7 +246,7 @@ def frugal2u_process(
         assert key is not None, "need key or rand"
         return frugal2u_process_seeded(state, items, rng.seed_from_key(key),
                                        quantile, return_trace, t_offset,
-                                       g_offset)
+                                       g_offset, lanes_per_group)
 
     def tick(s, xs):
         it, rn = xs

@@ -27,6 +27,7 @@ import dataclasses
 from functools import partial
 from typing import NamedTuple, Optional, Union
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -122,6 +123,37 @@ class GroupedQuantileSketch:
             m=m, step=jnp.ones_like(m), sign=jnp.ones_like(m), quantile=q, algo="2u"
         )
 
+    @staticmethod
+    def create_lanes(
+        num_groups: int,
+        quantiles,
+        algo: str = "2u",
+        init: Union[float, Array] = 0.0,
+        dtype=jnp.float32,
+    ) -> "GroupedQuantileSketch":
+        """A (G × Q) multi-quantile lane plane as one flat sketch.
+
+        Lays out L = num_groups · len(quantiles) lanes group-major
+        (lane = g·Q + qi) with the per-lane quantile vector tiled per group,
+        so lane g·Q + qi tracks quantiles[qi] of group g's stream. Ingest the
+        plane with `process(..., lanes_per_group=Q)` (or through
+        repro.api.QuantileFleet, which owns the layout); every lane hashes
+        its own uniform stream off its absolute lane id, so Q = 1 is
+        bit-identical to `create`. `init` may be scalar, [G] (broadcast to
+        each group's lanes) or [G·Q]."""
+        quantiles = np.asarray(jnp.asarray(quantiles).reshape(-1))
+        if quantiles.size == 0:
+            raise ValueError("need at least one quantile target")
+        nq = int(quantiles.size)
+        lanes = num_groups * nq
+        init_arr = jnp.asarray(init, dtype).reshape(-1)
+        if init_arr.shape[0] == num_groups and nq > 1:
+            init_arr = jnp.repeat(init_arr, nq)
+        q = jnp.asarray(np.tile(quantiles.astype(np.float32), num_groups),
+                        dtype)
+        return GroupedQuantileSketch.create(lanes, quantile=q, algo=algo,
+                                            init=init_arr, dtype=dtype)
+
     # ---------------------------------------------------------------- update
     def _as_state(self):
         if self.algo == "1u":
@@ -142,7 +174,8 @@ class GroupedQuantileSketch:
         return self._with_state(st)
 
     def process(self, items: Array, key: Array,
-                g_offset: int = 0) -> "GroupedQuantileSketch":
+                g_offset: int = 0,
+                lanes_per_group: int = 1) -> "GroupedQuantileSketch":
         """Sequential ingest of [T, G] (paper-exact semantics, fused lax.scan).
 
         Uniforms are counter-hashed per tick from `key` (core.rng) — no
@@ -152,15 +185,41 @@ class GroupedQuantileSketch:
         core.streaming.ingest_stream; for fleets wider than one device, wrap
         in parallel.group_sharding.ShardedGroupFleet (`g_offset` is the
         absolute fleet index of this sketch's column 0 when it is one shard).
+        A `create_lanes` plane passes `lanes_per_group=Q` so [T, G] items
+        drive all G·Q lanes. New code should prefer the one-stop facade,
+        repro.api.QuantileFleet, which threads key/offsets via its cursor.
         """
         if self.algo == "1u":
             st, _ = frugal.frugal1u_process(self._as_state(), items, key=key,
                                             quantile=self.quantile,
-                                            g_offset=g_offset)
+                                            g_offset=g_offset,
+                                            lanes_per_group=lanes_per_group)
         else:
             st, _ = frugal.frugal2u_process(self._as_state(), items, key=key,
                                             quantile=self.quantile,
-                                            g_offset=g_offset)
+                                            g_offset=g_offset,
+                                            lanes_per_group=lanes_per_group)
+        return self._with_state(st)
+
+    def process_seeded(self, items: Array, seed, t_offset=0, g_offset=0,
+                       lanes_per_group: int = 1) -> "GroupedQuantileSketch":
+        """`process` from a raw int32 counter seed + explicit stream offsets.
+
+        The form repro.api.QuantileFleet's jnp backend drives: the facade's
+        StreamCursor carries (seed, t_offset, g_offset) and this method is a
+        pure function of them — bit-identical to `process` when
+        seed == rng.seed_from_key(key) and the offsets are zero.
+        """
+        if self.algo == "1u":
+            st, _ = frugal.frugal1u_process_seeded(
+                self._as_state(), items, seed, self.quantile,
+                t_offset=t_offset, g_offset=g_offset,
+                lanes_per_group=lanes_per_group)
+        else:
+            st, _ = frugal.frugal2u_process_seeded(
+                self._as_state(), items, seed, self.quantile,
+                t_offset=t_offset, g_offset=g_offset,
+                lanes_per_group=lanes_per_group)
         return self._with_state(st)
 
     def ingest_tensor(self, x: Array, key: Array, group_axis: int = -1) -> "GroupedQuantileSketch":

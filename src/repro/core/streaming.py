@@ -27,6 +27,7 @@ Entry points:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Iterable, Optional, Union
 
 import numpy as np
@@ -40,18 +41,23 @@ Array = jax.Array
 
 
 def _apply_chunk(sk: GroupedQuantileSketch, chunk: Array, seed, t_offset,
-                 g_offset=0):
-    """One fused-kernel call over a [chunk_t, G] block at absolute t_offset."""
+                 g_offset=0, lanes_per_group=1):
+    """One fused-kernel call over a [chunk_t, G] block at absolute t_offset.
+
+    `lanes_per_group` = Q > 1 drives a G·Q multi-quantile lane plane off the
+    [chunk_t, G] block: the group→lane broadcast happens on device inside
+    the kernel entry point, so the host stream stays G columns wide."""
     from repro.kernels import ops  # lazy: kernels imports core (no cycle at runtime)
 
     if sk.algo == "1u":
         m = ops.frugal1u_update_auto_fused(
             chunk, sk.m, sk.quantile, seed=seed, t_offset=t_offset,
-            g_offset=g_offset)
+            g_offset=g_offset, lanes_per_group=lanes_per_group)
         return dataclasses.replace(sk, m=m)
     m, step, sign = ops.frugal2u_update_auto_fused(
         chunk, sk.m, sk.step, sk.sign, sk.quantile, seed=seed,
-        t_offset=t_offset, g_offset=g_offset)
+        t_offset=t_offset, g_offset=g_offset,
+        lanes_per_group=lanes_per_group)
     return dataclasses.replace(sk, m=m, step=step, sign=sign)
 
 
@@ -107,10 +113,13 @@ def rechunk_blocks(chunks: Iterable, num_groups: int, chunk_t: int):
 def ingest_stream(
     sketch: GroupedQuantileSketch,
     chunks: Iterable,
-    key: Array,
+    key: Optional[Array] = None,
     chunk_t: int = 4096,
     g_offset: int = 0,
     t_offset: int = 0,
+    *,
+    seed=None,
+    lanes_per_group: int = 1,
 ) -> GroupedQuantileSketch:
     """Ingest an unbounded host-side stream of [t_i, G] blocks.
 
@@ -123,11 +132,25 @@ def ingest_stream(
     a larger fleet (its column 0 is fleet group `g_offset`); `t_offset` is
     the absolute stream tick of the first item — pass the running total when
     continuing a stream across calls so the uniform stream never replays.
+    `seed` (raw int32 counter seed) may replace `key`; `lanes_per_group` = Q
+    drives a G·Q lane-plane sketch from G-column blocks (multi-quantile —
+    see repro.api.QuantileFleet, which owns the cursor bookkeeping for all
+    of the above).
     """
-    seed = crng.seed_from_key(key)
-    for block, t0 in rechunk_blocks(chunks, sketch.num_groups, chunk_t):
+    if seed is None:
+        assert key is not None, "need key= or seed="
+        seed = crng.seed_from_key(key)
+    else:
+        seed = jnp.asarray(seed, jnp.int32)
+    num_cols = sketch.num_groups // lanes_per_group
+    if num_cols * lanes_per_group != sketch.num_groups:
+        raise ValueError(
+            f"sketch lanes {sketch.num_groups} not divisible by "
+            f"lanes_per_group={lanes_per_group}")
+    for block, t0 in rechunk_blocks(chunks, num_cols, chunk_t):
         sketch = _apply_chunk(sketch, jnp.asarray(block), seed,
-                              crng.wrap_i32(t_offset + t0), g_offset)
+                              crng.wrap_i32(t_offset + t0), g_offset,
+                              lanes_per_group)
     return sketch
 
 
@@ -140,6 +163,7 @@ def ingest_array(
     *,
     seed=None,
     t_offset=0,
+    lanes_per_group: int = 1,
 ) -> GroupedQuantileSketch:
     """Ingest a device-resident [T, G] array in chunk_t-sized slabs.
 
@@ -150,6 +174,7 @@ def ingest_array(
     `seed` (a raw int32 counter seed) may replace `key` — the form used
     inside shard_map bodies, where typed PRNG keys don't travel — and
     `t_offset` shifts the absolute tick of items[0] (continuing a stream).
+    `lanes_per_group` = Q drives a G·Q lane-plane sketch from [T, G] items.
     """
     if chunk_t <= 0:
         raise ValueError(f"chunk_t must be positive, got {chunk_t}")
@@ -157,27 +182,51 @@ def ingest_array(
     if items.ndim == 1:
         items = items[:, None]
     t, g = items.shape
-    if g != sketch.num_groups:
-        raise ValueError(f"items G={g} != sketch groups {sketch.num_groups}")
+    if g * lanes_per_group != sketch.num_groups:
+        raise ValueError(
+            f"items G={g} x lanes_per_group={lanes_per_group} != sketch "
+            f"lanes {sketch.num_groups}")
     if seed is None:
         assert key is not None, "need key= or seed="
         seed = crng.seed_from_key(key)
-    else:
-        seed = jnp.asarray(seed, jnp.int32)
-
-    pad = (-t) % chunk_t
-    if pad:
-        items = jnp.pad(items, ((0, pad), (0, 0)), constant_values=jnp.nan)
-    n = items.shape[0] // chunk_t
-    slabs = items.reshape(n, chunk_t, g)
     if isinstance(t_offset, int):   # traced offsets (shard_map) are already i32
         t_offset = crng.wrap_i32(t_offset)   # past-2^31 ticks wrap, not raise
-    offsets = jnp.asarray(t_offset, jnp.int32) \
-        + jnp.arange(n, dtype=jnp.int32) * chunk_t
+    seed = jnp.asarray(seed, jnp.int32)
+    t_offset = jnp.asarray(t_offset, jnp.int32)
+    g_offset = jnp.asarray(g_offset, jnp.int32)
+    head = t - t % chunk_t
+    if head:
+        sketch = _ingest_array_scan(sketch, items[:head], seed, t_offset,
+                                    g_offset, chunk_t=chunk_t,
+                                    lanes_per_group=lanes_per_group)
+    if head < t:   # partial tail: one (cached) short-chunk dispatch — no
+        sketch = _apply_chunk(sketch, items[head:], seed,   # [T, G] pad copy
+                              t_offset + jnp.int32(head), g_offset,
+                              lanes_per_group)
+    return sketch
+
+
+# The reshape-and-scan over full slabs is ONE jitted function, cached
+# across calls by (shapes, chunk_t, lanes, algo-in-treedef): a fleet
+# ingesting block after block (repro.api.QuantileFleet does) pays tracing
+# once, then every ingest is a single cached dispatch — an eager lax.scan
+# here would re-trace its body on every call and dominate the per-item
+# cost (benchmarks/bench_fleet_api.py gates this). Inside shard_map /
+# outer jits the nested jit inlines. Callers slice off any partial tail
+# (`t` a multiple of chunk_t), so no NaN-padded copy of the items block is
+# ever made.
+@functools.partial(jax.jit, static_argnames=("chunk_t", "lanes_per_group"))
+def _ingest_array_scan(sketch, items, seed, t_offset, g_offset, *, chunk_t,
+                       lanes_per_group):
+    t, g = items.shape
+    n = t // chunk_t
+    slabs = items.reshape(n, chunk_t, g)
+    offsets = t_offset + jnp.arange(n, dtype=jnp.int32) * chunk_t
 
     def body(sk, xs):
         slab, off = xs
-        return _apply_chunk(sk, slab, seed, off, g_offset), None
+        return _apply_chunk(sk, slab, seed, off, g_offset,
+                            lanes_per_group), None
 
     sketch, _ = jax.lax.scan(body, sketch, (slabs, offsets))
     return sketch

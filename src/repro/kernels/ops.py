@@ -19,11 +19,15 @@ Entry points:
     ``core.streaming`` call these.
   * ``frugal{1,2}u_update_blocked`` / ``*_update_auto`` — DEPRECATED shims
     for the old rand-operand path; kept for the fed-uniform test sweep and
-    back-compat. New code should never materialize uniforms.
+    back-compat, and emitting ``DeprecationWarning`` on every call (pinned
+    in tests/test_deprecations.py) ahead of removal. New code should never
+    materialize uniforms — use the fused entry points or, better, the
+    repro.api.QuantileFleet facade (DESIGN.md §9 migration table).
 """
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -135,57 +139,77 @@ def _as_seed(key=None, seed=None):
 # once per chunk, and an un-jitted lax.scan would re-trace its tick body on
 # every chunk (tens of seconds of pure tracing over a long stream). These run
 # core.frugal's scan — the single jnp transcription of the algorithm;
-# kernels/ref.py stays a test-only oracle.
-@jax.jit
-def _cpu1_fused(items, m, quantile, seed, t_offset, g_offset):
+# kernels/ref.py stays a test-only oracle. `lanes` is the multi-quantile
+# lane fan-out: state is [G·lanes] while items stay [T, G], and the scan
+# broadcasts each item to its group's lanes per tick (no [T, G·lanes] block).
+@functools.partial(jax.jit, static_argnames=("lanes",))
+def _cpu1_fused(items, m, quantile, seed, t_offset, g_offset, lanes=1):
     st, _ = frugal.frugal1u_process_seeded(
         frugal.Frugal1UState(m), items, seed, quantile, t_offset=t_offset,
-        g_offset=g_offset)
+        g_offset=g_offset, lanes_per_group=lanes)
     return st.m
 
 
-@jax.jit
-def _cpu2_fused(items, m, step, sign, quantile, seed, t_offset, g_offset):
+@functools.partial(jax.jit, static_argnames=("lanes",))
+def _cpu2_fused(items, m, step, sign, quantile, seed, t_offset, g_offset,
+                lanes=1):
     st, _ = frugal.frugal2u_process_seeded(
         frugal.Frugal2UState(m, step, sign), items, seed, quantile,
-        t_offset=t_offset, g_offset=g_offset)
+        t_offset=t_offset, g_offset=g_offset, lanes_per_group=lanes)
     return st.m, st.step, st.sign
 
 
 def frugal1u_update_auto_fused(items, m, quantile, key=None, *, seed=None,
-                               t_offset=0, g_offset=0, **kw):
-    """Fused Pallas on TPU, fused jnp ref elsewhere — bit-identical results."""
+                               t_offset=0, g_offset=0, lanes_per_group=1,
+                               **kw):
+    """Fused Pallas on TPU, fused jnp ref elsewhere — bit-identical results.
+
+    With `lanes_per_group` = Q > 1, `m`/`quantile` hold G·Q lanes while
+    `items` stays [T, G]: the host→device transfer carries only the group
+    columns and the Q-fold broadcast happens on device (in the scan tick off
+    TPU; as one device-side repeat ahead of the Pallas dispatch on TPU).
+    """
     s = _as_seed(key, seed)
     if _on_tpu():
+        if lanes_per_group > 1:
+            items = jnp.repeat(items, lanes_per_group, axis=1)
         return frugal1u_update_blocked_fused(items, m, quantile, s, t_offset,
                                              g_offset, interpret=False, **kw)
     q = jnp.broadcast_to(jnp.asarray(quantile, m.dtype), m.shape)
-    return _cpu1_fused(items.astype(m.dtype), m, q, s, t_offset, g_offset)
+    return _cpu1_fused(items.astype(m.dtype), m, q, s, t_offset, g_offset,
+                       lanes=lanes_per_group)
 
 
 def frugal2u_update_auto_fused(items, m, step, sign, quantile, key=None, *,
-                               seed=None, t_offset=0, g_offset=0, **kw):
+                               seed=None, t_offset=0, g_offset=0,
+                               lanes_per_group=1, **kw):
     s = _as_seed(key, seed)
     if _on_tpu():
+        if lanes_per_group > 1:
+            items = jnp.repeat(items, lanes_per_group, axis=1)
         return frugal2u_update_blocked_fused(items, m, step, sign, quantile,
                                              s, t_offset, g_offset,
                                              interpret=False, **kw)
     q = jnp.broadcast_to(jnp.asarray(quantile, m.dtype), m.shape)
     return _cpu2_fused(items.astype(m.dtype), m, step, sign, q, s, t_offset,
-                       g_offset)
+                       g_offset, lanes=lanes_per_group)
 
 
 # ------------------------------------------------- deprecated rand-operand path
+def _warn_rand_operand(name: str, repl: str):
+    warnings.warn(
+        f"kernels.ops.{name} materializes a rand[T, G] operand and is "
+        f"deprecated; use {repl} (on-chip counter RNG, half the HBM "
+        "traffic) or the repro.api.QuantileFleet facade. The rand-operand "
+        "path will be removed in a future release.",
+        DeprecationWarning, stacklevel=3)
+
+
 @functools.partial(jax.jit, static_argnames=("block_g", "block_t", "interpret"))
-def frugal1u_update_blocked(
+def _frugal1u_update_blocked(
     items: Array, rand: Array, m: Array, quantile: Array,
     *, block_g: int = 128, block_t: int = 256, interpret: bool = True,
 ) -> Array:
-    """DEPRECATED: Frugal-1U with a materialized rand[T, G] operand.
-
-    Spends half the kernel's HBM input bandwidth streaming uniforms — use
-    frugal1u_update_blocked_fused. Kept for the fed-uniform test sweep.
-    """
     g = m.shape[0]
     dt = m.dtype
     items = items.astype(dt)
@@ -199,15 +223,23 @@ def frugal1u_update_blocked(
     return out[:g]
 
 
+def frugal1u_update_blocked(items, rand, m, quantile, **kw) -> Array:
+    """DEPRECATED: Frugal-1U with a materialized rand[T, G] operand.
+
+    Spends half the kernel's HBM input bandwidth streaming uniforms — use
+    frugal1u_update_blocked_fused. Kept for the fed-uniform test sweep.
+    Emits DeprecationWarning on every call.
+    """
+    _warn_rand_operand("frugal1u_update_blocked",
+                       "frugal1u_update_blocked_fused")
+    return _frugal1u_update_blocked(items, rand, m, quantile, **kw)
+
+
 @functools.partial(jax.jit, static_argnames=("block_g", "block_t", "interpret"))
-def frugal2u_update_blocked(
+def _frugal2u_update_blocked(
     items: Array, rand: Array, m: Array, step: Array, sign: Array, quantile: Array,
     *, block_g: int = 128, block_t: int = 256, interpret: bool = True,
 ):
-    """DEPRECATED: Frugal-2U with a materialized rand[T, G] operand.
-
-    Returns (m, step, sign), each [G]. Use frugal2u_update_blocked_fused.
-    """
     g = m.shape[0]
     dt = m.dtype
     items = items.astype(dt)
@@ -224,20 +256,39 @@ def frugal2u_update_blocked(
     return m2[:g], step2[:g], sign2[:g]
 
 
+def frugal2u_update_blocked(items, rand, m, step, sign, quantile, **kw):
+    """DEPRECATED: Frugal-2U with a materialized rand[T, G] operand.
+
+    Returns (m, step, sign), each [G]. Use frugal2u_update_blocked_fused.
+    Emits DeprecationWarning on every call.
+    """
+    _warn_rand_operand("frugal2u_update_blocked",
+                       "frugal2u_update_blocked_fused")
+    return _frugal2u_update_blocked(items, rand, m, step, sign, quantile, **kw)
+
+
 def frugal1u_update_auto(items, rand, m, quantile, **kw):
-    """DEPRECATED: rand-operand auto dispatch (use frugal1u_update_auto_fused)."""
+    """DEPRECATED: rand-operand auto dispatch (use frugal1u_update_auto_fused).
+
+    Emits DeprecationWarning on every call.
+    """
+    _warn_rand_operand("frugal1u_update_auto", "frugal1u_update_auto_fused")
     if _on_tpu():
-        return frugal1u_update_blocked(items, rand, m, quantile,
-                                       interpret=False, **kw)
+        return _frugal1u_update_blocked(items, rand, m, quantile,
+                                        interpret=False, **kw)
     q = jnp.broadcast_to(jnp.asarray(quantile, m.dtype), m.shape)
     return ref.frugal1u_ref(items.astype(m.dtype), rand.astype(m.dtype), m, q)
 
 
 def frugal2u_update_auto(items, rand, m, step, sign, quantile, **kw):
-    """DEPRECATED: rand-operand auto dispatch (use frugal2u_update_auto_fused)."""
+    """DEPRECATED: rand-operand auto dispatch (use frugal2u_update_auto_fused).
+
+    Emits DeprecationWarning on every call.
+    """
+    _warn_rand_operand("frugal2u_update_auto", "frugal2u_update_auto_fused")
     if _on_tpu():
-        return frugal2u_update_blocked(items, rand, m, step, sign, quantile,
-                                       interpret=False, **kw)
+        return _frugal2u_update_blocked(items, rand, m, step, sign, quantile,
+                                        interpret=False, **kw)
     q = jnp.broadcast_to(jnp.asarray(quantile, m.dtype), m.shape)
     return ref.frugal2u_ref(items.astype(m.dtype), rand.astype(m.dtype),
                             m, step, sign, q)

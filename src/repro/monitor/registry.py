@@ -1,22 +1,27 @@
-"""Training-time frugal monitor fleet.
+"""Training-time frugal monitor fleet — on the repro.api fleet facade.
 
 Groups tracked every step (each step contributes ONE item per group — exactly
 the paper's stream model):
 
-  activation absmax   per (stage-unit × kind)      -> q50 & q99 sketches
-  activation rms      per (stage-unit × kind)      -> q50 sketch
-  expert load         per (stage-unit × expert)    -> q50 & q99 sketches (MoE)
+  activation absmax   per (stage-unit × kind)      -> q99 fleet
+  activation rms      per (stage-unit × kind)      -> q50 fleet
+  expert load         per (stage-unit × expert)    -> q99 fleet (MoE)
   step wall-time      per host                     -> q99 sketch (straggler
                                                       detection, trainer-side)
+
+Each monitor is a jnp-backend QuantileFleet whose StreamCursor ticks once
+per train step: the step's uniform for lane g is counter_uniform(seed,
+step, g) — the same fused-RNG discipline the ingest kernels use, a few int
+ops per group inside the jitted step, and no per-step PRNG-key threading
+(the old scheme split a fresh key every step; the cursor made it
+redundant). QuantileFleet is a registered pytree, so the fleets ride in
+TrainState and update INSIDE the jitted train_step; checkpoints store them
+packed at 2 words per group plus the 3-word cursor (format 3).
 
 Total persistent state: 2 words per group (Frugal-2U), e.g. deepseek-v2-lite:
 26 units × 64 experts × 2 sketches + 2×26 activation groups ≈ 3.4k words —
 versus > 70k words for a t=20 GK summary per group (paper §6.1) and an
 unbounded window for exact percentile tracking.
-
-The sketches live inside TrainState and update INSIDE the jitted train_step
-(pure function), so telemetry costs a handful of VPU compare/selects — no
-host round-trip, no extra pass.
 """
 from __future__ import annotations
 
@@ -25,23 +30,31 @@ from typing import Any, Dict, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import rng as crng
-from repro.core.frugal import Frugal2UState, frugal2u_update
+from repro.api.fleet import QuantileFleet
+from repro.api.spec import FleetSpec
 
 Array = jax.Array
 
+# Per-monitor counter seeds: distinct so the three fleets' lane g streams
+# never alias (lanes within a fleet are already distinct by lane id).
+_SEED_ABSMAX, _SEED_RMS, _SEED_MOE = 101, 202, 303
+
 
 class TrainMonitors(NamedTuple):
-    act_absmax_q99: Optional[Frugal2UState]   # [n_act_groups]
-    act_rms_q50: Optional[Frugal2UState]      # [n_act_groups]
-    expert_load_q99: Optional[Frugal2UState]  # [n_moe_groups] ([] if no MoE)
+    act_absmax_q99: Optional[QuantileFleet]   # G = n_act_groups, Q = (0.99,)
+    act_rms_q50: Optional[QuantileFleet]      # G = n_act_groups, Q = (0.5,)
+    expert_load_q99: Optional[QuantileFleet]  # G = n_moe_groups (None if no MoE)
     n_act_groups: Array                       # static-ish ints kept as arrays
     n_moe_groups: Array
 
 
-def _mk_sketch(g: int, init: float = 0.0) -> Frugal2UState:
-    m = jnp.full((g,), init, jnp.float32)
-    return Frugal2UState(m=m, step=jnp.ones_like(m), sign=jnp.ones_like(m))
+def _mk_fleet(g: int, quantile: float, seed: int,
+              init: float = 0.0) -> Optional[QuantileFleet]:
+    if g == 0:
+        return None
+    return QuantileFleet.create(
+        FleetSpec(num_groups=g, quantiles=(quantile,), algo="2u",
+                  backend="jnp"), init=init, seed=seed)
 
 
 def _flatten_stats(stats: Dict[str, Any]):
@@ -84,42 +97,46 @@ def init_train_monitors(model, params, example_batch) -> TrainMonitors:
     n_act = a.shape[0]
     n_moe = 0 if l is None else l.shape[0]
     return TrainMonitors(
-        act_absmax_q99=_mk_sketch(n_act),
-        act_rms_q50=_mk_sketch(n_act),
-        expert_load_q99=_mk_sketch(n_moe) if n_moe else None,
+        act_absmax_q99=_mk_fleet(n_act, 0.99, _SEED_ABSMAX),
+        act_rms_q50=_mk_fleet(n_act, 0.5, _SEED_RMS),
+        expert_load_q99=_mk_fleet(n_moe, 0.99, _SEED_MOE),
         n_act_groups=jnp.asarray(n_act),
         n_moe_groups=jnp.asarray(n_moe),
     )
 
 
 def update_train_monitors(
-    mon: TrainMonitors, stats: Dict[str, Any], key: Array
+    mon: TrainMonitors, stats: Dict[str, Any], key: Optional[Array] = None
 ) -> TrainMonitors:
     """One frugal tick per group from this step's stats (inside train_step).
 
-    Uniforms come from the counter-hash discipline (core.rng.tick_uniforms)
-    rather than materialized threefry draws — the same fused-RNG scheme the
-    ingest kernels use, a few int ops per group inside the jitted step.
+    Each fleet's cursor supplies the tick — uniforms come from the counter
+    discipline counter_uniform(seed, step, lane), so no key is needed
+    (`key` is accepted for backward compatibility and ignored).
     """
+    del key
     a, r, l = _flatten_stats(stats)
-    k1, k2, k3 = jax.random.split(key, 3)
-    absmax_sk = frugal2u_update(
-        mon.act_absmax_q99, a, crng.tick_uniforms(k1, a.shape[0]), 0.99)
-    rms_sk = frugal2u_update(
-        mon.act_rms_q50, r, crng.tick_uniforms(k2, r.shape[0]), 0.5)
-    moe_sk = mon.expert_load_q99
-    if moe_sk is not None and l is not None:
-        moe_sk = frugal2u_update(
-            moe_sk, l, crng.tick_uniforms(k3, l.shape[0]), 0.99)
-    return mon._replace(act_absmax_q99=absmax_sk, act_rms_q50=rms_sk,
-                        expert_load_q99=moe_sk)
+    absmax_fl = mon.act_absmax_q99
+    if absmax_fl is not None:
+        absmax_fl = absmax_fl.tick_lanes(a)
+    rms_fl = mon.act_rms_q50
+    if rms_fl is not None:
+        rms_fl = rms_fl.tick_lanes(r)
+    moe_fl = mon.expert_load_q99
+    if moe_fl is not None and l is not None:
+        moe_fl = moe_fl.tick_lanes(l)
+    return mon._replace(act_absmax_q99=absmax_fl, act_rms_q50=rms_fl,
+                        expert_load_q99=moe_fl)
 
 
 def monitor_summary(mon: TrainMonitors) -> Dict[str, Array]:
+    def m(fleet):
+        return fleet.state.m if fleet is not None else jnp.zeros((0,))
+
     out = {
-        "act_absmax_q99": mon.act_absmax_q99.m,
-        "act_rms_q50": mon.act_rms_q50.m,
+        "act_absmax_q99": m(mon.act_absmax_q99),
+        "act_rms_q50": m(mon.act_rms_q50),
     }
     if mon.expert_load_q99 is not None:
-        out["expert_load_q99"] = mon.expert_load_q99.m
+        out["expert_load_q99"] = m(mon.expert_load_q99)
     return out

@@ -64,8 +64,10 @@ def _pad_lane_fill(field: str) -> float:
 @functools.lru_cache(maxsize=None)
 def _sharded_ingest_fn(mesh: Mesh, axis: str, algo: str, shard_g: int,
                        chunk_t: int):
-    def body(items, m, step, sign, quantile, seed, t0):
-        g0 = jax.lax.axis_index(axis) * shard_g
+    def body(items, m, step, sign, quantile, seed, t0, g0_base):
+        # g0_base shifts every shard when THIS WHOLE FLEET is itself a
+        # column slice of a larger one (the facade cursor's g_offset).
+        g0 = g0_base + jax.lax.axis_index(axis) * shard_g
         if algo == "1u":
             local = GroupedQuantileSketch(m=m, step=None, sign=None,
                                           quantile=quantile, algo="1u")
@@ -82,11 +84,12 @@ def _sharded_ingest_fn(mesh: Mesh, axis: str, algo: str, shard_g: int,
     fn = shard_map_compat(
         body, mesh=mesh,
         in_specs=(P(None, axis), state_spec, state_spec, state_spec,
-                  state_spec, P(), P()),
+                  state_spec, P(), P(), P()),
         out_specs=(state_spec, state_spec, state_spec))
     return jax.jit(fn)
 
 
+@jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class ShardedGroupFleet:
     """A GroupedQuantileSketch whose G axis lives sharded on a device mesh.
@@ -95,12 +98,26 @@ class ShardedGroupFleet:
     NamedSharding(mesh, P('groups')) where Gp = ceil(G / mesh.size) ·
     mesh.size; `num_groups` is the real (unpadded) G. All ingest entry
     points are bit-identical to the unsharded single-device path.
+
+    When the sketch is a multi-quantile lane plane (`lanes_per_group` = Q >
+    1, see GroupedQuantileSketch.create_lanes / repro.api.QuantileFleet),
+    the FLATTENED lane axis is what shards: `num_groups` counts real lanes,
+    a shard's `g_offset` is its absolute lane offset, and `_pad_items`
+    accepts [T, G] group columns which it fans out Q-fold on device before
+    placement. The counter RNG keys on absolute lane ids, so estimates are
+    invariant to how lanes land on devices.
+
+    Registered as a pytree (sketch leaves dynamic, layout static) so a
+    fleet can ride inside jitted steps and checkpoint pytrees.
     """
 
     sketch: GroupedQuantileSketch     # padded [Gp] leaves, device-placed
-    num_groups: int                   # real G (<= sketch.num_groups)
-    mesh: Mesh
-    axis: str = GROUP_AXIS
+    num_groups: int = dataclasses.field(metadata=dict(static=True))
+    mesh: Mesh = dataclasses.field(metadata=dict(static=True))
+    axis: str = dataclasses.field(metadata=dict(static=True),
+                                  default=GROUP_AXIS)
+    lanes_per_group: int = dataclasses.field(metadata=dict(static=True),
+                                             default=1)
 
     # ------------------------------------------------------------ properties
     @property
@@ -134,10 +151,18 @@ class ShardedGroupFleet:
 
     @staticmethod
     def from_sketch(sketch: GroupedQuantileSketch, mesh: Optional[Mesh] = None,
-                    axis: str = GROUP_AXIS) -> "ShardedGroupFleet":
-        """Shard an existing (host / single-device) sketch across `mesh`."""
+                    axis: str = GROUP_AXIS,
+                    lanes_per_group: int = 1) -> "ShardedGroupFleet":
+        """Shard an existing (host / single-device) sketch across `mesh`.
+
+        `lanes_per_group` marks the sketch as a (G × Q) lane plane whose
+        flattened lane axis is being sharded; ingest then accepts [T, G]
+        group columns (see class docstring)."""
         mesh = mesh if mesh is not None else group_mesh(axis_name=axis)
         g = sketch.num_groups
+        if g % lanes_per_group:
+            raise ValueError(f"sketch lanes {g} not divisible by "
+                             f"lanes_per_group={lanes_per_group}")
         n = mesh.shape[axis]
         gp = -(-g // n) * n
         sharding = NamedSharding(mesh, P(axis))
@@ -159,28 +184,35 @@ class ShardedGroupFleet:
                 m=m, step=place(sketch.step, "step"),
                 sign=place(sketch.sign, "sign"), quantile=q, algo="2u")
         return ShardedGroupFleet(sketch=padded, num_groups=g, mesh=mesh,
-                                 axis=axis)
+                                 axis=axis, lanes_per_group=lanes_per_group)
 
     # ---------------------------------------------------------------- ingest
     def _pad_items(self, items) -> Array:
         """Pad columns to the mesh multiple and place on the mesh. Accepts
-        [T, G] (real groups) or an already-padded/placed [T, Gp] array —
-        idempotent, so callers may pre-place items once and re-ingest them
-        (device_put onto the sharding they already carry is a no-op)."""
+        [T, G] group columns (fanned out Q-fold on device for a lane-plane
+        fleet), [T, L] real lanes, or an already-padded/placed [T, Gp]
+        array — idempotent, so callers may pre-place items once and
+        re-ingest them (device_put onto the sharding they already carry is
+        a no-op)."""
         items = jnp.asarray(items, jnp.float32)
         if items.ndim == 1:
             items = items[:, None]
         gp = self.padded_groups
-        if items.ndim != 2 or items.shape[1] not in (self.num_groups, gp):
+        q = self.lanes_per_group
+        cols = self.num_groups // q
+        ok = {self.num_groups, gp} | ({cols} if q > 1 else set())
+        if items.ndim != 2 or items.shape[1] not in ok:
             raise ValueError(
-                f"items shape {items.shape} != [T, {self.num_groups}]")
+                f"items shape {items.shape} != [T, {cols}]")
+        if q > 1 and items.shape[1] == cols:
+            items = jnp.repeat(items, q, axis=1)
         if items.shape[1] != gp:  # pad lanes get NaN items: bit-exact no-ops
             items = jnp.pad(items, ((0, 0), (0, gp - items.shape[1])),
                             constant_values=jnp.nan)
         return jax.device_put(items, NamedSharding(self.mesh, P(None, self.axis)))
 
-    def _run_sharded(self, items: Array, seed, t0, chunk_t: int
-                     ) -> "ShardedGroupFleet":
+    def _run_sharded(self, items: Array, seed, t0, chunk_t: int,
+                     g_offset=0) -> "ShardedGroupFleet":
         fn = _sharded_ingest_fn(self.mesh, self.axis, self.algo,
                                 self.shard_groups, chunk_t)
         sk = self.sketch
@@ -189,7 +221,8 @@ class ShardedGroupFleet:
         sign = sk.sign if sk.sign is not None else one
         m, step, sign = fn(items, sk.m, step, sign, sk.quantile,
                            jnp.asarray(seed, jnp.int32),
-                           jnp.asarray(t0, jnp.int32))
+                           jnp.asarray(t0, jnp.int32),
+                           jnp.asarray(g_offset, jnp.int32))
         if self.algo == "1u":
             new = dataclasses.replace(sk, m=m)
         else:
@@ -198,36 +231,42 @@ class ShardedGroupFleet:
 
     def ingest_array(self, items, key: Optional[Array] = None,
                      chunk_t: int = 4096, *, seed=None,
-                     t_offset: int = 0) -> "ShardedGroupFleet":
+                     t_offset: int = 0,
+                     g_offset: int = 0) -> "ShardedGroupFleet":
         """Sharded equivalent of core.streaming.ingest_array: every device
         scans its own [chunk_t, G/n] slabs; no collectives. Bit-identical to
         the unsharded call for the same key. `t_offset` is the absolute
         stream tick of items[0] — pass the running total when continuing a
         stream across calls, otherwise a same-seed second call would replay
-        the first call's uniforms."""
+        the first call's uniforms. `g_offset` shifts every shard's lane keys
+        when this whole fleet is a column slice of a larger one (same
+        meaning as the unsharded entry points)."""
         if chunk_t <= 0:
             raise ValueError(f"chunk_t must be positive, got {chunk_t}")
         if seed is None:
             assert key is not None, "need key= or seed="
             seed = crng.seed_from_key(key)
         return self._run_sharded(self._pad_items(items), seed,
-                                 crng.wrap_i32(t_offset), chunk_t)
+                                 crng.wrap_i32(t_offset), chunk_t,
+                                 crng.wrap_i32(g_offset))
 
     def ingest_stream(self, chunks: Iterable, key: Optional[Array] = None,
-                      chunk_t: int = 4096, *, seed=None, t_offset: int = 0
-                      ) -> "ShardedGroupFleet":
+                      chunk_t: int = 4096, *, seed=None, t_offset: int = 0,
+                      g_offset: int = 0) -> "ShardedGroupFleet":
         """Sharded equivalent of core.streaming.ingest_stream: the same host
         re-chunker (identical blocking), one sharded fused dispatch per
         [chunk_t, G] block. `t_offset` continues an earlier stream's tick
-        counter (see ingest_array)."""
+        counter and `g_offset` shifts the fleet's lane keys (see
+        ingest_array)."""
         if seed is None:
             assert key is not None, "need key= or seed="
             seed = crng.seed_from_key(key)
         fleet = self
-        for block, t0 in streaming.rechunk_blocks(chunks, self.num_groups,
-                                                  chunk_t):
+        cols = self.num_groups // self.lanes_per_group
+        for block, t0 in streaming.rechunk_blocks(chunks, cols, chunk_t):
             fleet = fleet._run_sharded(fleet._pad_items(block), seed,
-                                       crng.wrap_i32(t_offset + t0), chunk_t)
+                                       crng.wrap_i32(t_offset + t0), chunk_t,
+                                       crng.wrap_i32(g_offset))
         return fleet
 
     # ----------------------------------------------------------------- reads

@@ -1,19 +1,20 @@
-"""SLOFleet — per-route serving SLO quantiles on the vectorized frugal path.
+"""SLOFleet — per-route serving SLO quantiles on the fleet facade.
 
-Replaces the engine's per-route scalar Python loops (`_Frugal2UScalar` /
-`RouteStats`, each with its own numpy Generator) with ONE Frugal-2U fleet
-whose group lanes are (route × metric) pairs: lane = route_idx · n_metrics +
-metric_idx. Updates run through `core.frugal.frugal2u_update` — the same
-vectorized tick every other consumer uses — so a serve step's worth of SLO
-observations costs one jitted compare/select bundle over all lanes instead
-of len(events) Python interpreter round-trips.
+A thin route-table + event-buffer layer over ONE repro.api.QuantileFleet:
+routes are the fleet's GROUPS and the metric column is its QUANTILE lane —
+(route × metric) is exactly the facade's (group × quantile) lane plane,
+lane = route_idx · n_metrics + metric_idx. Updates run through the fleet's
+event-stream lane ticks (`tick_lanes` / `tick_lanes_sparse`), so a serve
+step's worth of SLO observations costs one jitted compare/select bundle
+over all lanes instead of len(events) Python interpreter round-trips.
 
-RNG discipline: each lane keeps its own tick counter and draws uniform
-`counter_uniform(seed, tick_g, g)` (core.rng) — keyed on the ABSOLUTE lane
-index, so every (route, metric) pair gets an independent, reproducible
-uniform stream by construction. This also fixes the legacy seeding bug where
-route N's third metric (seeded `len(route_stats)+2`) shared a numpy seed
-with route N+2's first metric.
+RNG discipline (the facade's per-lane StreamCursor): each lane keeps its
+own tick counter and draws uniform `counter_uniform(seed, tick_g, g)`
+(core.rng) — keyed on the ABSOLUTE lane index, so every (route, metric)
+pair gets an independent, reproducible uniform stream by construction.
+This also fixes the legacy seeding bug where route N's third metric
+(seeded `len(route_stats)+2`) shared a numpy seed with route N+2's first
+metric.
 
 Events arrive scalar (one request finishing, one decode tick) and are
 buffered host-side; `flush()` packs them into per-round [C]-lane batches
@@ -24,25 +25,26 @@ trajectory equals the paper's scalar Algorithm 3 run per lane.
 
 Memory: sketch state is exactly 2 words per (route × metric) lane — `m`
 plus the packed (step, sign) word (core.packing) — in checkpoints, via the
-standard format-2 manifest (train/checkpoint.py packs the Frugal2UState
+standard format-3 manifest (train/checkpoint.py packs the Frugal2UState
 node). A 10⁶-route deployment with 3 metrics holds 24 MB of quantile
 state (2 words × 4 B × 3 × 10⁶ lanes); checkpoints add one int32 tick
-word per lane (the lane's RNG stream position — irreducible if restored
-fleets must continue their exact trajectories) for 36 MB on disk. The
-fleet state is a pytree of [C]-lane arrays, so it shards over a group
-mesh (parallel/group_sharding.py) like any other sketch fleet.
+word per lane (the lane's RNG stream position — the facade cursor's
+t_offset, irreducible if restored fleets must continue their exact
+trajectories) for 36 MB on disk.
 """
 from __future__ import annotations
 
 import json
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Sequence, Tuple
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import rng as crng
-from repro.core.frugal import Frugal2UState, frugal2u_update
+from repro.api.fleet import QuantileFleet
+from repro.api.spec import FleetSpec, StreamCursor
+from repro.core.frugal import Frugal2UState
+from repro.core.sketch import GroupedQuantileSketch
 
 Array = jax.Array
 
@@ -54,30 +56,8 @@ DEFAULT_METRICS: Tuple[Tuple[str, float], ...] = (
 )
 
 
-@jax.jit
-def _slo_round(m, step, sign, ticks, quantile, items, mask, seed):
-    """One vectorized tick over all lanes: lanes with NaN items are no-ops
-    and keep their tick counter (mask 0), so each lane's uniform stream is
-    dense in its own event count."""
-    g_ids = jnp.arange(m.shape[0], dtype=jnp.int32)
-    r = crng.counter_uniform(seed, ticks, g_ids)
-    st = frugal2u_update(Frugal2UState(m, step, sign), items, r, quantile)
-    return st.m, st.step, st.sign, ticks + mask
-
-
-@jax.jit
-def _slo_round_sparse(m_s, step_s, sign_s, ticks_s, q_s, lanes, items, mask,
-                      seed):
-    """The same tick on a gathered O(events) lane slice — uniforms still key
-    on the ABSOLUTE lane index and the lane's own tick, so the trajectory is
-    bit-identical to the dense round."""
-    r = crng.counter_uniform(seed, ticks_s, lanes)
-    st = frugal2u_update(Frugal2UState(m_s, step_s, sign_s), items, r, q_s)
-    return st.m, st.step, st.sign, ticks_s + mask
-
-
 class SLOFleet:
-    """Routes × metrics Frugal-2U lanes with buffered vectorized updates."""
+    """Routes × metrics frugal lanes with buffered vectorized updates."""
 
     def __init__(self, metrics: Sequence[Tuple[str, float]] = DEFAULT_METRICS,
                  seed: int = 0, capacity: int = 64):
@@ -91,39 +71,56 @@ class SLOFleet:
         self.seed = int(seed)
         self._routes: Dict[str, int] = {}
         self._pending: List[Tuple[int, float]] = []
-        self._alloc(max(1, int(capacity)))
+        self._fleet = QuantileFleet.create(
+            self._spec(max(1, int(capacity))), seed=self.seed,
+            per_lane_clock=True)
 
-    # ------------------------------------------------------------- capacity
-    def _tile_q(self, n_routes: int) -> np.ndarray:
-        """Per-lane quantile targets for `n_routes` routes — the single
-        definition of the lane layout (route-major, metric-minor)."""
-        return np.tile(np.asarray([q for _, q in self.metrics], np.float32),
-                       n_routes)
+    def _spec(self, cap_routes: int) -> FleetSpec:
+        """Fleet spec for `cap_routes` route groups: one quantile lane per
+        metric — the single definition of the lane layout (route-major,
+        metric-minor: lane = route_idx · n_metrics + metric_idx)."""
+        return FleetSpec(num_groups=cap_routes,
+                         quantiles=tuple(q for _, q in self.metrics),
+                         algo="2u", backend="jnp")
 
-    def _alloc(self, cap_routes: int):
-        c = cap_routes * self.n_metrics
-        self._cap_routes = cap_routes
-        self._m = jnp.zeros((c,), jnp.float32)
-        self._step = jnp.ones((c,), jnp.float32)
-        self._sign = jnp.ones((c,), jnp.float32)
-        self._ticks = jnp.zeros((c,), jnp.int32)
-        self._q = jnp.asarray(self._tile_q(cap_routes))
+    # ----------------------------------------------- facade state, projected
+    # The fleet owns all device state; these views keep the historical
+    # attribute surface (tests and dashboards read them).
+    @property
+    def _cap_routes(self) -> int:
+        return self._fleet.num_groups
+
+    @property
+    def _m(self) -> Array:
+        return self._fleet.state.m
+
+    @property
+    def _step(self) -> Array:
+        return self._fleet.state.step
+
+    @property
+    def _sign(self) -> Array:
+        return self._fleet.state.sign
+
+    @property
+    def _ticks(self) -> Array:
+        return self._fleet.cursor.t_offset
+
+    @property
+    def _q(self) -> Array:
+        return jnp.broadcast_to(
+            jnp.asarray(self._fleet.state.quantile, jnp.float32),
+            self._fleet.state.m.shape)
 
     def _grow(self, min_routes: int):
         """Double route capacity. Lane ids are route_idx·n_metrics+metric_idx
         — independent of capacity — so growth appends lanes without touching
-        any existing lane's RNG stream."""
+        any existing lane's state or RNG stream (QuantileFleet.grow_groups
+        guarantees exactly this)."""
         new_cap = self._cap_routes
         while new_cap < min_routes:
             new_cap *= 2
-        pad = (new_cap - self._cap_routes) * self.n_metrics
-        qs = self._tile_q(new_cap - self._cap_routes)
-        self._m = jnp.concatenate([self._m, jnp.zeros((pad,), jnp.float32)])
-        self._step = jnp.concatenate([self._step, jnp.ones((pad,), jnp.float32)])
-        self._sign = jnp.concatenate([self._sign, jnp.ones((pad,), jnp.float32)])
-        self._ticks = jnp.concatenate([self._ticks, jnp.zeros((pad,), jnp.int32)])
-        self._q = jnp.concatenate([self._q, jnp.asarray(qs)])
-        self._cap_routes = new_cap
+        self._fleet = self._fleet.grow_groups(new_cap)
 
     # --------------------------------------------------------------- routes
     @property
@@ -195,7 +192,6 @@ class SLOFleet:
                 rounds.append([])
             rounds[r].append((lane, value))
         c = self._cap_routes * self.n_metrics
-        seed = jnp.int32(self.seed)
         if c <= self.DENSE_LANES_MAX:
             for evs in rounds:
                 items = np.full((c,), np.nan, np.float32)
@@ -203,18 +199,18 @@ class SLOFleet:
                 for lane, value in evs:
                     items[lane] = value
                     occ[lane] = 1
-                self._m, self._step, self._sign, self._ticks = _slo_round(
-                    self._m, self._step, self._sign, self._ticks, self._q,
-                    jnp.asarray(items), jnp.asarray(occ), seed)
+                self._fleet = self._fleet.tick_lanes(jnp.asarray(items),
+                                                     jnp.asarray(occ))
             return
         for evs in rounds:
-            self._flush_round_sparse(evs, c, seed)
+            self._flush_round_sparse(evs, c)
 
-    def _flush_round_sparse(self, evs: List[Tuple[int, float]], c: int, seed):
-        """O(events) round: gather the event lanes, tick them, scatter back.
-        The lane list is padded to a power of two (bounding jit recompiles)
-        with a lane that is NOT in the round, so the scatter writes every
-        padded slot's own unchanged state — no duplicate-index races."""
+    def _flush_round_sparse(self, evs: List[Tuple[int, float]], c: int):
+        """O(events) round: the fleet gathers the event lanes, ticks them,
+        scatters back. The lane list is padded to a power of two (bounding
+        jit recompiles) with a lane that is NOT in the round, so the scatter
+        writes every padded slot's own unchanged state — no duplicate-index
+        races."""
         k = len(evs)
         kp = 1 << max(0, (k - 1)).bit_length() if k > 1 else 1
         if k == c:
@@ -230,15 +226,8 @@ class SLOFleet:
                 [vals, np.full((kp - k,), np.nan, np.float32)])
         mask = np.zeros((kp,), np.int32)
         mask[:k] = 1
-        lanes_j = jnp.asarray(lanes)
-        m, step, sign, ticks = _slo_round_sparse(
-            self._m[lanes_j], self._step[lanes_j], self._sign[lanes_j],
-            self._ticks[lanes_j], self._q[lanes_j], lanes_j,
-            jnp.asarray(vals), jnp.asarray(mask), seed)
-        self._m = self._m.at[lanes_j].set(m)
-        self._step = self._step.at[lanes_j].set(step)
-        self._sign = self._sign.at[lanes_j].set(sign)
-        self._ticks = self._ticks.at[lanes_j].set(ticks)
+        self._fleet = self._fleet.tick_lanes_sparse(
+            jnp.asarray(lanes), jnp.asarray(vals), jnp.asarray(mask))
 
     # ---------------------------------------------------------------- reads
     def estimate(self, route: str, metric: str) -> float:
@@ -268,7 +257,7 @@ class SLOFleet:
     def memory_words(self) -> int:
         """Persistent SKETCH words per (route × metric) lane — 2, like the
         paper (checkpoints add one int32 RNG-tick word per lane on top)."""
-        return 2
+        return self._fleet.memory_words()
 
     def state_words(self) -> int:
         """Total persistent sketch words for the registered routes
@@ -278,11 +267,11 @@ class SLOFleet:
     # -------------------------------------------------------- serialization
     def checkpoint_state(self) -> dict:
         """Pytree for train.checkpoint.save_checkpoint: the Frugal2UState
-        node serializes as 2 words/lane (format-2 packing) plus the per-lane
-        RNG tick word; the route table rides as a uint8 JSON blob leaf so
-        the whole fleet is one pytree. The per-lane quantiles are NOT stored
-        — they are a pure tiling of the metrics list (already in the blob)
-        and are rebuilt on restore."""
+        node serializes as 2 words/lane (format-3 packing) plus the per-lane
+        RNG tick word (the fleet cursor's t_offset); the route table rides
+        as a uint8 JSON blob leaf so the whole fleet is one pytree. The
+        per-lane quantiles are NOT stored — they are a pure tiling of the
+        metrics list (already in the blob) and are rebuilt on restore."""
         self.flush()
         blob = np.frombuffer(
             json.dumps({"routes": self.routes(),
@@ -302,12 +291,17 @@ class SLOFleet:
         fleet = cls(metrics=[tuple(mq) for mq in meta["metrics"]],
                     seed=int(meta["seed"]), capacity=1)
         sk = state["sketch"]
-        fleet._m = jnp.asarray(sk.m, jnp.float32)
-        fleet._step = jnp.asarray(sk.step, jnp.float32)
-        fleet._sign = jnp.asarray(sk.sign, jnp.float32)
-        fleet._ticks = jnp.asarray(state["ticks"], jnp.int32)
-        fleet._cap_routes = fleet._m.shape[0] // fleet.n_metrics
-        fleet._q = jnp.asarray(fleet._tile_q(fleet._cap_routes))
+        cap = int(np.shape(sk.m)[0]) // fleet.n_metrics
+        spec = fleet._spec(cap)
+        lane_sk = GroupedQuantileSketch(
+            m=jnp.asarray(sk.m, jnp.float32),
+            step=jnp.asarray(sk.step, jnp.float32),
+            sign=jnp.asarray(sk.sign, jnp.float32),
+            quantile=jnp.asarray(spec.lane_quantiles()), algo="2u")
+        cursor = StreamCursor.create(
+            seed=meta["seed"],
+            t_offset=jnp.asarray(state["ticks"], jnp.int32))
+        fleet._fleet = QuantileFleet(state=lane_sk, cursor=cursor, spec=spec)
         fleet._routes = {r: i for i, r in enumerate(meta["routes"])}
         return fleet
 

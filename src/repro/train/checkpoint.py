@@ -25,43 +25,93 @@ from typing import Any, Optional, Tuple
 import jax
 import numpy as np
 
+from typing import NamedTuple
+
 from repro.core.frugal import Frugal2UState
 from repro.core.packing import PackedFrugal2UState, pack_frugal2u, unpack_frugal2u
+from repro.core.sketch import GroupedQuantileSketch, PackedSketchState
+
+_SKETCH_NODES = (Frugal2UState, GroupedQuantileSketch)
+
+
+class _PackedSketchNode(NamedTuple):
+    """On-disk form of a GroupedQuantileSketch node (format 3): same leaves
+    as core.sketch.PackedSketchState, but a distinct type so restore knows
+    the PACKER produced it — a user tree that already holds a
+    PackedSketchState (e.g. ShardedGroupFleet.packed()) passes through
+    untouched in both directions."""
+
+    m: object
+    step_sign: object
+    quantile: object
 
 
 def _pack_sketches(tree):
-    """Frugal-2U monitor fleets serialize as TWO words per group (m + packed
-    step/sign, core.packing) — the paper's memory claim holds on disk too."""
+    """Frugal sketch nodes serialize PACKED — the paper's memory claim holds
+    on disk too. Frugal-2U raw-state nodes (monitor fleets of old) pack to
+    two words per group (m + packed step/sign, core.packing); whole
+    GroupedQuantileSketch nodes (repro.api fleet lane planes, format 3)
+    pack to their 1-2 words per lane via sketch.packed()."""
+    def pack(x):
+        if isinstance(x, Frugal2UState):
+            return pack_frugal2u(x)
+        if isinstance(x, GroupedQuantileSketch):
+            return _PackedSketchNode(*x.packed())
+        return x
+
     return jax.tree_util.tree_map(
-        lambda x: pack_frugal2u(x) if isinstance(x, Frugal2UState) else x,
-        tree, is_leaf=lambda x: isinstance(x, Frugal2UState))
+        pack, tree, is_leaf=lambda x: isinstance(x, _SKETCH_NODES))
 
 
 def _unpack_sketches(tree):
+    def unpack(x):
+        if isinstance(x, PackedFrugal2UState):
+            return unpack_frugal2u(x)
+        if isinstance(x, _PackedSketchNode):
+            return GroupedQuantileSketch.from_packed(PackedSketchState(*x))
+        return x
+
     return jax.tree_util.tree_map(
-        lambda x: unpack_frugal2u(x) if isinstance(x, PackedFrugal2UState) else x,
-        tree, is_leaf=lambda x: isinstance(x, PackedFrugal2UState))
+        unpack, tree,
+        is_leaf=lambda x: isinstance(x, (PackedFrugal2UState,
+                                         _PackedSketchNode)))
 
 
 def _pack_sketch_shardings(tree):
     """Structure-only analogue of _pack_sketches for sharding pytrees: the
     leaves are NamedShardings, so just re-nest them (step's placement serves
     for the packed step_sign word)."""
+    def pack(x):
+        if isinstance(x, Frugal2UState):
+            return PackedFrugal2UState(m=x.m, step_sign=x.step)
+        if isinstance(x, GroupedQuantileSketch):
+            return _PackedSketchNode(m=x.m, step_sign=x.step,
+                                     quantile=x.quantile)
+        return x
+
     return jax.tree_util.tree_map(
-        lambda x: PackedFrugal2UState(m=x.m, step_sign=x.step)
-        if isinstance(x, Frugal2UState) else x,
-        tree, is_leaf=lambda x: isinstance(x, Frugal2UState))
+        pack, tree, is_leaf=lambda x: isinstance(x, _SKETCH_NODES))
 
 
 def _pack_sketch_template(tree):
     """Structure-only pack for the restore `like` tree: no math on leaves, so
     abstract templates (ShapeDtypeStruct from eval_shape / dry-run builders)
     work — restore only reads .shape/.dtype off `like`."""
+    def pack(x):
+        if isinstance(x, Frugal2UState):
+            return PackedFrugal2UState(
+                m=x.m,
+                step_sign=jax.ShapeDtypeStruct(x.step.shape, jax.numpy.int32))
+        if isinstance(x, GroupedQuantileSketch):
+            return _PackedSketchNode(
+                m=x.m,
+                step_sign=None if x.step is None else
+                jax.ShapeDtypeStruct(x.step.shape, jax.numpy.int32),
+                quantile=x.quantile)
+        return x
+
     return jax.tree_util.tree_map(
-        lambda x: PackedFrugal2UState(
-            m=x.m, step_sign=jax.ShapeDtypeStruct(x.step.shape, jax.numpy.int32))
-        if isinstance(x, Frugal2UState) else x,
-        tree, is_leaf=lambda x: isinstance(x, Frugal2UState))
+        pack, tree, is_leaf=lambda x: isinstance(x, _SKETCH_NODES))
 
 
 def _flatten(tree):
@@ -93,9 +143,15 @@ def save_checkpoint(ckpt_dir: str, step: int, state: Any, keep: int = 3,
         "treedef": str(treedef),
         "shapes": [list(np.shape(a)) for a in leaves],
         "dtypes": [str(np.asarray(l).dtype) for l in leaves],
-        # format 2: Frugal2UState nodes stored packed (2 leaves: m, step_sign)
-        # instead of unpacked (3 leaves) — see _pack_sketches.
-        "format": 2,
+        # format 3 (supersets 2): Frugal2UState nodes stored packed (2
+        # leaves: m, step_sign) instead of unpacked (3 leaves), and whole
+        # GroupedQuantileSketch nodes (repro.api fleet lane planes) stored
+        # as PackedSketchState (m, step_sign, quantile — 1-2 words per
+        # lane); StreamCursor nodes ride as 3 int32 leaves. Trees without
+        # sketch/cursor nodes are laid out identically to format 2, and
+        # restore keys on leaf layout, so format-2 checkpoints of such
+        # trees stay readable.
+        "format": 3,
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)

@@ -23,7 +23,7 @@ def make_train_step(model, optimizer: Optimizer, clip_mode: str = "quantile",
     """Returns train_step(state, batch) -> (state, metrics)."""
 
     def train_step(state: TrainState, batch: Dict[str, Any]):
-        rng, k_clip, k_mon = jax.random.split(state.rng, 3)
+        rng, k_clip = jax.random.split(state.rng)
 
         def loss_fn(p):
             return model.loss(p, batch)
@@ -44,9 +44,11 @@ def make_train_step(model, optimizer: Optimizer, clip_mode: str = "quantile",
         params, opt_state = optimizer.update(grads, state.opt_state,
                                              state.params, state.step)
 
+        # Monitor fleets draw uniforms from their own stream cursors
+        # (counter_uniform(seed, step, lane)) — no key threading.
         monitors = state.monitors
         if monitors is not None:
-            monitors = update_train_monitors(monitors, aux["stats"], k_mon)
+            monitors = update_train_monitors(monitors, aux["stats"])
 
         new_state = TrainState(params=params, opt_state=opt_state,
                                step=state.step + 1, rng=rng,

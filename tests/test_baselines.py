@@ -31,7 +31,7 @@ def test_gk_budget_enforced(uniform_stream):
     gk = GKSummary(eps=0.001, max_tuples=20)
     gk.extend(uniform_stream)
     assert len(gk.tuples) <= 20
-    assert gk.memory_words <= 60  # 3 words per tuple: 10-30x frugal's 1-2
+    assert gk.memory_words() <= 60  # 3 words per tuple: 10-30x frugal's 1-2
     assert gk.eps > 0.001  # paper §6.1: epsilon was inflated to fit
 
 
@@ -81,5 +81,5 @@ def test_memory_hierarchy_matches_paper_narrative(uniform_stream):
     qd.extend(uniform_stream)
     assert sk1.memory_words() == 1
     assert sk2.memory_words() == 2
-    assert gk.memory_words >= 10 * sk2.memory_words()
-    assert qd.memory_words >= 10 * sk2.memory_words()
+    assert gk.memory_words() >= 10 * sk2.memory_words()
+    assert qd.memory_words() >= 10 * sk2.memory_words()

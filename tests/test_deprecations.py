@@ -1,0 +1,77 @@
+"""The rand-operand kernel entry points are deprecation shims: every call
+must emit DeprecationWarning (pinned here so a later PR can delete the
+paths knowing nothing silent depends on them), while the fused paths and
+the facade stay warning-free."""
+import warnings
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import (
+    frugal1u_update_auto,
+    frugal1u_update_blocked,
+    frugal2u_update_auto,
+    frugal2u_update_blocked,
+    frugal1u_update_auto_fused,
+)
+
+G, T = 8, 16
+
+
+def _operands():
+    rng = np.random.default_rng(0)
+    items = jnp.asarray(rng.integers(0, 100, (T, G)), jnp.float32)
+    rand = jnp.asarray(rng.random((T, G)), jnp.float32)
+    m = jnp.zeros((G,), jnp.float32)
+    one = jnp.ones((G,), jnp.float32)
+    q = jnp.full((G,), 0.5, jnp.float32)
+    return items, rand, m, one, q
+
+
+@pytest.mark.parametrize("call", ["1u_blocked", "2u_blocked", "1u_auto",
+                                  "2u_auto"])
+def test_rand_operand_paths_warn(call):
+    items, rand, m, one, q = _operands()
+    with pytest.warns(DeprecationWarning, match="rand\\[T, G\\] operand"):
+        if call == "1u_blocked":
+            frugal1u_update_blocked(items, rand, m, q, interpret=True)
+        elif call == "2u_blocked":
+            frugal2u_update_blocked(items, rand, m, one, one, q,
+                                    interpret=True)
+        elif call == "1u_auto":
+            frugal1u_update_auto(items, rand, m, q)
+        else:
+            frugal2u_update_auto(items, rand, m, one, one, q)
+
+
+def test_warning_fires_on_every_call_not_just_trace():
+    """jit caching must not swallow the warning after the first call."""
+    items, rand, m, one, q = _operands()
+    for _ in range(2):
+        with pytest.warns(DeprecationWarning):
+            frugal1u_update_blocked(items, rand, m, q, interpret=True)
+
+
+def test_fused_and_facade_paths_are_warning_free():
+    items, _, m, _, q = _operands()
+    from repro.api import FleetSpec, QuantileFleet
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        frugal1u_update_auto_fused(items, m, q, key=jax.random.PRNGKey(0))
+        fleet = QuantileFleet.create(FleetSpec(num_groups=G), seed=0)
+        fleet.ingest(np.asarray(items))
+
+
+def test_deprecated_path_still_computes_correctly():
+    """Shim ≠ stub: the deprecated path keeps returning the oracle result
+    until it is actually removed."""
+    items, rand, m, one, q = _operands()
+    from repro.kernels.ref import frugal1u_ref
+
+    with pytest.warns(DeprecationWarning):
+        got = frugal1u_update_blocked(items, rand, m, q, interpret=True)
+    want = frugal1u_ref(items, rand, m, q)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

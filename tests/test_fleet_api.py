@@ -1,0 +1,384 @@
+"""QuantileFleet facade (repro.api): the spec is bit-exactness.
+
+A Q=1 fleet must reproduce the legacy entry points' trajectories bit-for-bit
+(ingest_stream / sketch.process / ShardedGroupFleet) for any chunking × mesh;
+Q>1 lanes must be invariant to backend, chunking, and lane-shard layout;
+cursors must checkpoint and resume bit-exactly. The multi-device cases run
+wherever >= 2 devices exist (the multi-device CI job forces 8)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.api import (FleetSpec, FrugalEstimator, QuantileEstimator,
+                       QuantileFleet, StreamCursor)
+from repro.core import GroupedQuantileSketch, ingest_array, ingest_stream
+from repro.core import rng as crng
+from repro.parallel import ShardedGroupFleet, group_mesh
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+N_DEV = len(jax.devices())
+multidevice = pytest.mark.skipif(
+    N_DEV < 2,
+    reason="needs >= 2 devices — run under "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+           "(the multi-device CI job does)")
+
+
+def _items(t, g, seed=0, domain=800):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, domain, (t, g)).astype(np.float32)
+
+
+def _seed(key):
+    return int(np.asarray(crng.seed_from_key(key)))
+
+
+# ------------------------------------------------ Q=1 legacy bit-exactness
+@pytest.mark.parametrize("algo", ["1u", "2u"])
+@pytest.mark.parametrize("backend", ["jnp", "fused"])
+def test_q1_fleet_reproduces_legacy_sketch_bit_for_bit(algo, backend):
+    t, g = 350, 23
+    items = _items(t, g, seed=1)
+    key = jax.random.PRNGKey(3)
+    legacy = GroupedQuantileSketch.create(g, quantile=0.7, algo=algo) \
+        .process(jnp.asarray(items), key)
+    spec = FleetSpec(num_groups=g, quantiles=(0.7,), algo=algo,
+                     backend=backend, chunk_t=64)
+    fleet = QuantileFleet.create(spec, seed=_seed(key))
+    fleet = fleet.ingest(items[:100]).ingest(items[100:])
+    np.testing.assert_array_equal(fleet.estimate(0.7), np.asarray(legacy.m))
+
+
+@pytest.mark.parametrize("chunk_t", [32, 100, 1024])
+def test_q1_ingest_stream_matches_legacy_ingest_stream(chunk_t):
+    t, g = 500, 17
+    items = _items(t, g, seed=2)
+    key = jax.random.PRNGKey(5)
+    sk = GroupedQuantileSketch.create(g, quantile=0.9, algo="2u")
+    legacy = ingest_stream(sk, [items[:123], items[123:]], key,
+                           chunk_t=chunk_t)
+    spec = FleetSpec(num_groups=g, quantiles=(0.9,), chunk_t=chunk_t)
+    fleet = QuantileFleet.create(spec, seed=_seed(key))
+    fleet = fleet.ingest_stream([items[:123], items[123:]])
+    np.testing.assert_array_equal(fleet.estimate(0.9), np.asarray(legacy.m))
+    sk_f = fleet._lane_sketch()
+    np.testing.assert_array_equal(np.asarray(sk_f.step),
+                                  np.asarray(legacy.step))
+    np.testing.assert_array_equal(np.asarray(sk_f.sign),
+                                  np.asarray(legacy.sign))
+
+
+def test_q1_sharded_fleet_reproduces_sharded_legacy():
+    t, g = 200, 13
+    items = _items(t, g, seed=3)
+    key = jax.random.PRNGKey(1)
+    mesh = group_mesh(1)
+    legacy = ShardedGroupFleet.create(g, quantile=0.5, algo="2u", mesh=mesh)
+    legacy = legacy.ingest_array(items, key, chunk_t=48)
+    spec = FleetSpec(num_groups=g, quantiles=(0.5,), backend="sharded",
+                     chunk_t=48, mesh=mesh)
+    fleet = QuantileFleet.create(spec, seed=_seed(key)).ingest(items)
+    np.testing.assert_array_equal(fleet.estimate(0.5), legacy.estimate())
+
+
+# ------------------------------------------------- Q>1 lane-plane invariance
+def test_multi_q_backends_agree_bit_for_bit():
+    t, g = 300, 9
+    items = _items(t, g, seed=4)
+    qs = (0.25, 0.5, 0.95)
+    fleets = []
+    for backend, chunk in (("jnp", 4096), ("fused", 57), ("fused", 300)):
+        spec = FleetSpec(num_groups=g, quantiles=qs, backend=backend,
+                         chunk_t=chunk)
+        fl = QuantileFleet.create(spec, seed=11)
+        fl = fl.ingest(items[:87]).ingest_stream([items[87:200],
+                                                  items[200:]])
+        fleets.append(fl.estimate())
+    np.testing.assert_array_equal(fleets[0], fleets[1])
+    np.testing.assert_array_equal(fleets[0], fleets[2])
+    assert fleets[0].shape == (g, len(qs))
+
+
+def test_multi_q_lane_hashes_its_own_stream():
+    """Two lanes of one group with the SAME target still get distinct
+    uniform streams (absolute lane-id keying) — their trajectories differ."""
+    t = 400
+    items = _items(t, 1, seed=5)
+    spec = FleetSpec(num_groups=1, quantiles=(0.5, 0.5), backend="jnp")
+    fl = QuantileFleet.create(spec, seed=0).ingest(items)
+    a, b = fl.estimate()[0]
+    # same item stream, same target, different uniforms -> (almost surely)
+    # different walks; bit-equality would mean the lanes shared a stream
+    sk = fl._lane_sketch()
+    assert not np.array_equal(np.asarray(sk.step[0:1]),
+                              np.asarray(sk.step[1:2])) or a != b
+
+
+def test_multi_q_invariant_to_lane_shard_layout_single_device():
+    """mesh=1 sharded lane plane == unsharded, bit-for-bit (the g_offset
+    slice invariant that multi-device meshes build on)."""
+    t, g = 180, 10
+    items = _items(t, g, seed=6)
+    qs = (0.5, 0.99)
+    ref = QuantileFleet.create(
+        FleetSpec(num_groups=g, quantiles=qs, backend="fused", chunk_t=64),
+        seed=7).ingest(items)
+    sh = QuantileFleet.create(
+        FleetSpec(num_groups=g, quantiles=qs, backend="sharded", chunk_t=64,
+                  mesh=group_mesh(1)), seed=7).ingest(items)
+    np.testing.assert_array_equal(ref.estimate(), sh.estimate())
+
+
+def test_g_offset_cursor_respected_on_every_backend():
+    """Regression: the sharded branch used to DROP cursor.g_offset, so a
+    column-slice fleet silently hashed the wrong lane streams on backend
+    'sharded' only. All three backends must agree for non-zero g_offset."""
+    t, g, off = 90, 5, 8
+    items = _items(t, g, seed=12)
+    qs = (0.5, 0.9)
+    outs = []
+    for backend, mesh in (("jnp", None), ("fused", None),
+                          ("sharded", group_mesh(1))):
+        spec = FleetSpec(num_groups=g, quantiles=qs, backend=backend,
+                         chunk_t=32, mesh=mesh)
+        fl = QuantileFleet.create(
+            spec, cursor=StreamCursor.create(seed=3, g_offset=off))
+        outs.append(fl.ingest(items).estimate())
+    np.testing.assert_array_equal(outs[0], outs[1])
+    np.testing.assert_array_equal(outs[0], outs[2])
+    # and g_offset actually matters: a zero-offset run differs
+    fl0 = QuantileFleet.create(
+        FleetSpec(num_groups=g, quantiles=qs, backend="jnp"), seed=3)
+    assert not np.array_equal(fl0.ingest(items).estimate(), outs[0])
+    # the offset fleet IS the column slice of a wider fleet (lane semantics)
+    wide = QuantileFleet.create(
+        FleetSpec(num_groups=g + off // len(qs), quantiles=qs,
+                  backend="jnp"), seed=3)
+    wide_items = np.concatenate(
+        [_items(t, off // len(qs), seed=99), items], axis=1)
+    lanes = wide.ingest(wide_items).estimate()[off // len(qs):]
+    np.testing.assert_array_equal(lanes, outs[0])
+
+
+@multidevice
+@pytest.mark.parametrize("n_dev", [2, 4, 8])
+def test_multi_q_invariant_to_mesh_size(n_dev):
+    if n_dev > N_DEV:
+        pytest.skip(f"only {N_DEV} devices")
+    t, g = 150, 11   # 11 groups x 3 lanes = 33 lanes, ragged over the mesh
+    items = _items(t, g, seed=8)
+    qs = (0.25, 0.5, 0.9)
+    ref = QuantileFleet.create(
+        FleetSpec(num_groups=g, quantiles=qs, backend="fused", chunk_t=32),
+        seed=9).ingest(items)
+    sh = QuantileFleet.create(
+        FleetSpec(num_groups=g, quantiles=qs, backend="sharded", chunk_t=32,
+                  mesh=group_mesh(n_dev)), seed=9).ingest(items)
+    np.testing.assert_array_equal(ref.estimate(), sh.estimate())
+
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        g=st.integers(min_value=1, max_value=9),
+        nq=st.integers(min_value=1, max_value=4),
+        chunk_t=st.integers(min_value=1, max_value=80),
+        split=st.integers(min_value=0, max_value=120),
+    )
+    def test_property_backend_and_chunking_invariance(g, nq, chunk_t, split):
+        t = 120
+        items = _items(t, g, seed=g * 7 + nq)
+        qs = tuple(float(q) for q in np.linspace(0.2, 0.9, nq))
+        ref = QuantileFleet.create(
+            FleetSpec(num_groups=g, quantiles=qs, backend="jnp"),
+            seed=13).ingest(items)
+        fused = QuantileFleet.create(
+            FleetSpec(num_groups=g, quantiles=qs, backend="fused",
+                      chunk_t=chunk_t), seed=13)
+        fused = fused.ingest(items[:split]).ingest_stream([items[split:]])
+        np.testing.assert_array_equal(ref.estimate(), fused.estimate())
+else:  # pragma: no cover - exercised only without the dev deps
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_backend_and_chunking_invariance():
+        pass
+
+
+# ------------------------------------------------------- cursor semantics
+def test_cursor_advances_functionally_and_wraps_i32():
+    fl = QuantileFleet.create(FleetSpec(num_groups=2), seed=0)
+    assert int(fl.cursor.t_offset) == 0
+    f2 = fl.ingest(_items(5, 2))
+    assert int(fl.cursor.t_offset) == 0      # original untouched
+    assert int(f2.cursor.t_offset) == 5
+    near_wrap = StreamCursor.create(seed=0, t_offset=2**31 - 2)
+    wrapped = near_wrap.advance(5)
+    assert int(wrapped.t_offset) == crng.wrap_i32(2**31 + 3)
+
+
+def test_checkpoint_restores_cursor_and_trajectory_bit_exactly(tmp_path):
+    t, g = 260, 7
+    items = _items(t, g, seed=10)
+    spec = FleetSpec(num_groups=g, quantiles=(0.5, 0.9), chunk_t=50)
+    full = QuantileFleet.create(spec, seed=21).ingest(items)
+    half = QuantileFleet.create(spec, seed=21).ingest(items[:130])
+    half.checkpoint(str(tmp_path), step=3)
+    resumed = QuantileFleet.restore(str(tmp_path), spec)
+    assert int(resumed.cursor.t_offset) == 130
+    assert int(resumed.cursor.seed) == 21
+    done = resumed.ingest(items[130:])
+    np.testing.assert_array_equal(done.estimate(), full.estimate())
+    sk_a, sk_b = done._lane_sketch(), full._lane_sketch()
+    np.testing.assert_array_equal(np.asarray(sk_a.step),
+                                  np.asarray(sk_b.step))
+
+
+def test_checkpoint_restore_across_backends(tmp_path):
+    """format-3 checkpoints are backend-portable: save fused, restore
+    sharded (and back), trajectories identical."""
+    t, g = 140, 6
+    items = _items(t, g, seed=11)
+    qs = (0.5, 0.95)
+    fused_spec = FleetSpec(num_groups=g, quantiles=qs, chunk_t=32)
+    half = QuantileFleet.create(fused_spec, seed=4).ingest(items[:70])
+    half.checkpoint(str(tmp_path), step=1)
+    sharded_spec = FleetSpec(num_groups=g, quantiles=qs, backend="sharded",
+                             chunk_t=32, mesh=group_mesh(1))
+    resumed = QuantileFleet.restore(str(tmp_path), sharded_spec)
+    done_sh = resumed.ingest(items[70:])
+    done_ref = QuantileFleet.create(fused_spec, seed=4).ingest(items)
+    np.testing.assert_array_equal(done_sh.estimate(), done_ref.estimate())
+
+
+def test_ingest_refuses_event_clock_and_vice_versa():
+    ev = QuantileFleet.create(FleetSpec(num_groups=2, backend="jnp"),
+                              per_lane_clock=True)
+    with pytest.raises(ValueError, match="per-lane cursor"):
+        ev.ingest(_items(3, 2))
+    block = QuantileFleet.create(FleetSpec(num_groups=2, backend="jnp"))
+    with pytest.raises(ValueError, match="per-lane cursor"):
+        block.tick_lanes_sparse(jnp.asarray([0]), jnp.asarray([1.0]))
+
+
+# --------------------------------------------------------- event-lane mode
+def test_tick_lanes_dense_equals_sparse_trajectory():
+    spec = FleetSpec(num_groups=4, quantiles=(0.5, 0.9), backend="jnp")
+    dense = QuantileFleet.create(spec, seed=5, per_lane_clock=True)
+    sparse = QuantileFleet.create(spec, seed=5, per_lane_clock=True)
+    rng = np.random.default_rng(0)
+    lanes_hit = [0, 3, 5, 7, 3, 0, 6, 1]
+    for lane in lanes_hit:
+        v = float(rng.lognormal(2.0, 0.5))
+        items = np.full((8,), np.nan, np.float32)
+        items[lane] = v
+        dense = dense.tick_lanes(items)
+        sparse = sparse.tick_lanes_sparse(np.asarray([lane], np.int32),
+                                          np.asarray([v], np.float32))
+    np.testing.assert_array_equal(dense.estimate(), sparse.estimate())
+    np.testing.assert_array_equal(np.asarray(dense.cursor.t_offset),
+                                  np.asarray(sparse.cursor.t_offset))
+
+
+def test_tick_lanes_scalar_clock_inside_jit():
+    """jnp-backend fleets ride inside jitted steps (the monitor path)."""
+    spec = FleetSpec(num_groups=6, quantiles=(0.99,), backend="jnp")
+    fl = QuantileFleet.create(spec, seed=2)
+
+    @jax.jit
+    def step(fleet, values):
+        return fleet.tick_lanes(values)
+
+    vals = np.abs(np.random.default_rng(1).normal(size=(20, 6))) \
+        .astype(np.float32)
+    ref = fl
+    for v in vals:
+        fl = step(fl, jnp.asarray(v))
+        ref = ref.tick_lanes(jnp.asarray(v))
+    np.testing.assert_array_equal(fl.estimate(), ref.estimate())
+    assert int(fl.cursor.t_offset) == 20
+
+
+def test_grow_groups_never_perturbs_existing_lanes():
+    spec = FleetSpec(num_groups=3, quantiles=(0.5, 0.9), backend="jnp")
+    small = QuantileFleet.create(spec, seed=8, per_lane_clock=True)
+    big = QuantileFleet.create(
+        FleetSpec(num_groups=16, quantiles=(0.5, 0.9), backend="jnp"),
+        seed=8, per_lane_clock=True)
+    rng = np.random.default_rng(3)
+    for _ in range(50):
+        lane = int(rng.integers(6))
+        v = float(rng.lognormal(2.0, 0.4))
+        small = small.tick_lanes_sparse(np.asarray([lane], np.int32),
+                                        np.asarray([v], np.float32))
+        big = big.tick_lanes_sparse(np.asarray([lane], np.int32),
+                                    np.asarray([v], np.float32))
+    grown = small.grow_groups(16)
+    assert grown.num_lanes == 32
+    np.testing.assert_array_equal(grown.estimate()[:3], small.estimate())
+    for _ in range(50):
+        lane = int(rng.integers(30))
+        v = float(rng.lognormal(2.0, 0.4))
+        grown = grown.tick_lanes_sparse(np.asarray([lane], np.int32),
+                                        np.asarray([v], np.float32))
+        big = big.tick_lanes_sparse(np.asarray([lane], np.int32),
+                                    np.asarray([v], np.float32))
+    np.testing.assert_array_equal(grown.estimate(), big.estimate())
+
+
+# ------------------------------------------------------------- spec + misc
+def test_fleet_spec_validation():
+    with pytest.raises(ValueError, match="quantiles"):
+        FleetSpec(num_groups=1, quantiles=(1.5,))
+    with pytest.raises(ValueError, match="backend"):
+        FleetSpec(num_groups=1, backend="gpu")
+    with pytest.raises(ValueError, match="algo"):
+        FleetSpec(num_groups=1, algo="3u")
+    with pytest.raises(ValueError, match="chunk_t"):
+        FleetSpec(num_groups=1, chunk_t=0)
+    with pytest.raises(ValueError, match="num_groups"):
+        FleetSpec(num_groups=0)
+    with pytest.raises(ValueError, match="mesh"):
+        FleetSpec(num_groups=1, backend="fused", mesh=group_mesh(1))
+    spec = FleetSpec(num_groups=4, quantiles=(0.5, 0.9))
+    assert spec.num_lanes == 8
+    assert spec.lane(2, 0.9) == 5
+    assert spec.memory_words() == 2
+    assert FleetSpec(num_groups=1, algo="1u").memory_words() == 1
+
+
+def test_estimate_shape_and_column_selection():
+    fl = QuantileFleet.create(
+        FleetSpec(num_groups=5, quantiles=(0.25, 0.75)), seed=0)
+    fl = fl.ingest(_items(50, 5))
+    plane = fl.estimate()
+    assert plane.shape == (5, 2)
+    np.testing.assert_array_equal(fl.estimate(quantile=0.75), plane[:, 1])
+    with pytest.raises(ValueError):
+        fl.estimate(quantile=0.5)
+
+
+def test_frugal_estimator_conforms_and_replays():
+    from repro.core.baselines import ExactQuantile, GKSummary
+
+    est = FrugalEstimator(quantiles=(0.5, 0.9), seed=3)
+    assert isinstance(est, QuantileEstimator)
+    assert isinstance(GKSummary(), QuantileEstimator)
+    assert isinstance(ExactQuantile(), QuantileEstimator)
+    stream = np.random.default_rng(0).lognormal(3.0, 1.0, 5000)
+    est.extend(stream)
+    # two estimators with the same seed/targets replay bit-exactly,
+    # regardless of insert/extend batching
+    twin = FrugalEstimator(quantiles=(0.5, 0.9), seed=3)
+    for v in stream[:100]:
+        twin.insert(v)
+    twin.extend(stream[100:])
+    assert est.query(0.5) == twin.query(0.5)
+    assert est.query(0.9) == twin.query(0.9)
+    assert est.memory_words() == 4   # 2 words x 2 lanes
+    with pytest.raises(ValueError):
+        est.query(0.99)

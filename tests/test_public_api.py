@@ -1,0 +1,41 @@
+"""Public-API lint (repro.api.lint): every subpackage `__all__` name must
+resolve — export drift (like the near-miss in PR 2's parallel/__init__.py)
+fails here AND in the dedicated CI step."""
+import pytest
+
+from repro.api.lint import check_public_api, iter_subpackages
+
+
+def test_every_dunder_all_name_resolves():
+    exported = check_public_api()
+    # the core layers must actually export things — an empty report would
+    # mean the walker silently skipped them
+    for pkg in ("repro", "repro.api", "repro.core", "repro.core.baselines",
+                "repro.kernels", "repro.parallel", "repro.serve",
+                "repro.monitor"):
+        assert pkg in exported and exported[pkg], f"{pkg} exports nothing?"
+
+
+def test_walker_sees_only_packages():
+    """Leaf modules (e.g. launch.dryrun sets XLA_FLAGS at import) must not
+    be imported by the lint walk."""
+    names = [name for name, _ in iter_subpackages()]
+    assert "repro.launch.dryrun" not in names
+    assert "repro.launch" in names
+
+
+def test_drift_is_reported_with_package_and_name(monkeypatch):
+    import repro.api as api_pkg
+
+    monkeypatch.setattr(api_pkg, "__all__",
+                        list(api_pkg.__all__) + ["NotARealExport"])
+    with pytest.raises(AssertionError, match="NotARealExport"):
+        check_public_api()
+
+
+def test_facade_names_resolve_from_top_level():
+    import repro
+
+    for name in ("QuantileFleet", "FleetSpec", "StreamCursor",
+                 "QuantileEstimator", "FrugalEstimator"):
+        assert getattr(repro, name) is not None

@@ -182,3 +182,86 @@ def test_ingest_array_matches_stream_with_padding_tail():
     c = sk.process(jnp.asarray(items), key)
     np.testing.assert_array_equal(np.asarray(a.m), np.asarray(b.m))
     np.testing.assert_array_equal(np.asarray(a.m), np.asarray(c.m))
+
+
+# ----------------------------------------------- rechunk_blocks edge cases
+# The re-chunker is shared by ingest_stream, the sharded fleet and the api
+# facade — its (block, t_offset) bookkeeping IS the cursor contract, so the
+# degenerate stream shapes are pinned bit-exactly here.
+def test_rechunk_empty_iterator_yields_nothing():
+    from repro.core.streaming import rechunk_blocks
+
+    assert list(rechunk_blocks(iter([]), num_groups=4, chunk_t=16)) == []
+    # and ingesting an empty stream is a no-op that leaves state untouched
+    sk = GroupedQuantileSketch.create(4, quantile=0.5, algo="2u")
+    out = ingest_stream(sk, iter([]), jax.random.PRNGKey(0), chunk_t=16)
+    np.testing.assert_array_equal(np.asarray(sk.m), np.asarray(out.m))
+    np.testing.assert_array_equal(np.asarray(sk.step), np.asarray(out.step))
+
+
+def test_rechunk_zero_length_blocks_mid_stream_are_invisible():
+    """[0, G] blocks interleaved anywhere must not perturb blocking or
+    t_offsets — the re-chunked output is bit-identical to the same stream
+    without them."""
+    from repro.core.streaming import rechunk_blocks
+
+    g, chunk_t = 5, 8
+    items = _items(30, g, seed=7)
+    empty = np.zeros((0, g), np.float32)
+    with_empties = [empty, items[:3], empty, empty, items[3:20], empty,
+                    items[20:], empty]
+    ref = list(rechunk_blocks([items], g, chunk_t))
+    got = list(rechunk_blocks(with_empties, g, chunk_t))
+    assert len(ref) == len(got) == 4   # ceil(30 / 8)
+    for (rb, rt), (gb, gt) in zip(ref, got):
+        assert rt == gt
+        np.testing.assert_array_equal(rb, gb)
+    # t_offsets advance by exactly chunk_t per emitted block
+    assert [t for _, t in got] == [0, 8, 16, 24]
+    # and the full ingest trajectories agree bit-for-bit
+    key = jax.random.PRNGKey(11)
+    sk = GroupedQuantileSketch.create(g, quantile=0.7, algo="2u")
+    a = ingest_stream(sk, [items], key, chunk_t=chunk_t)
+    b = ingest_stream(sk, with_empties, key, chunk_t=chunk_t)
+    np.testing.assert_array_equal(np.asarray(a.m), np.asarray(b.m))
+    np.testing.assert_array_equal(np.asarray(a.step), np.asarray(b.step))
+
+
+def test_rechunk_stream_shorter_than_one_chunk():
+    """A sub-chunk stream yields ONE NaN-padded block at t_offset 0, the
+    pad rows are bit-exact no-ops, and a facade cursor advances by the REAL
+    item count (not the padded block size)."""
+    from repro.core.streaming import rechunk_blocks
+
+    g, chunk_t, t = 3, 64, 10
+    items = _items(t, g, seed=9)
+    blocks = list(rechunk_blocks([items[:4], items[4:]], g, chunk_t))
+    assert len(blocks) == 1
+    block, t0 = blocks[0]
+    assert t0 == 0 and block.shape == (chunk_t, g)
+    np.testing.assert_array_equal(block[:t], items)
+    assert np.all(np.isnan(block[t:]))
+
+    key = jax.random.PRNGKey(2)
+    sk = GroupedQuantileSketch.create(g, quantile=0.5, algo="2u")
+    one_shot = sk.process(jnp.asarray(items), key)
+    streamed = ingest_stream(sk, [items[:4], items[4:]], key, chunk_t=chunk_t)
+    np.testing.assert_array_equal(np.asarray(one_shot.m),
+                                  np.asarray(streamed.m))
+
+    from repro.api import FleetSpec, QuantileFleet
+    from repro.core import rng as crng
+
+    seed = int(np.asarray(crng.seed_from_key(key)))
+    fleet = QuantileFleet.create(
+        FleetSpec(num_groups=g, quantiles=(0.5,), chunk_t=chunk_t), seed=seed)
+    fleet = fleet.ingest_stream([items[:4], items[4:]])
+    assert int(fleet.cursor.t_offset) == t   # real items, not chunk_t
+    np.testing.assert_array_equal(fleet.estimate(0.5), np.asarray(one_shot.m))
+    # continuing the stream reproduces an unbroken run (the padded tail of
+    # the first call's final block replays as real ticks — no-ops consumed
+    # nothing)
+    more = _items(20, g, seed=10)
+    cont = fleet.ingest_stream([more])
+    full = sk.process(jnp.asarray(np.concatenate([items, more])), key)
+    np.testing.assert_array_equal(cont.estimate(0.5), np.asarray(full.m))
