@@ -1,0 +1,191 @@
+"""E11 (ours) — drift tracking: decayed vs vanilla Frugal-2U re-convergence.
+
+Reproduces the paper's dynamic-Cauchy setting (Fig 5: three Cauchy
+sub-streams with shifted domains) and measures the metric the paper only
+eyeballs: how many ticks each estimator needs to RE-converge after a
+distribution shift. Vanilla Frugal-2U accumulates unbounded negative step
+inertia over a stationary phase (each direction disagreement decrements
+`step`), so its recovery time grows with the length of the stationary phase.
+The decayed variant (core.drift, mode 'decay') bounds that inertia at
+O(half_life) ticks, and the two-sketch window (mode 'window') forgets the
+old distribution outright.
+
+Protocol: for each shift boundary and each target quantile, re-convergence
+ticks = first tick after the boundary at which the lane's estimate enters
+a ±10%-of-shift-magnitude band around the NEW segment's true quantile,
+capped at the segment length. Median over `reps` seeds.
+
+Value scale: the gated rows run the paper's stream scaled by 1/50 (the
+paper's footnote-1 move — frugal updates step in UNITS, so the regime is
+set by domain-size-in-units; at 1/50 the segments are ~100 units wide,
+e.g. latencies in ms rather than µs). There the stationary phase's step
+random-walk inertia (≈ -sqrt(T/4), unbounded in T) dominates recovery and
+the decayed variant's O(half_life) bound wins outright. At the raw 1e4
+scale the unit-step travel time dominates instead and all variants are
+within noise of each other — recorded as ungated context rows.
+
+Gate (bench-regression CI): decayed re-converges at least 2× faster in
+ticks than vanilla (min over shifts of the median ratio at the gated
+scale), recorded as `gate_met` in repo-root BENCH_drift_tracking.json.
+Full payloads land in artifacts/bench/e11_drift_tracking.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import frugal
+from repro.core.drift import DriftConfig, window_init, window_process_seeded
+from repro.data.streams import dynamic_cauchy_stream
+from .common import save_result, csv_line
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(_ROOT, "BENCH_drift_tracking.json")
+
+# Required minimum speedup (vanilla ticks / decayed ticks) after a shift.
+GATE_MIN_RECONVERGE_SPEEDUP = 2.0
+# Re-converged = estimate within this fraction of the shift magnitude of
+# the new segment's true quantile.
+BAND_FRAC = 0.10
+# Stream value scale for the gated rows (paper footnote 1): ~100-unit
+# segment domains, the regime where step inertia dominates recovery.
+GATE_SCALE = 1.0 / 50.0
+
+
+def _trace_vanilla(items, seed, q):
+    st = frugal.frugal2u_init(1)
+    _, trace = frugal.frugal2u_process_seeded(
+        st, jnp.asarray(items[:, None]), seed, q, return_trace=True)
+    return np.asarray(trace)[:, 0]
+
+
+def _trace_decay(items, seed, q, cfg):
+    st = frugal.frugal2u_init(1)
+    _, trace = frugal.frugal2u_process_seeded(
+        st, jnp.asarray(items[:, None]), seed, q, return_trace=True,
+        drift=cfg)
+    return np.asarray(trace)[:, 0]
+
+
+def _trace_window(items, seed, q, cfg):
+    st = window_init(1)
+    _, trace = window_process_seeded(
+        st, jnp.asarray(items[:, None]), seed, q, cfg, return_trace=True)
+    return np.asarray(trace)[:, 0]
+
+
+def _reconverge_ticks(trace, boundary, seg_end, target, band):
+    """Ticks past `boundary` until the trace first enters the band around
+    the new segment's true quantile (capped at the segment length)."""
+    seg = trace[boundary:seg_end]
+    inside = np.abs(seg - target) <= band
+    hits = np.nonzero(inside)[0]
+    return int(hits[0]) + 1 if hits.size else int(seg_end - boundary)
+
+
+def _sweep(n_per, reps, seed, scale, decay_cfg, window_cfg, quantiles):
+    """Re-convergence ticks per (quantile, shift) for the three lane
+    variants at one value scale; medians + raw reps."""
+    out = {}
+    for q in quantiles:
+        per_shift = {1: {"vanilla": [], "decay": [], "window": []},
+                     2: {"vanilla": [], "decay": [], "window": []}}
+        seg_truth_all = None
+        for rep in range(reps):
+            stream, segs = dynamic_cauchy_stream(
+                n_per, rng=np.random.default_rng(seed + rep))
+            stream = stream * scale
+            seg_truth = [float(np.quantile(stream[segs == s], q))
+                         for s in range(3)]
+            seg_truth_all = seg_truth
+            traces = {
+                "vanilla": _trace_vanilla(stream, seed + rep, q),
+                "decay": _trace_decay(stream, seed + rep, q, decay_cfg),
+                "window": _trace_window(stream, seed + rep, q, window_cfg),
+            }
+            for s in (1, 2):
+                boundary, seg_end = s * n_per, (s + 1) * n_per
+                band = BAND_FRAC * abs(seg_truth[s] - seg_truth[s - 1])
+                for name, tr in traces.items():
+                    per_shift[s][name].append(_reconverge_ticks(
+                        tr, boundary, seg_end, seg_truth[s], band))
+
+        q_res = {"segment_truth": seg_truth_all, "shifts": {}}
+        for s in (1, 2):
+            med = {name: float(np.median(v))
+                   for name, v in per_shift[s].items()}
+            q_res["shifts"][str(s)] = {
+                "reconverge_ticks_median": med,
+                "reconverge_ticks_all": per_shift[s],
+                "decay_speedup": med["vanilla"] / max(med["decay"], 1.0),
+                "window_speedup": med["vanilla"] / max(med["window"], 1.0),
+            }
+        out[str(q)] = q_res
+    return out
+
+
+def run(quick: bool = True, seed: int = 0):
+    n_per = 6_000 if quick else 20_000
+    reps = 3 if quick else 5
+    # Inertia bound ~1.44·half_life must sit well under the vanilla
+    # random-walk inertia (~sqrt(n_per/4)) for the decayed win to show;
+    # 64 holds for both quick and full stationary lengths.
+    half_life = 64
+    window = max(128, n_per // 4)
+    decay_cfg = DriftConfig(mode="decay", half_life=half_life)
+    window_cfg = DriftConfig(mode="window", window=window)
+
+    payload = {
+        "n_per": n_per, "reps": reps, "half_life": half_life,
+        "window": window, "band_frac": BAND_FRAC,
+        "gate_scale": GATE_SCALE,
+        "gate_min_reconverge_speedup": GATE_MIN_RECONVERGE_SPEEDUP,
+    }
+    lines = []
+
+    # Gated rows: the inertia-dominated scale. The gate covers the MEDIAN
+    # target (q=0.5) — the symmetric case where equilibrium direction flips
+    # build inertia fastest and the paper's own Fig-5 discussion lives. The
+    # q=0.9 rows are reported alongside: its up-shifts recover quickly in
+    # vanilla too (asymmetric triggers flip direction rarely, so little
+    # inertia accumulates), which would gate on noise rather than signal.
+    payload["quantiles"] = _sweep(n_per, reps, seed, GATE_SCALE, decay_cfg,
+                                  window_cfg, quantiles=(0.5, 0.9))
+    gate_ratios = []
+    for q, q_res in payload["quantiles"].items():
+        for s, row in q_res["shifts"].items():
+            med = row["reconverge_ticks_median"]
+            if float(q) == 0.5:
+                gate_ratios.append(row["decay_speedup"])
+            lines.append(csv_line(
+                f"drift_tracking_q{int(float(q) * 100)}_shift{s}", 0.0,
+                f"vanilla={med['vanilla']:.0f}ticks;"
+                f"decay={med['decay']:.0f}ticks;"
+                f"window={med['window']:.0f}ticks;"
+                f"decay_speedup={row['decay_speedup']:.1f}x"))
+
+    # Context rows: the raw paper scale (travel-dominated; no gate).
+    payload["paper_scale_quantiles"] = _sweep(
+        n_per, reps, seed, 1.0, decay_cfg, window_cfg, quantiles=(0.5,))
+    row = payload["paper_scale_quantiles"]["0.5"]["shifts"]["1"]
+    med = row["reconverge_ticks_median"]
+    lines.append(csv_line(
+        "drift_tracking_q50_shift1_paperscale", 0.0,
+        f"vanilla={med['vanilla']:.0f}ticks;decay={med['decay']:.0f}ticks;"
+        f"window={med['window']:.0f}ticks (ungated: travel-dominated)"))
+
+    payload["min_decay_speedup"] = float(min(gate_ratios))
+    payload["gate_met"] = bool(
+        min(gate_ratios) >= GATE_MIN_RECONVERGE_SPEEDUP)
+    if not payload["gate_met"]:
+        print(f"WARNING: drift-tracking gate NOT met — min decayed "
+              f"re-convergence speedup {min(gate_ratios):.2f}x < "
+              f"{GATE_MIN_RECONVERGE_SPEEDUP}x", flush=True)
+
+    save_result("e11_drift_tracking", payload)
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return lines, payload

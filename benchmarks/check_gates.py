@@ -1,0 +1,112 @@
+"""Perf-gate checker for the bench-regression CI job.
+
+Each systems benchmark (e8-e11) records its own gate threshold and verdict
+in a repo-root BENCH_*.json (the PR-over-PR perf trajectory files). The
+benchmarks themselves only WARN on a miss — wall-clock on a shared CI
+runner is too noisy to hard-fail inside the bench — so this checker is the
+single place that turns a freshly-rerun gate verdict into a CI failure.
+
+Usage (after `python -m benchmarks.run --only e8,e9,e10,e11` rewrote the
+files):  python -m benchmarks.check_gates
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# (file, benchmark id, human description of the gate)
+GATES = (
+    ("BENCH_kernel_throughput.json", "e8",
+     "fused ingest >= 1.5x rand-materializing at G=4096"),
+    ("BENCH_sharded_fleet.json", "e9",
+     "sharded ingest >= 2x aggregate items/s at G=2^20, 1 -> 8 devices"),
+    ("BENCH_fleet_api.json", "e10",
+     "facade per-item overhead <= 1.05x hand-threaded ops"),
+    ("BENCH_drift_tracking.json", "e11",
+     "decayed lanes re-converge >= 2x faster than vanilla after a shift"),
+)
+
+# e9 is the one gate bound by RUNNER CAPABILITY, not code: it measures
+# 1 -> 8 forced-host-device scaling, which a weak/2-core runner physically
+# caps below 2x no matter what the code does (EXPERIMENTS.md E9 records
+# 1.5-3.2x across machine states for the SAME commit). Fallback: if the
+# absolute gate misses, compare against the COMMITTED baseline json (`git
+# show HEAD:...`) — the run passes when it retains >= this fraction of the
+# baseline scaling, i.e. the miss is runner variance, not a regression.
+E9_BASELINE_FRACTION = 0.55
+# ...AND an absolute floor, so the fallback cannot ratchet to nothing as
+# refreshed (weaker-runner) jsons get committed PR-over-PR: whatever the
+# committed anchor says, scaling below this is a failure outright. 1.3x
+# sits under the weakest healthy runner observed (1.4-1.5x on a 2-core
+# box) and above the ~1.0x of a genuinely broken parallel path.
+E9_ABS_FLOOR = 1.3
+
+
+def _e9_baseline_fallback(payload):
+    """(passed, message) — compare fresh e9 scaling to the committed run."""
+    key = "speedup_1to8_g2pow20"
+    fresh = payload.get(key)
+    try:
+        blob = subprocess.run(
+            ["git", "show", "HEAD:BENCH_sharded_fleet.json"], cwd=_ROOT,
+            capture_output=True, text=True, check=True).stdout
+        baseline = json.loads(blob).get(key)
+    except (subprocess.CalledProcessError, OSError, ValueError):
+        return False, "no committed baseline available for fallback"
+    if fresh is None or baseline is None:
+        return False, f"missing {key} in fresh or baseline payload"
+    if fresh < E9_ABS_FLOOR:
+        return False, (f"fresh {fresh:.2f}x is below the absolute floor "
+                       f"{E9_ABS_FLOOR}x — broken scaling regardless of "
+                       "baseline")
+    if fresh >= E9_BASELINE_FRACTION * baseline:
+        return True, (f"absolute gate missed but fresh {fresh:.2f}x >= "
+                      f"floor {E9_ABS_FLOOR}x and retains >= "
+                      f"{E9_BASELINE_FRACTION:.0%} of committed baseline "
+                      f"{baseline:.2f}x — runner variance, not a regression")
+    return False, (f"fresh {fresh:.2f}x < {E9_BASELINE_FRACTION:.0%} of "
+                   f"committed baseline {baseline:.2f}x")
+
+
+def main() -> int:
+    failures = []
+    for fname, bench_id, desc in GATES:
+        path = os.path.join(_ROOT, fname)
+        if not os.path.exists(path):
+            failures.append(f"{bench_id}: {fname} missing — did "
+                            f"`benchmarks.run --only {bench_id}` run?")
+            continue
+        with open(path) as f:
+            payload = json.load(f)
+        met = payload.get("gate_met")
+        if met is None:
+            failures.append(f"{bench_id}: {fname} has no gate_met verdict")
+        elif not met:
+            if bench_id == "e9":
+                ok, msg = _e9_baseline_fallback(payload)
+                if ok:
+                    print(f"ok e9 (baseline fallback): {msg}")
+                    continue
+                failures.append(f"e9: GATE REGRESSION — {desc}; {msg}")
+                continue
+            detail = {k: v for k, v in payload.items()
+                      if "gate" in k or "speedup" in k or "ratio" in k
+                      or "overhead" in k}
+            failures.append(f"{bench_id}: GATE REGRESSION — {desc}; "
+                            f"recorded {detail}")
+        else:
+            print(f"ok {bench_id}: {desc}")
+    if failures:
+        for f in failures:
+            print(f"FAIL {f}", file=sys.stderr)
+        return 1
+    print("all perf gates met")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,6 +15,7 @@
 """
 
 from repro.core.baselines.protocol import QuantileEstimator
+from repro.core.drift import DriftConfig
 
 from .spec import BACKENDS, FleetSpec, StreamCursor
 from .fleet import QuantileFleet
@@ -23,6 +24,7 @@ from .lint import check_public_api
 
 __all__ = [
     "BACKENDS",
+    "DriftConfig",
     "FleetSpec",
     "StreamCursor",
     "QuantileFleet",

@@ -49,6 +49,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import frugal, streaming
+from repro.core import drift as drift_mod
 from repro.core import rng as crng
 from repro.core.sketch import GroupedQuantileSketch
 from repro.parallel.group_sharding import ShardedGroupFleet
@@ -58,39 +59,82 @@ from .spec import FleetSpec, StreamCursor
 Array = jax.Array
 
 
-@functools.partial(jax.jit, static_argnames=("algo",))
+def _tick_state(m, step, sign, m2, step2, sign2, items, r, q, ticks, algo,
+                drift):
+    """Shared single-tick core for the dense/sparse lane paths: vanilla,
+    decayed, or windowed, keyed on the lane's absolute tick. Returns the six
+    plane arrays (shadow passthrough when unused)."""
+    if drift_mod.is_windowed(drift):
+        st = drift_mod.window_update(
+            drift_mod.WindowState(m, step, sign, m2, step2, sign2), items,
+            r, q, ticks, drift.window, algo=algo)
+        return tuple(st)
+    if drift is not None:  # decay — 2u only (validated at spec creation)
+        st = drift_mod.decay2u_update(
+            frugal.Frugal2UState(m, step, sign), items, r, q,
+            drift.alpha_f32, np.float32(drift.floor))
+        return st.m, st.step, st.sign, m2, step2, sign2
+    if algo == "1u":
+        st = frugal.frugal1u_update(frugal.Frugal1UState(m), items, r, q)
+        return st.m, step, sign, m2, step2, sign2
+    st = frugal.frugal2u_update(frugal.Frugal2UState(m, step, sign), items,
+                                r, q)
+    return st.m, st.step, st.sign, m2, step2, sign2
+
+
+# Non-windowed fleets tick through the narrow 3-plane signatures — the
+# shadow placeholders would otherwise ride every jitted dispatch as 3
+# pass-through [L] buffers (the same widening _sharded_ingest_fn avoids
+# on the e9 hot path). drift is static, so each spec compiles its own
+# executable either way; the split only trims the operand/result tuples.
+@functools.partial(jax.jit, static_argnames=("algo", "drift"))
 def _lane_tick(m, step, sign, ticks, q, items, mask, seed, g_offset,
-               algo="2u"):
-    """One vectorized tick over L lanes: uniforms key on (seed, per-lane or
-    scalar tick, absolute lane id); NaN items are bit-exact no-ops. `mask`
-    is accepted (and ignored) so dense event rounds share one signature with
-    the cursor advance."""
+               algo="2u", drift=None):
+    """One vectorized tick over L lanes (vanilla/decay): uniforms key on
+    (seed, per-lane or scalar tick, absolute lane id); NaN items are
+    bit-exact no-ops. `mask` is accepted (and ignored) so dense event
+    rounds share one signature with the cursor advance."""
     del mask
     g_ids = jnp.asarray(g_offset, jnp.int32) \
         + jnp.arange(m.shape[0], dtype=jnp.int32)
     r = crng.counter_uniform(seed, ticks, g_ids)
-    if algo == "1u":
-        st = frugal.frugal1u_update(frugal.Frugal1UState(m), items, r, q)
-        return st.m, step, sign
-    st = frugal.frugal2u_update(frugal.Frugal2UState(m, step, sign), items,
-                                r, q)
-    return st.m, st.step, st.sign
+    return _tick_state(m, step, sign, None, None, None, items, r, q, ticks,
+                       algo, drift)[:3]
 
 
-@functools.partial(jax.jit, static_argnames=("algo",))
+@functools.partial(jax.jit, static_argnames=("algo", "drift"))
+def _lane_tick_window(m, step, sign, m2, step2, sign2, ticks, q, items,
+                      mask, seed, g_offset, algo="2u", drift=None):
+    """The windowed (6-plane) flavour of _lane_tick."""
+    del mask
+    g_ids = jnp.asarray(g_offset, jnp.int32) \
+        + jnp.arange(m.shape[0], dtype=jnp.int32)
+    r = crng.counter_uniform(seed, ticks, g_ids)
+    return _tick_state(m, step, sign, m2, step2, sign2, items, r, q, ticks,
+                       algo, drift)
+
+
+@functools.partial(jax.jit, static_argnames=("algo", "drift"))
 def _lane_tick_sparse(m_s, step_s, sign_s, ticks_s, q_s, lanes, items, seed,
-                      g_offset, algo="2u"):
-    """The same tick on a gathered O(events) lane slice — uniforms still key
-    on the ABSOLUTE lane index and the lane's own tick, so the trajectory is
-    bit-identical to the dense round."""
+                      g_offset, algo="2u", drift=None):
+    """The same tick on a gathered O(events) lane slice (vanilla/decay) —
+    uniforms still key on the ABSOLUTE lane index and the lane's own tick,
+    so the trajectory is bit-identical to the dense round."""
     g_ids = jnp.asarray(g_offset, jnp.int32) + lanes
     r = crng.counter_uniform(seed, ticks_s, g_ids)
-    if algo == "1u":
-        st = frugal.frugal1u_update(frugal.Frugal1UState(m_s), items, r, q_s)
-        return st.m, step_s, sign_s
-    st = frugal.frugal2u_update(frugal.Frugal2UState(m_s, step_s, sign_s),
-                                items, r, q_s)
-    return st.m, st.step, st.sign
+    return _tick_state(m_s, step_s, sign_s, None, None, None, items, r,
+                       q_s, ticks_s, algo, drift)[:3]
+
+
+@functools.partial(jax.jit, static_argnames=("algo", "drift"))
+def _lane_tick_sparse_window(m_s, step_s, sign_s, m2_s, step2_s, sign2_s,
+                             ticks_s, q_s, lanes, items, seed, g_offset,
+                             algo="2u", drift=None):
+    """The windowed (6-plane) flavour of _lane_tick_sparse."""
+    g_ids = jnp.asarray(g_offset, jnp.int32) + lanes
+    r = crng.counter_uniform(seed, ticks_s, g_ids)
+    return _tick_state(m_s, step_s, sign_s, m2_s, step2_s, sign2_s, items,
+                       r, q_s, ticks_s, algo, drift)
 
 
 @jax.tree_util.register_dataclass
@@ -121,7 +165,8 @@ class QuantileFleet:
         the default scalar clock.
         """
         sk = GroupedQuantileSketch.create_lanes(
-            spec.num_groups, spec.quantiles, algo=spec.algo, init=init)
+            spec.num_groups, spec.quantiles, algo=spec.algo, init=init,
+            drift=spec.drift)
         if cursor is None:
             t0 = jnp.zeros((spec.num_lanes,), jnp.int32) if per_lane_clock \
                 else 0
@@ -269,16 +314,23 @@ class QuantileFleet:
             raise ValueError(
                 f"lane items shape {items.shape} != [{self.num_lanes}]")
         cur = self.cursor
+        drift = self.spec.drift
         one = jnp.ones_like(sk.m)
         step = sk.step if sk.step is not None else one
         sign = sk.sign if sk.sign is not None else one
-        m, step, sign = _lane_tick(
-            sk.m, step, sign, cur.t_offset, sk.quantile, items, None,
-            cur.seed, cur.g_offset, algo=self.algo)
-        if self.algo == "1u":
-            state = dataclasses.replace(sk, m=m)
+        if drift_mod.is_windowed(drift):
+            step2 = sk.step2 if sk.step2 is not None else one
+            sign2 = sk.sign2 if sk.sign2 is not None else one
+            m, step, sign, m2, step2, sign2 = _lane_tick_window(
+                sk.m, step, sign, sk.m2, step2, sign2, cur.t_offset,
+                sk.quantile, items, None, cur.seed, cur.g_offset,
+                algo=self.algo, drift=drift)
         else:
-            state = dataclasses.replace(sk, m=m, step=step, sign=sign)
+            m, step, sign = _lane_tick(
+                sk.m, step, sign, cur.t_offset, sk.quantile, items, None,
+                cur.seed, cur.g_offset, algo=self.algo, drift=drift)
+            m2 = step2 = sign2 = None
+        state = self._with_planes(sk, m, step, sign, m2, step2, sign2)
         if cur.per_lane:
             if mask is None:
                 mask = jnp.where(jnp.isnan(items), 0, 1).astype(jnp.int32)
@@ -307,24 +359,49 @@ class QuantileFleet:
         items = jnp.asarray(items, jnp.float32)
         if mask is None:
             mask = jnp.where(jnp.isnan(items), 0, 1).astype(jnp.int32)
+        drift = self.spec.drift
         one = jnp.ones_like(sk.m)
         step_full = sk.step if sk.step is not None else one
         sign_full = sk.sign if sk.sign is not None else one
-        m, step, sign = _lane_tick_sparse(
-            sk.m[lanes], step_full[lanes], sign_full[lanes],
-            cur.t_offset[lanes], jnp.broadcast_to(
-                jnp.asarray(sk.quantile, sk.m.dtype), sk.m.shape)[lanes],
-            lanes, items, cur.seed, cur.g_offset, algo=self.algo)
-        new_m = sk.m.at[lanes].set(m)
-        if self.algo == "1u":
-            state = dataclasses.replace(sk, m=new_m)
+        q_lanes = jnp.broadcast_to(
+            jnp.asarray(sk.quantile, sk.m.dtype), sk.m.shape)[lanes]
+        if drift_mod.is_windowed(drift):
+            step2_full = sk.step2 if sk.step2 is not None else one
+            sign2_full = sk.sign2 if sk.sign2 is not None else one
+            m, step, sign, m2, step2, sign2 = _lane_tick_sparse_window(
+                sk.m[lanes], step_full[lanes], sign_full[lanes],
+                sk.m2[lanes], step2_full[lanes], sign2_full[lanes],
+                cur.t_offset[lanes], q_lanes, lanes, items, cur.seed,
+                cur.g_offset, algo=self.algo, drift=drift)
+            m2_out = sk.m2.at[lanes].set(m2)
+            step2_out = step2_full.at[lanes].set(step2)
+            sign2_out = sign2_full.at[lanes].set(sign2)
         else:
-            state = dataclasses.replace(sk, step=step_full.at[lanes].set(step),
-                                        sign=sign_full.at[lanes].set(sign),
-                                        m=new_m)
+            m, step, sign = _lane_tick_sparse(
+                sk.m[lanes], step_full[lanes], sign_full[lanes],
+                cur.t_offset[lanes], q_lanes, lanes, items, cur.seed,
+                cur.g_offset, algo=self.algo, drift=drift)
+            m2_out = step2_out = sign2_out = None
+        state = self._with_planes(
+            sk, sk.m.at[lanes].set(m), step_full.at[lanes].set(step),
+            sign_full.at[lanes].set(sign), m2_out, step2_out, sign2_out)
         ticks = cur.t_offset.at[lanes].add(mask)
         return dataclasses.replace(self, state=state,
                                    cursor=cur._replace(t_offset=ticks))
+
+    def _with_planes(self, sk: GroupedQuantileSketch, m, step, sign, m2,
+                     step2, sign2) -> GroupedQuantileSketch:
+        """Rebuild the lane sketch from the tick-output planes, keeping
+        only the fields this spec's algo/drift actually persist (shadow
+        args are None on the narrow non-windowed path)."""
+        upd = {"m": m}
+        if self.algo != "1u":
+            upd.update(step=step, sign=sign)
+        if sk.m2 is not None and m2 is not None:
+            upd["m2"] = m2
+            if self.algo != "1u":
+                upd.update(step2=step2, sign2=sign2)
+        return dataclasses.replace(sk, **upd)
 
     # ------------------------------------------------------------------ grow
     def grow_groups(self, num_groups: int,
@@ -343,7 +420,7 @@ class QuantileFleet:
         spec = dataclasses.replace(self.spec, num_groups=num_groups)
         fresh = GroupedQuantileSketch.create_lanes(
             num_groups - self.num_groups, spec.quantiles, algo=spec.algo,
-            init=init)
+            init=init, drift=spec.drift)
         sk = self.state
 
         def cat(a, b):
@@ -352,6 +429,8 @@ class QuantileFleet:
         state = dataclasses.replace(
             sk, m=cat(sk.m, fresh.m), step=cat(sk.step, fresh.step),
             sign=cat(sk.sign, fresh.sign),
+            m2=cat(sk.m2, fresh.m2), step2=cat(sk.step2, fresh.step2),
+            sign2=cat(sk.sign2, fresh.sign2),
             quantile=jnp.concatenate([
                 jnp.broadcast_to(jnp.asarray(sk.quantile, sk.m.dtype),
                                  sk.m.shape),
@@ -365,8 +444,28 @@ class QuantileFleet:
     # ----------------------------------------------------------------- reads
     def estimate(self, quantile: Optional[float] = None) -> np.ndarray:
         """Current estimates as [G, Q] numpy (the one gathering read); with
-        `quantile=` one tracked target's [G] column."""
-        if isinstance(self.state, ShardedGroupFleet):
+        `quantile=` one tracked target's [G] column.
+
+        A windowed fleet (drift mode 'window') answers from the OLDER plane
+        of each lane's sketch pair — the one holding between W and 2W ticks
+        of history. Plane choice is a pure function of the cursor (epoch
+        parity of the lane's absolute tick), not of sketch state."""
+        if drift_mod.is_windowed(self.spec.drift):
+            if isinstance(self.state, ShardedGroupFleet):
+                # Gather ONLY the two m planes — not the full six-plane
+                # unshard (5 needless [L] transfers per read at fleet scale).
+                pad = self.state.sketch
+                n = self.state.num_groups
+                m = np.asarray(jax.device_get(pad.m))[:n]
+                m2 = np.asarray(jax.device_get(pad.m2))[:n]
+            else:
+                m = np.asarray(jax.device_get(self.state.m))
+                m2 = np.asarray(jax.device_get(self.state.m2))
+            primary = drift_mod.query_plane_is_primary(
+                np.asarray(jax.device_get(self.cursor.t_offset)),
+                self.spec.drift.window)
+            m = np.where(primary, m, m2)
+        elif isinstance(self.state, ShardedGroupFleet):
             m = self.state.estimate()
         else:
             m = np.asarray(jax.device_get(self.state.m))
@@ -395,12 +494,17 @@ class QuantileFleet:
         lanes = spec.num_lanes
         f32 = jax.ShapeDtypeStruct((lanes,), jnp.float32)
         i32s = jax.ShapeDtypeStruct((), jnp.int32)
+        windowed = drift_mod.is_windowed(spec.drift)
+        m2 = f32 if windowed else None
         if spec.algo == "1u":
             sk = GroupedQuantileSketch(m=f32, step=None, sign=None,
-                                       quantile=f32, algo="1u")
+                                       quantile=f32, m2=m2, algo="1u",
+                                       drift=spec.drift)
         else:
             sk = GroupedQuantileSketch(m=f32, step=f32, sign=f32,
-                                       quantile=f32, algo="2u")
+                                       quantile=f32, m2=m2,
+                                       step2=m2, sign2=m2, algo="2u",
+                                       drift=spec.drift)
         t_off = jax.ShapeDtypeStruct((lanes,), jnp.int32) \
             if per_lane_clock else i32s
         return {"sketch": sk,
@@ -416,6 +520,15 @@ class QuantileFleet:
                 f"checkpoint holds {sk.num_groups} lanes but spec "
                 f"{spec.num_groups}x{spec.num_quantiles} expects "
                 f"{spec.num_lanes}")
+        windowed = drift_mod.is_windowed(spec.drift)
+        if windowed != (sk.m2 is not None):
+            raise ValueError(
+                f"checkpoint {'has' if sk.m2 is not None else 'lacks'} a "
+                f"window shadow plane but spec.drift is {spec.drift!r}")
+        if sk.drift != spec.drift:
+            # The plane data is drift-parameter-independent; the spec owns
+            # the half-life / window length going forward.
+            sk = dataclasses.replace(sk, drift=spec.drift)
         cursor = StreamCursor(*(jnp.asarray(x, jnp.int32)
                                 for x in state["cursor"]))
         return cls(state=cls._place(spec, sk), cursor=cursor, spec=spec)

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from repro.core import rng as crng
+from repro.core.drift import DriftConfig
 
 Array = jax.Array
 
@@ -103,6 +104,13 @@ class FleetSpec:
                  RNG keys on absolute (seed, tick, lane).
     chunk_t    — tick-block size for chunked ingest ("fused"/"sharded").
     mesh       — 1-D device mesh for "sharded" (default: all devices).
+    drift      — None (vanilla paper lanes, bit-identical to before the
+                 drift layer existed) or a core.drift.DriftConfig:
+                 mode "decay" (exponentially-decayed Frugal-2U — re-arms
+                 adaptation after distribution shift) or "window"
+                 (two-sketch sliding window — estimates cover the last
+                 W..2W items). Any drift config is invariant to backend ×
+                 chunking × mesh, like everything else here.
 
     Hashable → usable as static pytree metadata / jit static argument.
     """
@@ -113,6 +121,7 @@ class FleetSpec:
     backend: str = "fused"
     chunk_t: int = 4096
     mesh: Optional[Mesh] = None
+    drift: Optional[DriftConfig] = None
 
     def __post_init__(self):
         qs = tuple(float(q) for q in np.atleast_1d(np.asarray(self.quantiles,
@@ -134,6 +143,8 @@ class FleetSpec:
             raise ValueError(f"chunk_t must be positive, got {self.chunk_t}")
         if self.mesh is not None and self.backend != "sharded":
             raise ValueError("mesh= only applies to backend='sharded'")
+        if self.drift is not None:
+            self.drift.validate_for_algo(self.algo)
 
     # ------------------------------------------------------------ lane plane
     @property
@@ -156,5 +167,9 @@ class FleetSpec:
         return group * self.num_quantiles + self.quantiles.index(float(quantile))
 
     def memory_words(self) -> int:
-        """Persistent words per lane — 1 (1U) or 2 (packed 2U)."""
-        return 1 if self.algo == "1u" else 2
+        """Persistent words per lane — 1 (1U) or 2 (packed 2U) per plane;
+        a two-sketch window (drift mode 'window') carries two planes."""
+        from repro.core.drift import is_windowed
+
+        per_plane = 1 if self.algo == "1u" else 2
+        return per_plane * (2 if is_windowed(self.drift) else 1)

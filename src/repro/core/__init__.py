@@ -6,6 +6,7 @@
   batched.py    — binomial batch-update extension (beyond paper).
   rng.py        — counter-based on-chip RNG shared with the Pallas kernels.
   packing.py    — (step, sign) -> one int32 word (true 2-words-per-group 2U).
+  drift.py      — drift-aware lanes: decayed Frugal-2U + two-sketch window.
   streaming.py  — chunked fused-kernel ingest for unbounded streams.
   baselines/    — GK, q-digest, Selection, reservoir, exact (paper §6).
 """
@@ -22,6 +23,7 @@ from .frugal import (
 )
 from .sketch import GroupedQuantileSketch, PackedSketchState
 from .batched import batched_frugal2u_update
+from .drift import DriftConfig, WindowState
 from .packing import (
     PackedFrugal2UState,
     pack_frugal2u,
@@ -43,6 +45,8 @@ __all__ = [
     "GroupedQuantileSketch",
     "PackedSketchState",
     "batched_frugal2u_update",
+    "DriftConfig",
+    "WindowState",
     "PackedFrugal2UState",
     "pack_frugal2u",
     "pack_step_sign",

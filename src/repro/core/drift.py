@@ -1,0 +1,332 @@
+"""Drift-aware frugal lanes: decayed Frugal-2U + two-sketch sliding window.
+
+The paper's estimators adapt to a fixed quantile of a *stationary* stream;
+its own dynamic-Cauchy experiments (Figs 5, 8-9) show the interesting regime
+is drifting distributions. Two failure modes keep vanilla lanes from
+tracking drift:
+
+  * **Step inertia (Frugal-2U).** At equilibrium, updates alternate
+    direction and each disagreement decrements `step`, so over a long
+    stationary phase `step` sinks without bound (≈ -0.25/tick at q=0.5).
+    After a distribution shift the estimate crawls by 1 per triggering tick
+    until `step` climbs back above 0 — re-convergence time grows with HOW
+    LONG the stream was stationary, not with how far the quantile moved.
+  * **All-time mass.** Even a perfectly re-converged lane estimates the
+    quantile of *everything it ever saw*; serve-side SLO sketches need the
+    quantile of *recent* traffic.
+
+Two drift modes address them, selected by `DriftConfig`:
+
+  * ``mode="decay"`` (Frugal-2U only): after every real tick, a below-floor
+    step relaxes geometrically toward `floor`::
+
+        step ← floor - (floor - step) · α        (only where step < floor)
+
+    with α = 2^(-1/half_life), so below-floor excess halves every
+    `half_life` ticks. The fixed point of "decrement 1/tick, then decay"
+    bounds the excess at α/(1-α) ≈ 1.44·half_life — re-arming adaptation in
+    O(half_life) ticks after a shift instead of O(stationary duration). The
+    estimate still converges (decay only trims accumulated *negative*
+    inertia; the positive-step chase dynamics are untouched).
+
+  * ``mode="window"`` (1U or 2U): a two-sketch sliding window. Each lane
+    carries an (A, B) sketch pair; time splits into epochs of `window`
+    ticks. At the first tick of epoch e, plane e mod 2 restarts — its
+    estimate warm-starts from the other plane, (step, sign) reset to (1, 1)
+    — then BOTH planes ingest every item. Queries read the *other* plane
+    (epoch parity (e+1) mod 2), which has between `window` and 2·`window`
+    ticks of history, so the estimate tracks the last W..2W items. Epoch
+    phase is derived from the ABSOLUTE tick (the fleet cursor), so the pair
+    needs zero extra state words.
+
+Bit-exactness contract (same as every other layer, DESIGN.md §4): uniforms
+key on the absolute (seed, tick, lane) triple and both window planes consume
+the SAME uniform per tick, so any drift config is invariant to backend ×
+chunking × mesh, and drift=None is bit-identical to the vanilla paths.
+Decay and window resets are gated on item validity (NaN = padded tick), so
+the NaN-padding contract — a padded tick is a bit-exact no-op, replayable
+later as a real tick at the same absolute index — is preserved.
+
+State cost: decay keeps the paper's 2 words/lane exactly (the decayed step
+packs through core.packing unchanged — α-multiplication leaves magnitudes
+well inside the [2^-63, 2^32) exact-round-trip domain). Window doubles the
+plane: 2 × (1-2 words)/lane, each plane packing via core.packing into the
+existing 1-2 word checkpoint budget (train/checkpoint.py format 3 stores
+the shadow plane as two extra leaves; drift-free trees keep their layout).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import rng
+from .frugal import (
+    Frugal1UState,
+    Frugal2UState,
+    frugal1u_update,
+    frugal2u_update,
+)
+
+Array = jax.Array
+
+DRIFT_MODES = ("decay", "window")
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftConfig:
+    """Static drift-mode description (hashable → pytree metadata / jit arg).
+
+    mode      — "decay" (decayed Frugal-2U) or "window" (two-sketch pair).
+    half_life — decay: ticks for below-floor step excess to halve.
+    floor     — decay: step level the excess decays toward (default 0:
+                accumulated negative inertia is what decays away).
+    window    — window: epoch length W in ticks; queries cover the last
+                W..2W items.
+    """
+
+    mode: str
+    half_life: int = 4096
+    floor: float = 0.0
+    window: int = 4096
+
+    def __post_init__(self):
+        if self.mode not in DRIFT_MODES:
+            raise ValueError(
+                f"drift mode must be one of {DRIFT_MODES}, got {self.mode!r}")
+        if self.mode == "decay" and self.half_life < 1:
+            raise ValueError(
+                f"decay half_life must be >= 1 tick, got {self.half_life}")
+        if self.mode == "window" and self.window < 1:
+            raise ValueError(
+                f"window must be >= 1 tick, got {self.window}")
+        if not np.isfinite(self.floor):
+            raise ValueError(f"floor must be finite, got {self.floor}")
+
+    def validate_for_algo(self, algo: str) -> "DriftConfig":
+        if self.mode == "decay" and algo != "2u":
+            raise ValueError(
+                "drift mode 'decay' decays the adaptive step and needs "
+                f"algo='2u' (Frugal-1U has no step); got algo={algo!r}")
+        return self
+
+    @property
+    def windowed(self) -> bool:
+        return self.mode == "window"
+
+    # ------------------------------------------------------ kernel operands
+    @property
+    def alpha_f32(self) -> np.float32:
+        """Per-tick decay factor 2^(-1/half_life), computed ONCE host-side
+        in float32 so every backend multiplies by the identical value."""
+        return np.float32(np.exp2(np.float64(-1.0) / self.half_life))
+
+    @property
+    def alpha_bits(self) -> int:
+        """int32 bit pattern of alpha_f32 — rides the kernels' SMEM
+        scalar-prefetch operand (int32-typed) and is bitcast back in-kernel."""
+        return int(np.float32(self.alpha_f32).view(np.int32))
+
+    @property
+    def floor_bits(self) -> int:
+        return int(np.float32(self.floor).view(np.int32))
+
+    def operand_slots(self) -> Tuple[int, int]:
+        """The two drift slots of the [5] SMEM scalar-prefetch operand
+        (kernels/frugal_update.py): (alpha_bits, floor_bits) for decay,
+        (window, 0) for window."""
+        if self.mode == "decay":
+            return (self.alpha_bits, self.floor_bits)
+        return (int(self.window), 0)
+
+
+def is_windowed(cfg: Optional["DriftConfig"]) -> bool:
+    """None-safe "carries a shadow plane" predicate — THE single spelling
+    every layer dispatches on (sketch, streaming, sharding, fleet,
+    checkpoint)."""
+    return cfg is not None and cfg.mode == "window"
+
+
+class WindowState(NamedTuple):
+    """Two-sketch window pair for one lane plane.
+
+    Plane A = (m, step, sign), plane B = (m2, step2, sign2) — field names
+    match GroupedQuantileSketch's primary/shadow leaves. For algo '1u' the
+    step/sign planes ride as all-ones placeholders (not persisted).
+    """
+
+    m: Array
+    step: Array
+    sign: Array
+    m2: Array
+    step2: Array
+    sign2: Array
+
+
+# --------------------------------------------------------------- tick pieces
+def apply_step_decay(step: Array, valid: Array, alpha, floor) -> Array:
+    """The decay relaxation, shared verbatim by the jnp scans and the Pallas
+    kernel body: where the (real-tick) step sits below `floor`, pull it
+    geometrically toward the floor."""
+    floor = jnp.asarray(floor, step.dtype)
+    alpha = jnp.asarray(alpha, step.dtype)
+    decayed = floor - (floor - step) * alpha
+    return jnp.where(valid & (step < floor), decayed, step)
+
+
+def decay2u_update(state: Frugal2UState, items: Array, rand: Array,
+                   quantile, alpha, floor) -> Frugal2UState:
+    """One decayed Frugal-2U tick: the paper's Algorithm 3 update followed
+    by the step relaxation. NaN items skip both (bit-exact no-op)."""
+    st = frugal2u_update(state, items, rand, quantile)
+    valid = items == items            # NaN-aware without isnan (Mosaic-safe)
+    return st._replace(step=apply_step_decay(st.step, valid, alpha, floor))
+
+
+def window_phase(t, window):
+    """(reset_a, reset_b) masks for absolute tick `t` (scalar or per-lane):
+    at the first tick of epoch e = t // W, plane e mod 2 restarts.
+    Element-wise int32 math — works for block ticks (scalar t), event-stream
+    lanes (per-lane t vector), and a traced `window` (the kernels read W off
+    their SMEM scalar-prefetch operand) alike."""
+    t = jnp.asarray(t, jnp.int32)
+    w = jnp.asarray(window, jnp.int32)
+    epoch = t // w
+    boundary = t - epoch * w == 0
+    even = epoch - (epoch // 2) * 2 == 0
+    return boundary & even, boundary & ~even
+
+
+def query_plane_is_primary(t_next, window: int):
+    """True where the PRIMARY plane (A) answers queries after `t_next` items
+    (epoch e = (t_next-1) // W; plane (e+1) mod 2 is the older one). Numpy
+    host math — estimate() is a host read."""
+    t_last = np.maximum(np.asarray(t_next, np.int64) - 1, 0)
+    epoch = t_last // int(window)
+    return (epoch % 2) == 1
+
+
+def window_update(state: WindowState, items: Array, rand: Array, quantile,
+                  t, window, algo: str = "2u") -> WindowState:
+    """One windowed tick: epoch-boundary restart, then BOTH planes ingest
+    `items` with the SAME uniform `rand`. `t` is the absolute tick (scalar
+    for block streams, per-lane [L] for event lanes). NaN items are
+    bit-exact no-ops — the restart is gated on validity too, so a padded
+    tick replayed later as a real item restarts exactly once. (Un-gating
+    would break chunk invariance outright: tail pads would fire restarts at
+    ticks the unchunked run never processes.)
+
+    Corollary for scalar-clock streams that use NaN as a USER-level "no
+    item for this lane" marker (not the internal padding/replay protocol):
+    a NaN landing exactly on a lane's epoch-boundary tick skips that
+    plane's restart until its next turn, two epochs on — the W..2W recency
+    guarantee degrades, bounded, to at most 3W..4W around the miss. Sparse
+    per-lane events should use the per-lane-clock API instead
+    (repro.api.QuantileFleet tick_lanes/tick_lanes_sparse), where a lane's
+    clock only advances on real events and boundary ticks can never be
+    skipped."""
+    valid = items == items
+    reset_a, reset_b = window_phase(t, window)
+    reset_a = reset_a & valid
+    reset_b = reset_b & valid
+    one = jnp.ones((), state.m.dtype)
+    # Warm-start the restarting plane from the other plane's estimate.
+    # reset_a and reset_b are mutually exclusive, so read order is moot.
+    m_a = jnp.where(reset_a, state.m2, state.m)
+    step_a = jnp.where(reset_a, one, state.step)
+    sign_a = jnp.where(reset_a, one, state.sign)
+    m_b = jnp.where(reset_b, state.m, state.m2)
+    step_b = jnp.where(reset_b, one, state.step2)
+    sign_b = jnp.where(reset_b, one, state.sign2)
+    if algo == "1u":
+        a = frugal1u_update(Frugal1UState(m_a), items, rand, quantile)
+        b = frugal1u_update(Frugal1UState(m_b), items, rand, quantile)
+        return WindowState(m=a.m, step=step_a, sign=sign_a,
+                           m2=b.m, step2=step_b, sign2=sign_b)
+    a = frugal2u_update(Frugal2UState(m_a, step_a, sign_a), items, rand,
+                        quantile)
+    b = frugal2u_update(Frugal2UState(m_b, step_b, sign_b), items, rand,
+                        quantile)
+    return WindowState(m=a.m, step=a.step, sign=a.sign,
+                       m2=b.m, step2=b.step, sign2=b.sign)
+
+
+# -------------------------------------------------------------------- scans
+def _drift_scan(tick_fn, trace_fn, state, items, seed, quantile, return_trace,
+                t_offset, g_offset, lanes_per_group):
+    """Fused drift-aware [T, G] scan — the same counter-RNG discipline as
+    core.frugal._fused_scan (absolute (seed, tick, lane) keys, group→lane
+    broadcast for multi-quantile planes), with the absolute tick handed to
+    the tick so decay/window phase math keys on it."""
+    seed = jnp.asarray(seed, jnp.int32)
+    t, g = items.shape
+    lanes = g * lanes_per_group
+    if state.m.shape[0] != lanes:
+        raise ValueError(
+            f"state has {state.m.shape[0]} lanes but items [{t}, {g}] x "
+            f"lanes_per_group={lanes_per_group} needs {lanes}")
+    g_ids = jnp.asarray(g_offset, jnp.int32) + jnp.arange(lanes, dtype=jnp.int32)
+    t0 = jnp.asarray(t_offset, jnp.int32)
+
+    def tick(s, xs):
+        it, i = xs
+        if lanes_per_group > 1:
+            it = jnp.repeat(it, lanes_per_group)
+        t_abs = t0 + i
+        r = rng.counter_uniform(seed, t_abs, g_ids)
+        s2 = tick_fn(s, it, r, t_abs)
+        return s2, (trace_fn(s2, t_abs) if return_trace else None)
+
+    return jax.lax.scan(tick, state, (items, jnp.arange(t, dtype=jnp.int32)))
+
+
+def decay2u_process_seeded(
+    state: Frugal2UState, items: Array, seed, quantile, cfg: DriftConfig,
+    return_trace: bool = False, t_offset=0, g_offset=0,
+    lanes_per_group: int = 1,
+) -> Tuple[Frugal2UState, Optional[Array]]:
+    """Fused [T, G] decayed-2U ingest (the off-TPU oracle the fused decay
+    kernel is pinned against). Trace rows are the per-tick estimates."""
+    alpha, floor = cfg.alpha_f32, np.float32(cfg.floor)
+
+    def tick_fn(s, it, r, t_abs):
+        del t_abs
+        return decay2u_update(s, it, r, quantile, alpha, floor)
+
+    return _drift_scan(tick_fn, lambda s, t: s.m, state, items, seed,
+                       quantile, return_trace, t_offset, g_offset,
+                       lanes_per_group)
+
+
+def window_process_seeded(
+    state: WindowState, items: Array, seed, quantile, cfg: DriftConfig,
+    return_trace: bool = False, t_offset=0, g_offset=0,
+    lanes_per_group: int = 1, algo: str = "2u",
+) -> Tuple[WindowState, Optional[Array]]:
+    """Fused [T, G] two-sketch-window ingest. Trace rows are the QUERIED
+    plane's estimate at each tick (what estimate() would answer then)."""
+    w = int(cfg.window)
+
+    def tick_fn(s, it, r, t_abs):
+        return window_update(s, it, r, quantile, t_abs, w, algo=algo)
+
+    def trace_fn(s, t_abs):
+        # After processing tick t_abs the stream holds t_abs+1 items; the
+        # queried plane is the one NOT restarted this epoch.
+        epoch = t_abs // jnp.int32(w)
+        primary = epoch - (epoch // 2) * 2 == 1
+        return jnp.where(primary, s.m, s.m2)
+
+    return _drift_scan(tick_fn, trace_fn, state, items, seed, quantile,
+                       return_trace, t_offset, g_offset, lanes_per_group)
+
+
+def window_init(num_lanes: int, init=0.0, dtype=jnp.float32) -> WindowState:
+    m = jnp.broadcast_to(jnp.asarray(init, dtype), (num_lanes,)).astype(dtype)
+    # Distinct buffers per leaf — aliased leaves break donation in jits.
+    return WindowState(m=m, step=jnp.ones_like(m), sign=jnp.ones_like(m),
+                       m2=jnp.copy(m), step2=jnp.ones_like(m),
+                       sign2=jnp.ones_like(m))

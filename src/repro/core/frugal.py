@@ -185,8 +185,28 @@ def frugal2u_process_seeded(
     state: Frugal2UState, items: Array, seed, quantile: ArrayLike = 0.5,
     return_trace: bool = False, t_offset: ArrayLike = 0,
     g_offset: ArrayLike = 0, lanes_per_group: int = 1,
+    drift=None,
 ) -> Tuple[Frugal2UState, Optional[Array]]:
-    """Fused [T, G] Frugal-2U ingest from a raw int32 counter seed."""
+    """Fused [T, G] Frugal-2U ingest from a raw int32 counter seed.
+
+    `drift` (core.drift.DriftConfig, mode 'decay') selects the
+    exponentially-decayed step variant — same state shape, same uniforms,
+    one extra relaxation per real tick. drift=None is the vanilla paper
+    scan, bit-identical to before the drift layer existed. The two-sketch
+    window variant carries a doubled state plane and lives in
+    core.drift.window_process_seeded.
+    """
+    if drift is not None:
+        from . import drift as drift_mod  # lazy: drift imports this module
+
+        if drift.mode != "decay":
+            raise ValueError(
+                "frugal2u_process_seeded handles drift mode 'decay' only; "
+                "windowed lanes carry a doubled state plane — use "
+                "core.drift.window_process_seeded")
+        return drift_mod.decay2u_process_seeded(
+            state, items, seed, quantile, drift, return_trace, t_offset,
+            g_offset, lanes_per_group)
     return _fused_scan(frugal2u_update, state, items, seed, quantile,
                        return_trace, t_offset, g_offset, lanes_per_group)
 

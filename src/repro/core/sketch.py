@@ -34,6 +34,7 @@ import jax.numpy as jnp
 from . import frugal
 from . import packing
 from .batched import batched_frugal2u_update
+from .drift import DriftConfig, WindowState, is_windowed
 
 Array = jax.Array
 
@@ -43,11 +44,17 @@ class PackedSketchState(NamedTuple):
 
     For 2U, (step, sign) live in ONE int32 word (core.packing) — the on-disk
     and kernel-operand form of the paper's "two units of memory + one bit".
+    A windowed sketch (core.drift, mode 'window') adds its shadow plane as
+    `m2` / `step_sign2`, each plane packing into the same 1-2 word budget;
+    drift-free sketches keep both None, so their leaf layout (and format-3
+    checkpoints of them) is unchanged.
     """
 
     m: Array                      # [G] float32
     step_sign: Optional[Array]    # [G] int32 (2U only, packed)
     quantile: Array
+    m2: Optional[Array] = None          # [G] float32 (window shadow plane)
+    step_sign2: Optional[Array] = None  # [G] int32 (window shadow, 2U)
 
 
 @jax.tree_util.register_dataclass
@@ -60,8 +67,13 @@ class GroupedQuantileSketch:
     step: Optional[Array]         # [G] (2U only)
     sign: Optional[Array]         # [G] (2U only)
     quantile: Array               # scalar or [G] target h/k
+    m2: Optional[Array] = None    # [G] window shadow plane (drift 'window')
+    step2: Optional[Array] = None
+    sign2: Optional[Array] = None
     # --- static ---
     algo: str = dataclasses.field(metadata=dict(static=True), default="2u")
+    drift: Optional[DriftConfig] = dataclasses.field(
+        metadata=dict(static=True), default=None)
 
     @property
     def num_groups(self) -> int:
@@ -69,40 +81,77 @@ class GroupedQuantileSketch:
 
     @property
     def estimate(self) -> Array:
-        """Current quantile estimates, shape [G]."""
+        """Current quantile estimates, shape [G].
+
+        For a windowed sketch this is the PRIMARY plane; callers that know
+        the absolute stream tick (repro.api.QuantileFleet.estimate) select
+        the queried plane via core.drift.query_plane_is_primary — plane
+        choice is a function of the cursor, not of sketch state."""
         return self.m
 
     def memory_words(self) -> int:
-        """Persistent words per group — 1 (1U) or 2 (2U).
+        """Persistent words per group-lane: 1 (1U) or 2 (2U) per plane.
 
         For 2U this is literal, not rounded: the serialized / kernel-operand
         form is m [f32] + one int32 word holding (step, sign) packed into
         unused float32 exponent space (see `packed` / core.packing). The
         unpacked (m, step, sign) triple held by this dataclass is an API-level
-        view, reconstructed bit-exactly from the two words.
+        view, reconstructed bit-exactly from the two words. A two-sketch
+        window (drift mode 'window') carries two such planes.
         """
-        return 1 if self.algo == "1u" else 2
+        per_plane = 1 if self.algo == "1u" else 2
+        return per_plane * (2 if is_windowed(self.drift) else 1)
 
     # -------------------------------------------------------- serialization
     def packed(self) -> PackedSketchState:
-        """Two-words-per-group serialized form (checkpoint / wire format)."""
+        """1-2 words per group-plane serialized form (checkpoint / wire)."""
         if self.algo == "1u":
             return PackedSketchState(m=self.m, step_sign=None,
-                                     quantile=self.quantile)
+                                     quantile=self.quantile, m2=self.m2)
+        ss2 = None if self.step2 is None else \
+            packing.pack_step_sign(self.step2, self.sign2)
         return PackedSketchState(
             m=self.m, step_sign=packing.pack_step_sign(self.step, self.sign),
-            quantile=self.quantile)
+            quantile=self.quantile, m2=self.m2, step_sign2=ss2)
 
     @staticmethod
-    def from_packed(p: PackedSketchState) -> "GroupedQuantileSketch":
-        """Bit-exact inverse of `packed` (for in-domain step magnitudes)."""
+    def from_packed(p: PackedSketchState,
+                    drift: Optional[DriftConfig] = None
+                    ) -> "GroupedQuantileSketch":
+        """Bit-exact inverse of `packed` (for in-domain step magnitudes).
+
+        A payload carrying a shadow plane restores as a windowed sketch;
+        `drift` supplies the window length (default: DriftConfig defaults)
+        — the plane data itself is position-independent. An explicit
+        `drift` must agree with the payload's shadow-plane presence: a
+        mismatch means the caller is restoring the wrong config (a windowed
+        sketch as decay/vanilla, or vice versa) and is refused rather than
+        guessed around."""
+        m2 = getattr(p, "m2", None)
+        if drift is not None and is_windowed(drift) != (m2 is not None):
+            raise ValueError(
+                f"packed payload {'has' if m2 is not None else 'lacks'} a "
+                f"window shadow plane but drift={drift!r}")
+        if m2 is not None and drift is None:
+            drift = DriftConfig(mode="window")
+        if drift is not None:
+            drift = drift.validate_for_algo(
+                "1u" if p.step_sign is None else "2u")
         if p.step_sign is None:
             return GroupedQuantileSketch(m=p.m, step=None, sign=None,
-                                         quantile=p.quantile, algo="1u")
+                                         quantile=p.quantile, m2=m2,
+                                         algo="1u", drift=drift)
         step, sign = packing.unpack_step_sign(p.step_sign)
+        step2 = sign2 = None
+        ss2 = getattr(p, "step_sign2", None)
+        if ss2 is not None:
+            step2, sign2 = packing.unpack_step_sign(ss2)
+            step2 = step2.astype(p.m.dtype)
+            sign2 = sign2.astype(p.m.dtype)
         return GroupedQuantileSketch(
             m=p.m, step=step.astype(p.m.dtype), sign=sign.astype(p.m.dtype),
-            quantile=p.quantile, algo="2u")
+            quantile=p.quantile, m2=m2, step2=step2, sign2=sign2,
+            algo="2u", drift=drift)
 
     # ------------------------------------------------------------------ init
     @staticmethod
@@ -112,16 +161,32 @@ class GroupedQuantileSketch:
         algo: str = "2u",
         init: Union[float, Array] = 0.0,
         dtype=jnp.float32,
+        drift: Optional[DriftConfig] = None,
     ) -> "GroupedQuantileSketch":
+        """`drift` selects a drift-aware lane variant (core.drift): 'decay'
+        keeps the vanilla state shape, 'window' adds the shadow plane.
+        drift=None is the vanilla paper sketch, bit-identical to before."""
         if algo not in ("1u", "2u"):
             raise ValueError(f"algo must be '1u' or '2u', got {algo!r}")
+        if drift is not None:
+            drift.validate_for_algo(algo)
         m = jnp.broadcast_to(jnp.asarray(init, dtype), (num_groups,)).astype(dtype)
         q = jnp.asarray(quantile, dtype)
+        # Every leaf gets its OWN buffer: leaves that alias (e.g. step and
+        # sign sharing one ones-array) break donation inside jitted train
+        # steps ("donate the same buffer twice").
+        windowed = is_windowed(drift)
         if algo == "1u":
-            return GroupedQuantileSketch(m=m, step=None, sign=None, quantile=q, algo="1u")
+            return GroupedQuantileSketch(m=m, step=None, sign=None,
+                                         quantile=q,
+                                         m2=jnp.copy(m) if windowed else None,
+                                         algo="1u", drift=drift)
         return GroupedQuantileSketch(
-            m=m, step=jnp.ones_like(m), sign=jnp.ones_like(m), quantile=q, algo="2u"
-        )
+            m=m, step=jnp.ones_like(m), sign=jnp.ones_like(m), quantile=q,
+            m2=jnp.copy(m) if windowed else None,
+            step2=jnp.ones_like(m) if windowed else None,
+            sign2=jnp.ones_like(m) if windowed else None, algo="2u",
+            drift=drift)
 
     @staticmethod
     def create_lanes(
@@ -130,6 +195,7 @@ class GroupedQuantileSketch:
         algo: str = "2u",
         init: Union[float, Array] = 0.0,
         dtype=jnp.float32,
+        drift: Optional[DriftConfig] = None,
     ) -> "GroupedQuantileSketch":
         """A (G × Q) multi-quantile lane plane as one flat sketch.
 
@@ -152,21 +218,49 @@ class GroupedQuantileSketch:
         q = jnp.asarray(np.tile(quantiles.astype(np.float32), num_groups),
                         dtype)
         return GroupedQuantileSketch.create(lanes, quantile=q, algo=algo,
-                                            init=init_arr, dtype=dtype)
+                                            init=init_arr, dtype=dtype,
+                                            drift=drift)
 
     # ---------------------------------------------------------------- update
+    @property
+    def _windowed(self) -> bool:
+        return is_windowed(self.drift)
+
     def _as_state(self):
+        if self._windowed:
+            one = jnp.ones_like(self.m)
+            return WindowState(
+                m=self.m, step=self.step if self.step is not None else one,
+                sign=self.sign if self.sign is not None else one,
+                m2=self.m2,
+                step2=self.step2 if self.step2 is not None else one,
+                sign2=self.sign2 if self.sign2 is not None else one)
         if self.algo == "1u":
             return frugal.Frugal1UState(self.m)
         return frugal.Frugal2UState(self.m, self.step, self.sign)
 
     def _with_state(self, st) -> "GroupedQuantileSketch":
+        if self._windowed:
+            if self.algo == "1u":
+                return dataclasses.replace(self, m=st.m, m2=st.m2)
+            return dataclasses.replace(self, m=st.m, step=st.step,
+                                       sign=st.sign, m2=st.m2,
+                                       step2=st.step2, sign2=st.sign2)
         if self.algo == "1u":
             return dataclasses.replace(self, m=st.m)
         return dataclasses.replace(self, m=st.m, step=st.step, sign=st.sign)
 
     def update(self, items: Array, rand: Array) -> "GroupedQuantileSketch":
-        """One tick: one item per group. items/rand shape [G]."""
+        """One tick: one item per group. items/rand shape [G].
+
+        Raw fed-uniform single tick — vanilla lanes only: drift variants
+        key decay/window phase on the ABSOLUTE tick, which this entry point
+        does not carry (use process/process_seeded or the facade)."""
+        if self.drift is not None:
+            raise ValueError(
+                "update(items, rand) carries no stream tick; drift-aware "
+                "sketches need the absolute tick — use process_seeded or "
+                "repro.api.QuantileFleet")
         if self.algo == "1u":
             st = frugal.frugal1u_update(self._as_state(), items, rand, self.quantile)
         else:
@@ -189,6 +283,11 @@ class GroupedQuantileSketch:
         drive all G·Q lanes. New code should prefer the one-stop facade,
         repro.api.QuantileFleet, which threads key/offsets via its cursor.
         """
+        if self.drift is not None:
+            from . import rng as crng
+            return self.process_seeded(items, crng.seed_from_key(key),
+                                       g_offset=g_offset,
+                                       lanes_per_group=lanes_per_group)
         if self.algo == "1u":
             st, _ = frugal.frugal1u_process(self._as_state(), items, key=key,
                                             quantile=self.quantile,
@@ -210,7 +309,14 @@ class GroupedQuantileSketch:
         pure function of them — bit-identical to `process` when
         seed == rng.seed_from_key(key) and the offsets are zero.
         """
-        if self.algo == "1u":
+        from . import drift as drift_mod
+
+        if self._windowed:
+            st, _ = drift_mod.window_process_seeded(
+                self._as_state(), items, seed, self.quantile, self.drift,
+                t_offset=t_offset, g_offset=g_offset,
+                lanes_per_group=lanes_per_group, algo=self.algo)
+        elif self.algo == "1u":
             st, _ = frugal.frugal1u_process_seeded(
                 self._as_state(), items, seed, self.quantile,
                 t_offset=t_offset, g_offset=g_offset,
@@ -219,7 +325,7 @@ class GroupedQuantileSketch:
             st, _ = frugal.frugal2u_process_seeded(
                 self._as_state(), items, seed, self.quantile,
                 t_offset=t_offset, g_offset=g_offset,
-                lanes_per_group=lanes_per_group)
+                lanes_per_group=lanes_per_group, drift=self.drift)
         return self._with_state(st)
 
     def ingest_tensor(self, x: Array, key: Array, group_axis: int = -1) -> "GroupedQuantileSketch":
@@ -229,6 +335,11 @@ class GroupedQuantileSketch:
         batch. Designed for activation/grad telemetry inside train_step:
         one vectorized reduction, no T-long scan.
         """
+        if self.drift is not None:
+            raise ValueError(
+                "ingest_tensor's batched binomial update collapses the tick "
+                "axis; drift-aware lanes need per-tick phase — use "
+                "process/process_seeded")
         x = jnp.moveaxis(x, group_axis, -1)
         x = x.reshape(-1, x.shape[-1])  # [B, G]
         if self.algo == "1u":

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from . import rng as crng
+from .drift import is_windowed
 from .sketch import GroupedQuantileSketch
 
 Array = jax.Array
@@ -46,9 +47,31 @@ def _apply_chunk(sk: GroupedQuantileSketch, chunk: Array, seed, t_offset,
 
     `lanes_per_group` = Q > 1 drives a G·Q multi-quantile lane plane off the
     [chunk_t, G] block: the group→lane broadcast happens on device inside
-    the kernel entry point, so the host stream stays G columns wide."""
+    the kernel entry point, so the host stream stays G columns wide.
+    Drift-aware sketches (sk.drift, core.drift) dispatch to the matching
+    drift kernels — same chunking, same absolute-tick RNG keys."""
     from repro.kernels import ops  # lazy: kernels imports core (no cycle at runtime)
 
+    drift = sk.drift
+    if is_windowed(drift):
+        if sk.algo == "1u":
+            m, m2 = ops.frugal1u_update_auto_fused_window(
+                chunk, sk.m, sk.m2, sk.quantile, seed=seed, drift=drift,
+                t_offset=t_offset, g_offset=g_offset,
+                lanes_per_group=lanes_per_group)
+            return dataclasses.replace(sk, m=m, m2=m2)
+        m, step, sign, m2, step2, sign2 = ops.frugal2u_update_auto_fused_window(
+            chunk, sk.m, sk.step, sk.sign, sk.m2, sk.step2, sk.sign2,
+            sk.quantile, seed=seed, drift=drift, t_offset=t_offset,
+            g_offset=g_offset, lanes_per_group=lanes_per_group)
+        return dataclasses.replace(sk, m=m, step=step, sign=sign, m2=m2,
+                                   step2=step2, sign2=sign2)
+    if drift is not None:  # decay (validated 2u-only at sketch creation)
+        m, step, sign = ops.frugal2u_update_auto_fused_decay(
+            chunk, sk.m, sk.step, sk.sign, sk.quantile, seed=seed,
+            drift=drift, t_offset=t_offset, g_offset=g_offset,
+            lanes_per_group=lanes_per_group)
+        return dataclasses.replace(sk, m=m, step=step, sign=sign)
     if sk.algo == "1u":
         m = ops.frugal1u_update_auto_fused(
             chunk, sk.m, sk.quantile, seed=seed, t_offset=t_offset,

@@ -16,6 +16,12 @@ from .ops import (
     frugal2u_update_blocked_fused,
     frugal1u_update_auto_fused,
     frugal2u_update_auto_fused,
+    frugal2u_update_blocked_fused_decay,
+    frugal2u_update_auto_fused_decay,
+    frugal1u_update_blocked_fused_window,
+    frugal1u_update_auto_fused_window,
+    frugal2u_update_blocked_fused_window,
+    frugal2u_update_auto_fused_window,
 )
 
 __all__ = [
@@ -27,4 +33,10 @@ __all__ = [
     "frugal2u_update_blocked_fused",
     "frugal1u_update_auto_fused",
     "frugal2u_update_auto_fused",
+    "frugal2u_update_blocked_fused_decay",
+    "frugal2u_update_auto_fused_decay",
+    "frugal1u_update_blocked_fused_window",
+    "frugal1u_update_auto_fused_window",
+    "frugal2u_update_blocked_fused_window",
+    "frugal2u_update_auto_fused_window",
 ]

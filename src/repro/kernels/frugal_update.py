@@ -46,6 +46,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import rng as crng
 from repro.core import packing
+from repro.core import drift as drift_mod
 
 Array = jax.Array
 
@@ -200,6 +201,129 @@ def _frugal2u_fused_kernel(
     packed_out_ref[0, :] = packing.pack_step_sign(step, sign)
 
 
+# ------------------------------------------------- kernels (drift-aware lanes)
+# Drift kernels extend the scalar-prefetch operand to [5]:
+#   (seed, t_offset, g_offset, p0, p1)
+# where (p0, p1) = (alpha_bits, floor_bits) for decay — float32 BIT PATTERNS
+# riding the int32 SMEM operand, bitcast back in-kernel so every backend
+# multiplies by the identical float — and (window, unused) for the
+# two-sketch window. Tick math is the SAME core.drift expressions the jnp
+# scans run, so trajectories are bit-identical across backends by
+# construction (tests/test_drift.py pins it).
+
+
+def _frugal2u_fused_decay_kernel(
+    seed_ref, q_ref, items_ref, m_in_ref, packed_in_ref,
+    m_out_ref, packed_out_ref, *, block_t, block_g,
+):
+    g_blk = pl.program_id(0)
+    t_blk = pl.program_id(1)
+
+    @pl.when(t_blk == 0)
+    def _seed():
+        m_out_ref[...] = m_in_ref[...]
+        packed_out_ref[...] = packed_in_ref[...]
+
+    q = q_ref[0, :]
+    seed = seed_ref[0]
+    t0 = seed_ref[1] + t_blk * block_t
+    g_ids = _lane_ids(g_blk, block_g, seed_ref[2])
+    alpha = jax.lax.bitcast_convert_type(seed_ref[3], jnp.float32)
+    floor = jax.lax.bitcast_convert_type(seed_ref[4], jnp.float32)
+
+    step0, sign0 = packing.unpack_step_sign(packed_out_ref[0, :])
+
+    def body(i, carry):
+        m, step, sign = carry
+        it = items_ref[i, :]
+        r = crng.counter_uniform(seed, t0 + i, g_ids)
+        m, step, sign = _tick_2u(m, step, sign, it, r, q)
+        step = drift_mod.apply_step_decay(step, it == it, alpha, floor)
+        return m, step, sign
+
+    m, step, sign = jax.lax.fori_loop(
+        0, block_t, body, (m_out_ref[0, :], step0, sign0))
+    m_out_ref[0, :] = m
+    packed_out_ref[0, :] = packing.pack_step_sign(step, sign)
+
+
+def _frugal1u_fused_window_kernel(
+    seed_ref, q_ref, items_ref, ma_in_ref, mb_in_ref,
+    ma_out_ref, mb_out_ref, *, block_t, block_g,
+):
+    g_blk = pl.program_id(0)
+    t_blk = pl.program_id(1)
+
+    @pl.when(t_blk == 0)
+    def _seed():
+        ma_out_ref[...] = ma_in_ref[...]
+        mb_out_ref[...] = mb_in_ref[...]
+
+    q = q_ref[0, :]
+    seed = seed_ref[0]
+    t0 = seed_ref[1] + t_blk * block_t
+    g_ids = _lane_ids(g_blk, block_g, seed_ref[2])
+    w = seed_ref[3]
+
+    def body(i, carry):
+        m_a, m_b = carry
+        it = items_ref[i, :]
+        r = crng.counter_uniform(seed, t0 + i, g_ids)
+        one = jnp.ones_like(m_a)
+        st = drift_mod.window_update(
+            drift_mod.WindowState(m=m_a, step=one, sign=one,
+                                  m2=m_b, step2=one, sign2=one),
+            it, r, q, t0 + i, w, algo="1u")
+        return st.m, st.m2
+
+    m_a, m_b = jax.lax.fori_loop(
+        0, block_t, body, (ma_out_ref[0, :], mb_out_ref[0, :]))
+    ma_out_ref[0, :] = m_a
+    mb_out_ref[0, :] = m_b
+
+
+def _frugal2u_fused_window_kernel(
+    seed_ref, q_ref, items_ref, ma_in_ref, pa_in_ref, mb_in_ref, pb_in_ref,
+    ma_out_ref, pa_out_ref, mb_out_ref, pb_out_ref, *, block_t, block_g,
+):
+    g_blk = pl.program_id(0)
+    t_blk = pl.program_id(1)
+
+    @pl.when(t_blk == 0)
+    def _seed():
+        ma_out_ref[...] = ma_in_ref[...]
+        pa_out_ref[...] = pa_in_ref[...]
+        mb_out_ref[...] = mb_in_ref[...]
+        pb_out_ref[...] = pb_in_ref[...]
+
+    q = q_ref[0, :]
+    seed = seed_ref[0]
+    t0 = seed_ref[1] + t_blk * block_t
+    g_ids = _lane_ids(g_blk, block_g, seed_ref[2])
+    w = seed_ref[3]
+
+    # Each plane crosses block boundaries as (m, packed): 2 words per lane
+    # per plane, 4 words total for the window pair.
+    step_a0, sign_a0 = packing.unpack_step_sign(pa_out_ref[0, :])
+    step_b0, sign_b0 = packing.unpack_step_sign(pb_out_ref[0, :])
+
+    def body(i, carry):
+        st = drift_mod.WindowState(*carry)
+        it = items_ref[i, :]
+        r = crng.counter_uniform(seed, t0 + i, g_ids)
+        st = drift_mod.window_update(st, it, r, q, t0 + i, w, algo="2u")
+        return tuple(st)
+
+    m_a, step_a, sign_a, m_b, step_b, sign_b = jax.lax.fori_loop(
+        0, block_t, body,
+        (ma_out_ref[0, :], step_a0, sign_a0, mb_out_ref[0, :], step_b0,
+         sign_b0))
+    ma_out_ref[0, :] = m_a
+    pa_out_ref[0, :] = packing.pack_step_sign(step_a, sign_a)
+    mb_out_ref[0, :] = m_b
+    pb_out_ref[0, :] = packing.pack_step_sign(step_b, sign_b)
+
+
 # ------------------------------------------------------------------ callables
 def frugal1u_pallas(
     items: Array,   # [T, G] float32 (NaN = no-op tick)
@@ -283,6 +407,16 @@ def _seed_operand(seed, t_offset, g_offset) -> Array:
     return jnp.stack([jnp.asarray(seed, jnp.int32),
                       jnp.asarray(t_offset, jnp.int32),
                       jnp.asarray(g_offset, jnp.int32)])
+
+
+def _seed_operand_drift(seed, t_offset, g_offset, p0, p1) -> Array:
+    """[5] int32 scalar-prefetch operand for the drift kernels: the base
+    triple plus the two drift slots (core.drift.DriftConfig.operand_slots)."""
+    return jnp.stack([jnp.asarray(seed, jnp.int32),
+                      jnp.asarray(t_offset, jnp.int32),
+                      jnp.asarray(g_offset, jnp.int32),
+                      jnp.asarray(p0, jnp.int32),
+                      jnp.asarray(p1, jnp.int32)])
 
 
 def frugal1u_pallas_fused(
@@ -369,3 +503,145 @@ def frugal2u_pallas_fused(
     )(_seed_operand(seed, t_offset, g_offset), quantile[None, :], items,
       m[None, :], packed[None, :])
     return m2[0], packed2[0]
+
+
+def frugal2u_pallas_fused_decay(
+    items: Array,      # [T, G] float32 (NaN = no-op tick)
+    m: Array,          # [G] float32
+    packed: Array,     # [G] int32 — (step, sign) packed, core.packing
+    quantile: Array,   # [G] float32
+    seed,              # int32 scalar
+    alpha_bits,        # int32 scalar — f32 bits of the per-tick decay factor
+    floor_bits,        # int32 scalar — f32 bits of the step floor
+    *,
+    t_offset=0,
+    g_offset=0,
+    block_g: int = 128,
+    block_t: int = 256,
+    interpret: bool = False,
+):
+    """Decayed Frugal-2U (core.drift mode 'decay'), fused RNG + packed state:
+    the vanilla fused kernel plus one step relaxation per real tick. State
+    I/O stays exactly two words per lane. Returns (m, packed), each [G]."""
+    t, g = items.shape
+    assert t % block_t == 0 and g % block_g == 0, (t, g, block_t, block_g)
+    grid = (g // block_g, t // block_t)
+
+    state_spec = pl.BlockSpec((1, block_g), lambda gi, ti, *_: (0, gi))
+    stream_spec = pl.BlockSpec((block_t, block_g), lambda gi, ti, *_: (ti, gi))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[state_spec, stream_spec, state_spec, state_spec],
+        out_specs=[state_spec, state_spec],
+    )
+    m2, packed2 = pl.pallas_call(
+        functools.partial(_frugal2u_fused_decay_kernel, block_t=block_t,
+                          block_g=block_g),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((1, g), m.dtype),
+            jax.ShapeDtypeStruct((1, g), jnp.int32),
+        ],
+        compiler_params=_compiler_params(),
+        interpret=interpret,
+    )(_seed_operand_drift(seed, t_offset, g_offset, alpha_bits, floor_bits),
+      quantile[None, :], items, m[None, :], packed[None, :])
+    return m2[0], packed2[0]
+
+
+def frugal1u_pallas_fused_window(
+    items: Array,      # [T, G] float32 (NaN = no-op tick)
+    m_a: Array,        # [G] float32 — primary plane
+    m_b: Array,        # [G] float32 — shadow plane
+    quantile: Array,   # [G] float32
+    seed,              # int32 scalar
+    window,            # int32 scalar — epoch length W in ticks
+    *,
+    t_offset=0,
+    g_offset=0,
+    block_g: int = 128,
+    block_t: int = 256,
+    interpret: bool = False,
+):
+    """Two-sketch sliding-window Frugal-1U (core.drift mode 'window'): both
+    planes ingest every tick, plane (epoch mod 2) restarts at each epoch
+    boundary. Returns (m_a, m_b), each [G]."""
+    t, g = items.shape
+    assert t % block_t == 0 and g % block_g == 0, (t, g, block_t, block_g)
+    grid = (g // block_g, t // block_t)
+
+    state_spec = pl.BlockSpec((1, block_g), lambda gi, ti, *_: (0, gi))
+    stream_spec = pl.BlockSpec((block_t, block_g), lambda gi, ti, *_: (ti, gi))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[state_spec, stream_spec, state_spec, state_spec],
+        out_specs=[state_spec, state_spec],
+    )
+    ma2, mb2 = pl.pallas_call(
+        functools.partial(_frugal1u_fused_window_kernel, block_t=block_t,
+                          block_g=block_g),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((1, g), m_a.dtype),
+            jax.ShapeDtypeStruct((1, g), m_b.dtype),
+        ],
+        compiler_params=_compiler_params(),
+        interpret=interpret,
+    )(_seed_operand_drift(seed, t_offset, g_offset, window, 0),
+      quantile[None, :], items, m_a[None, :], m_b[None, :])
+    return ma2[0], mb2[0]
+
+
+def frugal2u_pallas_fused_window(
+    items: Array,      # [T, G] float32 (NaN = no-op tick)
+    m_a: Array,        # [G] float32 — primary plane
+    packed_a: Array,   # [G] int32 — primary (step, sign) packed
+    m_b: Array,        # [G] float32 — shadow plane
+    packed_b: Array,   # [G] int32 — shadow (step, sign) packed
+    quantile: Array,   # [G] float32
+    seed,              # int32 scalar
+    window,            # int32 scalar — epoch length W in ticks
+    *,
+    t_offset=0,
+    g_offset=0,
+    block_g: int = 128,
+    block_t: int = 256,
+    interpret: bool = False,
+):
+    """Two-sketch sliding-window Frugal-2U: two (m, packed) planes — four
+    state words per lane cross HBM, each plane the paper's two words.
+    Returns (m_a, packed_a, m_b, packed_b), each [G]."""
+    t, g = items.shape
+    assert t % block_t == 0 and g % block_g == 0, (t, g, block_t, block_g)
+    grid = (g // block_g, t // block_t)
+
+    state_spec = pl.BlockSpec((1, block_g), lambda gi, ti, *_: (0, gi))
+    stream_spec = pl.BlockSpec((block_t, block_g), lambda gi, ti, *_: (ti, gi))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[state_spec, stream_spec, state_spec, state_spec,
+                  state_spec, state_spec],
+        out_specs=[state_spec, state_spec, state_spec, state_spec],
+    )
+    ma2, pa2, mb2, pb2 = pl.pallas_call(
+        functools.partial(_frugal2u_fused_window_kernel, block_t=block_t,
+                          block_g=block_g),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((1, g), m_a.dtype),
+            jax.ShapeDtypeStruct((1, g), jnp.int32),
+            jax.ShapeDtypeStruct((1, g), m_b.dtype),
+            jax.ShapeDtypeStruct((1, g), jnp.int32),
+        ],
+        compiler_params=_compiler_params(),
+        interpret=interpret,
+    )(_seed_operand_drift(seed, t_offset, g_offset, window, 0),
+      quantile[None, :], items, m_a[None, :], packed_a[None, :],
+      m_b[None, :], packed_b[None, :])
+    return ma2[0], pa2[0], mb2[0], pb2[0]

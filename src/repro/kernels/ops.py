@@ -32,6 +32,7 @@ import warnings
 import jax
 import jax.numpy as jnp
 
+from repro.core import drift as drift_mod
 from repro.core import frugal
 from repro.core import packing
 from repro.core import rng as crng
@@ -40,8 +41,11 @@ from . import ref
 from .frugal_update import (
     frugal1u_pallas,
     frugal1u_pallas_fused,
+    frugal1u_pallas_fused_window,
     frugal2u_pallas,
     frugal2u_pallas_fused,
+    frugal2u_pallas_fused_decay,
+    frugal2u_pallas_fused_window,
 )
 
 Array = jax.Array
@@ -193,6 +197,177 @@ def frugal2u_update_auto_fused(items, m, step, sign, quantile, key=None, *,
     q = jnp.broadcast_to(jnp.asarray(quantile, m.dtype), m.shape)
     return _cpu2_fused(items.astype(m.dtype), m, step, sign, q, s, t_offset,
                        g_offset, lanes=lanes_per_group)
+
+
+# -------------------------------------------------------- drift-aware (fused)
+# Drift lanes (core.drift): the fused hot path with the decay factor /
+# window length riding two extra SMEM scalar-prefetch slots (see
+# kernels/frugal_update.py). Off TPU these dispatch to the jitted core
+# scans — the same single jnp transcription discipline as the vanilla path.
+@functools.partial(jax.jit, static_argnames=("block_g", "block_t", "interpret"))
+def frugal2u_update_blocked_fused_decay(
+    items: Array, m: Array, step: Array, sign: Array, quantile: Array,
+    seed, alpha_bits, floor_bits, t_offset=0, g_offset=0,
+    *, block_g: int = 128, block_t: int = 256, interpret: bool = True,
+):
+    """Decayed Frugal-2U over a [T, G] block (fused RNG + packed state).
+
+    `alpha_bits` / `floor_bits` are the int32 bit patterns of the float32
+    decay factor and step floor (DriftConfig.alpha_bits / .floor_bits) —
+    dynamic operands, so sweeping half-lives never recompiles. Returns
+    (m, step, sign), each [G].
+    """
+    g = m.shape[0]
+    dt = m.dtype
+    items = items.astype(dt)
+    quantile = jnp.broadcast_to(jnp.asarray(quantile, dt), (g,))
+    items, _ = _pad_stream(items, None, block_t, block_g)
+    m_p = _pad_state(m, block_g, 0.0)
+    step_p = _pad_state(step, block_g, 1.0)
+    sign_p = _pad_state(sign, block_g, 1.0)
+    q_p = _pad_state(quantile, block_g, 0.5)
+    packed = packing.pack_step_sign(step_p, sign_p)
+    m2, packed2 = frugal2u_pallas_fused_decay(
+        items, m_p, packed, q_p, seed, alpha_bits, floor_bits,
+        t_offset=t_offset, g_offset=g_offset,
+        block_g=block_g, block_t=block_t, interpret=interpret)
+    step2, sign2 = packing.unpack_step_sign(packed2)
+    return m2[:g], step2.astype(dt)[:g], sign2.astype(dt)[:g]
+
+
+@functools.partial(jax.jit, static_argnames=("block_g", "block_t", "interpret"))
+def frugal1u_update_blocked_fused_window(
+    items: Array, m: Array, m2: Array, quantile: Array, seed, window,
+    t_offset=0, g_offset=0,
+    *, block_g: int = 128, block_t: int = 256, interpret: bool = True,
+):
+    """Two-sketch-window Frugal-1U over a [T, G] block. Returns (m, m2)."""
+    g = m.shape[0]
+    dt = m.dtype
+    items = items.astype(dt)
+    quantile = jnp.broadcast_to(jnp.asarray(quantile, dt), (g,))
+    items, _ = _pad_stream(items, None, block_t, block_g)
+    m_p = _pad_state(m, block_g, 0.0)
+    m2_p = _pad_state(m2, block_g, 0.0)
+    q_p = _pad_state(quantile, block_g, 0.5)
+    ma, mb = frugal1u_pallas_fused_window(
+        items, m_p, m2_p, q_p, seed, window, t_offset=t_offset,
+        g_offset=g_offset, block_g=block_g, block_t=block_t,
+        interpret=interpret)
+    return ma[:g], mb[:g]
+
+
+@functools.partial(jax.jit, static_argnames=("block_g", "block_t", "interpret"))
+def frugal2u_update_blocked_fused_window(
+    items: Array, m: Array, step: Array, sign: Array,
+    m2: Array, step2: Array, sign2: Array, quantile: Array, seed, window,
+    t_offset=0, g_offset=0,
+    *, block_g: int = 128, block_t: int = 256, interpret: bool = True,
+):
+    """Two-sketch-window Frugal-2U over a [T, G] block.
+
+    Returns (m, step, sign, m2, step2, sign2), each [G]; each plane crosses
+    the kernel as the paper's two words (m + packed step/sign).
+    """
+    g = m.shape[0]
+    dt = m.dtype
+    items = items.astype(dt)
+    quantile = jnp.broadcast_to(jnp.asarray(quantile, dt), (g,))
+    items, _ = _pad_stream(items, None, block_t, block_g)
+    q_p = _pad_state(quantile, block_g, 0.5)
+    m_p = _pad_state(m, block_g, 0.0)
+    m2_p = _pad_state(m2, block_g, 0.0)
+    packed_a = packing.pack_step_sign(_pad_state(step, block_g, 1.0),
+                                      _pad_state(sign, block_g, 1.0))
+    packed_b = packing.pack_step_sign(_pad_state(step2, block_g, 1.0),
+                                      _pad_state(sign2, block_g, 1.0))
+    ma, pa, mb, pb = frugal2u_pallas_fused_window(
+        items, m_p, packed_a, m2_p, packed_b, q_p, seed, window,
+        t_offset=t_offset, g_offset=g_offset,
+        block_g=block_g, block_t=block_t, interpret=interpret)
+    step_a, sign_a = packing.unpack_step_sign(pa)
+    step_b, sign_b = packing.unpack_step_sign(pb)
+    return (ma[:g], step_a.astype(dt)[:g], sign_a.astype(dt)[:g],
+            mb[:g], step_b.astype(dt)[:g], sign_b.astype(dt)[:g])
+
+
+@functools.partial(jax.jit, static_argnames=("drift", "lanes"))
+def _cpu2_decay(items, m, step, sign, quantile, seed, t_offset, g_offset,
+                drift=None, lanes=1):
+    st, _ = frugal.frugal2u_process_seeded(
+        frugal.Frugal2UState(m, step, sign), items, seed, quantile,
+        t_offset=t_offset, g_offset=g_offset, lanes_per_group=lanes,
+        drift=drift)
+    return st.m, st.step, st.sign
+
+
+@functools.partial(jax.jit, static_argnames=("drift", "algo", "lanes"))
+def _cpu_window(items, m, step, sign, m2, step2, sign2, quantile, seed,
+                t_offset, g_offset, drift=None, algo="2u", lanes=1):
+    st, _ = drift_mod.window_process_seeded(
+        drift_mod.WindowState(m, step, sign, m2, step2, sign2), items, seed,
+        quantile, drift, t_offset=t_offset, g_offset=g_offset,
+        lanes_per_group=lanes, algo=algo)
+    return tuple(st)
+
+
+def frugal2u_update_auto_fused_decay(
+    items, m, step, sign, quantile, key=None, *, seed=None, drift,
+    t_offset=0, g_offset=0, lanes_per_group=1, **kw,
+):
+    """Decayed-2U fused dispatch: Pallas on TPU, jitted jnp scan elsewhere.
+
+    `drift` is a core.drift.DriftConfig with mode 'decay'. Bit-identical
+    across the two dispatch targets and to the jnp-backend scan.
+    """
+    s = _as_seed(key, seed)
+    if _on_tpu():
+        if lanes_per_group > 1:
+            items = jnp.repeat(items, lanes_per_group, axis=1)
+        return frugal2u_update_blocked_fused_decay(
+            items, m, step, sign, quantile, s, drift.alpha_bits,
+            drift.floor_bits, t_offset, g_offset, interpret=False, **kw)
+    q = jnp.broadcast_to(jnp.asarray(quantile, m.dtype), m.shape)
+    return _cpu2_decay(items.astype(m.dtype), m, step, sign, q, s, t_offset,
+                       g_offset, drift=drift, lanes=lanes_per_group)
+
+
+def frugal1u_update_auto_fused_window(
+    items, m, m2, quantile, key=None, *, seed=None, drift,
+    t_offset=0, g_offset=0, lanes_per_group=1, **kw,
+):
+    """Windowed-1U fused dispatch. Returns (m, m2)."""
+    s = _as_seed(key, seed)
+    if _on_tpu():
+        if lanes_per_group > 1:
+            items = jnp.repeat(items, lanes_per_group, axis=1)
+        return frugal1u_update_blocked_fused_window(
+            items, m, m2, quantile, s, drift.window, t_offset, g_offset,
+            interpret=False, **kw)
+    q = jnp.broadcast_to(jnp.asarray(quantile, m.dtype), m.shape)
+    one = jnp.ones_like(m)
+    out = _cpu_window(items.astype(m.dtype), m, one, one, m2, one, one, q,
+                      s, t_offset, g_offset, drift=drift, algo="1u",
+                      lanes=lanes_per_group)
+    return out[0], out[3]
+
+
+def frugal2u_update_auto_fused_window(
+    items, m, step, sign, m2, step2, sign2, quantile, key=None, *,
+    seed=None, drift, t_offset=0, g_offset=0, lanes_per_group=1, **kw,
+):
+    """Windowed-2U fused dispatch. Returns the six plane arrays."""
+    s = _as_seed(key, seed)
+    if _on_tpu():
+        if lanes_per_group > 1:
+            items = jnp.repeat(items, lanes_per_group, axis=1)
+        return frugal2u_update_blocked_fused_window(
+            items, m, step, sign, m2, step2, sign2, quantile, s,
+            drift.window, t_offset, g_offset, interpret=False, **kw)
+    q = jnp.broadcast_to(jnp.asarray(quantile, m.dtype), m.shape)
+    return _cpu_window(items.astype(m.dtype), m, step, sign, m2, step2,
+                       sign2, q, s, t_offset, g_offset, drift=drift,
+                       algo="2u", lanes=lanes_per_group)
 
 
 # ------------------------------------------------- deprecated rand-operand path

@@ -35,6 +35,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import rng as crng
 from repro.core import streaming
+from repro.core.drift import is_windowed as drift_is_windowed
 from repro.core.sketch import GroupedQuantileSketch, PackedSketchState
 from .pipeline_parallel import shard_map_compat
 
@@ -55,32 +56,65 @@ def group_mesh(num_devices: Optional[int] = None,
 
 def _pad_lane_fill(field: str) -> float:
     # Pad lanes carry the same dummy state ops.py uses for block padding.
-    return {"m": 0.0, "step": 1.0, "sign": 1.0, "quantile": 0.5}[field]
+    return {"m": 0.0, "step": 1.0, "sign": 1.0, "quantile": 0.5,
+            "m2": 0.0, "step2": 1.0, "sign2": 1.0}[field]
 
 
-# One jitted shard_map per (mesh, algo, shard width, chunking) — cached so
-# repeated ingest calls hit the same compiled executable. Meshes hash by
-# device list + axis names, so a fleet reuses its entry across calls.
+# One jitted shard_map per (mesh, algo, drift, shard width, chunking) —
+# cached so repeated ingest calls hit the same compiled executable. Meshes
+# hash by device list + axis names, so a fleet reuses its entry across
+# calls. Only windowed fleets (drift mode 'window') widen the signature
+# with the three shadow-plane operands — drift-free and decay fleets keep
+# the original 3-state body, so the vanilla hot path is untouched (no
+# placeholder [Gp] arrays ride along; e9 gates this path's scaling).
 @functools.lru_cache(maxsize=None)
 def _sharded_ingest_fn(mesh: Mesh, axis: str, algo: str, shard_g: int,
-                       chunk_t: int):
+                       chunk_t: int, drift=None):
+    windowed = drift_is_windowed(drift)
+
+    def local_sketch(m, step, sign, m2, step2, sign2, quantile):
+        if algo == "1u":
+            return GroupedQuantileSketch(
+                m=m, step=None, sign=None, quantile=quantile, m2=m2,
+                algo="1u", drift=drift)
+        return GroupedQuantileSketch(
+            m=m, step=step, sign=sign, quantile=quantile, m2=m2,
+            step2=step2, sign2=sign2, algo="2u", drift=drift)
+
+    state_spec = P(axis)
+
+    if windowed:
+        def body(items, m, step, sign, m2, step2, sign2, quantile, seed,
+                 t0, g0_base):
+            g0 = g0_base + jax.lax.axis_index(axis) * shard_g
+            local = local_sketch(m, step, sign, m2, step2, sign2, quantile)
+            out = streaming.ingest_array(local, items, seed=seed,
+                                         chunk_t=chunk_t, g_offset=g0,
+                                         t_offset=t0)
+            if algo == "1u":
+                return out.m, step, sign, out.m2, step2, sign2
+            return out.m, out.step, out.sign, out.m2, out.step2, out.sign2
+
+        fn = shard_map_compat(
+            body, mesh=mesh,
+            in_specs=(P(None, axis), state_spec, state_spec, state_spec,
+                      state_spec, state_spec, state_spec,
+                      state_spec, P(), P(), P()),
+            out_specs=(state_spec, state_spec, state_spec,
+                       state_spec, state_spec, state_spec))
+        return jax.jit(fn)
+
     def body(items, m, step, sign, quantile, seed, t0, g0_base):
         # g0_base shifts every shard when THIS WHOLE FLEET is itself a
         # column slice of a larger one (the facade cursor's g_offset).
         g0 = g0_base + jax.lax.axis_index(axis) * shard_g
-        if algo == "1u":
-            local = GroupedQuantileSketch(m=m, step=None, sign=None,
-                                          quantile=quantile, algo="1u")
-        else:
-            local = GroupedQuantileSketch(m=m, step=step, sign=sign,
-                                          quantile=quantile, algo="2u")
+        local = local_sketch(m, step, sign, None, None, None, quantile)
         out = streaming.ingest_array(local, items, seed=seed, chunk_t=chunk_t,
                                      g_offset=g0, t_offset=t0)
         if algo == "1u":
             return out.m, step, sign
         return out.m, out.step, out.sign
 
-    state_spec = P(axis)
     fn = shard_map_compat(
         body, mesh=mesh,
         in_specs=(P(None, axis), state_spec, state_spec, state_spec,
@@ -143,10 +177,11 @@ class ShardedGroupFleet:
                algo: str = "2u",
                init: Union[float, Array] = 0.0,
                mesh: Optional[Mesh] = None,
-               axis: str = GROUP_AXIS) -> "ShardedGroupFleet":
+               axis: str = GROUP_AXIS,
+               drift=None) -> "ShardedGroupFleet":
         mesh = mesh if mesh is not None else group_mesh(axis_name=axis)
         sk = GroupedQuantileSketch.create(num_groups, quantile=quantile,
-                                          algo=algo, init=init)
+                                          algo=algo, init=init, drift=drift)
         return ShardedGroupFleet.from_sketch(sk, mesh, axis=axis)
 
     @staticmethod
@@ -176,13 +211,23 @@ class ShardedGroupFleet:
 
         m = place(sketch.m, "m")
         q = place(sketch.quantile, "quantile")
+
+        def place_opt(x, field):
+            return None if x is None else place(x, field)
+
         if sketch.algo == "1u":
-            padded = GroupedQuantileSketch(m=m, step=None, sign=None,
-                                           quantile=q, algo="1u")
+            padded = GroupedQuantileSketch(
+                m=m, step=None, sign=None, quantile=q,
+                m2=place_opt(sketch.m2, "m2"), algo="1u",
+                drift=sketch.drift)
         else:
             padded = GroupedQuantileSketch(
                 m=m, step=place(sketch.step, "step"),
-                sign=place(sketch.sign, "sign"), quantile=q, algo="2u")
+                sign=place(sketch.sign, "sign"), quantile=q,
+                m2=place_opt(sketch.m2, "m2"),
+                step2=place_opt(sketch.step2, "step2"),
+                sign2=place_opt(sketch.sign2, "sign2"), algo="2u",
+                drift=sketch.drift)
         return ShardedGroupFleet(sketch=padded, num_groups=g, mesh=mesh,
                                  axis=axis, lanes_per_group=lanes_per_group)
 
@@ -213,20 +258,32 @@ class ShardedGroupFleet:
 
     def _run_sharded(self, items: Array, seed, t0, chunk_t: int,
                      g_offset=0) -> "ShardedGroupFleet":
-        fn = _sharded_ingest_fn(self.mesh, self.axis, self.algo,
-                                self.shard_groups, chunk_t)
         sk = self.sketch
+        fn = _sharded_ingest_fn(self.mesh, self.axis, self.algo,
+                                self.shard_groups, chunk_t, sk.drift)
         one = jnp.ones((self.padded_groups,), jnp.float32)
         step = sk.step if sk.step is not None else one
         sign = sk.sign if sk.sign is not None else one
-        m, step, sign = fn(items, sk.m, step, sign, sk.quantile,
-                           jnp.asarray(seed, jnp.int32),
-                           jnp.asarray(t0, jnp.int32),
-                           jnp.asarray(g_offset, jnp.int32))
-        if self.algo == "1u":
-            new = dataclasses.replace(sk, m=m)
+        scalars = (jnp.asarray(seed, jnp.int32), jnp.asarray(t0, jnp.int32),
+                   jnp.asarray(g_offset, jnp.int32))
+        windowed = drift_is_windowed(sk.drift)
+        upd = {}
+        if windowed:
+            step2 = sk.step2 if sk.step2 is not None else one
+            sign2 = sk.sign2 if sk.sign2 is not None else one
+            m, step, sign, m2, step2, sign2 = fn(
+                items, sk.m, step, sign, sk.m2, step2, sign2, sk.quantile,
+                *scalars)
+            upd["m2"] = m2
+            if self.algo != "1u":
+                upd.update(step2=step2, sign2=sign2)
         else:
-            new = dataclasses.replace(sk, m=m, step=step, sign=sign)
+            m, step, sign = fn(items, sk.m, step, sign, sk.quantile,
+                               *scalars)
+        upd["m"] = m
+        if self.algo != "1u":
+            upd.update(step=step, sign=sign)
+        new = dataclasses.replace(sk, **upd)
         return dataclasses.replace(self, sketch=new)
 
     def ingest_array(self, items, key: Optional[Array] = None,
@@ -270,9 +327,30 @@ class ShardedGroupFleet:
         return fleet
 
     # ----------------------------------------------------------------- reads
-    def estimate(self) -> np.ndarray:
-        """Current per-group estimates [G] — the one gathering read."""
-        return np.asarray(jax.device_get(self.sketch.m))[:self.num_groups]
+    def estimate(self, t_next=None) -> np.ndarray:
+        """Current per-group estimates [G] — the one gathering read.
+
+        A windowed fleet (drift mode 'window') answers from the OLDER plane
+        of each lane's pair, which is a function of the absolute stream
+        tick: pass `t_next` (items ingested so far — what a facade cursor
+        carries) or use repro.api.QuantileFleet, which threads it for you.
+        Reading a windowed fleet without the tick would silently return the
+        just-restarted plane half the epochs, so it raises instead."""
+        from repro.core.drift import query_plane_is_primary
+
+        sk = self.sketch
+        n = self.num_groups
+        if not drift_is_windowed(sk.drift):
+            return np.asarray(jax.device_get(sk.m))[:n]
+        if t_next is None:
+            raise ValueError(
+                "windowed fleet: estimate() needs t_next (absolute items "
+                "ingested) to select the older plane — or read through "
+                "repro.api.QuantileFleet, whose cursor carries it")
+        m = np.asarray(jax.device_get(sk.m))[:n]
+        m2 = np.asarray(jax.device_get(sk.m2))[:n]
+        primary = query_plane_is_primary(t_next, sk.drift.window)
+        return np.where(primary, m, m2)
 
     def unshard(self) -> GroupedQuantileSketch:
         """Gather the fleet back into a host-resident unsharded sketch."""
@@ -282,12 +360,22 @@ class ShardedGroupFleet:
             return jnp.asarray(np.asarray(jax.device_get(x))[:g])
 
         sk = self.sketch
+
+        def take_opt(x):
+            return None if x is None else take(x)
+
         if self.algo == "1u":
             return GroupedQuantileSketch(m=take(sk.m), step=None, sign=None,
-                                         quantile=take(sk.quantile), algo="1u")
+                                         quantile=take(sk.quantile),
+                                         m2=take_opt(sk.m2), algo="1u",
+                                         drift=sk.drift)
         return GroupedQuantileSketch(m=take(sk.m), step=take(sk.step),
                                      sign=take(sk.sign),
-                                     quantile=take(sk.quantile), algo="2u")
+                                     quantile=take(sk.quantile),
+                                     m2=take_opt(sk.m2),
+                                     step2=take_opt(sk.step2),
+                                     sign2=take_opt(sk.sign2), algo="2u",
+                                     drift=sk.drift)
 
     # -------------------------------------------------------- serialization
     def packed(self) -> PackedSketchState:
@@ -296,14 +384,30 @@ class ShardedGroupFleet:
 
     @staticmethod
     def from_packed(p: PackedSketchState, mesh: Optional[Mesh] = None,
-                    axis: str = GROUP_AXIS) -> "ShardedGroupFleet":
+                    axis: str = GROUP_AXIS,
+                    drift=None) -> "ShardedGroupFleet":
+        """`drift` must restate the fleet's DriftConfig: the packed payload
+        carries plane DATA only (a decay fleet is layout-identical to
+        vanilla, and a shadow plane names no window length), so omitting it
+        restores vanilla lanes / default-W windows. Refuses a shadow-plane
+        mismatch rather than guessing."""
+        has_shadow = getattr(p, "m2", None) is not None
+        if has_shadow != drift_is_windowed(drift):
+            raise ValueError(
+                f"packed payload {'has' if has_shadow else 'lacks'} a window "
+                f"shadow plane but drift={drift!r} — pass the fleet's "
+                "original DriftConfig")
         return ShardedGroupFleet.from_sketch(
-            GroupedQuantileSketch.from_packed(p), mesh, axis=axis)
+            GroupedQuantileSketch.from_packed(p, drift=drift), mesh,
+            axis=axis)
 
     def state_shardings(self):
         """NamedSharding pytree matching `packed()` — feed to
         train.checkpoint.restore_checkpoint(shardings=...) to re-place a
         saved fleet directly onto this mesh (elastic restore)."""
         sh = NamedSharding(self.mesh, P(self.axis))
+        windowed = drift_is_windowed(self.sketch.drift)
         return PackedSketchState(
-            m=sh, step_sign=None if self.algo == "1u" else sh, quantile=sh)
+            m=sh, step_sign=None if self.algo == "1u" else sh, quantile=sh,
+            m2=sh if windowed else None,
+            step_sign2=sh if windowed and self.algo != "1u" else None)

@@ -43,6 +43,7 @@ import jax.numpy as jnp
 
 from repro.api.fleet import QuantileFleet
 from repro.api.spec import FleetSpec, StreamCursor
+from repro.core.drift import DriftConfig
 from repro.core.frugal import Frugal2UState
 from repro.core.sketch import GroupedQuantileSketch
 
@@ -57,10 +58,28 @@ DEFAULT_METRICS: Tuple[Tuple[str, float], ...] = (
 
 
 class SLOFleet:
-    """Routes × metrics frugal lanes with buffered vectorized updates."""
+    """Routes × metrics frugal lanes with buffered vectorized updates.
+
+    `windowed=True` switches every lane to the decayed Frugal-2U variant
+    (core.drift, mode 'decay'): the lane's accumulated step inertia decays
+    with half-life `decay_half_life` EVENTS (per-lane ticks), so the sketch
+    re-converges within O(half_life) events of a latency-regime change —
+    an SLO dashboard tracks *recent* latency instead of the all-time
+    quantile it would otherwise asymptote to. Vanilla fleets
+    (windowed=False) are bit-identical to before this flag existed.
+
+    Naming note: "windowed" here is the ops-facing windowed-SLO concept
+    (track recent traffic), implemented with drift mode **'decay'** — NOT
+    core.drift's two-sketch mode 'window'. Decay keeps 2 words/lane and
+    re-converges in O(half_life) events but still carries (decaying)
+    all-time mass; if you need the hard last-W..2W-events guarantee, build
+    the fleet directly: QuantileFleet.create(FleetSpec(...,
+    drift=DriftConfig(mode="window", window=W)), per_lane_clock=True).
+    """
 
     def __init__(self, metrics: Sequence[Tuple[str, float]] = DEFAULT_METRICS,
-                 seed: int = 0, capacity: int = 64):
+                 seed: int = 0, capacity: int = 64,
+                 windowed: bool = False, decay_half_life: int = 4096):
         if not metrics:
             raise ValueError("need at least one (name, quantile) metric")
         self.metrics = tuple((str(n), float(q)) for n, q in metrics)
@@ -69,6 +88,8 @@ class SLOFleet:
         if len(self._metric_idx) != self.n_metrics:
             raise ValueError(f"duplicate metric names in {metrics}")
         self.seed = int(seed)
+        self.windowed = bool(windowed)
+        self.decay_half_life = int(decay_half_life)
         self._routes: Dict[str, int] = {}
         self._pending: List[Tuple[int, float]] = []
         self._fleet = QuantileFleet.create(
@@ -79,9 +100,11 @@ class SLOFleet:
         """Fleet spec for `cap_routes` route groups: one quantile lane per
         metric — the single definition of the lane layout (route-major,
         metric-minor: lane = route_idx · n_metrics + metric_idx)."""
+        drift = DriftConfig(mode="decay", half_life=self.decay_half_life) \
+            if self.windowed else None
         return FleetSpec(num_groups=cap_routes,
                          quantiles=tuple(q for _, q in self.metrics),
-                         algo="2u", backend="jnp")
+                         algo="2u", backend="jnp", drift=drift)
 
     # ----------------------------------------------- facade state, projected
     # The fleet owns all device state; these views keep the historical
@@ -276,7 +299,10 @@ class SLOFleet:
         blob = np.frombuffer(
             json.dumps({"routes": self.routes(),
                         "metrics": list(self.metrics),
-                        "seed": self.seed}).encode("utf-8"), np.uint8).copy()
+                        "seed": self.seed,
+                        "windowed": self.windowed,
+                        "decay_half_life": self.decay_half_life,
+                        }).encode("utf-8"), np.uint8).copy()
         return {
             "sketch": Frugal2UState(m=self._m, step=self._step,
                                     sign=self._sign),
@@ -289,7 +315,9 @@ class SLOFleet:
         meta = json.loads(bytes(np.asarray(state["meta_blob"],
                                            np.uint8)).decode("utf-8"))
         fleet = cls(metrics=[tuple(mq) for mq in meta["metrics"]],
-                    seed=int(meta["seed"]), capacity=1)
+                    seed=int(meta["seed"]), capacity=1,
+                    windowed=bool(meta.get("windowed", False)),
+                    decay_half_life=int(meta.get("decay_half_life", 4096)))
         sk = state["sketch"]
         cap = int(np.shape(sk.m)[0]) // fleet.n_metrics
         spec = fleet._spec(cap)
@@ -297,7 +325,8 @@ class SLOFleet:
             m=jnp.asarray(sk.m, jnp.float32),
             step=jnp.asarray(sk.step, jnp.float32),
             sign=jnp.asarray(sk.sign, jnp.float32),
-            quantile=jnp.asarray(spec.lane_quantiles()), algo="2u")
+            quantile=jnp.asarray(spec.lane_quantiles()), algo="2u",
+            drift=spec.drift)
         cursor = StreamCursor.create(
             seed=meta["seed"],
             t_offset=jnp.asarray(state["ticks"], jnp.int32))

@@ -39,11 +39,15 @@ class _PackedSketchNode(NamedTuple):
     as core.sketch.PackedSketchState, but a distinct type so restore knows
     the PACKER produced it — a user tree that already holds a
     PackedSketchState (e.g. ShardedGroupFleet.packed()) passes through
-    untouched in both directions."""
+    untouched in both directions. The window shadow plane (core.drift mode
+    'window') rides as two extra leaves; drift-free sketches keep both None
+    (no leaves), so their on-disk layout is unchanged."""
 
     m: object
     step_sign: object
     quantile: object
+    m2: object = None
+    step_sign2: object = None
 
 
 def _pack_sketches(tree):
@@ -77,6 +81,35 @@ def _unpack_sketches(tree):
                                          _PackedSketchNode)))
 
 
+def _sync_sketch_drift(restored, like):
+    """Copy each sketch node's static DriftConfig from the `like` template.
+
+    The packed on-disk form carries only plane DATA (drift is static
+    config, not state): from_packed can infer 'a shadow plane exists' but
+    not the half-life / window length, and a decay sketch is
+    layout-identical to vanilla. The caller's template is the source of
+    truth — without this sync a restored decay sketch would silently run
+    vanilla ticks and a windowed one would get default epoch lengths."""
+    import dataclasses
+
+    def is_sk(x):
+        return isinstance(x, GroupedQuantileSketch)
+
+    def sync(r, l):
+        if is_sk(r) and is_sk(l) and r.drift != l.drift:
+            from repro.core.drift import is_windowed
+
+            if (r.m2 is not None) != is_windowed(l.drift):
+                raise ValueError(
+                    f"checkpoint sketch {'has' if r.m2 is not None else 'lacks'}"
+                    f" a window shadow plane but the restore template's "
+                    f"drift is {l.drift!r}")
+            return dataclasses.replace(r, drift=l.drift)
+        return r
+
+    return jax.tree_util.tree_map(sync, restored, like, is_leaf=is_sk)
+
+
 def _pack_sketch_shardings(tree):
     """Structure-only analogue of _pack_sketches for sharding pytrees: the
     leaves are NamedShardings, so just re-nest them (step's placement serves
@@ -86,7 +119,8 @@ def _pack_sketch_shardings(tree):
             return PackedFrugal2UState(m=x.m, step_sign=x.step)
         if isinstance(x, GroupedQuantileSketch):
             return _PackedSketchNode(m=x.m, step_sign=x.step,
-                                     quantile=x.quantile)
+                                     quantile=x.quantile, m2=x.m2,
+                                     step_sign2=x.step2)
         return x
 
     return jax.tree_util.tree_map(
@@ -103,11 +137,13 @@ def _pack_sketch_template(tree):
                 m=x.m,
                 step_sign=jax.ShapeDtypeStruct(x.step.shape, jax.numpy.int32))
         if isinstance(x, GroupedQuantileSketch):
+            def i32_like(leaf):
+                return None if leaf is None else \
+                    jax.ShapeDtypeStruct(leaf.shape, jax.numpy.int32)
+
             return _PackedSketchNode(
-                m=x.m,
-                step_sign=None if x.step is None else
-                jax.ShapeDtypeStruct(x.step.shape, jax.numpy.int32),
-                quantile=x.quantile)
+                m=x.m, step_sign=i32_like(x.step), quantile=x.quantile,
+                m2=x.m2, step_sign2=i32_like(x.step2))
         return x
 
     return jax.tree_util.tree_map(
@@ -150,7 +186,10 @@ def save_checkpoint(ckpt_dir: str, step: int, state: Any, keep: int = 3,
         # lane); StreamCursor nodes ride as 3 int32 leaves. Trees without
         # sketch/cursor nodes are laid out identically to format 2, and
         # restore keys on leaf layout, so format-2 checkpoints of such
-        # trees stay readable.
+        # trees stay readable. Windowed sketches (core.drift mode
+        # 'window') append their shadow plane as two extra leaves
+        # (m2, step_sign2); drift-free trees are byte-identical to
+        # pre-drift format 3.
         "format": 3,
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -207,8 +246,19 @@ def restore_checkpoint(ckpt_dir: str, like: Any, step: Optional[int] = None,
     # Refuse mismatched layouts instead of zipping leaves by index into the
     # wrong slots (e.g. a format-1 checkpoint stores Frugal2UState unpacked
     # as 3 leaves; silently restoring it would shift every later leaf).
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    manifest_path = os.path.join(path, "manifest.json")
+    try:
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        # A half-written manifest can only exist if the COMMITTED marker
+        # protocol was bypassed (manual copy, disk fault) — name the file
+        # instead of surfacing a bare JSON parse error.
+        raise ValueError(
+            f"checkpoint manifest {manifest_path} is corrupt or truncated "
+            f"({e}); the step directory was not written by the committed-"
+            "checkpoint protocol — restore from an earlier committed step"
+        ) from e
     fmt = manifest.get("format", 1)
     if manifest.get("num_leaves") != len(leaves):
         raise ValueError(
@@ -230,4 +280,4 @@ def restore_checkpoint(ckpt_dir: str, like: Any, step: Optional[int] = None,
                 if hasattr(ref, "dtype") else arr
         restored.append(arr)
     packed = jax.tree_util.tree_unflatten(treedef, restored)
-    return _unpack_sketches(packed), step
+    return _sync_sketch_drift(_unpack_sketches(packed), like), step

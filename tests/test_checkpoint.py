@@ -126,3 +126,64 @@ def test_restore_refuses_leaf_count_mismatch(tmp_path):
     with pytest.raises(ValueError, match="leaves"):
         ck.restore_checkpoint(
             d, {"a": jnp.zeros(2), "b": jnp.zeros(3), "c": jnp.zeros(1)})
+
+
+# ------------------------------------------- format-3 error paths (pinned)
+def test_restore_truncated_manifest_raises_named_error(tmp_path):
+    """A half-written manifest.json (protocol bypassed: manual copy, disk
+    fault) must raise a ValueError naming the file, not a bare JSON parse
+    error from somewhere inside restore."""
+    d = str(tmp_path)
+    path = ck.save_checkpoint(d, 5, {"w": jnp.ones(4)})
+    mf = os.path.join(path, "manifest.json")
+    with open(mf) as f:
+        blob = f.read()
+    with open(mf, "w") as f:
+        f.write(blob[: len(blob) // 2])   # truncate mid-JSON
+    with pytest.raises(ValueError, match="corrupt or truncated"):
+        ck.restore_checkpoint(d, {"w": jnp.zeros(4)})
+
+
+def test_restore_wrong_num_leaves_for_sketch_tree(tmp_path):
+    """A sketch-bearing tree restored against a template with a different
+    lane plane (extra leaves) must refuse via the manifest leaf count."""
+    from repro.core import DriftConfig, GroupedQuantileSketch
+
+    d = str(tmp_path)
+    plain = GroupedQuantileSketch.create(6, quantile=0.5, algo="2u")
+    ck.save_checkpoint(d, 1, {"sk": plain})       # 3 packed leaves
+    windowed_like = {"sk": GroupedQuantileSketch.create(
+        6, quantile=0.5, algo="2u",
+        drift=DriftConfig(mode="window", window=8))}   # 5 packed leaves
+    with pytest.raises(ValueError, match="leaves"):
+        ck.restore_checkpoint(d, windowed_like)
+
+
+def test_format2_checkpoint_under_format3_sketch_reader(tmp_path):
+    """Format 2 predates whole-GroupedQuantileSketch packing: such a node's
+    state went to disk as its raw dataclass leaves (m, step, sign, quantile
+    = 4 leaves). Restoring one of those trees under a format-3 reader whose
+    template holds the packed node (3 leaves) must refuse loudly instead of
+    zipping leaves into the wrong slots."""
+    import json as _json
+
+    from repro.core import GroupedQuantileSketch
+
+    d = str(tmp_path)
+    g = 5
+    # Write the checkpoint the way the format-2 writer laid this tree out:
+    # raw leaves, no _PackedSketchNode. (save_checkpoint of plain arrays
+    # uses the same layout; only the manifest format tag differs.)
+    raw = {"sk_m": jnp.zeros(g), "sk_step": jnp.ones(g),
+           "sk_sign": jnp.ones(g), "sk_quantile": jnp.full((g,), 0.5)}
+    path = ck.save_checkpoint(d, 7, raw)
+    mf = os.path.join(path, "manifest.json")
+    with open(mf) as f:
+        manifest = _json.load(f)
+    manifest["format"] = 2
+    with open(mf, "w") as f:
+        _json.dump(manifest, f)
+
+    like = {"sk": GroupedQuantileSketch.create(g, quantile=0.5, algo="2u")}
+    with pytest.raises(ValueError, match="format 2"):
+        ck.restore_checkpoint(d, like)

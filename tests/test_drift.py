@@ -1,0 +1,468 @@
+"""Drift-aware lanes (core.drift): the spec is the same bit-exactness
+contract as every other layer, PLUS drift semantics.
+
+  * drift=None is bit-identical to the vanilla paths (pinned against the
+    raw frugal scans).
+  * Any drift config (decay half-life, window length) is invariant to
+    backend (jnp / fused / sharded) × chunking × mesh — the multi-device CI
+    job runs the mesh sweeps on a forced 8-device host.
+  * NaN padding / stream continuation stays a bit-exact no-op: a window
+    reset or step decay keyed on a padded tick fires exactly once, when the
+    tick arrives as a real item.
+  * The Pallas drift kernels (interpret mode here) match the jnp scans
+    bit-for-bit for any block shape.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.api import DriftConfig, FleetSpec, QuantileFleet
+from repro.core import GroupedQuantileSketch, ingest_array, ingest_stream
+from repro.core import drift as drift_mod
+from repro.core import frugal
+from repro.core import rng as crng
+from repro.kernels import ops
+from repro.parallel.group_sharding import group_mesh
+from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+N_DEV = len(jax.devices())
+multidevice = pytest.mark.skipif(
+    N_DEV < 2,
+    reason="needs >= 2 devices — run under "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+           "(the multi-device CI job does)")
+
+DECAY = DriftConfig(mode="decay", half_life=48)
+WINDOW = DriftConfig(mode="window", window=96)
+
+
+def _items(t, g, seed=0, domain=800):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, domain, (t, g)).astype(np.float32)
+
+
+# ----------------------------------------------------------------- config
+def test_drift_config_validation():
+    with pytest.raises(ValueError, match="mode"):
+        DriftConfig(mode="ewma")
+    with pytest.raises(ValueError, match="half_life"):
+        DriftConfig(mode="decay", half_life=0)
+    with pytest.raises(ValueError, match="window"):
+        DriftConfig(mode="window", window=0)
+    with pytest.raises(ValueError, match="algo='2u'"):
+        DriftConfig(mode="decay").validate_for_algo("1u")
+    with pytest.raises(ValueError, match="algo"):
+        FleetSpec(num_groups=1, algo="1u", drift=DriftConfig(mode="decay"))
+    # window works for both algos
+    FleetSpec(num_groups=1, algo="1u", drift=WINDOW)
+    FleetSpec(num_groups=1, algo="2u", drift=WINDOW)
+
+
+def test_alpha_bits_roundtrip_the_exact_float():
+    cfg = DriftConfig(mode="decay", half_life=1000, floor=-2.5)
+    assert np.int32(cfg.alpha_bits).view(np.float32) == cfg.alpha_f32
+    assert np.int32(cfg.floor_bits).view(np.float32) == np.float32(-2.5)
+    assert 0.0 < cfg.alpha_f32 < 1.0
+
+
+# ------------------------------------------------------------- decay math
+def test_decay_bounds_step_inertia_vanilla_does_not():
+    """Long stationary narrow stream: the vanilla step random-walks far
+    below zero; the decayed step stays within the O(half_life) bound."""
+    t = 8_000
+    items = jnp.asarray(
+        np.random.default_rng(0).normal(500.0, 3.0, (t, 1)).astype(np.float32))
+    st = frugal.frugal2u_init(1, init=500.0)
+    van, _ = frugal.frugal2u_process_seeded(st, items, 7, 0.5)
+    dec, _ = frugal.frugal2u_process_seeded(st, items, 7, 0.5, drift=DECAY)
+    bound = 1.5 * DECAY.half_life
+    assert float(dec.step[0]) >= -bound
+    assert float(van.step[0]) < float(dec.step[0])
+
+
+def test_decay_noop_when_step_above_floor():
+    step = jnp.asarray([0.5, 2.0, -1.0, -10.0], jnp.float32)
+    valid = jnp.asarray([True, True, False, True])
+    out = drift_mod.apply_step_decay(step, valid, np.float32(0.5), 0.0)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.asarray([0.5, 2.0, -1.0, -5.0], np.float32))
+
+
+# ------------------------------------------------------------ window math
+def test_window_phase_and_query_plane_parity():
+    w = 10
+    ra, rb = drift_mod.window_phase(jnp.arange(40), w)
+    ra, rb = np.asarray(ra), np.asarray(rb)
+    assert ra[0] and not rb[0]          # epoch 0 resets plane A at t=0
+    assert rb[10] and not ra[10]        # epoch 1 resets plane B
+    assert ra[20] and rb[30]
+    assert ra.sum() == 2 and rb.sum() == 2
+    # queries read the plane NOT restarted this epoch
+    assert not drift_mod.query_plane_is_primary(5, w)     # epoch 0 -> B
+    assert drift_mod.query_plane_is_primary(15, w)        # epoch 1 -> A
+    assert not drift_mod.query_plane_is_primary(25, w)
+
+
+def test_window_reset_warm_starts_from_other_plane():
+    w = 8
+    state = drift_mod.WindowState(
+        m=jnp.asarray([100.0]), step=jnp.asarray([5.0]),
+        sign=jnp.asarray([-1.0]), m2=jnp.asarray([200.0]),
+        step2=jnp.asarray([3.0]), sign2=jnp.asarray([1.0]))
+    # t = w -> epoch 1 -> plane B restarts from plane A's estimate
+    out = drift_mod.window_update(
+        state, jnp.asarray([jnp.nan]), jnp.asarray([0.5]), 0.5,
+        jnp.int32(w), w, algo="2u")
+    # NaN item: reset gated on validity -> nothing changes at all
+    np.testing.assert_array_equal(np.asarray(out.m2), [200.0])
+    out = drift_mod.window_update(
+        state, jnp.asarray([150.0]), jnp.asarray([0.0]), 0.5,
+        jnp.int32(w), w, algo="2u")
+    # plane B warm-started to plane A's m (100) with (step, sign) = (1, 1)
+    # before ingesting the item (rand 0.0 -> no up/down trigger)
+    np.testing.assert_array_equal(np.asarray(out.m2), [100.0])
+    np.testing.assert_array_equal(np.asarray(out.step2), [1.0])
+    np.testing.assert_array_equal(np.asarray(out.sign2), [1.0])
+    # plane A untouched by plane B's restart
+    np.testing.assert_array_equal(np.asarray(out.m), [100.0])
+
+
+def test_window_tracks_recent_distribution():
+    """After a level shift lasting >= 2 windows, the windowed estimate sits
+    at the NEW level's quantile while covering only recent items."""
+    w = 200
+    rng = np.random.default_rng(3)
+    lo = rng.normal(100.0, 2.0, (3 * w, 1)).astype(np.float32)
+    hi = rng.normal(160.0, 2.0, (3 * w, 1)).astype(np.float32)
+    spec = FleetSpec(num_groups=1, quantiles=(0.5,), backend="jnp",
+                     drift=DriftConfig(mode="window", window=w))
+    fl = QuantileFleet.create(spec, seed=2, init=100.0)
+    fl = fl.ingest(np.concatenate([lo, hi]))
+    est = float(fl.estimate()[0, 0])
+    assert abs(est - 160.0) < 10.0, est
+
+
+# --------------------------------- backend x chunking x mesh invariance
+CASES = [("decay-2u", "2u", DECAY), ("window-1u", "1u", WINDOW),
+         ("window-2u", "2u", WINDOW)]
+
+
+@pytest.mark.parametrize("name,algo,cfg", CASES, ids=[c[0] for c in CASES])
+def test_backend_and_chunking_invariance_single_device(name, algo, cfg):
+    g, qs = 5, (0.5, 0.9)
+    items = _items(400, g, seed=4)
+    outs = []
+    for backend, chunk, mesh in (("jnp", 4096, None), ("fused", 64, None),
+                                 ("fused", 333, None),
+                                 ("sharded", 100, group_mesh(1))):
+        spec = FleetSpec(num_groups=g, quantiles=qs, algo=algo,
+                         backend=backend, chunk_t=chunk, mesh=mesh,
+                         drift=cfg)
+        fl = QuantileFleet.create(spec, seed=9)
+        fl = fl.ingest(items[:157]).ingest(items[157:])
+        outs.append(fl.estimate())
+    for o in outs[1:]:
+        np.testing.assert_array_equal(outs[0], o)
+
+
+@pytest.mark.parametrize("name,algo,cfg", CASES, ids=[c[0] for c in CASES])
+def test_stream_continuation_across_window_boundaries(name, algo, cfg):
+    """Splitting the stream ANYWHERE (including exactly at / around a
+    window reset tick, where the NaN tail pad of one chunk is replayed as
+    the next call's first real items) reproduces the one-shot result."""
+    g = 3
+    w = cfg.window
+    items = _items(2 * w + 37, g, seed=5)
+    spec = FleetSpec(num_groups=g, quantiles=(0.5,), algo=algo,
+                     backend="fused", chunk_t=w // 3, drift=cfg)
+    one_shot = QuantileFleet.create(spec, seed=1).ingest(items)
+    for split in (1, w - 1, w, w + 1, 2 * w):
+        fl = QuantileFleet.create(spec, seed=1)
+        fl = fl.ingest_stream([items[:split]]).ingest_stream([items[split:]])
+        np.testing.assert_array_equal(one_shot.estimate(), fl.estimate(),
+                                      err_msg=f"split={split}")
+
+
+@pytest.mark.parametrize("name,algo,cfg", CASES, ids=[c[0] for c in CASES])
+def test_sharded_drift_state_matches_unsharded(name, algo, cfg):
+    """Not just estimates: the FULL plane state (both window planes, the
+    decayed step word) must match the unsharded trajectory."""
+    g = 13
+    items = _items(300, g, seed=6)
+    key = jax.random.PRNGKey(3)
+    base = GroupedQuantileSketch.create(g, quantile=0.7, algo=algo,
+                                        drift=cfg)
+    ref = base.process(jnp.asarray(items), key)
+    from repro.parallel import ShardedGroupFleet
+    fleet = ShardedGroupFleet.create(g, quantile=0.7, algo=algo, drift=cfg,
+                                     mesh=group_mesh(1))
+    out = fleet.ingest_array(items, key, chunk_t=77).unshard()
+    for f in ("m", "step", "sign", "m2", "step2", "sign2"):
+        a, b = getattr(ref, f), getattr(out, f)
+        assert (a is None) == (b is None), f
+        if a is not None:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f)
+
+
+@multidevice
+@pytest.mark.parametrize("n_dev", [2, 4, 8])
+@pytest.mark.parametrize("name,algo,cfg", CASES, ids=[c[0] for c in CASES])
+def test_drift_invariant_to_mesh_size(name, algo, cfg, n_dev):
+    if n_dev > N_DEV:
+        pytest.skip(f"only {N_DEV} devices")
+    g, qs = 11, (0.5, 0.99)   # ragged: pads on every mesh size
+    items = _items(250, g, seed=7)
+    ref = QuantileFleet.create(
+        FleetSpec(num_groups=g, quantiles=qs, algo=algo, backend="fused",
+                  chunk_t=48, drift=cfg), seed=5).ingest(items)
+    sh = QuantileFleet.create(
+        FleetSpec(num_groups=g, quantiles=qs, algo=algo, backend="sharded",
+                  chunk_t=48, mesh=group_mesh(n_dev), drift=cfg),
+        seed=5).ingest(items)
+    np.testing.assert_array_equal(ref.estimate(), sh.estimate())
+
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=12, deadline=None)
+    @given(g=st.integers(1, 6),
+           mode=st.sampled_from(["decay", "window"]),
+           param=st.integers(1, 60),
+           chunk_t=st.integers(1, 70),
+           split=st.integers(0, 150))
+    def test_property_drift_backend_chunking_invariance(g, mode, param,
+                                                        chunk_t, split):
+        cfg = DriftConfig(mode=mode, half_life=param, window=param)
+        items = _items(150, g, seed=param)
+        a = QuantileFleet.create(
+            FleetSpec(num_groups=g, quantiles=(0.5,), backend="jnp",
+                      drift=cfg), seed=3).ingest(items)
+        b = QuantileFleet.create(
+            FleetSpec(num_groups=g, quantiles=(0.5,), backend="fused",
+                      chunk_t=chunk_t, drift=cfg), seed=3)
+        b = b.ingest(items[:split]).ingest(items[split:])
+        np.testing.assert_array_equal(a.estimate(), b.estimate())
+else:  # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_drift_backend_chunking_invariance():
+        pass
+
+
+# ------------------------------------------------------- kernels (interpret)
+@pytest.mark.kernel
+@pytest.mark.parametrize("block", [(64, 4), (256, 128)])
+def test_decay_kernel_matches_scan_bit_for_bit(block):
+    bt, bg = block
+    t, g = 300, 7
+    items = jnp.asarray(_items(t, g, seed=8, domain=500))
+    seed = crng.seed_from_key(jax.random.PRNGKey(5))
+    q = jnp.full((g,), 0.3, jnp.float32)
+    m0 = jnp.zeros((g,), jnp.float32)
+    one = jnp.ones((g,), jnp.float32)
+    want = ops.frugal2u_update_auto_fused_decay(items, m0, one, one, q,
+                                                seed=seed, drift=DECAY)
+    got = ops.frugal2u_update_blocked_fused_decay(
+        items, m0, one, one, q, seed, DECAY.alpha_bits, DECAY.floor_bits,
+        block_g=bg, block_t=bt, interpret=True)
+    for w, g_ in zip(want, got):
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(g_))
+
+
+@pytest.mark.kernel
+@pytest.mark.parametrize("block", [(64, 4), (256, 128)])
+def test_window_kernels_match_scan_bit_for_bit(block):
+    bt, bg = block
+    t, g = 300, 7
+    items = jnp.asarray(_items(t, g, seed=9, domain=500))
+    seed = crng.seed_from_key(jax.random.PRNGKey(6))
+    q = jnp.full((g,), 0.5, jnp.float32)
+    m0 = jnp.zeros((g,), jnp.float32)
+    one = jnp.ones((g,), jnp.float32)
+    want2 = ops.frugal2u_update_auto_fused_window(
+        items, m0, one, one, m0, one, one, q, seed=seed, drift=WINDOW)
+    got2 = ops.frugal2u_update_blocked_fused_window(
+        items, m0, one, one, m0, one, one, q, seed, WINDOW.window,
+        block_g=bg, block_t=bt, interpret=True)
+    for w, g_ in zip(want2, got2):
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(g_))
+    want1 = ops.frugal1u_update_auto_fused_window(items, m0, m0, q,
+                                                  seed=seed, drift=WINDOW)
+    got1 = ops.frugal1u_update_blocked_fused_window(
+        items, m0, m0, q, seed, WINDOW.window, block_g=bg, block_t=bt,
+        interpret=True)
+    for w, g_ in zip(want1, got1):
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(g_))
+
+
+# -------------------------------------------------- event lanes + serving
+@pytest.mark.parametrize("cfg", [DriftConfig(mode="decay", half_life=16),
+                                 DriftConfig(mode="window", window=8)],
+                         ids=["decay", "window"])
+def test_event_lanes_dense_equals_sparse(cfg):
+    spec = FleetSpec(num_groups=3, quantiles=(0.5,), backend="jnp",
+                     drift=cfg)
+    fa = QuantileFleet.create(spec, per_lane_clock=True)
+    fb = QuantileFleet.create(spec, per_lane_clock=True)
+    ev = np.random.default_rng(4).integers(0, 100, (40,)).astype(np.float32)
+    for i, v in enumerate(ev):
+        lane = int(i % 3)
+        dense = np.full((3,), np.nan, np.float32)
+        dense[lane] = v
+        fa = fa.tick_lanes(jnp.asarray(dense))
+        fb = fb.tick_lanes_sparse(jnp.asarray([lane]), jnp.asarray([v]))
+    np.testing.assert_array_equal(fa.estimate(), fb.estimate())
+    np.testing.assert_array_equal(np.asarray(fa.cursor.t_offset),
+                                  np.asarray(fb.cursor.t_offset))
+
+
+def test_slo_fleet_windowed_flag_and_checkpoint(tmp_path):
+    from repro.serve.slo import SLOFleet
+
+    van = SLOFleet(seed=1)
+    assert van._fleet.spec.drift is None            # default unchanged
+    win = SLOFleet(seed=1, windowed=True, decay_half_life=128)
+    assert win._fleet.spec.drift == DriftConfig(mode="decay", half_life=128)
+    rng = np.random.default_rng(5)
+    for v in rng.normal(50, 2, 500):
+        win.observe("r0", "tok_q50_ms", float(v))
+        van.observe("r0", "tok_q50_ms", float(v))
+    win.flush(), van.flush()
+    # decayed lane: step inertia bounded
+    assert float(np.min(np.asarray(win._step))) >= -1.5 * 128
+
+    save_checkpoint(str(tmp_path), 1, win.checkpoint_state())
+    st, _ = restore_checkpoint(str(tmp_path), like=win.checkpoint_template())
+    back = SLOFleet.from_checkpoint_state(st)
+    assert back.windowed and back.decay_half_life == 128
+    for v in rng.normal(90, 2, 100):
+        win.observe("r0", "tok_q50_ms", float(v))
+        back.observe("r0", "tok_q50_ms", float(v))
+    assert win.estimate("r0", "tok_q50_ms") == back.estimate("r0",
+                                                             "tok_q50_ms")
+
+
+def test_slo_grow_preserves_windowed_lanes():
+    from repro.serve.slo import SLOFleet
+
+    fl = SLOFleet(seed=3, capacity=1, windowed=True, decay_half_life=64)
+    for v in (10.0, 20.0, 30.0):
+        fl.observe("a", "ttft_q99_ms", v)
+    fl.flush()
+    before = fl.estimate("a", "ttft_q99_ms")
+    fl.ensure_routes([f"r{i}" for i in range(50)])   # forces growth
+    assert fl.estimate("a", "ttft_q99_ms") == before
+    assert fl._fleet.spec.drift == DriftConfig(mode="decay", half_life=64)
+
+
+# ----------------------------------------------------------- persistence
+def test_windowed_fleet_checkpoint_resume_bit_exact(tmp_path):
+    g, qs = 4, (0.5, 0.9)
+    items = _items(500, g, seed=10)
+    spec = FleetSpec(num_groups=g, quantiles=qs, backend="fused",
+                     chunk_t=64, drift=DriftConfig(mode="window", window=70))
+    fl = QuantileFleet.create(spec, seed=1).ingest(items[:260])
+    fl.checkpoint(str(tmp_path), step=1)
+    back = QuantileFleet.restore(str(tmp_path), spec)
+    np.testing.assert_array_equal(fl.ingest(items[260:]).estimate(),
+                                  back.ingest(items[260:]).estimate())
+
+
+def test_windowed_checkpoint_refuses_drift_free_spec(tmp_path):
+    g = 3
+    spec_w = FleetSpec(num_groups=g, backend="jnp", drift=WINDOW)
+    QuantileFleet.create(spec_w, seed=0).checkpoint(str(tmp_path), step=1)
+    spec_plain = FleetSpec(num_groups=g, backend="jnp")
+    with pytest.raises(ValueError):
+        QuantileFleet.restore(str(tmp_path), spec_plain)
+
+
+def test_memory_words_accounting():
+    assert FleetSpec(num_groups=1).memory_words() == 2
+    assert FleetSpec(num_groups=1, algo="1u").memory_words() == 1
+    assert FleetSpec(num_groups=1, drift=DECAY).memory_words() == 2
+    assert FleetSpec(num_groups=1, drift=WINDOW).memory_words() == 4
+    assert FleetSpec(num_groups=1, algo="1u",
+                     drift=WINDOW).memory_words() == 2
+    sk = GroupedQuantileSketch.create(4, algo="2u", drift=WINDOW)
+    assert sk.memory_words() == 4
+    p = sk.packed()
+    assert p.m2 is not None and p.step_sign2 is not None
+
+
+def test_grow_groups_preserves_window_planes():
+    spec = FleetSpec(num_groups=2, quantiles=(0.5,), backend="jnp",
+                     drift=WINDOW)
+    fl = QuantileFleet.create(spec, seed=4).ingest(_items(150, 2, seed=11))
+    grown = fl.grow_groups(5)
+    assert grown.state.m2 is not None
+    assert grown.state.m2.shape == (5,)
+    np.testing.assert_array_equal(np.asarray(grown.state.m2[:2]),
+                                  np.asarray(fl.state.m2))
+    # grown fleet keeps ingesting on all planes
+    grown.ingest(_items(40, 5, seed=12))
+
+
+def test_generic_restore_preserves_drift_config(tmp_path):
+    """restore_checkpoint (NOT the fleet facade) must hand back sketch
+    nodes carrying the template's DriftConfig: the packed payload stores
+    plane data only, and a decay sketch is layout-identical to vanilla —
+    losing the config would silently run vanilla ticks after restore."""
+    items = _items(200, 4, seed=13)
+    key = jax.random.PRNGKey(2)
+    dec = GroupedQuantileSketch.create(
+        4, algo="2u", drift=DriftConfig(mode="decay", half_life=8))
+    dec = dec.process(jnp.asarray(items), key)
+    win = GroupedQuantileSketch.create(
+        4, algo="2u", drift=DriftConfig(mode="window", window=16))
+    win = win.process(jnp.asarray(items), key)
+    save_checkpoint(str(tmp_path), 1, {"dec": dec, "win": win})
+    restored, _ = restore_checkpoint(str(tmp_path), {"dec": dec, "win": win})
+    assert restored["dec"].drift == DriftConfig(mode="decay", half_life=8)
+    assert restored["win"].drift == DriftConfig(mode="window", window=16)
+    # and the restored sketches CONTINUE the drift trajectory bit-exactly
+    more = jnp.asarray(_items(50, 4, seed=14))
+    np.testing.assert_array_equal(
+        np.asarray(dec.process_seeded(more, 5, t_offset=200).step),
+        np.asarray(restored["dec"].process_seeded(more, 5,
+                                                  t_offset=200).step))
+    np.testing.assert_array_equal(
+        np.asarray(win.process_seeded(more, 5, t_offset=200).m2),
+        np.asarray(restored["win"].process_seeded(more, 5,
+                                                  t_offset=200).m2))
+
+
+def test_sharded_from_packed_requires_and_restores_drift(tmp_path):
+    """ShardedGroupFleet.from_packed must restate the DriftConfig (packed
+    payloads carry plane data only) and refuse a shadow-plane mismatch."""
+    from repro.parallel import ShardedGroupFleet
+
+    cfg = DriftConfig(mode="window", window=32)
+    fleet = ShardedGroupFleet.create(6, algo="2u", drift=cfg,
+                                     mesh=group_mesh(1))
+    fleet = fleet.ingest_array(_items(100, 6, seed=15),
+                               jax.random.PRNGKey(0), chunk_t=48)
+    save_checkpoint(str(tmp_path), 1, fleet.packed())
+    restored, _ = restore_checkpoint(str(tmp_path), like=fleet.packed())
+    back = ShardedGroupFleet.from_packed(restored, mesh=group_mesh(1),
+                                         drift=cfg)
+    assert back.sketch.drift == cfg
+    # continuing the stream reproduces the uninterrupted trajectory
+    # (windowed estimate needs the absolute tick to pick the older plane)
+    more = _items(50, 6, seed=16)
+    k2 = jax.random.PRNGKey(1)
+    np.testing.assert_array_equal(
+        fleet.ingest_array(more, k2, chunk_t=48,
+                           t_offset=100).estimate(t_next=150),
+        back.ingest_array(more, k2, chunk_t=48,
+                          t_offset=100).estimate(t_next=150))
+    with pytest.raises(ValueError, match="t_next"):
+        fleet.estimate()
+    with pytest.raises(ValueError, match="shadow plane"):
+        ShardedGroupFleet.from_packed(restored, mesh=group_mesh(1))

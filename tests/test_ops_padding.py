@@ -13,10 +13,15 @@ import jax.numpy as jnp
 import pytest
 
 from repro.kernels import (
-    frugal1u_update_blocked,
     frugal1u_update_blocked_fused,
-    frugal2u_update_blocked,
     frugal2u_update_blocked_fused,
+)
+# Warning-free internal impls of the deprecated rand-operand wrappers:
+# tier-1 runs with DeprecationWarning promoted to error (pytest.ini), and
+# only tests/test_deprecations.py may expect the shim's warning.
+from repro.kernels.ops import (
+    _frugal1u_update_blocked as frugal1u_update_blocked,
+    _frugal2u_update_blocked as frugal2u_update_blocked,
 )
 
 SEED = 424242
