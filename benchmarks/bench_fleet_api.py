@@ -5,8 +5,8 @@ bookkeeping around the same fused kernels the legacy hand-threaded path
 dispatches, so per-item cost may not regress. Measured here at G = 4096:
 
   * direct  — the pre-facade pattern: a Python loop over chunk_t slabs
-              calling kernels.ops.frugal2u_update_auto_fused with
-              hand-threaded (seed, t_offset),
+              calling the program pair (kernels.ops.frugal_update_auto,
+              program '2u') with hand-threaded (seed, t_offset),
   * facade  — QuantileFleet.ingest of the same items/chunk_t.
 
 Gate: facade per-item cost ≤ 1.05× direct (recorded as `gate_met`; loud
@@ -35,8 +35,9 @@ import jax.numpy as jnp
 
 from repro.api import FleetSpec, QuantileFleet
 from repro.core import GroupedQuantileSketch
+from repro.core import program as program_mod
 from repro.core import rng as crng
-from repro.kernels import frugal2u_update_auto_fused
+from repro.kernels import frugal_update_auto
 from .common import save_result, csv_line
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -50,13 +51,14 @@ def _direct_ingest(items, g, seed, chunk_t):
     """The legacy pattern: hand-thread (seed, t_offset) through per-chunk
     fused-kernel calls."""
     sk = GroupedQuantileSketch.create(g, quantile=0.5, algo="2u")
-    m, step, sign = sk.m, sk.step, sk.sign
+    planes = sk.planes()
+    prog = program_mod.family_base("2u")
     t = items.shape[0]
     for t0 in range(0, t, chunk_t):
-        m, step, sign = frugal2u_update_auto_fused(
-            items[t0:t0 + chunk_t], m, step, sign, sk.quantile,
-            seed=seed, t_offset=t0)
-    return m
+        planes = frugal_update_auto(
+            items[t0:t0 + chunk_t], planes, sk.quantile, seed=seed,
+            program=prog, t_offset=t0)
+    return planes[0]
 
 
 def _median_time(fn, reps):

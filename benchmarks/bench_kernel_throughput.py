@@ -7,9 +7,11 @@ adaptation. Compares per-item update cost of
     items — 2x the hot-path bytes),
   * vectorized jnp scan fleet, FUSED (uniforms counter-hashed per tick on
     the fly, repro.core.rng — the bandwidth-optimal path),
-  * the blocked Pallas kernel, rand-operand vs fused, in interpret mode
-    (counts kernel-body semantics on CPU; on real TPU the fused kernel
-    streams items at HBM bandwidth with zero uniform traffic),
+  * the blocked program-parameterized Pallas kernel ('2u' family) in
+    interpret mode (counts kernel-body semantics on CPU; on real TPU the
+    fused kernel streams items at HBM bandwidth with zero uniform traffic
+    — the rand-operand kernel generation is gone, so the rand-materializing
+    baseline lives only on the jnp fleet rows above),
 
 at growing group counts. The point: frugal state is the ONLY quantile
 summary whose per-group update vectorizes across millions of groups, and
@@ -34,10 +36,8 @@ import jax.numpy as jnp
 
 from repro.core.reference import frugal2u_scalar
 from repro.core import frugal2u_init, frugal2u_process
-from repro.kernels import (
-    frugal2u_update_blocked,
-    frugal2u_update_blocked_fused,
-)
+from repro.core import program as program_mod
+from repro.kernels import frugal_update_blocked
 from .common import save_result, csv_line
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -93,33 +93,26 @@ def run(quick: bool = True, seed: int = 0):
         lines.append(csv_line(f"kernel_jnp_fused_g{g}", us_fused,
                               f"groups={g};speedup_vs_rand={speedup:.2f}x"))
 
-    # blocked Pallas kernel (interpret mode on CPU), old vs fused operands.
-    # Interpret emulation is slow, so a smaller slab — the number that matters
-    # is the fused/rand ratio, which tracks operand traffic.
+    # blocked program kernel (interpret mode on CPU), '2u' family. The
+    # rand-operand kernel generation was removed by the lane-program
+    # engine, so this row tracks the fused kernel's interpret-mode cost
+    # only (the gated fused-vs-rand ratio lives on the jnp fleet rows).
     kt, kg = (256, 512) if quick else (1024, 1024)
     items_k = jnp.asarray(rng.integers(0, 1000, (kt, kg)), jnp.float32)
-    rand_k = jnp.asarray(rng.random((kt, kg)), jnp.float32)
     m0 = jnp.zeros((kg,), jnp.float32)
     st1 = jnp.ones((kg,), jnp.float32)
     qv = jnp.full((kg,), 0.5, jnp.float32)
+    prog2u = program_mod.family_base("2u")
 
-    dt_kold = _time(
-        lambda: frugal2u_update_blocked(items_k, rand_k, m0, st1, st1, qv,
-                                        interpret=True), reps=2)
     dt_kfused = _time(
-        lambda: frugal2u_update_blocked_fused(items_k, m0, st1, st1, qv,
-                                              jnp.int32(seed), interpret=True),
+        lambda: frugal_update_blocked(items_k, (m0, st1, st1), qv,
+                                      jnp.int32(seed), program=prog2u,
+                                      interpret=True),
         reps=2)
-    payload["pallas_interpret_g%d_rand_us_per_item" % kg] = \
-        dt_kold / (kt * kg) * 1e6
     payload["pallas_interpret_g%d_fused_us_per_item" % kg] = \
         dt_kfused / (kt * kg) * 1e6
-    payload["pallas_interpret_fused_speedup"] = dt_kold / dt_kfused
-    lines.append(csv_line(f"kernel_pallas_interp_rand_g{kg}",
-                          dt_kold / (kt * kg) * 1e6, f"groups={kg}"))
     lines.append(csv_line(f"kernel_pallas_interp_fused_g{kg}",
-                          dt_kfused / (kt * kg) * 1e6,
-                          f"groups={kg};speedup_vs_rand={dt_kold / dt_kfused:.2f}x"))
+                          dt_kfused / (kt * kg) * 1e6, f"groups={kg}"))
 
     big_g_speedups = [v for k, v in payload.items()
                       if k.startswith("jnp_fused_speedup_g")

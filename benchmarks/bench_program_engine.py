@@ -1,0 +1,204 @@
+"""E7 (ours) — lane-program engine dispatch overhead.
+
+The program engine (core.program + the ONE program-parameterized kernel /
+scan) replaced the PR-4 hand-specialized per-rule paths. Abstraction may
+not tax the hot path: after jit, the program-generic tick must compile to
+the same XLA program the hand-written specialization did, so per-item cost
+may not regress. Measured here at G = 4096 (vanilla 2U, the hot rule):
+
+  * direct  — the PR-4 pattern, reconstructed inline: a jitted
+              hand-specialized lax.scan of the frugal-2U tick with
+              counter-hashed uniforms (verbatim transcription of the
+              pre-engine `_fused_scan` + `_cpu2_fused` pair), driven
+              chunk-by-chunk with hand-threaded (seed, t_offset),
+  * engine  — kernels.ops.frugal_update_auto with program='2u' over the
+              same chunks (the path core.streaming/repro.api dispatch).
+
+Gate: engine per-item cost ≤ 1.05× direct (recorded as `gate_met`; loud
+warning, not a hard assert — wall-clock on shared CI is too noisy, inspect
+the JSON on an unloaded box). The run also asserts the two trajectories
+are BIT-IDENTICAL — the speed comparison is meaningless if the engine
+computed something else. A second (ungated, recorded) row times the
+windowed-2U program against an equivalent hand-specialized window scan —
+the widest-layout family.
+
+Results land in artifacts/bench/e7_program_engine.json AND repo-root
+BENCH_program_engine.json for the PR-over-PR trajectory;
+benchmarks/check_gates.py enforces the gate in the bench-regression CI job.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import frugal
+from repro.core import program as program_mod
+from repro.core import rng as crng
+from repro.core.drift import WindowState, window_update
+from repro.kernels.ops import frugal_update_auto
+from .common import save_result, csv_line
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(_ROOT, "BENCH_program_engine.json")
+
+# Maximum tolerated engine/direct per-item time ratio.
+GATE_MAX_OVERHEAD = 1.05
+
+
+# --- the PR-4 hand-specialized scans, reconstructed verbatim ---------------
+@jax.jit
+def _direct_2u_chunk(items, m, step, sign, quantile, seed, t_offset):
+    """Hand-specialized fused 2U chunk scan (pre-engine `_fused_scan`)."""
+    t, g = items.shape
+    g_ids = jnp.arange(g, dtype=jnp.int32)
+
+    def tick(carry, xs):
+        it, i = xs
+        r = crng.counter_uniform(seed, t_offset + i, g_ids)
+        st = frugal.frugal2u_update(frugal.Frugal2UState(*carry), it, r,
+                                    quantile)
+        return tuple(st), None
+
+    out, _ = jax.lax.scan(tick, (m, step, sign),
+                          (items, jnp.arange(t, dtype=jnp.int32)))
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("window",))
+def _direct_window2u_chunk(items, planes, quantile, seed, t_offset, *,
+                           window):
+    """Hand-specialized windowed-2U chunk scan (pre-engine `_drift_scan`)."""
+    t, g = items.shape
+    g_ids = jnp.arange(g, dtype=jnp.int32)
+
+    def tick(carry, xs):
+        it, i = xs
+        t_abs = t_offset + i
+        r = crng.counter_uniform(seed, t_abs, g_ids)
+        st = window_update(WindowState(*carry), it, r, quantile, t_abs,
+                           window, algo="2u")
+        return tuple(st), None
+
+    out, _ = jax.lax.scan(tick, tuple(planes),
+                          (items, jnp.arange(t, dtype=jnp.int32)))
+    return out
+
+
+def _median_time(fn, reps):
+    jax.block_until_ready(fn())               # warm-up / compile, drained
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def run(quick: bool = True, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    g = 4096
+    t_items = 2_000 if quick else 10_000
+    chunk_t = 512
+    reps = 5 if quick else 9
+    items = jnp.asarray(rng.integers(0, 1000, (t_items, g)), jnp.float32)
+    counter_seed = jnp.int32(17)
+    q = jnp.full((g,), 0.5, jnp.float32)
+    m0 = jnp.zeros((g,), jnp.float32)
+    one = jnp.ones((g,), jnp.float32)
+    prog2u = program_mod.family_base("2u")
+
+    def direct():
+        planes = (m0, one, one)
+        for t0 in range(0, t_items, chunk_t):
+            planes = _direct_2u_chunk(items[t0:t0 + chunk_t], *planes, q,
+                                      counter_seed, jnp.int32(t0))
+        return planes
+
+    def engine():
+        planes = (m0, one, one)
+        for t0 in range(0, t_items, chunk_t):
+            planes = frugal_update_auto(items[t0:t0 + chunk_t], planes, q,
+                                        seed=counter_seed, program=prog2u,
+                                        t_offset=t0)
+        return planes
+
+    # correctness first: the comparison is void if trajectories diverge
+    for a, b in zip(direct(), engine()):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    t_direct = _median_time(direct, reps)
+    t_engine = _median_time(engine, reps)
+    overhead = t_engine / t_direct
+    gate_met = overhead <= GATE_MAX_OVERHEAD
+
+    us_direct = t_direct / (t_items * g) * 1e6
+    us_engine = t_engine / (t_items * g) * 1e6
+
+    # ---- widest layout: windowed 2U (6 planes, scalar slot) ---------------
+    w = 512
+    wprog = program_mod.make_program("2u-window", window=w)
+    wplanes0 = (m0, one, one, jnp.array(m0), jnp.array(one), jnp.array(one))
+
+    def direct_w():
+        planes = wplanes0
+        for t0 in range(0, t_items, chunk_t):
+            planes = _direct_window2u_chunk(items[t0:t0 + chunk_t], planes,
+                                            q, counter_seed, jnp.int32(t0),
+                                            window=w)
+        return planes
+
+    def engine_w():
+        planes = wplanes0
+        for t0 in range(0, t_items, chunk_t):
+            planes = frugal_update_auto(items[t0:t0 + chunk_t], planes, q,
+                                        seed=counter_seed, program=wprog,
+                                        t_offset=t0)
+        return planes
+
+    for a, b in zip(direct_w(), engine_w()):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    reps_w = max(3, reps - 2)
+    t_direct_w = _median_time(direct_w, reps_w)
+    t_engine_w = _median_time(engine_w, reps_w)
+
+    payload = {
+        "g": g, "t_items": t_items, "chunk_t": chunk_t, "reps": reps,
+        "direct_s": t_direct, "engine_s": t_engine,
+        "direct_us_per_item": us_direct, "engine_us_per_item": us_engine,
+        "engine_overhead_ratio": overhead,
+        "gate_max_overhead": GATE_MAX_OVERHEAD, "gate_met": bool(gate_met),
+        "window2u_direct_s": t_direct_w, "window2u_engine_s": t_engine_w,
+        "window2u_overhead_ratio": t_engine_w / t_direct_w,
+        "bit_exact_vs_direct": True,
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=1)
+    save_result("e7_program_engine", payload)
+
+    if not gate_met:
+        print(f"WARNING: program-engine overhead {overhead:.3f}x exceeds "
+              f"gate {GATE_MAX_OVERHEAD}x (see {BENCH_JSON}; re-check on an "
+              "unloaded machine)", flush=True)
+
+    lines = [
+        csv_line("program_engine_direct", us_direct,
+                 f"g={g};chunk_t={chunk_t}"),
+        csv_line("program_engine", us_engine,
+                 f"overhead={overhead:.3f}x;gate_met={gate_met}"),
+        csv_line("program_engine_window2u",
+                 t_engine_w / (t_items * g) * 1e6,
+                 f"overhead={t_engine_w / t_direct_w:.3f}x"),
+    ]
+    return lines, payload
+
+
+if __name__ == "__main__":
+    for line in run(quick=True)[0]:
+        print(line)

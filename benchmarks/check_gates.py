@@ -1,12 +1,12 @@
 """Perf-gate checker for the bench-regression CI job.
 
-Each systems benchmark (e8-e11) records its own gate threshold and verdict
+Each systems benchmark (e7-e11) records its own gate threshold and verdict
 in a repo-root BENCH_*.json (the PR-over-PR perf trajectory files). The
 benchmarks themselves only WARN on a miss — wall-clock on a shared CI
 runner is too noisy to hard-fail inside the bench — so this checker is the
 single place that turns a freshly-rerun gate verdict into a CI failure.
 
-Usage (after `python -m benchmarks.run --only e8,e9,e10,e11` rewrote the
+Usage (after `python -m benchmarks.run --only e7,e8,e9,e10,e11` rewrote the
 files):  python -m benchmarks.check_gates
 """
 from __future__ import annotations
@@ -20,6 +20,8 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 # (file, benchmark id, human description of the gate)
 GATES = (
+    ("BENCH_program_engine.json", "e7",
+     "program-engine dispatch <= 1.05x the hand-specialized PR-4 paths"),
     ("BENCH_kernel_throughput.json", "e8",
      "fused ingest >= 1.5x rand-materializing at G=4096"),
     ("BENCH_sharded_fleet.json", "e9",

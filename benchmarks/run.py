@@ -21,8 +21,9 @@ def main() -> None:
     from benchmarks import (
         bench_static_cauchy, bench_dynamic_cauchy, bench_groupby_tcp,
         bench_combined_stream, bench_groupby_twitter,
-        bench_convergence_theory, bench_kernel_throughput,
-        bench_sharded_fleet, bench_fleet_api, bench_drift_tracking)
+        bench_convergence_theory, bench_program_engine,
+        bench_kernel_throughput, bench_sharded_fleet, bench_fleet_api,
+        bench_drift_tracking)
 
     suite = {
         "e1": ("static_cauchy (paper Fig 4)", bench_static_cauchy.run),
@@ -31,11 +32,11 @@ def main() -> None:
         "e4": ("combined_stream (paper Figs 8-9)", bench_combined_stream.run),
         "e5": ("groupby_twitter (paper Figs 10-11)", bench_groupby_twitter.run),
         "e6": ("theory Thm1/Thm2 (paper §4)", bench_convergence_theory.run),
-        # e7 is RESERVED: it was provisioned for the paper's §7.4
-        # space-vs-accuracy frontier sweep, which never landed (the
-        # per-algorithm memory/error columns already ride e1/e3/e5
-        # payloads). The id stays burned so artifact names and historical
-        # BENCH_* comparisons keep their meaning; e8+ are ours.
+        # e7 sat reserved for the paper's never-landed §7.4 frontier sweep
+        # through PR 4; the lane-program engine claimed the gap: e7 now
+        # gates the engine's dispatch overhead vs the PR-4 hand-specialized
+        # paths (<= 1.05x, BENCH_program_engine.json).
+        "e7": ("program_engine overhead (ours)", bench_program_engine.run),
         "e8": ("kernel_throughput (ours)", bench_kernel_throughput.run),
         "e9": ("sharded_fleet (ours)", bench_sharded_fleet.run),
         "e10": ("fleet_api overhead + Q-lanes (ours)", bench_fleet_api.run),
@@ -47,7 +48,7 @@ def main() -> None:
         unknown = only - suite.keys()
         if unknown:  # a typo'd id must not silently run an empty suite
             ap.error(f"unknown benchmark id(s) {sorted(unknown)}; known: "
-                     f"{', '.join(suite)} (e7 is reserved — see comment)")
+                     f"{', '.join(suite)}")
 
     print("name,us_per_call,derived")
     for key, (desc, fn) in suite.items():

@@ -12,7 +12,7 @@ Two views:
 """
 import numpy as np
 
-from repro.api import DriftConfig, FleetSpec, QuantileFleet
+from repro.api import FleetSpec, QuantileFleet, make_program
 from repro.data.streams import dynamic_cauchy_stream
 from repro.core.reference import frugal1u_scalar, frugal2u_scalar
 
@@ -54,12 +54,12 @@ def main():
     print("\nall three lanes chase each regime shift — the whole "
           "inter-quartile band is 6 words of state.")
 
-    # ---- drift-aware lanes -------------------------------------------------
+    # ---- drift-aware lane programs -----------------------------------------
     # At small value scales (units ~ the frugal step of 1) vanilla 2U's
-    # step inertia slows recovery after each shift; the decayed variant
-    # (DESIGN.md §10) re-arms in O(half_life) ticks, and the two-sketch
-    # window estimates only the last W..2W items. Same stream, same seed,
-    # same backends — drift is one FleetSpec field.
+    # step inertia slows recovery after each shift; the decayed rule
+    # (DESIGN.md §10-§11) re-arms in O(half_life) ticks, and the two-sketch
+    # window rule estimates only the last W..2W items. Same stream, same
+    # seed, same backends — the update rule is one FleetSpec program=.
     small = (stream / 50.0).astype(np.float32)
     seg_len = n // 3
     # Sample the estimate 100/300/1000 ticks after each shift — the
@@ -67,13 +67,14 @@ def main():
     probes = [b + d for b in (seg_len, 2 * seg_len) for d in (100, 300,
                                                               1000)]
     rows = []
-    for label, drift in (("vanilla", None),
-                         ("decay(h=64)", DriftConfig("decay", half_life=64)),
-                         ("window(W=2000)", DriftConfig("window",
+    for label, prog in (("vanilla", "2u"),
+                        ("decay(h=64)", make_program("2u-decay",
+                                                     half_life=64)),
+                        ("window(W=2000)", make_program("2u-window",
                                                         window=2000))):
         fl = QuantileFleet.create(
             FleetSpec(num_groups=1, quantiles=(0.5,), backend="jnp",
-                      drift=drift), seed=0)
+                      program=prog), seed=0)
         ests, pos = [], 0
         for p in probes:
             fl = fl.ingest(small[pos:p])

@@ -18,7 +18,7 @@ rng = np.random.default_rng(0)
 # 2 words of state, uniforms counter-hashed on the fly (no random tensor is
 # ever allocated — DESIGN.md §4).
 G, T = 10_000, 3_000
-spec = FleetSpec(num_groups=G, quantiles=(0.5, 0.9, 0.99), algo="2u")
+spec = FleetSpec(num_groups=G, quantiles=(0.5, 0.9, 0.99), program="2u")
 fleet = QuantileFleet.create(spec, seed=0)
 
 scales = rng.uniform(3.0, 8.0, G)
@@ -56,6 +56,27 @@ assert np.array_equal(resumed.estimate(), fleet.estimate()), \
     "a restored fleet continues its exact trajectory"
 print("checkpoint -> restore -> continue: bit-identical to the "
       "uninterrupted run")
+
+# ---- lane programs: swap the update rule, keep the fleet -------------------
+# The update rule is a FleetSpec field: program="2u" is the paper's
+# Algorithm 3; "2u-decay" / "{1,2}u-window" are the drift-aware rules, and
+# "2u-dp" releases Laplace-noised estimates (output-perturbation DP a la
+# Cafaro et al. 2025) while running the EXACT vanilla 2U kernels — a new
+# rule costs one registry entry in core/program.py, zero backend code
+# (DESIGN.md section 11 has the plane-layout and migration tables).
+from repro.api import make_program
+
+dp_spec = FleetSpec(num_groups=G, quantiles=(0.9,),
+                    program=make_program("2u-dp", epsilon=2.0))
+plain_spec = FleetSpec(num_groups=G, quantiles=(0.9,), program="2u")
+dp = QuantileFleet.create(dp_spec, seed=0).ingest(items)
+plain = QuantileFleet.create(plain_spec, seed=0).ingest(items)
+# identical lanes + seed -> identical SKETCH state; only the released
+# values differ, by exactly the calibrated Laplace reporting noise.
+noise = dp.estimate(quantile=0.9) - plain.estimate(quantile=0.9)
+print(f"2u-dp (epsilon=2): median |reporting noise| = "
+      f"{np.median(np.abs(noise)):.3f} (~ Lap(1/2); deterministic per "
+      "stream position, bit-equal on every backend)")
 
 # ---- the paper's scalar baseline, for contrast -----------------------------
 from repro.core.reference import frugal1u_scalar, relative_mass_error

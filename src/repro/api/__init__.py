@@ -16,19 +16,30 @@
 
 from repro.core.baselines.protocol import QuantileEstimator
 from repro.core.drift import DriftConfig
+from repro.core.program import (
+    LaneProgram,
+    StateLayout,
+    make_program,
+    registered_families,
+)
 
 from .spec import BACKENDS, FleetSpec, StreamCursor
 from .fleet import QuantileFleet
 from .estimators import FrugalEstimator
-from .lint import check_public_api
+from .lint import check_programs, check_public_api
 
 __all__ = [
     "BACKENDS",
     "DriftConfig",
+    "LaneProgram",
+    "StateLayout",
+    "make_program",
+    "registered_families",
     "FleetSpec",
     "StreamCursor",
     "QuantileFleet",
     "QuantileEstimator",
     "FrugalEstimator",
+    "check_programs",
     "check_public_api",
 ]

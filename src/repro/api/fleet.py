@@ -3,7 +3,7 @@
 The paper's pitch is "estimate ANY quantile for each of a large number of
 groups with one or two words of memory". Before this facade the repo's
 public surface had fractured into five entry points (sketch.process,
-kernels.ops.*_auto_fused, core.streaming.ingest_stream/_array,
+kernels.ops auto entry points, core.streaming.ingest_stream/_array,
 parallel.ShardedGroupFleet, serve.SLOFleet), each hand-threading
 `(seed, t_offset, g_offset)` and each tracking a single quantile target.
 QuantileFleet folds them into one surface:
@@ -49,7 +49,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import frugal, streaming
-from repro.core import drift as drift_mod
+from repro.core import program as program_mod
 from repro.core import rng as crng
 from repro.core.sketch import GroupedQuantileSketch
 from repro.parallel.group_sharding import ShardedGroupFleet
@@ -59,82 +59,35 @@ from .spec import FleetSpec, StreamCursor
 Array = jax.Array
 
 
-def _tick_state(m, step, sign, m2, step2, sign2, items, r, q, ticks, algo,
-                drift):
-    """Shared single-tick core for the dense/sparse lane paths: vanilla,
-    decayed, or windowed, keyed on the lane's absolute tick. Returns the six
-    plane arrays (shadow passthrough when unused)."""
-    if drift_mod.is_windowed(drift):
-        st = drift_mod.window_update(
-            drift_mod.WindowState(m, step, sign, m2, step2, sign2), items,
-            r, q, ticks, drift.window, algo=algo)
-        return tuple(st)
-    if drift is not None:  # decay — 2u only (validated at spec creation)
-        st = drift_mod.decay2u_update(
-            frugal.Frugal2UState(m, step, sign), items, r, q,
-            drift.alpha_f32, np.float32(drift.floor))
-        return st.m, st.step, st.sign, m2, step2, sign2
-    if algo == "1u":
-        st = frugal.frugal1u_update(frugal.Frugal1UState(m), items, r, q)
-        return st.m, step, sign, m2, step2, sign2
-    st = frugal.frugal2u_update(frugal.Frugal2UState(m, step, sign), items,
-                                r, q)
-    return st.m, st.step, st.sign, m2, step2, sign2
-
-
-# Non-windowed fleets tick through the narrow 3-plane signatures — the
-# shadow placeholders would otherwise ride every jitted dispatch as 3
-# pass-through [L] buffers (the same widening _sharded_ingest_fn avoids
-# on the e9 hot path). drift is static, so each spec compiles its own
-# executable either way; the split only trims the operand/result tuples.
-@functools.partial(jax.jit, static_argnames=("algo", "drift"))
-def _lane_tick(m, step, sign, ticks, q, items, mask, seed, g_offset,
-               algo="2u", drift=None):
-    """One vectorized tick over L lanes (vanilla/decay): uniforms key on
-    (seed, per-lane or scalar tick, absolute lane id); NaN items are
-    bit-exact no-ops. `mask` is accepted (and ignored) so dense event
-    rounds share one signature with the cursor advance."""
-    del mask
+# One program-generic event-lane tick pair replaces the old four
+# algo/drift-specialized signatures: the plane-tuple WIDTH derives from the
+# program's StateLayout (a 1U fleet moves one [L] buffer, a windowed 2U
+# fleet six — no placeholder shadow buffers ever ride a dispatch), and the
+# program's tick function is the body. `program` is the static compile key
+# (a core.program.family_base instance — rule scalars travel dynamically).
+@functools.partial(jax.jit, static_argnames=("program",))
+def _lane_tick(planes, ticks, q, items, seed, g_offset, scalars, program):
+    """One vectorized tick over L lanes: uniforms key on (seed, per-lane or
+    scalar tick, absolute lane id); NaN items are bit-exact no-ops."""
     g_ids = jnp.asarray(g_offset, jnp.int32) \
-        + jnp.arange(m.shape[0], dtype=jnp.int32)
+        + jnp.arange(planes[0].shape[0], dtype=jnp.int32)
     r = crng.counter_uniform(seed, ticks, g_ids)
-    return _tick_state(m, step, sign, None, None, None, items, r, q, ticks,
-                       algo, drift)[:3]
+    ctx = frugal.TickCtx(quantile=q, t=ticks, seed=seed, lanes=g_ids,
+                         scalars=scalars)
+    return program.run_tick(planes, items, r, ctx)
 
 
-@functools.partial(jax.jit, static_argnames=("algo", "drift"))
-def _lane_tick_window(m, step, sign, m2, step2, sign2, ticks, q, items,
-                      mask, seed, g_offset, algo="2u", drift=None):
-    """The windowed (6-plane) flavour of _lane_tick."""
-    del mask
-    g_ids = jnp.asarray(g_offset, jnp.int32) \
-        + jnp.arange(m.shape[0], dtype=jnp.int32)
-    r = crng.counter_uniform(seed, ticks, g_ids)
-    return _tick_state(m, step, sign, m2, step2, sign2, items, r, q, ticks,
-                       algo, drift)
-
-
-@functools.partial(jax.jit, static_argnames=("algo", "drift"))
-def _lane_tick_sparse(m_s, step_s, sign_s, ticks_s, q_s, lanes, items, seed,
-                      g_offset, algo="2u", drift=None):
-    """The same tick on a gathered O(events) lane slice (vanilla/decay) —
-    uniforms still key on the ABSOLUTE lane index and the lane's own tick,
-    so the trajectory is bit-identical to the dense round."""
+@functools.partial(jax.jit, static_argnames=("program",))
+def _lane_tick_sparse(planes_s, ticks_s, q_s, lanes, items, seed, g_offset,
+                      scalars, program):
+    """The same tick on a gathered O(events) lane slice — uniforms still key
+    on the ABSOLUTE lane index and the lane's own tick, so the trajectory is
+    bit-identical to the dense round."""
     g_ids = jnp.asarray(g_offset, jnp.int32) + lanes
     r = crng.counter_uniform(seed, ticks_s, g_ids)
-    return _tick_state(m_s, step_s, sign_s, None, None, None, items, r,
-                       q_s, ticks_s, algo, drift)[:3]
-
-
-@functools.partial(jax.jit, static_argnames=("algo", "drift"))
-def _lane_tick_sparse_window(m_s, step_s, sign_s, m2_s, step2_s, sign2_s,
-                             ticks_s, q_s, lanes, items, seed, g_offset,
-                             algo="2u", drift=None):
-    """The windowed (6-plane) flavour of _lane_tick_sparse."""
-    g_ids = jnp.asarray(g_offset, jnp.int32) + lanes
-    r = crng.counter_uniform(seed, ticks_s, g_ids)
-    return _tick_state(m_s, step_s, sign_s, m2_s, step2_s, sign2_s, items,
-                       r, q_s, ticks_s, algo, drift)
+    ctx = frugal.TickCtx(quantile=q_s, t=ticks_s, seed=seed, lanes=g_ids,
+                         scalars=scalars)
+    return program.run_tick(planes_s, items, r, ctx)
 
 
 @jax.tree_util.register_dataclass
@@ -314,23 +267,12 @@ class QuantileFleet:
             raise ValueError(
                 f"lane items shape {items.shape} != [{self.num_lanes}]")
         cur = self.cursor
-        drift = self.spec.drift
-        one = jnp.ones_like(sk.m)
-        step = sk.step if sk.step is not None else one
-        sign = sk.sign if sk.sign is not None else one
-        if drift_mod.is_windowed(drift):
-            step2 = sk.step2 if sk.step2 is not None else one
-            sign2 = sk.sign2 if sk.sign2 is not None else one
-            m, step, sign, m2, step2, sign2 = _lane_tick_window(
-                sk.m, step, sign, sk.m2, step2, sign2, cur.t_offset,
-                sk.quantile, items, None, cur.seed, cur.g_offset,
-                algo=self.algo, drift=drift)
-        else:
-            m, step, sign = _lane_tick(
-                sk.m, step, sign, cur.t_offset, sk.quantile, items, None,
-                cur.seed, cur.g_offset, algo=self.algo, drift=drift)
-            m2 = step2 = sign2 = None
-        state = self._with_planes(sk, m, step, sign, m2, step2, sign2)
+        prog = self.spec.program
+        planes = _lane_tick(
+            sk.planes(), cur.t_offset, sk.quantile, items, cur.seed,
+            cur.g_offset, self._scalars(),
+            program=program_mod.family_base(prog.kernel_family))
+        state = sk.with_planes(planes)
         if cur.per_lane:
             if mask is None:
                 mask = jnp.where(jnp.isnan(items), 0, 1).astype(jnp.int32)
@@ -359,49 +301,26 @@ class QuantileFleet:
         items = jnp.asarray(items, jnp.float32)
         if mask is None:
             mask = jnp.where(jnp.isnan(items), 0, 1).astype(jnp.int32)
-        drift = self.spec.drift
-        one = jnp.ones_like(sk.m)
-        step_full = sk.step if sk.step is not None else one
-        sign_full = sk.sign if sk.sign is not None else one
+        prog = self.spec.program
         q_lanes = jnp.broadcast_to(
             jnp.asarray(sk.quantile, sk.m.dtype), sk.m.shape)[lanes]
-        if drift_mod.is_windowed(drift):
-            step2_full = sk.step2 if sk.step2 is not None else one
-            sign2_full = sk.sign2 if sk.sign2 is not None else one
-            m, step, sign, m2, step2, sign2 = _lane_tick_sparse_window(
-                sk.m[lanes], step_full[lanes], sign_full[lanes],
-                sk.m2[lanes], step2_full[lanes], sign2_full[lanes],
-                cur.t_offset[lanes], q_lanes, lanes, items, cur.seed,
-                cur.g_offset, algo=self.algo, drift=drift)
-            m2_out = sk.m2.at[lanes].set(m2)
-            step2_out = step2_full.at[lanes].set(step2)
-            sign2_out = sign2_full.at[lanes].set(sign2)
-        else:
-            m, step, sign = _lane_tick_sparse(
-                sk.m[lanes], step_full[lanes], sign_full[lanes],
-                cur.t_offset[lanes], q_lanes, lanes, items, cur.seed,
-                cur.g_offset, algo=self.algo, drift=drift)
-            m2_out = step2_out = sign2_out = None
-        state = self._with_planes(
-            sk, sk.m.at[lanes].set(m), step_full.at[lanes].set(step),
-            sign_full.at[lanes].set(sign), m2_out, step2_out, sign2_out)
+        planes_full = sk.planes()
+        out_s = _lane_tick_sparse(
+            tuple(p[lanes] for p in planes_full), cur.t_offset[lanes],
+            q_lanes, lanes, items, cur.seed, cur.g_offset, self._scalars(),
+            program=program_mod.family_base(prog.kernel_family))
+        state = sk.with_planes(tuple(
+            p.at[lanes].set(o) for p, o in zip(planes_full, out_s)))
         ticks = cur.t_offset.at[lanes].add(mask)
         return dataclasses.replace(self, state=state,
                                    cursor=cur._replace(t_offset=ticks))
 
-    def _with_planes(self, sk: GroupedQuantileSketch, m, step, sign, m2,
-                     step2, sign2) -> GroupedQuantileSketch:
-        """Rebuild the lane sketch from the tick-output planes, keeping
-        only the fields this spec's algo/drift actually persist (shadow
-        args are None on the narrow non-windowed path)."""
-        upd = {"m": m}
-        if self.algo != "1u":
-            upd.update(step=step, sign=sign)
-        if sk.m2 is not None and m2 is not None:
-            upd["m2"] = m2
-            if self.algo != "1u":
-                upd.update(step2=step2, sign2=sign2)
-        return dataclasses.replace(sk, **upd)
+    def _scalars(self):
+        """The spec program's dynamic int32 scalar operands (rule
+        parameters) — passed alongside the static family base so parameter
+        sweeps share one compiled tick."""
+        return tuple(jnp.asarray(v, jnp.int32)
+                     for v in self.spec.program.scalar_values())
 
     # ------------------------------------------------------------------ grow
     def grow_groups(self, num_groups: int,
@@ -446,30 +365,31 @@ class QuantileFleet:
         """Current estimates as [G, Q] numpy (the one gathering read); with
         `quantile=` one tracked target's [G] column.
 
-        A windowed fleet (drift mode 'window') answers from the OLDER plane
-        of each lane's sketch pair — the one holding between W and 2W ticks
-        of history. Plane choice is a pure function of the cursor (epoch
-        parity of the lane's absolute tick), not of sketch state."""
-        if drift_mod.is_windowed(self.spec.drift):
-            if isinstance(self.state, ShardedGroupFleet):
-                # Gather ONLY the two m planes — not the full six-plane
-                # unshard (5 needless [L] transfers per read at fleet scale).
-                pad = self.state.sketch
-                n = self.state.num_groups
-                m = np.asarray(jax.device_get(pad.m))[:n]
-                m2 = np.asarray(jax.device_get(pad.m2))[:n]
-            else:
-                m = np.asarray(jax.device_get(self.state.m))
-                m2 = np.asarray(jax.device_get(self.state.m2))
-            primary = drift_mod.query_plane_is_primary(
-                np.asarray(jax.device_get(self.cursor.t_offset)),
-                self.spec.drift.window)
-            m = np.where(primary, m, m2)
-        elif isinstance(self.state, ShardedGroupFleet):
-            m = self.state.estimate()
+        The spec program's QUERY function answers: vanilla rules return the
+        estimate plane, window rules select each lane pair's OLDER plane
+        (epoch parity of the lane's absolute tick — a pure function of the
+        cursor, not of sketch state), and the 2u-dp rule releases
+        Laplace-noised values keyed deterministically on the cursor. Only
+        the layout's query planes are gathered — a windowed sharded fleet
+        transfers its two m planes, never the step/sign words."""
+        prog = self.spec.program
+        fields = prog.layout.query_fields
+        if isinstance(self.state, ShardedGroupFleet):
+            pad = self.state.sketch
+            n = self.state.num_groups
+            m_planes = tuple(np.asarray(jax.device_get(getattr(pad, f)))[:n]
+                             for f in fields)
         else:
-            m = np.asarray(jax.device_get(self.state.m))
-        plane = m.reshape(self.num_groups, self.num_quantiles)
+            m_planes = tuple(np.asarray(jax.device_get(getattr(self.state, f)))
+                             for f in fields)
+        cur = self.cursor
+        g_off = int(np.asarray(jax.device_get(cur.g_offset)))
+        m = prog.run_query(
+            m_planes,
+            t_next=np.asarray(jax.device_get(cur.t_offset)),
+            seed=int(np.asarray(jax.device_get(cur.seed))),
+            lanes=g_off + np.arange(self.num_lanes, dtype=np.int64))
+        plane = np.asarray(m).reshape(self.num_groups, self.num_quantiles)
         if quantile is None:
             return plane
         return plane[:, self.spec.quantiles.index(float(quantile))]
@@ -494,7 +414,7 @@ class QuantileFleet:
         lanes = spec.num_lanes
         f32 = jax.ShapeDtypeStruct((lanes,), jnp.float32)
         i32s = jax.ShapeDtypeStruct((), jnp.int32)
-        windowed = drift_mod.is_windowed(spec.drift)
+        windowed = spec.program.layout.has_shadow
         m2 = f32 if windowed else None
         if spec.algo == "1u":
             sk = GroupedQuantileSketch(m=f32, step=None, sign=None,
@@ -520,7 +440,7 @@ class QuantileFleet:
                 f"checkpoint holds {sk.num_groups} lanes but spec "
                 f"{spec.num_groups}x{spec.num_quantiles} expects "
                 f"{spec.num_lanes}")
-        windowed = drift_mod.is_windowed(spec.drift)
+        windowed = spec.program.layout.has_shadow
         if windowed != (sk.m2 is not None):
             raise ValueError(
                 f"checkpoint {'has' if sk.m2 is not None else 'lacks'} a "

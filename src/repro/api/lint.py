@@ -1,12 +1,20 @@
-"""Public-API lint: every name a subpackage exports must resolve.
+"""Public-API lint: exports must resolve, lane programs must be whole.
 
 PR 2 nearly shipped an `__all__` entry in parallel/__init__.py that didn't
 exist — export drift that `import repro.parallel` alone never catches
 (Python validates `__all__` only on `from pkg import *`). This walker
 imports every SUBPACKAGE under `repro` (packages only: leaf modules like
 launch.dryrun have import-time side effects by design) and getattr-checks
-each `__all__` entry. CI runs it as a dedicated step; tests/test_public_api
-runs it in tier-1.
+each `__all__` entry.
+
+It also lints the LaneProgram registry (check_programs): every registered
+family's canonical instance must declare a packing spec that enumerates its
+planes, a query function that answers, and kernel scalar slots that match
+its scan signature (a smoke tick runs with exactly the declared operands) —
+so a half-registered program fails CI, not a user's first ingest.
+
+CI runs both as a dedicated step (`python -m repro.api.lint`);
+tests/test_public_api runs them in tier-1.
 """
 from __future__ import annotations
 
@@ -49,11 +57,28 @@ def check_public_api(package: str = "repro"
     return exported
 
 
+def check_programs() -> Tuple[str, ...]:
+    """Validate every registered LaneProgram family (core.program).
+
+    Each family's canonical instance runs core.program.validate_program:
+    packing spec covers the planes in order, scalar slots resolve and match
+    the tick's signature, the tick preserves plane arity/dtypes, words
+    round-trip, query and trace answer. Raises AssertionError naming the
+    broken family; returns the family names checked.
+    """
+    from repro.core import program as program_mod
+
+    return program_mod.validate_registry()
+
+
 def main() -> None:  # pragma: no cover - CI entry point
     exported = check_public_api()
     total = sum(len(v) for v in exported.values())
     print(f"public API OK: {total} exports across {len(exported)} "
           "subpackages resolve")
+    families = check_programs()
+    print(f"lane programs OK: {len(families)} registered families validate "
+          f"({', '.join(families)})")
 
 
 if __name__ == "__main__":  # pragma: no cover

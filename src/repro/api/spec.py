@@ -19,7 +19,7 @@ where each lane's k-th event consumes uniform (seed, k, lane)).
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Tuple, Union
 
 import numpy as np
 import jax
@@ -28,6 +28,7 @@ from jax.sharding import Mesh
 
 from repro.core import rng as crng
 from repro.core.drift import DriftConfig
+from repro.core.program import LaneProgram, make_program, program_for
 
 Array = jax.Array
 
@@ -104,13 +105,17 @@ class FleetSpec:
                  RNG keys on absolute (seed, tick, lane).
     chunk_t    — tick-block size for chunked ingest ("fused"/"sharded").
     mesh       — 1-D device mesh for "sharded" (default: all devices).
-    drift      — None (vanilla paper lanes, bit-identical to before the
-                 drift layer existed) or a core.drift.DriftConfig:
-                 mode "decay" (exponentially-decayed Frugal-2U — re-arms
-                 adaptation after distribution shift) or "window"
-                 (two-sketch sliding window — estimates cover the last
-                 W..2W items). Any drift config is invariant to backend ×
-                 chunking × mesh, like everything else here.
+    program    — THE update rule: a core.program.LaneProgram instance (or a
+                 registered family name string, e.g. "2u-window" — default
+                 parameters). Owns algo/drift when given; the legacy
+                 `algo=` / `drift=` spelling maps onto it
+                 (core.program.program_for — DESIGN.md §11 migration
+                 table), so both spellings build EQUAL specs.
+    drift      — legacy parameter carrier (None, or a core.drift
+                 DriftConfig with mode "decay"/"window"); subsumed by
+                 `program=`, kept for compatibility and always consistent
+                 with it. Any program is invariant to backend × chunking ×
+                 mesh, like everything else here.
 
     Hashable → usable as static pytree metadata / jit static argument.
     """
@@ -122,6 +127,7 @@ class FleetSpec:
     chunk_t: int = 4096
     mesh: Optional[Mesh] = None
     drift: Optional[DriftConfig] = None
+    program: Optional[Union[str, LaneProgram]] = None
 
     def __post_init__(self):
         qs = tuple(float(q) for q in np.atleast_1d(np.asarray(self.quantiles,
@@ -145,6 +151,27 @@ class FleetSpec:
             raise ValueError("mesh= only applies to backend='sharded'")
         if self.drift is not None:
             self.drift.validate_for_algo(self.algo)
+        prog = self.program
+        if prog is None:
+            prog = program_for(self.algo, self.drift)
+        else:
+            prog = make_program(prog)
+            # The program owns algo/drift; an explicitly-spelled legacy
+            # field may restate them but must not contradict.
+            # ("2u" is the field default, indistinguishable from unset)
+            if self.algo != prog.algo and self.algo != "2u":
+                raise ValueError(
+                    f"algo={self.algo!r} contradicts program "
+                    f"{prog.family!r} (algo {prog.algo!r}) — drop algo= or "
+                    "pass the matching program")
+            if self.drift is not None and self.drift != prog.drift:
+                raise ValueError(
+                    f"drift={self.drift!r} contradicts program "
+                    f"{prog.family!r} ({prog.drift!r}) — parameterize the "
+                    "program instead (core.program.make_program)")
+        object.__setattr__(self, "program", prog)
+        object.__setattr__(self, "algo", prog.algo)
+        object.__setattr__(self, "drift", prog.drift)
 
     # ------------------------------------------------------------ lane plane
     @property
@@ -167,9 +194,7 @@ class FleetSpec:
         return group * self.num_quantiles + self.quantiles.index(float(quantile))
 
     def memory_words(self) -> int:
-        """Persistent words per lane — 1 (1U) or 2 (packed 2U) per plane;
-        a two-sketch window (drift mode 'window') carries two planes."""
-        from repro.core.drift import is_windowed
-
-        per_plane = 1 if self.algo == "1u" else 2
-        return per_plane * (2 if is_windowed(self.drift) else 1)
+        """Persistent words per lane — the program layout's serialized word
+        count: 1 (1U) or 2 (packed 2U) per plane-pair, doubled by the
+        two-sketch window rules."""
+        return self.program.layout.num_words

@@ -1,25 +1,37 @@
 """The paper's primary contribution: frugal streaming quantile estimation.
 
-  frugal.py     — Frugal-1U / Frugal-2U, vectorized over groups (JAX).
+  frugal.py     — Frugal-1U / Frugal-2U update rules + THE program-generic
+                  ingest scan (program_process_seeded / TickCtx).
+  program.py    — LaneProgram / StateLayout: the rule-driven update core
+                  every backend executes (registry incl. the DP rule).
   reference.py  — scalar pure-Python transcriptions (bit-exact oracles).
   sketch.py     — GroupedQuantileSketch, the framework-facing API.
   batched.py    — binomial batch-update extension (beyond paper).
   rng.py        — counter-based on-chip RNG shared with the Pallas kernels.
   packing.py    — (step, sign) -> one int32 word (true 2-words-per-group 2U).
-  drift.py      — drift-aware lanes: decayed Frugal-2U + two-sketch window.
-  streaming.py  — chunked fused-kernel ingest for unbounded streams.
+  drift.py      — drift tick pieces: decayed step, two-sketch window phase.
+  streaming.py  — chunked program-kernel ingest for unbounded streams.
   baselines/    — GK, q-digest, Selection, reservoir, exact (paper §6).
 """
 
 from .frugal import (
     Frugal1UState,
     Frugal2UState,
+    TickCtx,
     frugal1u_init,
     frugal1u_process,
     frugal1u_update,
     frugal2u_init,
     frugal2u_process,
     frugal2u_update,
+    program_process_seeded,
+)
+from .program import (
+    LaneProgram,
+    StateLayout,
+    make_program,
+    program_for,
+    registered_families,
 )
 from .sketch import GroupedQuantileSketch, PackedSketchState
 from .batched import batched_frugal2u_update
@@ -36,12 +48,19 @@ from .streaming import ingest_array, ingest_stream
 __all__ = [
     "Frugal1UState",
     "Frugal2UState",
+    "TickCtx",
     "frugal1u_init",
     "frugal1u_process",
     "frugal1u_update",
     "frugal2u_init",
     "frugal2u_process",
     "frugal2u_update",
+    "program_process_seeded",
+    "LaneProgram",
+    "StateLayout",
+    "make_program",
+    "program_for",
+    "registered_families",
     "GroupedQuantileSketch",
     "PackedSketchState",
     "batched_frugal2u_update",

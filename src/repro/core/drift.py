@@ -63,7 +63,6 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from . import rng
 from .frugal import (
     Frugal1UState,
     Frugal2UState,
@@ -255,73 +254,33 @@ def window_update(state: WindowState, items: Array, rand: Array, quantile,
 
 
 # -------------------------------------------------------------------- scans
-def _drift_scan(tick_fn, trace_fn, state, items, seed, quantile, return_trace,
-                t_offset, g_offset, lanes_per_group):
-    """Fused drift-aware [T, G] scan — the same counter-RNG discipline as
-    core.frugal._fused_scan (absolute (seed, tick, lane) keys, group→lane
-    broadcast for multi-quantile planes), with the absolute tick handed to
-    the tick so decay/window phase math keys on it."""
-    seed = jnp.asarray(seed, jnp.int32)
-    t, g = items.shape
-    lanes = g * lanes_per_group
-    if state.m.shape[0] != lanes:
-        raise ValueError(
-            f"state has {state.m.shape[0]} lanes but items [{t}, {g}] x "
-            f"lanes_per_group={lanes_per_group} needs {lanes}")
-    g_ids = jnp.asarray(g_offset, jnp.int32) + jnp.arange(lanes, dtype=jnp.int32)
-    t0 = jnp.asarray(t_offset, jnp.int32)
-
-    def tick(s, xs):
-        it, i = xs
-        if lanes_per_group > 1:
-            it = jnp.repeat(it, lanes_per_group)
-        t_abs = t0 + i
-        r = rng.counter_uniform(seed, t_abs, g_ids)
-        s2 = tick_fn(s, it, r, t_abs)
-        return s2, (trace_fn(s2, t_abs) if return_trace else None)
-
-    return jax.lax.scan(tick, state, (items, jnp.arange(t, dtype=jnp.int32)))
-
-
-def decay2u_process_seeded(
-    state: Frugal2UState, items: Array, seed, quantile, cfg: DriftConfig,
-    return_trace: bool = False, t_offset=0, g_offset=0,
-    lanes_per_group: int = 1,
-) -> Tuple[Frugal2UState, Optional[Array]]:
-    """Fused [T, G] decayed-2U ingest (the off-TPU oracle the fused decay
-    kernel is pinned against). Trace rows are the per-tick estimates."""
-    alpha, floor = cfg.alpha_f32, np.float32(cfg.floor)
-
-    def tick_fn(s, it, r, t_abs):
-        del t_abs
-        return decay2u_update(s, it, r, quantile, alpha, floor)
-
-    return _drift_scan(tick_fn, lambda s, t: s.m, state, items, seed,
-                       quantile, return_trace, t_offset, g_offset,
-                       lanes_per_group)
-
-
 def window_process_seeded(
     state: WindowState, items: Array, seed, quantile, cfg: DriftConfig,
     return_trace: bool = False, t_offset=0, g_offset=0,
     lanes_per_group: int = 1, algo: str = "2u",
 ) -> Tuple[WindowState, Optional[Array]]:
-    """Fused [T, G] two-sketch-window ingest. Trace rows are the QUERIED
-    plane's estimate at each tick (what estimate() would answer then)."""
-    w = int(cfg.window)
+    """Fused [T, G] two-sketch-window ingest — a thin wrapper over the
+    program-generic scan with the registered '{algo}-window' rule. Trace
+    rows are the QUERIED plane's estimate at each tick (what estimate()
+    would answer then)."""
+    from . import program as program_mod  # lazy: program imports this module
+    from .frugal import program_process_seeded
 
-    def tick_fn(s, it, r, t_abs):
-        return window_update(s, it, r, quantile, t_abs, w, algo=algo)
-
-    def trace_fn(s, t_abs):
-        # After processing tick t_abs the stream holds t_abs+1 items; the
-        # queried plane is the one NOT restarted this epoch.
-        epoch = t_abs // jnp.int32(w)
-        primary = epoch - (epoch // 2) * 2 == 1
-        return jnp.where(primary, s.m, s.m2)
-
-    return _drift_scan(tick_fn, trace_fn, state, items, seed, quantile,
-                       return_trace, t_offset, g_offset, lanes_per_group)
+    prog = program_mod.program_for(algo, cfg)
+    if algo == "1u":
+        planes = (state.m, state.m2)
+    else:
+        planes = tuple(state)
+    planes, trace = program_process_seeded(
+        prog, planes, items, seed, quantile, return_trace=return_trace,
+        t_offset=t_offset, g_offset=g_offset, lanes_per_group=lanes_per_group)
+    if algo == "1u":
+        one = jnp.ones_like(planes[0])
+        out = WindowState(m=planes[0], step=one, sign=one, m2=planes[1],
+                          step2=one, sign2=one)
+    else:
+        out = WindowState(*planes)
+    return out, trace
 
 
 def window_init(num_lanes: int, init=0.0, dtype=jnp.float32) -> WindowState:

@@ -125,42 +125,73 @@ def frugal2u_update(
     return Frugal2UState(m=m, step=step, sign=sign)
 
 
-def _fused_scan(update_fn, state, items, seed, quantile, return_trace, t_offset,
-                g_offset, lanes_per_group=1):
-    """Scan ticks with counter-hashed uniforms generated per tick — the
-    fused ingest path. No [T, G] uniforms tensor is ever materialized, and
-    the (seed, absolute tick, absolute group) keying makes the trajectory
-    bit-identical to the fused Pallas kernel / kernels.ref fused oracles for
-    the same seed (see core.rng, DESIGN.md §4). `g_offset` is the absolute
-    group index of column 0 — a shard of a larger fleet passes its global
-    offset so the sharded trajectory matches the unsharded one bit-for-bit
-    (parallel/group_sharding.py).
+class TickCtx(NamedTuple):
+    """Everything a LaneProgram tick may key on besides (planes, item, u).
 
-    `lanes_per_group` > 1 is the multi-quantile lane plane (repro.api):
-    state holds L = G·Q lanes laid out group-major (lane = g·Q + qi), items
-    stay [T, G] and each tick broadcasts item g to that group's Q lanes —
-    the [T, L] repeated block is never materialized. Every lane hashes its
-    own uniform stream off its absolute lane id, so Q = 1 is bit-identical
-    to the plain grouped path."""
+    quantile — per-lane target(s), scalar or [L].
+    t        — ABSOLUTE stream tick (scalar for block streams, [L] for
+               event lanes) — window phase and any time-keyed rule read it.
+    seed     — the counter-RNG seed (int32 scalar).
+    lanes    — absolute lane ids, [L] int32.
+    scalars  — the program's int32 scalar operands (core.program
+               StateLayout.scalar_names): SMEM slots in the Pallas kernel,
+               plain traced scalars in the scans — identical values, so the
+               tick maths is bit-identical either way.
+    """
+
+    quantile: object
+    t: object
+    seed: object
+    lanes: object
+    scalars: Tuple
+
+
+def program_process_seeded(program, planes, items: Array, seed,
+                           quantile: ArrayLike = 0.5, scalars=None,
+                           return_trace: bool = False, t_offset: ArrayLike = 0,
+                           g_offset: ArrayLike = 0, lanes_per_group: int = 1):
+    """THE program-generic [T, G] ingest scan — one lax.scan serving every
+    registered LaneProgram (core.program). Uniforms are counter-hashed per
+    tick on the absolute (seed, tick, lane) triple, so the trajectory is
+    bit-identical to the one program-parameterized Pallas kernel
+    (kernels/frugal_update.py) and invariant to chunking/sharding
+    (DESIGN.md §4, §11). `g_offset` is the absolute lane index of column 0
+    (sharded fleets pass their global offset); `lanes_per_group` > 1 drives
+    a G·Q multi-quantile lane plane off [T, G] items (each tick broadcasts
+    item g to that group's Q lanes — no [T, L] block is materialized).
+
+    `planes` is the program's ordered plane tuple (layout.plane_fields);
+    `scalars` overrides the program's own scalar operands (the kernels'
+    dispatch path passes them as dynamic int32s so parameter sweeps never
+    recompile). Returns (planes, trace | None); trace rows come from the
+    program's trace function (the queried estimate for window rules).
+    """
     seed = jnp.asarray(seed, jnp.int32)
     t, g = items.shape
     lanes = g * lanes_per_group
-    if state.m.shape[0] != lanes:
+    planes = tuple(planes)
+    if planes[0].shape[0] != lanes:
         raise ValueError(
-            f"state has {state.m.shape[0]} lanes but items [{t}, {g}] x "
+            f"state has {planes[0].shape[0]} lanes but items [{t}, {g}] x "
             f"lanes_per_group={lanes_per_group} needs {lanes}")
     g_ids = jnp.asarray(g_offset, jnp.int32) + jnp.arange(lanes, dtype=jnp.int32)
     t0 = jnp.asarray(t_offset, jnp.int32)
+    if scalars is None:
+        scalars = program.scalar_values()
+    scalars = tuple(jnp.asarray(s, jnp.int32) for s in scalars)
 
-    def tick(s, xs):
+    def tick(ps, xs):
         it, i = xs
         if lanes_per_group > 1:
             it = jnp.repeat(it, lanes_per_group)
-        r = rng.counter_uniform(seed, t0 + i, g_ids)
-        s2 = update_fn(s, it, r, quantile)
-        return s2, (s2.m if return_trace else None)
+        t_abs = t0 + i
+        r = rng.counter_uniform(seed, t_abs, g_ids)
+        ctx = TickCtx(quantile=quantile, t=t_abs, seed=seed, lanes=g_ids,
+                      scalars=scalars)
+        ps2 = program.run_tick(ps, it, r, ctx)
+        return ps2, (program.run_trace(ps2, t_abs) if return_trace else None)
 
-    return jax.lax.scan(tick, state, (items, jnp.arange(t, dtype=jnp.int32)))
+    return jax.lax.scan(tick, planes, (items, jnp.arange(t, dtype=jnp.int32)))
 
 
 def frugal1u_process_seeded(
@@ -170,15 +201,17 @@ def frugal1u_process_seeded(
 ) -> Tuple[Frugal1UState, Optional[Array]]:
     """Fused [T, G] ingest from a raw int32 counter seed (kernel discipline).
 
-    This is THE off-TPU implementation of the fused ingest path — kernels/
-    ops.py dispatches here when no TPU is present, so the algorithm lives in
-    exactly one jnp transcription (plus the Pallas kernel body, which the
-    equivalence tests pin bit-exactly against it). `lanes_per_group` > 1
-    drives a G·Q multi-quantile lane plane off [T, G] items (see
-    _fused_scan / repro.api).
+    Thin wrapper over the program-generic scan with the registered '1u'
+    rule — bit-identical to the pre-program specialized scan (the tick is
+    the same frugal1u_update expression tree).
     """
-    return _fused_scan(frugal1u_update, state, items, seed, quantile,
-                       return_trace, t_offset, g_offset, lanes_per_group)
+    from . import program as program_mod  # lazy: program imports this module
+
+    planes, trace = program_process_seeded(
+        program_mod.family_base("1u"), (state.m,), items, seed, quantile,
+        return_trace=return_trace, t_offset=t_offset, g_offset=g_offset,
+        lanes_per_group=lanes_per_group)
+    return Frugal1UState(*planes), trace
 
 
 def frugal2u_process_seeded(
@@ -189,26 +222,27 @@ def frugal2u_process_seeded(
 ) -> Tuple[Frugal2UState, Optional[Array]]:
     """Fused [T, G] Frugal-2U ingest from a raw int32 counter seed.
 
-    `drift` (core.drift.DriftConfig, mode 'decay') selects the
-    exponentially-decayed step variant — same state shape, same uniforms,
-    one extra relaxation per real tick. drift=None is the vanilla paper
-    scan, bit-identical to before the drift layer existed. The two-sketch
-    window variant carries a doubled state plane and lives in
-    core.drift.window_process_seeded.
+    `drift` (core.drift.DriftConfig, mode 'decay') selects the registered
+    '2u-decay' program — same state shape, same uniforms, one extra
+    relaxation per real tick. drift=None runs the vanilla '2u' rule,
+    bit-identical to before the program engine existed. The two-sketch
+    window rules carry a doubled plane tuple — use
+    core.drift.window_process_seeded or the GroupedQuantileSketch /
+    repro.api surfaces, which size the planes from the program layout.
     """
-    if drift is not None:
-        from . import drift as drift_mod  # lazy: drift imports this module
+    from . import program as program_mod  # lazy: program imports this module
 
-        if drift.mode != "decay":
-            raise ValueError(
-                "frugal2u_process_seeded handles drift mode 'decay' only; "
-                "windowed lanes carry a doubled state plane — use "
-                "core.drift.window_process_seeded")
-        return drift_mod.decay2u_process_seeded(
-            state, items, seed, quantile, drift, return_trace, t_offset,
-            g_offset, lanes_per_group)
-    return _fused_scan(frugal2u_update, state, items, seed, quantile,
-                       return_trace, t_offset, g_offset, lanes_per_group)
+    if drift is not None and drift.mode != "decay":
+        raise ValueError(
+            "frugal2u_process_seeded handles drift mode 'decay' only; "
+            "windowed lanes carry a doubled state plane — use "
+            "core.drift.window_process_seeded")
+    prog = program_mod.program_for("2u", drift)
+    planes, trace = program_process_seeded(
+        prog, tuple(state), items, seed, quantile,
+        return_trace=return_trace, t_offset=t_offset, g_offset=g_offset,
+        lanes_per_group=lanes_per_group)
+    return Frugal2UState(*planes), trace
 
 
 def frugal1u_process(

@@ -26,7 +26,7 @@ beyond float32's useful range. Out-of-domain magnitudes degrade safely rather
 than corrupt: < 2^-63 flushes to zero, >= 2^32 saturates (direction kept).
 
 All int32 bit arithmetic — the same expressions run inside the Pallas TPU
-kernel body (frugal2u_pallas_fused carries ONE packed state word per group
+kernel body (the program kernel carries ONE packed state word per plane-pair
 next to m) and in plain jnp for checkpoint serialization.
 """
 from __future__ import annotations

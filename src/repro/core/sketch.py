@@ -80,6 +80,26 @@ class GroupedQuantileSketch:
         return self.m.shape[0]
 
     @property
+    def program(self):
+        """The sketch's LaneProgram (core.program), derived from its static
+        (algo, drift) metadata — THE dispatch object every layer uses
+        (streaming chunks, shard_map bodies, kernel entry points, packing)
+        instead of is_windowed()/algo string checks."""
+        from . import program as program_mod
+
+        return program_mod.program_for(self.algo, self.drift)
+
+    def planes(self) -> tuple:
+        """The program's ordered plane tuple (layout.plane_fields)."""
+        return tuple(getattr(self, f)
+                     for f in self.program.layout.plane_fields)
+
+    def with_planes(self, planes) -> "GroupedQuantileSketch":
+        """Rebuild the sketch from an updated plane tuple (same layout)."""
+        fields = self.program.layout.plane_fields
+        return dataclasses.replace(self, **dict(zip(fields, planes)))
+
+    @property
     def estimate(self) -> Array:
         """Current quantile estimates, shape [G].
 
@@ -99,20 +119,27 @@ class GroupedQuantileSketch:
         view, reconstructed bit-exactly from the two words. A two-sketch
         window (drift mode 'window') carries two such planes.
         """
-        per_plane = 1 if self.algo == "1u" else 2
-        return per_plane * (2 if is_windowed(self.drift) else 1)
+        return self.program.layout.num_words
 
     # -------------------------------------------------------- serialization
     def packed(self) -> PackedSketchState:
-        """1-2 words per group-plane serialized form (checkpoint / wire)."""
-        if self.algo == "1u":
-            return PackedSketchState(m=self.m, step_sign=None,
-                                     quantile=self.quantile, m2=self.m2)
-        ss2 = None if self.step2 is None else \
-            packing.pack_step_sign(self.step2, self.sign2)
-        return PackedSketchState(
-            m=self.m, step_sign=packing.pack_step_sign(self.step, self.sign),
-            quantile=self.quantile, m2=self.m2, step_sign2=ss2)
+        """1-2 words per group-plane serialized form (checkpoint / wire).
+
+        Layout-driven: the program's packing spec maps each plane-pair onto
+        a (m, step_sign) word unit — unit 0 fills (m, step_sign), the
+        window shadow unit fills (m2, step_sign2)."""
+        layout = self.program.layout
+        slots = {"m": self.m, "step_sign": None, "m2": None,
+                 "step_sign2": None}
+        for i, (head, pair) in enumerate(layout.packing):
+            suffix = "" if i == 0 else "2"
+            slots["m" + suffix] = getattr(self, head)
+            if pair is not None:
+                slots["step_sign" + suffix] = packing.pack_step_sign(
+                    getattr(self, pair[0]), getattr(self, pair[1]))
+        return PackedSketchState(m=slots["m"], step_sign=slots["step_sign"],
+                                 quantile=self.quantile, m2=slots["m2"],
+                                 step_sign2=slots["step_sign2"])
 
     @staticmethod
     def from_packed(p: PackedSketchState,
@@ -166,27 +193,31 @@ class GroupedQuantileSketch:
         """`drift` selects a drift-aware lane variant (core.drift): 'decay'
         keeps the vanilla state shape, 'window' adds the shadow plane.
         drift=None is the vanilla paper sketch, bit-identical to before."""
+        from . import program as program_mod
+
         if algo not in ("1u", "2u"):
             raise ValueError(f"algo must be '1u' or '2u', got {algo!r}")
         if drift is not None:
             drift.validate_for_algo(algo)
+        layout = program_mod.program_for(algo, drift).layout
         m = jnp.broadcast_to(jnp.asarray(init, dtype), (num_groups,)).astype(dtype)
         q = jnp.asarray(quantile, dtype)
-        # Every leaf gets its OWN buffer: leaves that alias (e.g. step and
-        # sign sharing one ones-array) break donation inside jitted train
-        # steps ("donate the same buffer twice").
-        windowed = is_windowed(drift)
-        if algo == "1u":
-            return GroupedQuantileSketch(m=m, step=None, sign=None,
-                                         quantile=q,
-                                         m2=jnp.copy(m) if windowed else None,
-                                         algo="1u", drift=drift)
-        return GroupedQuantileSketch(
-            m=m, step=jnp.ones_like(m), sign=jnp.ones_like(m), quantile=q,
-            m2=jnp.copy(m) if windowed else None,
-            step2=jnp.ones_like(m) if windowed else None,
-            sign2=jnp.ones_like(m) if windowed else None, algo="2u",
-            drift=drift)
+        # Plane fields come from the program layout: estimate heads start at
+        # `init` (shadow planes as copies), pair planes at 1. Every leaf
+        # gets its OWN buffer: leaves that alias (e.g. step and sign sharing
+        # one ones-array) break donation inside jitted train steps ("donate
+        # the same buffer twice").
+        fields = {"step": None, "sign": None, "m2": None, "step2": None,
+                  "sign2": None}
+        for f in layout.plane_fields:
+            if f == "m":
+                fields[f] = m
+            elif f in layout.heads:
+                fields[f] = jnp.copy(m)
+            else:
+                fields[f] = jnp.ones_like(m)
+        return GroupedQuantileSketch(quantile=q, algo=algo, drift=drift,
+                                     **fields)
 
     @staticmethod
     def create_lanes(
@@ -283,22 +314,10 @@ class GroupedQuantileSketch:
         drive all G·Q lanes. New code should prefer the one-stop facade,
         repro.api.QuantileFleet, which threads key/offsets via its cursor.
         """
-        if self.drift is not None:
-            from . import rng as crng
-            return self.process_seeded(items, crng.seed_from_key(key),
-                                       g_offset=g_offset,
-                                       lanes_per_group=lanes_per_group)
-        if self.algo == "1u":
-            st, _ = frugal.frugal1u_process(self._as_state(), items, key=key,
-                                            quantile=self.quantile,
-                                            g_offset=g_offset,
-                                            lanes_per_group=lanes_per_group)
-        else:
-            st, _ = frugal.frugal2u_process(self._as_state(), items, key=key,
-                                            quantile=self.quantile,
-                                            g_offset=g_offset,
-                                            lanes_per_group=lanes_per_group)
-        return self._with_state(st)
+        from . import rng as crng
+        return self.process_seeded(items, crng.seed_from_key(key),
+                                   g_offset=g_offset,
+                                   lanes_per_group=lanes_per_group)
 
     def process_seeded(self, items: Array, seed, t_offset=0, g_offset=0,
                        lanes_per_group: int = 1) -> "GroupedQuantileSketch":
@@ -307,26 +326,15 @@ class GroupedQuantileSketch:
         The form repro.api.QuantileFleet's jnp backend drives: the facade's
         StreamCursor carries (seed, t_offset, g_offset) and this method is a
         pure function of them — bit-identical to `process` when
-        seed == rng.seed_from_key(key) and the offsets are zero.
+        seed == rng.seed_from_key(key) and the offsets are zero. One
+        program-generic scan serves every (algo, drift) combination — the
+        sketch's LaneProgram supplies the tick and the plane layout.
         """
-        from . import drift as drift_mod
-
-        if self._windowed:
-            st, _ = drift_mod.window_process_seeded(
-                self._as_state(), items, seed, self.quantile, self.drift,
-                t_offset=t_offset, g_offset=g_offset,
-                lanes_per_group=lanes_per_group, algo=self.algo)
-        elif self.algo == "1u":
-            st, _ = frugal.frugal1u_process_seeded(
-                self._as_state(), items, seed, self.quantile,
-                t_offset=t_offset, g_offset=g_offset,
-                lanes_per_group=lanes_per_group)
-        else:
-            st, _ = frugal.frugal2u_process_seeded(
-                self._as_state(), items, seed, self.quantile,
-                t_offset=t_offset, g_offset=g_offset,
-                lanes_per_group=lanes_per_group, drift=self.drift)
-        return self._with_state(st)
+        planes, _ = frugal.program_process_seeded(
+            self.program, self.planes(), items, seed, self.quantile,
+            t_offset=t_offset, g_offset=g_offset,
+            lanes_per_group=lanes_per_group)
+        return self.with_planes(planes)
 
     def ingest_tensor(self, x: Array, key: Array, group_axis: int = -1) -> "GroupedQuantileSketch":
         """Batched binomial update from an arbitrary tensor (beyond-paper ext).

@@ -26,7 +26,6 @@ Entry points:
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import Iterable, Optional, Union
 
@@ -35,7 +34,6 @@ import jax
 import jax.numpy as jnp
 
 from . import rng as crng
-from .drift import is_windowed
 from .sketch import GroupedQuantileSketch
 
 Array = jax.Array
@@ -43,45 +41,22 @@ Array = jax.Array
 
 def _apply_chunk(sk: GroupedQuantileSketch, chunk: Array, seed, t_offset,
                  g_offset=0, lanes_per_group=1):
-    """One fused-kernel call over a [chunk_t, G] block at absolute t_offset.
+    """One program-kernel call over a [chunk_t, G] block at absolute
+    t_offset.
 
     `lanes_per_group` = Q > 1 drives a G·Q multi-quantile lane plane off the
     [chunk_t, G] block: the group→lane broadcast happens on device inside
-    the kernel entry point, so the host stream stays G columns wide.
-    Drift-aware sketches (sk.drift, core.drift) dispatch to the matching
-    drift kernels — same chunking, same absolute-tick RNG keys."""
+    the kernel entry point, so the host stream stays G columns wide. The
+    sketch's LaneProgram (derived from its static algo/drift) carries the
+    tick, the plane layout, and any rule scalars — there is exactly ONE
+    dispatch here for every registered rule."""
     from repro.kernels import ops  # lazy: kernels imports core (no cycle at runtime)
 
-    drift = sk.drift
-    if is_windowed(drift):
-        if sk.algo == "1u":
-            m, m2 = ops.frugal1u_update_auto_fused_window(
-                chunk, sk.m, sk.m2, sk.quantile, seed=seed, drift=drift,
-                t_offset=t_offset, g_offset=g_offset,
-                lanes_per_group=lanes_per_group)
-            return dataclasses.replace(sk, m=m, m2=m2)
-        m, step, sign, m2, step2, sign2 = ops.frugal2u_update_auto_fused_window(
-            chunk, sk.m, sk.step, sk.sign, sk.m2, sk.step2, sk.sign2,
-            sk.quantile, seed=seed, drift=drift, t_offset=t_offset,
-            g_offset=g_offset, lanes_per_group=lanes_per_group)
-        return dataclasses.replace(sk, m=m, step=step, sign=sign, m2=m2,
-                                   step2=step2, sign2=sign2)
-    if drift is not None:  # decay (validated 2u-only at sketch creation)
-        m, step, sign = ops.frugal2u_update_auto_fused_decay(
-            chunk, sk.m, sk.step, sk.sign, sk.quantile, seed=seed,
-            drift=drift, t_offset=t_offset, g_offset=g_offset,
-            lanes_per_group=lanes_per_group)
-        return dataclasses.replace(sk, m=m, step=step, sign=sign)
-    if sk.algo == "1u":
-        m = ops.frugal1u_update_auto_fused(
-            chunk, sk.m, sk.quantile, seed=seed, t_offset=t_offset,
-            g_offset=g_offset, lanes_per_group=lanes_per_group)
-        return dataclasses.replace(sk, m=m)
-    m, step, sign = ops.frugal2u_update_auto_fused(
-        chunk, sk.m, sk.step, sk.sign, sk.quantile, seed=seed,
+    planes = ops.frugal_update_auto(
+        chunk, sk.planes(), sk.quantile, seed=seed, program=sk.program,
         t_offset=t_offset, g_offset=g_offset,
         lanes_per_group=lanes_per_group)
-    return dataclasses.replace(sk, m=m, step=step, sign=sign)
+    return sk.with_planes(planes)
 
 
 def _as_2d(chunk, num_groups: int) -> np.ndarray:

@@ -1,13 +1,22 @@
 """Pallas TPU kernels for the frugal-sketch hot path.
 
-  frugal_update.py — pl.pallas_call kernels (grouped Frugal-1U/2U, VMEM-
-                     resident state, sequential-T/parallel-G grid). Fused
-                     variants generate uniforms on-chip (no rand operand).
-  ops.py           — jit'd wrappers: padding, dtype, interpret selection.
+  frugal_update.py — ONE pl.pallas_call kernel family parameterized by a
+                     core.program.LaneProgram (grouped frugal lanes, VMEM-
+                     resident state, sequential-T/parallel-G grid, on-chip
+                     counter RNG, packed plane-pair state words).
+  ops.py           — the single jit'd blocked/auto entry-point pair:
+                     padding, dtype, packing, TPU/interpret dispatch.
+                     (Plus ValueError stubs for the removed pre-program
+                     entry points, naming the replacement.)
   ref.py           — pure-jnp lax.scan oracles for bit-exact validation.
 """
 
+from .frugal_update import frugal_program_pallas
 from .ops import (
+    frugal_update_auto,
+    frugal_update_blocked,
+    # Removed-path stubs: importable, raise ValueError on call with a
+    # migration pointer (tests/test_deprecations.py pins the errors).
     frugal1u_update_blocked,
     frugal2u_update_blocked,
     frugal1u_update_auto,
@@ -24,19 +33,11 @@ from .ops import (
     frugal2u_update_auto_fused_window,
 )
 
+# __all__ names only the live API: the removed-path stubs above stay
+# importable for the loud ValueError, but they are no longer part of the
+# public surface (repro.api.lint checks every listed name resolves).
 __all__ = [
-    "frugal1u_update_blocked",
-    "frugal2u_update_blocked",
-    "frugal1u_update_auto",
-    "frugal2u_update_auto",
-    "frugal1u_update_blocked_fused",
-    "frugal2u_update_blocked_fused",
-    "frugal1u_update_auto_fused",
-    "frugal2u_update_auto_fused",
-    "frugal2u_update_blocked_fused_decay",
-    "frugal2u_update_auto_fused_decay",
-    "frugal1u_update_blocked_fused_window",
-    "frugal1u_update_auto_fused_window",
-    "frugal2u_update_blocked_fused_window",
-    "frugal2u_update_auto_fused_window",
+    "frugal_program_pallas",
+    "frugal_update_auto",
+    "frugal_update_blocked",
 ]

@@ -1,39 +1,42 @@
-"""Pallas TPU kernels for grouped frugal quantile updates (the hot path).
+"""ONE Pallas TPU kernel family for every frugal lane program (the hot path).
 
-TPU-native layout (see DESIGN.md §3): groups ride the 128-lane minor
+Pre-program, this file held five hand-specialized fused kernels (vanilla
+1U/2U, decayed 2U, windowed 1U/2U) — every new estimator rule cost another
+hand-written kernel. Now there is a single kernel body, parameterized by a
+``core.program.LaneProgram``: the program's StateLayout fixes the static
+state-word count/dtypes and the number of SMEM scalar slots, and the
+program's tick function IS the loop body. Registering a new rule in
+core/program.py is all it takes to run it on TPU — zero kernel code.
+
+TPU-native layout (see DESIGN.md §3): lanes ride the 128-lane minor
 dimension; the serial dependence on m̃ runs as a fori_loop over the T stream
-ticks *inside* the kernel while per-group state stays resident in VMEM.
+ticks *inside* the kernel while per-lane state stays resident in VMEM.
+Uniforms are generated in registers from the counter hash keyed on
+(seed, absolute tick, absolute lane) (core.rng, DESIGN.md §4); HBM traffic
+is O(T·G·4B) items + O(G·words) state — the bandwidth floor. State crosses
+HBM in the program's SERIALIZED words: each (m, step, sign) plane-pair is
+m [f32] + ONE packed int32 (core.packing), so a 2U program moves exactly
+the paper's two words per lane, a windowed 2U program two words per plane.
 
-Two generations of kernels live here:
-
-  * ``frugal{1,2}u_pallas`` — the original operand-fed form: uniforms arrive
-    as a ``rand[T, G]`` HBM operand streamed next to the items. HBM traffic is
-    O(2·T·G·4B): HALF the input bandwidth is spent on random numbers.
-    Kept as the oracle for the fed-uniform test sweep; deprecated for ingest.
-
-  * ``frugal{1,2}u_pallas_fused`` — uniforms are generated *inside* the kernel
-    body from a counter hash keyed on (seed, absolute tick, absolute group)
-    (repro.core.rng, DESIGN.md §4). The seed and stream tick offset ride a
-    2-element SMEM scalar-prefetch operand; HBM traffic drops to O(T·G·4B)
-    items + O(G) state — the bandwidth floor for ingesting T·G items. The 2U
-    fused kernel additionally carries its (step, sign) state as ONE packed
-    int32 word per group (repro.core.packing), so state I/O is exactly the
-    paper's two words per group.
+Scalar-prefetch operand: ``[3 + len(layout.scalar_names)]`` int32 —
+(seed, t_offset, g_offset, *program scalars). Rule parameters (decay alpha
+bits, window length, ...) are DYNAMIC operands: sweeping them never
+recompiles, and the same compiled kernel serves every instance of a family
+(kernels/ops.py keys compilation on ``core.program.family_base``).
 
 Grid: (G_blocks, T_blocks). The T dimension is a sequential revisit of the
 same state block ("arbitrary" semantics); the G dimension is parallel.
 State blocks are [1, BG] 2-D tiles (TPU prefers >=2-D); item blocks [BT, BG].
 
-Padding contract (see ops.py): G is padded with anything (state lanes are
-dropped on return); T is padded with NaN items — NaN compares False in both
-directions, so a padded tick is a natural no-op, bit-identical to not
-ingesting it. The fused kernels key the hash on absolute indices, so padding
-never perturbs the uniforms consumed by real ticks and results are invariant
-to block shape and chunk boundaries.
+Padding contract (see ops.py): G is padded with the layout's dummy state
+(lanes dropped on return); T is padded with NaN items — NaN compares False
+in both directions, so a padded tick is a bit-exact no-op. The hash keys on
+absolute indices, so padding never perturbs the uniforms consumed by real
+ticks and results are invariant to block shape and chunk boundaries.
 
-Quantile is a [1, G] VMEM operand (not SMEM scalar) so per-group targets are
-supported for free — a fleet can track q50 for some groups and q99 for others
-in one call (used by repro.monitor).
+Quantile is a [1, G] VMEM operand (not SMEM scalar) so per-lane targets are
+supported for free — a fleet can track q50 for some lanes and q99 for
+others in one call (the repro.api multi-quantile lane plane relies on it).
 """
 from __future__ import annotations
 
@@ -44,9 +47,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import frugal
 from repro.core import rng as crng
-from repro.core import packing
-from repro.core import drift as drift_mod
 
 Array = jax.Array
 
@@ -58,473 +60,93 @@ def _compiler_params():
     return _CompilerParams(dimension_semantics=("parallel", "arbitrary"))
 
 
-# --------------------------------------------------------------------- bodies
-def _tick_1u(m, s, r, q):
-    """One Frugal-1U tick, vectorized over the lane dim (paper Alg. 2)."""
-    up = (s > m) & (r > 1.0 - q)
-    down = (s < m) & (r > q)
-    return m + up.astype(m.dtype) - down.astype(m.dtype)
-
-
-def _tick_2u(m, step, sign, s, r, q):
-    """One Frugal-2U tick, vectorized over the lane dim (paper Alg. 3)."""
-    one = jnp.ones((), m.dtype)
-    up = (s > m) & (r > 1.0 - q)
-    down = (s < m) & (r > q)
-
-    step_u = step + jnp.where(sign > 0, one, -one)
-    m_u = m + jnp.where(step_u > 0, jnp.ceil(step_u), one)
-    osh_u = m_u > s
-    step_u = jnp.where(osh_u, step_u + (s - m_u), step_u)
-    m_u = jnp.where(osh_u, s, m_u)
-    step_u = jnp.where((sign < 0) & (step_u > 1), one, step_u)
-
-    step_d = step + jnp.where(sign < 0, one, -one)
-    m_d = m - jnp.where(step_d > 0, jnp.ceil(step_d), one)
-    osh_d = m_d < s
-    step_d = jnp.where(osh_d, step_d + (m_d - s), step_d)
-    m_d = jnp.where(osh_d, s, m_d)
-    step_d = jnp.where((sign > 0) & (step_d > 1), one, step_d)
-
-    m2 = jnp.where(up, m_u, jnp.where(down, m_d, m))
-    step2 = jnp.where(up, step_u, jnp.where(down, step_d, step))
-    sign2 = jnp.where(up, one, jnp.where(down, -one, sign))
-    return m2, step2, sign2
-
-
-# ----------------------------------------------------- kernels (operand rand)
-def _frugal1u_kernel(q_ref, items_ref, rand_ref, m_in_ref, m_out_ref, *, block_t):
-    t_blk = pl.program_id(1)
-
-    @pl.when(t_blk == 0)
-    def _seed():
-        m_out_ref[...] = m_in_ref[...]
-
-    q = q_ref[0, :]
-
-    def body(i, m):
-        return _tick_1u(m, items_ref[i, :], rand_ref[i, :], q)
-
-    m = jax.lax.fori_loop(0, block_t, body, m_out_ref[0, :])
-    m_out_ref[0, :] = m
-
-
-def _frugal2u_kernel(
-    q_ref, items_ref, rand_ref, m_in_ref, step_in_ref, sign_in_ref,
-    m_out_ref, step_out_ref, sign_out_ref, *, block_t,
-):
-    t_blk = pl.program_id(1)
-
-    @pl.when(t_blk == 0)
-    def _seed():
-        m_out_ref[...] = m_in_ref[...]
-        step_out_ref[...] = step_in_ref[...]
-        sign_out_ref[...] = sign_in_ref[...]
-
-    q = q_ref[0, :]
-
-    def body(i, carry):
-        m, step, sign = carry
-        return _tick_2u(m, step, sign, items_ref[i, :], rand_ref[i, :], q)
-
-    m, step, sign = jax.lax.fori_loop(
-        0, block_t, body, (m_out_ref[0, :], step_out_ref[0, :], sign_out_ref[0, :])
-    )
-    m_out_ref[0, :] = m
-    step_out_ref[0, :] = step
-    sign_out_ref[0, :] = sign
-
-
-# ----------------------------------------------------- kernels (fused on-chip RNG)
 def _lane_ids(g_blk, block_g, g0):
-    """Absolute group index per lane ([block_g] int32; 2-D iota for Mosaic).
-
-    `g0` is the fleet-global index of array column 0 — nonzero when this call
-    ingests one shard of a group-sharded fleet (parallel/group_sharding.py),
-    so every shard hashes uniforms at the same (seed, t, g) keys as the
-    unsharded fleet."""
+    """Absolute lane index per VPU lane ([block_g] int32; 2-D iota for
+    Mosaic). `g0` is the fleet-global index of array column 0 — nonzero when
+    this call ingests one shard of a lane-sharded fleet
+    (parallel/group_sharding.py), so every shard hashes uniforms at the same
+    (seed, t, lane) keys as the unsharded fleet."""
     iota = jax.lax.broadcasted_iota(jnp.int32, (1, block_g), 1)[0]
     return g0 + g_blk * block_g + iota
 
 
-def _frugal1u_fused_kernel(
-    seed_ref, q_ref, items_ref, m_in_ref, m_out_ref, *, block_t, block_g,
-):
+def _program_kernel(seed_ref, q_ref, items_ref, *state_refs, program,
+                    block_t, block_g):
+    """THE kernel body. ``state_refs`` is the program's serialized word
+    list twice over: layout.num_words inputs then the same many outputs.
+    The body unpacks words to planes ONCE per (G, T) block, runs the
+    program's tick over the block's ticks with on-chip uniforms, and
+    repacks — identical expressions to the jnp scan, hence bit-identical
+    trajectories."""
+    layout = program.layout
+    nw = layout.num_words
+    in_refs, out_refs = state_refs[:nw], state_refs[nw:]
     g_blk = pl.program_id(0)
     t_blk = pl.program_id(1)
 
     @pl.when(t_blk == 0)
     def _seed():
-        m_out_ref[...] = m_in_ref[...]
+        for i_ref, o_ref in zip(in_refs, out_refs):
+            o_ref[...] = i_ref[...]
 
     q = q_ref[0, :]
     seed = seed_ref[0]
     t0 = seed_ref[1] + t_blk * block_t          # absolute stream tick of row 0
     g_ids = _lane_ids(g_blk, block_g, seed_ref[2])
+    scalars = tuple(seed_ref[3 + k] for k in range(len(layout.scalar_names)))
 
-    def body(i, m):
-        r = crng.counter_uniform(seed, t0 + i, g_ids)
-        return _tick_1u(m, items_ref[i, :], r, q)
+    planes0 = layout.unpack_words(tuple(r[0, :] for r in out_refs))
 
-    m = jax.lax.fori_loop(0, block_t, body, m_out_ref[0, :])
-    m_out_ref[0, :] = m
-
-
-def _frugal2u_fused_kernel(
-    seed_ref, q_ref, items_ref, m_in_ref, packed_in_ref,
-    m_out_ref, packed_out_ref, *, block_t, block_g,
-):
-    g_blk = pl.program_id(0)
-    t_blk = pl.program_id(1)
-
-    @pl.when(t_blk == 0)
-    def _seed():
-        m_out_ref[...] = m_in_ref[...]
-        packed_out_ref[...] = packed_in_ref[...]
-
-    q = q_ref[0, :]
-    seed = seed_ref[0]
-    t0 = seed_ref[1] + t_blk * block_t
-    g_ids = _lane_ids(g_blk, block_g, seed_ref[2])
-
-    # State crosses block boundaries as (m, packed): two VMEM words per lane.
-    step0, sign0 = packing.unpack_step_sign(packed_out_ref[0, :])
-
-    def body(i, carry):
-        m, step, sign = carry
-        r = crng.counter_uniform(seed, t0 + i, g_ids)
-        return _tick_2u(m, step, sign, items_ref[i, :], r, q)
-
-    m, step, sign = jax.lax.fori_loop(
-        0, block_t, body, (m_out_ref[0, :], step0, sign0))
-    m_out_ref[0, :] = m
-    packed_out_ref[0, :] = packing.pack_step_sign(step, sign)
-
-
-# ------------------------------------------------- kernels (drift-aware lanes)
-# Drift kernels extend the scalar-prefetch operand to [5]:
-#   (seed, t_offset, g_offset, p0, p1)
-# where (p0, p1) = (alpha_bits, floor_bits) for decay — float32 BIT PATTERNS
-# riding the int32 SMEM operand, bitcast back in-kernel so every backend
-# multiplies by the identical float — and (window, unused) for the
-# two-sketch window. Tick math is the SAME core.drift expressions the jnp
-# scans run, so trajectories are bit-identical across backends by
-# construction (tests/test_drift.py pins it).
-
-
-def _frugal2u_fused_decay_kernel(
-    seed_ref, q_ref, items_ref, m_in_ref, packed_in_ref,
-    m_out_ref, packed_out_ref, *, block_t, block_g,
-):
-    g_blk = pl.program_id(0)
-    t_blk = pl.program_id(1)
-
-    @pl.when(t_blk == 0)
-    def _seed():
-        m_out_ref[...] = m_in_ref[...]
-        packed_out_ref[...] = packed_in_ref[...]
-
-    q = q_ref[0, :]
-    seed = seed_ref[0]
-    t0 = seed_ref[1] + t_blk * block_t
-    g_ids = _lane_ids(g_blk, block_g, seed_ref[2])
-    alpha = jax.lax.bitcast_convert_type(seed_ref[3], jnp.float32)
-    floor = jax.lax.bitcast_convert_type(seed_ref[4], jnp.float32)
-
-    step0, sign0 = packing.unpack_step_sign(packed_out_ref[0, :])
-
-    def body(i, carry):
-        m, step, sign = carry
+    def body(i, planes):
         it = items_ref[i, :]
         r = crng.counter_uniform(seed, t0 + i, g_ids)
-        m, step, sign = _tick_2u(m, step, sign, it, r, q)
-        step = drift_mod.apply_step_decay(step, it == it, alpha, floor)
-        return m, step, sign
+        ctx = frugal.TickCtx(quantile=q, t=t0 + i, seed=seed, lanes=g_ids,
+                             scalars=scalars)
+        return program.run_tick(planes, it, r, ctx)
 
-    m, step, sign = jax.lax.fori_loop(
-        0, block_t, body, (m_out_ref[0, :], step0, sign0))
-    m_out_ref[0, :] = m
-    packed_out_ref[0, :] = packing.pack_step_sign(step, sign)
-
-
-def _frugal1u_fused_window_kernel(
-    seed_ref, q_ref, items_ref, ma_in_ref, mb_in_ref,
-    ma_out_ref, mb_out_ref, *, block_t, block_g,
-):
-    g_blk = pl.program_id(0)
-    t_blk = pl.program_id(1)
-
-    @pl.when(t_blk == 0)
-    def _seed():
-        ma_out_ref[...] = ma_in_ref[...]
-        mb_out_ref[...] = mb_in_ref[...]
-
-    q = q_ref[0, :]
-    seed = seed_ref[0]
-    t0 = seed_ref[1] + t_blk * block_t
-    g_ids = _lane_ids(g_blk, block_g, seed_ref[2])
-    w = seed_ref[3]
-
-    def body(i, carry):
-        m_a, m_b = carry
-        it = items_ref[i, :]
-        r = crng.counter_uniform(seed, t0 + i, g_ids)
-        one = jnp.ones_like(m_a)
-        st = drift_mod.window_update(
-            drift_mod.WindowState(m=m_a, step=one, sign=one,
-                                  m2=m_b, step2=one, sign2=one),
-            it, r, q, t0 + i, w, algo="1u")
-        return st.m, st.m2
-
-    m_a, m_b = jax.lax.fori_loop(
-        0, block_t, body, (ma_out_ref[0, :], mb_out_ref[0, :]))
-    ma_out_ref[0, :] = m_a
-    mb_out_ref[0, :] = m_b
+    planes = jax.lax.fori_loop(0, block_t, body, planes0)
+    for r, w in zip(out_refs, layout.pack_planes(planes)):
+        r[0, :] = w
 
 
-def _frugal2u_fused_window_kernel(
-    seed_ref, q_ref, items_ref, ma_in_ref, pa_in_ref, mb_in_ref, pb_in_ref,
-    ma_out_ref, pa_out_ref, mb_out_ref, pb_out_ref, *, block_t, block_g,
-):
-    g_blk = pl.program_id(0)
-    t_blk = pl.program_id(1)
-
-    @pl.when(t_blk == 0)
-    def _seed():
-        ma_out_ref[...] = ma_in_ref[...]
-        pa_out_ref[...] = pa_in_ref[...]
-        mb_out_ref[...] = mb_in_ref[...]
-        pb_out_ref[...] = pb_in_ref[...]
-
-    q = q_ref[0, :]
-    seed = seed_ref[0]
-    t0 = seed_ref[1] + t_blk * block_t
-    g_ids = _lane_ids(g_blk, block_g, seed_ref[2])
-    w = seed_ref[3]
-
-    # Each plane crosses block boundaries as (m, packed): 2 words per lane
-    # per plane, 4 words total for the window pair.
-    step_a0, sign_a0 = packing.unpack_step_sign(pa_out_ref[0, :])
-    step_b0, sign_b0 = packing.unpack_step_sign(pb_out_ref[0, :])
-
-    def body(i, carry):
-        st = drift_mod.WindowState(*carry)
-        it = items_ref[i, :]
-        r = crng.counter_uniform(seed, t0 + i, g_ids)
-        st = drift_mod.window_update(st, it, r, q, t0 + i, w, algo="2u")
-        return tuple(st)
-
-    m_a, step_a, sign_a, m_b, step_b, sign_b = jax.lax.fori_loop(
-        0, block_t, body,
-        (ma_out_ref[0, :], step_a0, sign_a0, mb_out_ref[0, :], step_b0,
-         sign_b0))
-    ma_out_ref[0, :] = m_a
-    pa_out_ref[0, :] = packing.pack_step_sign(step_a, sign_a)
-    mb_out_ref[0, :] = m_b
-    pb_out_ref[0, :] = packing.pack_step_sign(step_b, sign_b)
+def _seed_operand(seed, t_offset, g_offset, scalars=()) -> Array:
+    """[3 + n] int32 scalar-prefetch operand: (counter seed, stream tick
+    offset, fleet-global lane offset, *program scalar slots)."""
+    parts = [jnp.asarray(seed, jnp.int32),
+             jnp.asarray(t_offset, jnp.int32),
+             jnp.asarray(g_offset, jnp.int32)]
+    parts += [jnp.asarray(s, jnp.int32) for s in scalars]
+    return jnp.stack(parts)
 
 
-# ------------------------------------------------------------------ callables
-def frugal1u_pallas(
-    items: Array,   # [T, G] float32 (NaN = no-op tick)
-    rand: Array,    # [T, G] float32 uniforms
-    m: Array,       # [G] float32
-    quantile: Array,  # [G] float32
-    *,
-    block_g: int = 128,
-    block_t: int = 256,
-    interpret: bool = False,
-) -> Array:
-    """Grouped Frugal-1U over a [T, G] item block with FED uniforms.
-
-    Deprecated for ingestion (the rand operand doubles HBM traffic) — use
-    frugal1u_pallas_fused. Kept as the fed-uniform validation oracle.
-
-    Shapes must be pre-padded: T % block_t == 0, G % block_g == 0
-    (ops.py handles padding & unpadding).
-    """
-    t, g = items.shape
-    assert t % block_t == 0 and g % block_g == 0, (t, g, block_t, block_g)
-    grid = (g // block_g, t // block_t)
-
-    out = pl.pallas_call(
-        functools.partial(_frugal1u_kernel, block_t=block_t),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, block_g), lambda gi, ti: (0, gi)),      # quantile
-            pl.BlockSpec((block_t, block_g), lambda gi, ti: (ti, gi)),  # items
-            pl.BlockSpec((block_t, block_g), lambda gi, ti: (ti, gi)),  # rand
-            pl.BlockSpec((1, block_g), lambda gi, ti: (0, gi)),      # m in
-        ],
-        out_specs=pl.BlockSpec((1, block_g), lambda gi, ti: (0, gi)),
-        out_shape=jax.ShapeDtypeStruct((1, g), m.dtype),
-        compiler_params=_compiler_params(),
-        interpret=interpret,
-    )(quantile[None, :], items, rand, m[None, :])
-    return out[0]
-
-
-def frugal2u_pallas(
+def frugal_program_pallas(
+    program,          # core.program.LaneProgram (STATIC — compile key;
+                      # callers pass family_base so parameter sweeps share
+                      # one executable)
     items: Array,     # [T, G] float32 (NaN = no-op tick)
-    rand: Array,      # [T, G] float32 uniforms
-    m: Array,         # [G] float32
-    step: Array,      # [G] float32
-    sign: Array,      # [G] float32 (+1/-1)
-    quantile: Array,  # [G] float32
-    *,
-    block_g: int = 128,
-    block_t: int = 256,
-    interpret: bool = False,
-):
-    """Grouped Frugal-2U with FED uniforms (deprecated — see frugal2u_pallas_fused)."""
-    t, g = items.shape
-    assert t % block_t == 0 and g % block_g == 0, (t, g, block_t, block_g)
-    grid = (g // block_g, t // block_t)
-
-    state_spec = pl.BlockSpec((1, block_g), lambda gi, ti: (0, gi))
-    stream_spec = pl.BlockSpec((block_t, block_g), lambda gi, ti: (ti, gi))
-
-    m2, step2, sign2 = pl.pallas_call(
-        functools.partial(_frugal2u_kernel, block_t=block_t),
-        grid=grid,
-        in_specs=[state_spec, stream_spec, stream_spec,
-                  state_spec, state_spec, state_spec],
-        out_specs=[state_spec, state_spec, state_spec],
-        out_shape=[
-            jax.ShapeDtypeStruct((1, g), m.dtype),
-            jax.ShapeDtypeStruct((1, g), step.dtype),
-            jax.ShapeDtypeStruct((1, g), sign.dtype),
-        ],
-        compiler_params=_compiler_params(),
-        interpret=interpret,
-    )(quantile[None, :], items, rand, m[None, :], step[None, :], sign[None, :])
-    return m2[0], step2[0], sign2[0]
-
-
-def _seed_operand(seed, t_offset, g_offset) -> Array:
-    """[3] int32 scalar-prefetch operand:
-    (counter seed, stream tick offset, fleet-global group offset)."""
-    return jnp.stack([jnp.asarray(seed, jnp.int32),
-                      jnp.asarray(t_offset, jnp.int32),
-                      jnp.asarray(g_offset, jnp.int32)])
-
-
-def _seed_operand_drift(seed, t_offset, g_offset, p0, p1) -> Array:
-    """[5] int32 scalar-prefetch operand for the drift kernels: the base
-    triple plus the two drift slots (core.drift.DriftConfig.operand_slots)."""
-    return jnp.stack([jnp.asarray(seed, jnp.int32),
-                      jnp.asarray(t_offset, jnp.int32),
-                      jnp.asarray(g_offset, jnp.int32),
-                      jnp.asarray(p0, jnp.int32),
-                      jnp.asarray(p1, jnp.int32)])
-
-
-def frugal1u_pallas_fused(
-    items: Array,     # [T, G] float32 (NaN = no-op tick)
-    m: Array,         # [G] float32
-    quantile: Array,  # [G] float32
+    words,            # layout.num_words state words, each [G]
+    quantile: Array,  # [G] float32 (per-lane targets supported)
     seed,             # int32 scalar — counter RNG seed
+    scalars=(),       # program's int32 scalar operands (dynamic)
     *,
     t_offset=0,       # absolute stream tick of items[0] (chunked ingest)
-    g_offset=0,       # absolute group index of column 0 (sharded fleets)
+    g_offset=0,       # absolute lane index of column 0 (sharded fleets)
     block_g: int = 128,
     block_t: int = 256,
     interpret: bool = False,
-) -> Array:
-    """Grouped Frugal-1U with fused on-chip RNG: no rand operand, half the
-    HBM input traffic. Uniform for tick (t, g) is counter-hashed from
-    (seed, t_offset + t, g_offset + g) — results are bit-identical to
-    kernels.ref.frugal1u_ref_fused and invariant to block shape / chunking /
-    group sharding.
+):
+    """One grouped frugal ingest dispatch for ANY registered lane program.
+
+    Shapes must be pre-padded: T % block_t == 0, G % block_g == 0 (ops.py
+    handles padding & unpadding). Returns the updated word tuple, each [G].
+    Bit-identical to core.frugal.program_process_seeded for the same
+    (program, seed, offsets) and invariant to block shape / chunking /
+    lane sharding (absolute-index RNG keys).
     """
+    layout = program.layout
     t, g = items.shape
     assert t % block_t == 0 and g % block_g == 0, (t, g, block_t, block_g)
-    grid = (g // block_g, t // block_t)
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, block_g), lambda gi, ti, *_: (0, gi)),      # quantile
-            pl.BlockSpec((block_t, block_g), lambda gi, ti, *_: (ti, gi)),  # items
-            pl.BlockSpec((1, block_g), lambda gi, ti, *_: (0, gi)),      # m in
-        ],
-        out_specs=pl.BlockSpec((1, block_g), lambda gi, ti, *_: (0, gi)),
-    )
-    out = pl.pallas_call(
-        functools.partial(_frugal1u_fused_kernel, block_t=block_t, block_g=block_g),
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((1, g), m.dtype),
-        compiler_params=_compiler_params(),
-        interpret=interpret,
-    )(_seed_operand(seed, t_offset, g_offset), quantile[None, :], items,
-      m[None, :])
-    return out[0]
-
-
-def frugal2u_pallas_fused(
-    items: Array,      # [T, G] float32 (NaN = no-op tick)
-    m: Array,          # [G] float32
-    packed: Array,     # [G] int32 — (step, sign) packed, core.packing
-    quantile: Array,   # [G] float32
-    seed,              # int32 scalar
-    *,
-    t_offset=0,
-    g_offset=0,
-    block_g: int = 128,
-    block_t: int = 256,
-    interpret: bool = False,
-):
-    """Grouped Frugal-2U, fused RNG + packed state: exactly two state words
-    per group cross HBM (m, packed). Returns (m, packed), each [G]."""
-    t, g = items.shape
-    assert t % block_t == 0 and g % block_g == 0, (t, g, block_t, block_g)
-    grid = (g // block_g, t // block_t)
-
-    state_f32 = pl.BlockSpec((1, block_g), lambda gi, ti, *_: (0, gi))
-    state_i32 = pl.BlockSpec((1, block_g), lambda gi, ti, *_: (0, gi))
-    stream_spec = pl.BlockSpec((block_t, block_g), lambda gi, ti, *_: (ti, gi))
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=grid,
-        in_specs=[state_f32, stream_spec, state_f32, state_i32],
-        out_specs=[state_f32, state_i32],
-    )
-    m2, packed2 = pl.pallas_call(
-        functools.partial(_frugal2u_fused_kernel, block_t=block_t, block_g=block_g),
-        grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct((1, g), m.dtype),
-            jax.ShapeDtypeStruct((1, g), jnp.int32),
-        ],
-        compiler_params=_compiler_params(),
-        interpret=interpret,
-    )(_seed_operand(seed, t_offset, g_offset), quantile[None, :], items,
-      m[None, :], packed[None, :])
-    return m2[0], packed2[0]
-
-
-def frugal2u_pallas_fused_decay(
-    items: Array,      # [T, G] float32 (NaN = no-op tick)
-    m: Array,          # [G] float32
-    packed: Array,     # [G] int32 — (step, sign) packed, core.packing
-    quantile: Array,   # [G] float32
-    seed,              # int32 scalar
-    alpha_bits,        # int32 scalar — f32 bits of the per-tick decay factor
-    floor_bits,        # int32 scalar — f32 bits of the step floor
-    *,
-    t_offset=0,
-    g_offset=0,
-    block_g: int = 128,
-    block_t: int = 256,
-    interpret: bool = False,
-):
-    """Decayed Frugal-2U (core.drift mode 'decay'), fused RNG + packed state:
-    the vanilla fused kernel plus one step relaxation per real tick. State
-    I/O stays exactly two words per lane. Returns (m, packed), each [G]."""
-    t, g = items.shape
-    assert t % block_t == 0 and g % block_g == 0, (t, g, block_t, block_g)
+    assert len(words) == layout.num_words, (len(words), layout.num_words)
     grid = (g // block_g, t // block_t)
 
     state_spec = pl.BlockSpec((1, block_g), lambda gi, ti, *_: (0, gi))
@@ -533,115 +155,17 @@ def frugal2u_pallas_fused_decay(
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
-        in_specs=[state_spec, stream_spec, state_spec, state_spec],
-        out_specs=[state_spec, state_spec],
+        in_specs=[state_spec, stream_spec] + [state_spec] * layout.num_words,
+        out_specs=[state_spec] * layout.num_words,
     )
-    m2, packed2 = pl.pallas_call(
-        functools.partial(_frugal2u_fused_decay_kernel, block_t=block_t,
+    outs = pl.pallas_call(
+        functools.partial(_program_kernel, program=program, block_t=block_t,
                           block_g=block_g),
         grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct((1, g), m.dtype),
-            jax.ShapeDtypeStruct((1, g), jnp.int32),
-        ],
+        out_shape=[jax.ShapeDtypeStruct((1, g), dt)
+                   for dt in layout.word_dtypes],
         compiler_params=_compiler_params(),
         interpret=interpret,
-    )(_seed_operand_drift(seed, t_offset, g_offset, alpha_bits, floor_bits),
-      quantile[None, :], items, m[None, :], packed[None, :])
-    return m2[0], packed2[0]
-
-
-def frugal1u_pallas_fused_window(
-    items: Array,      # [T, G] float32 (NaN = no-op tick)
-    m_a: Array,        # [G] float32 — primary plane
-    m_b: Array,        # [G] float32 — shadow plane
-    quantile: Array,   # [G] float32
-    seed,              # int32 scalar
-    window,            # int32 scalar — epoch length W in ticks
-    *,
-    t_offset=0,
-    g_offset=0,
-    block_g: int = 128,
-    block_t: int = 256,
-    interpret: bool = False,
-):
-    """Two-sketch sliding-window Frugal-1U (core.drift mode 'window'): both
-    planes ingest every tick, plane (epoch mod 2) restarts at each epoch
-    boundary. Returns (m_a, m_b), each [G]."""
-    t, g = items.shape
-    assert t % block_t == 0 and g % block_g == 0, (t, g, block_t, block_g)
-    grid = (g // block_g, t // block_t)
-
-    state_spec = pl.BlockSpec((1, block_g), lambda gi, ti, *_: (0, gi))
-    stream_spec = pl.BlockSpec((block_t, block_g), lambda gi, ti, *_: (ti, gi))
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=grid,
-        in_specs=[state_spec, stream_spec, state_spec, state_spec],
-        out_specs=[state_spec, state_spec],
-    )
-    ma2, mb2 = pl.pallas_call(
-        functools.partial(_frugal1u_fused_window_kernel, block_t=block_t,
-                          block_g=block_g),
-        grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct((1, g), m_a.dtype),
-            jax.ShapeDtypeStruct((1, g), m_b.dtype),
-        ],
-        compiler_params=_compiler_params(),
-        interpret=interpret,
-    )(_seed_operand_drift(seed, t_offset, g_offset, window, 0),
-      quantile[None, :], items, m_a[None, :], m_b[None, :])
-    return ma2[0], mb2[0]
-
-
-def frugal2u_pallas_fused_window(
-    items: Array,      # [T, G] float32 (NaN = no-op tick)
-    m_a: Array,        # [G] float32 — primary plane
-    packed_a: Array,   # [G] int32 — primary (step, sign) packed
-    m_b: Array,        # [G] float32 — shadow plane
-    packed_b: Array,   # [G] int32 — shadow (step, sign) packed
-    quantile: Array,   # [G] float32
-    seed,              # int32 scalar
-    window,            # int32 scalar — epoch length W in ticks
-    *,
-    t_offset=0,
-    g_offset=0,
-    block_g: int = 128,
-    block_t: int = 256,
-    interpret: bool = False,
-):
-    """Two-sketch sliding-window Frugal-2U: two (m, packed) planes — four
-    state words per lane cross HBM, each plane the paper's two words.
-    Returns (m_a, packed_a, m_b, packed_b), each [G]."""
-    t, g = items.shape
-    assert t % block_t == 0 and g % block_g == 0, (t, g, block_t, block_g)
-    grid = (g // block_g, t // block_t)
-
-    state_spec = pl.BlockSpec((1, block_g), lambda gi, ti, *_: (0, gi))
-    stream_spec = pl.BlockSpec((block_t, block_g), lambda gi, ti, *_: (ti, gi))
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=grid,
-        in_specs=[state_spec, stream_spec, state_spec, state_spec,
-                  state_spec, state_spec],
-        out_specs=[state_spec, state_spec, state_spec, state_spec],
-    )
-    ma2, pa2, mb2, pb2 = pl.pallas_call(
-        functools.partial(_frugal2u_fused_window_kernel, block_t=block_t,
-                          block_g=block_g),
-        grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct((1, g), m_a.dtype),
-            jax.ShapeDtypeStruct((1, g), jnp.int32),
-            jax.ShapeDtypeStruct((1, g), m_b.dtype),
-            jax.ShapeDtypeStruct((1, g), jnp.int32),
-        ],
-        compiler_params=_compiler_params(),
-        interpret=interpret,
-    )(_seed_operand_drift(seed, t_offset, g_offset, window, 0),
-      quantile[None, :], items, m_a[None, :], packed_a[None, :],
-      m_b[None, :], packed_b[None, :])
-    return ma2[0], pa2[0], mb2[0], pb2[0]
+    )(_seed_operand(seed, t_offset, g_offset, scalars), quantile[None, :],
+      items, *[w[None, :] for w in words])
+    return tuple(o[0] for o in outs)

@@ -1,52 +1,44 @@
-"""Jit'd public wrappers around the Pallas frugal kernels.
+"""Jit'd public wrappers around the program-parameterized Pallas kernel.
 
-Handles:
-  * padding G up to the lane block (extra lanes carry dummy state, dropped on
-    return) and T up to the tick block (padded ticks are NaN items = no-ops);
-  * dtype management (items/rand cast to the state dtype inside);
-  * interpret-mode selection: on CPU (no TPU) the kernels run in
-    ``interpret=True`` so the whole framework works end-to-end off-TPU.
+ONE blocked/auto entry-point pair serves every registered lane program
+(core.program.LaneProgram) — this file used to carry five fused variants
+plus four deprecated rand-operand paths; all of them collapsed into:
 
-Entry points:
+  * ``frugal_update_blocked(items, planes, quantile, seed, ..., program=)``
+    — one padded Pallas dispatch over a [T, G] block. Handles G padding
+    (dummy lanes from the layout's fills, dropped on return), T padding
+    (NaN items = bit-exact no-op ticks), dtype management, packing the
+    plane tuple into the program's serialized words, and interpret-mode
+    selection off-TPU.
+  * ``frugal_update_auto(items, planes, quantile, ..., program=)`` —
+    Pallas on TPU, the jitted program-generic jnp scan elsewhere
+    (core.frugal.program_process_seeded); bit-identical results. Accepts a
+    JAX PRNG key or a raw int seed; `lanes_per_group` = Q drives a G·Q
+    multi-quantile lane plane from G-column items. core.streaming and the
+    repro.api backends call this.
 
-  * ``frugal{1,2}u_update_blocked_fused`` — the hot path. Takes a counter
-    seed (int32 scalar) + stream tick offset instead of a ``rand`` tensor;
-    uniforms are generated on-chip (DESIGN.md §4). Results are bit-identical
-    to ``kernels.ref.frugal{1,2}u_ref_fused`` and invariant to block shape
-    and chunk boundaries (absolute-index keying).
-  * ``frugal{1,2}u_update_auto_fused`` — Pallas-fused on TPU, fused jnp ref
-    elsewhere; accepts a JAX PRNG key (or a raw int seed). Monitors and
-    ``core.streaming`` call these.
-  * ``frugal{1,2}u_update_blocked`` / ``*_update_auto`` — DEPRECATED shims
-    for the old rand-operand path; kept for the fed-uniform test sweep and
-    back-compat, and emitting ``DeprecationWarning`` on every call (pinned
-    in tests/test_deprecations.py) ahead of removal. New code should never
-    materialize uniforms — use the fused entry points or, better, the
-    repro.api.QuantileFleet facade (DESIGN.md §9 migration table).
+Compilation is keyed on ``core.program.family_base(program.family)`` and
+rule parameters travel as dynamic int32 scalar operands, so sweeping a
+half-life or window length reuses one executable per family.
+
+The removed pre-program entry points (``frugal{1,2}u_update_blocked/_auto``
+— the rand[T, G]-operand paths — and the five ``*_fused`` specializations)
+remain importable as stubs that raise a ``ValueError`` naming the
+replacement (pinned in tests/test_deprecations.py), so stale callers fail
+loudly with a migration pointer instead of an ImportError five frames up.
 """
 from __future__ import annotations
 
 import functools
-import warnings
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import drift as drift_mod
 from repro.core import frugal
-from repro.core import packing
+from repro.core import program as program_mod
 from repro.core import rng as crng
 
-from . import ref
-from .frugal_update import (
-    frugal1u_pallas,
-    frugal1u_pallas_fused,
-    frugal1u_pallas_fused_window,
-    frugal2u_pallas,
-    frugal2u_pallas_fused,
-    frugal2u_pallas_fused_decay,
-    frugal2u_pallas_fused_window,
-)
+from .frugal_update import frugal_program_pallas
 
 Array = jax.Array
 
@@ -58,18 +50,16 @@ def _on_tpu() -> bool:
         return False
 
 
-def _pad_stream(items: Array, rand, block_t: int, block_g: int):
+def _pad_items(items: Array, block_t: int, block_g: int) -> Array:
     t, g = items.shape
     tp = (-t) % block_t
     gp = (-g) % block_g
     if tp or gp:
         items = jnp.pad(items, ((0, tp), (0, gp)), constant_values=jnp.nan)
-        if rand is not None:
-            rand = jnp.pad(rand, ((0, tp), (0, gp)), constant_values=0.5)
-    return items, rand
+    return items
 
 
-def _pad_state(x: Array, block_g: int, fill: float):
+def _pad_state(x: Array, block_g: int, fill: float) -> Array:
     g = x.shape[0]
     gp = (-g) % block_g
     if gp:
@@ -77,61 +67,53 @@ def _pad_state(x: Array, block_g: int, fill: float):
     return x
 
 
-# ------------------------------------------------------------- fused (hot path)
-@functools.partial(jax.jit, static_argnames=("block_g", "block_t", "interpret"))
-def frugal1u_update_blocked_fused(
-    items: Array, m: Array, quantile: Array, seed, t_offset=0, g_offset=0,
-    *, block_g: int = 128, block_t: int = 256, interpret: bool = True,
-) -> Array:
-    """Frugal-1U over a [T, G] block, uniforms fused on-chip. Returns m [G].
+# ------------------------------------------------------------------ blocked
+@functools.partial(jax.jit,
+                   static_argnames=("program", "block_g", "block_t",
+                                    "interpret"))
+def _blocked_jit(items, planes, quantile, seed, scalars, t_offset, g_offset,
+                 *, program, block_g, block_t, interpret):
+    layout = program.layout
+    g = planes[0].shape[0]
+    dt = planes[0].dtype
+    items = _pad_items(items.astype(dt), block_t, block_g)
+    planes_p = tuple(_pad_state(p, block_g, layout.pad_fill(f))
+                     for f, p in zip(layout.plane_fields, planes))
+    q_p = _pad_state(jnp.broadcast_to(jnp.asarray(quantile, dt), (g,)),
+                     block_g, 0.5)
+    words = layout.pack_planes(planes_p)
+    out_words = frugal_program_pallas(
+        program, items, words, q_p, seed, scalars, t_offset=t_offset,
+        g_offset=g_offset, block_g=block_g, block_t=block_t,
+        interpret=interpret)
+    out = layout.unpack_words(out_words)
+    return tuple(p.astype(dt)[:g] for p in out)
 
-    `seed` is an int32 counter seed (derive from a PRNG key with
-    core.rng.seed_from_key); `t_offset` is the absolute stream tick of
-    items[0] so chunked ingestion reproduces the unchunked trajectory;
-    `g_offset` is the absolute group index of column 0 so a group-sharded
-    fleet reproduces the single-device trajectory (group_sharding.py).
+
+def frugal_update_blocked(items, planes, quantile, seed, t_offset=0,
+                          g_offset=0, *, program, block_g: int = 128,
+                          block_t: int = 256, interpret: bool = True):
+    """One program-parameterized Pallas dispatch over a [T, G] block.
+
+    `planes` is the program's ordered plane tuple (layout.plane_fields),
+    each [G]; returns the updated tuple. `seed` is an int32 counter seed
+    (derive from a PRNG key with core.rng.seed_from_key); `t_offset` is the
+    absolute stream tick of items[0] so chunked ingestion reproduces the
+    unchunked trajectory; `g_offset` the absolute lane index of column 0 so
+    a lane-sharded fleet reproduces the single-device trajectory.
     """
-    g = m.shape[0]
-    dt = m.dtype
-    items = items.astype(dt)
-    quantile = jnp.broadcast_to(jnp.asarray(quantile, dt), (g,))
-    items, _ = _pad_stream(items, None, block_t, block_g)
-    m_p = _pad_state(m, block_g, 0.0)
-    q_p = _pad_state(quantile, block_g, 0.5)
-    out = frugal1u_pallas_fused(
-        items, m_p, q_p, seed, t_offset=t_offset, g_offset=g_offset,
-        block_g=block_g, block_t=block_t, interpret=interpret)
-    return out[:g]
+    base = program_mod.family_base(program.kernel_family)
+    scalars = tuple(jnp.asarray(v, jnp.int32)
+                    for v in program.scalar_values())
+    return _blocked_jit(items, tuple(planes), quantile,
+                        jnp.asarray(seed, jnp.int32), scalars,
+                        jnp.asarray(t_offset, jnp.int32),
+                        jnp.asarray(g_offset, jnp.int32), program=base,
+                        block_g=block_g, block_t=block_t,
+                        interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("block_g", "block_t", "interpret"))
-def frugal2u_update_blocked_fused(
-    items: Array, m: Array, step: Array, sign: Array, quantile: Array,
-    seed, t_offset=0, g_offset=0,
-    *, block_g: int = 128, block_t: int = 256, interpret: bool = True,
-):
-    """Frugal-2U over a [T, G] block, fused RNG + packed (step, sign) word.
-
-    Returns (m, step, sign), each [G]. The kernel's state I/O is exactly two
-    words per group (m + packed); the unpacked view here is API sugar.
-    """
-    g = m.shape[0]
-    dt = m.dtype
-    items = items.astype(dt)
-    quantile = jnp.broadcast_to(jnp.asarray(quantile, dt), (g,))
-    items, _ = _pad_stream(items, None, block_t, block_g)
-    m_p = _pad_state(m, block_g, 0.0)
-    step_p = _pad_state(step, block_g, 1.0)
-    sign_p = _pad_state(sign, block_g, 1.0)
-    q_p = _pad_state(quantile, block_g, 0.5)
-    packed = packing.pack_step_sign(step_p, sign_p)
-    m2, packed2 = frugal2u_pallas_fused(
-        items, m_p, packed, q_p, seed, t_offset=t_offset, g_offset=g_offset,
-        block_g=block_g, block_t=block_t, interpret=interpret)
-    step2, sign2 = packing.unpack_step_sign(packed2)
-    return m2[:g], step2.astype(dt)[:g], sign2.astype(dt)[:g]
-
-
+# --------------------------------------------------------------------- auto
 def _as_seed(key=None, seed=None):
     if seed is not None:
         return jnp.asarray(seed, jnp.int32)
@@ -139,331 +121,101 @@ def _as_seed(key=None, seed=None):
     return crng.seed_from_key(key)
 
 
-# Jit'd off-TPU dispatch targets: core.streaming calls the auto entry points
+# Jit'd off-TPU dispatch target: core.streaming calls the auto entry point
 # once per chunk, and an un-jitted lax.scan would re-trace its tick body on
-# every chunk (tens of seconds of pure tracing over a long stream). These run
-# core.frugal's scan — the single jnp transcription of the algorithm;
+# every chunk (tens of seconds of pure tracing over a long stream). Runs
+# THE program-generic scan — the single jnp transcription of every rule;
 # kernels/ref.py stays a test-only oracle. `lanes` is the multi-quantile
-# lane fan-out: state is [G·lanes] while items stay [T, G], and the scan
-# broadcasts each item to its group's lanes per tick (no [T, G·lanes] block).
-@functools.partial(jax.jit, static_argnames=("lanes",))
-def _cpu1_fused(items, m, quantile, seed, t_offset, g_offset, lanes=1):
-    st, _ = frugal.frugal1u_process_seeded(
-        frugal.Frugal1UState(m), items, seed, quantile, t_offset=t_offset,
-        g_offset=g_offset, lanes_per_group=lanes)
-    return st.m
-
-
-@functools.partial(jax.jit, static_argnames=("lanes",))
-def _cpu2_fused(items, m, step, sign, quantile, seed, t_offset, g_offset,
-                lanes=1):
-    st, _ = frugal.frugal2u_process_seeded(
-        frugal.Frugal2UState(m, step, sign), items, seed, quantile,
+# lane fan-out: state is [G·lanes] while items stay [T, G].
+@functools.partial(jax.jit, static_argnames=("program", "lanes"))
+def _cpu_program(items, planes, quantile, seed, scalars, t_offset, g_offset,
+                 *, program, lanes=1):
+    out, _ = frugal.program_process_seeded(
+        program, planes, items, seed, quantile, scalars=scalars,
         t_offset=t_offset, g_offset=g_offset, lanes_per_group=lanes)
-    return st.m, st.step, st.sign
+    return out
 
 
-def frugal1u_update_auto_fused(items, m, quantile, key=None, *, seed=None,
-                               t_offset=0, g_offset=0, lanes_per_group=1,
-                               **kw):
-    """Fused Pallas on TPU, fused jnp ref elsewhere — bit-identical results.
+def frugal_update_auto(items, planes, quantile, key=None, *, seed=None,
+                       program, t_offset=0, g_offset=0, lanes_per_group=1,
+                       **kw):
+    """Program-parameterized fused dispatch: Pallas on TPU, the jitted
+    program scan elsewhere — bit-identical results.
 
-    With `lanes_per_group` = Q > 1, `m`/`quantile` hold G·Q lanes while
-    `items` stays [T, G]: the host→device transfer carries only the group
-    columns and the Q-fold broadcast happens on device (in the scan tick off
-    TPU; as one device-side repeat ahead of the Pallas dispatch on TPU).
+    With `lanes_per_group` = Q > 1, `planes`/`quantile` hold G·Q lanes
+    while `items` stays [T, G]: the host→device transfer carries only the
+    group columns and the Q-fold broadcast happens on device (in the scan
+    tick off TPU; as one device-side repeat ahead of the Pallas dispatch on
+    TPU).
     """
     s = _as_seed(key, seed)
     if _on_tpu():
         if lanes_per_group > 1:
             items = jnp.repeat(items, lanes_per_group, axis=1)
-        return frugal1u_update_blocked_fused(items, m, quantile, s, t_offset,
-                                             g_offset, interpret=False, **kw)
-    q = jnp.broadcast_to(jnp.asarray(quantile, m.dtype), m.shape)
-    return _cpu1_fused(items.astype(m.dtype), m, q, s, t_offset, g_offset,
-                       lanes=lanes_per_group)
+        return frugal_update_blocked(items, planes, quantile, s, t_offset,
+                                     g_offset, program=program,
+                                     interpret=False, **kw)
+    dt = planes[0].dtype
+    q = jnp.broadcast_to(jnp.asarray(quantile, dt), planes[0].shape)
+    scalars = tuple(jnp.asarray(v, jnp.int32)
+                    for v in program.scalar_values())
+    return _cpu_program(items.astype(dt), tuple(planes), q, s, scalars,
+                        jnp.asarray(t_offset, jnp.int32),
+                        jnp.asarray(g_offset, jnp.int32),
+                        program=program_mod.family_base(program.kernel_family),
+                        lanes=lanes_per_group)
 
 
-def frugal2u_update_auto_fused(items, m, step, sign, quantile, key=None, *,
-                               seed=None, t_offset=0, g_offset=0,
-                               lanes_per_group=1, **kw):
-    s = _as_seed(key, seed)
-    if _on_tpu():
-        if lanes_per_group > 1:
-            items = jnp.repeat(items, lanes_per_group, axis=1)
-        return frugal2u_update_blocked_fused(items, m, step, sign, quantile,
-                                             s, t_offset, g_offset,
-                                             interpret=False, **kw)
-    q = jnp.broadcast_to(jnp.asarray(quantile, m.dtype), m.shape)
-    return _cpu2_fused(items.astype(m.dtype), m, step, sign, q, s, t_offset,
-                       g_offset, lanes=lanes_per_group)
+# ------------------------------------------------------------ removed paths
+_PROGRAM_HINT = ("frugal_update_auto(items, planes, quantile, seed=..., "
+                 "program=core.program.make_program(...)) or the "
+                 "repro.api.QuantileFleet facade (FleetSpec(program=...))")
 
 
-# -------------------------------------------------------- drift-aware (fused)
-# Drift lanes (core.drift): the fused hot path with the decay factor /
-# window length riding two extra SMEM scalar-prefetch slots (see
-# kernels/frugal_update.py). Off TPU these dispatch to the jitted core
-# scans — the same single jnp transcription discipline as the vanilla path.
-@functools.partial(jax.jit, static_argnames=("block_g", "block_t", "interpret"))
-def frugal2u_update_blocked_fused_decay(
-    items: Array, m: Array, step: Array, sign: Array, quantile: Array,
-    seed, alpha_bits, floor_bits, t_offset=0, g_offset=0,
-    *, block_g: int = 128, block_t: int = 256, interpret: bool = True,
-):
-    """Decayed Frugal-2U over a [T, G] block (fused RNG + packed state).
+def _removed(name: str, why: str):
+    def stub(*args, **kwargs):
+        raise ValueError(
+            f"kernels.ops.{name} was removed by the lane-program engine "
+            f"refactor ({why}); use {_PROGRAM_HINT} — see DESIGN.md §11 for "
+            "the migration table.")
 
-    `alpha_bits` / `floor_bits` are the int32 bit patterns of the float32
-    decay factor and step floor (DriftConfig.alpha_bits / .floor_bits) —
-    dynamic operands, so sweeping half-lives never recompiles. Returns
-    (m, step, sign), each [G].
-    """
-    g = m.shape[0]
-    dt = m.dtype
-    items = items.astype(dt)
-    quantile = jnp.broadcast_to(jnp.asarray(quantile, dt), (g,))
-    items, _ = _pad_stream(items, None, block_t, block_g)
-    m_p = _pad_state(m, block_g, 0.0)
-    step_p = _pad_state(step, block_g, 1.0)
-    sign_p = _pad_state(sign, block_g, 1.0)
-    q_p = _pad_state(quantile, block_g, 0.5)
-    packed = packing.pack_step_sign(step_p, sign_p)
-    m2, packed2 = frugal2u_pallas_fused_decay(
-        items, m_p, packed, q_p, seed, alpha_bits, floor_bits,
-        t_offset=t_offset, g_offset=g_offset,
-        block_g=block_g, block_t=block_t, interpret=interpret)
-    step2, sign2 = packing.unpack_step_sign(packed2)
-    return m2[:g], step2.astype(dt)[:g], sign2.astype(dt)[:g]
+    stub.__name__ = name
+    stub.__qualname__ = name
+    stub.__doc__ = (f"REMOVED: {why}. Raises ValueError naming the "
+                    "replacement (pinned in tests/test_deprecations.py).")
+    return stub
 
 
-@functools.partial(jax.jit, static_argnames=("block_g", "block_t", "interpret"))
-def frugal1u_update_blocked_fused_window(
-    items: Array, m: Array, m2: Array, quantile: Array, seed, window,
-    t_offset=0, g_offset=0,
-    *, block_g: int = 128, block_t: int = 256, interpret: bool = True,
-):
-    """Two-sketch-window Frugal-1U over a [T, G] block. Returns (m, m2)."""
-    g = m.shape[0]
-    dt = m.dtype
-    items = items.astype(dt)
-    quantile = jnp.broadcast_to(jnp.asarray(quantile, dt), (g,))
-    items, _ = _pad_stream(items, None, block_t, block_g)
-    m_p = _pad_state(m, block_g, 0.0)
-    m2_p = _pad_state(m2, block_g, 0.0)
-    q_p = _pad_state(quantile, block_g, 0.5)
-    ma, mb = frugal1u_pallas_fused_window(
-        items, m_p, m2_p, q_p, seed, window, t_offset=t_offset,
-        g_offset=g_offset, block_g=block_g, block_t=block_t,
-        interpret=interpret)
-    return ma[:g], mb[:g]
+_RAND_WHY = ("the rand[T, G] operand path spent half the hot path's HBM "
+             "bandwidth streaming uniforms; uniforms are counter-hashed "
+             "on chip now")
+_FUSED_WHY = ("the five hand-specialized fused variants collapsed into the "
+              "single program-parameterized kernel family")
 
+# Long-deprecated rand-operand entry points (warned since PR 3, removed now).
+frugal1u_update_blocked = _removed("frugal1u_update_blocked", _RAND_WHY)
+frugal2u_update_blocked = _removed("frugal2u_update_blocked", _RAND_WHY)
+frugal1u_update_auto = _removed("frugal1u_update_auto", _RAND_WHY)
+frugal2u_update_auto = _removed("frugal2u_update_auto", _RAND_WHY)
 
-@functools.partial(jax.jit, static_argnames=("block_g", "block_t", "interpret"))
-def frugal2u_update_blocked_fused_window(
-    items: Array, m: Array, step: Array, sign: Array,
-    m2: Array, step2: Array, sign2: Array, quantile: Array, seed, window,
-    t_offset=0, g_offset=0,
-    *, block_g: int = 128, block_t: int = 256, interpret: bool = True,
-):
-    """Two-sketch-window Frugal-2U over a [T, G] block.
-
-    Returns (m, step, sign, m2, step2, sign2), each [G]; each plane crosses
-    the kernel as the paper's two words (m + packed step/sign).
-    """
-    g = m.shape[0]
-    dt = m.dtype
-    items = items.astype(dt)
-    quantile = jnp.broadcast_to(jnp.asarray(quantile, dt), (g,))
-    items, _ = _pad_stream(items, None, block_t, block_g)
-    q_p = _pad_state(quantile, block_g, 0.5)
-    m_p = _pad_state(m, block_g, 0.0)
-    m2_p = _pad_state(m2, block_g, 0.0)
-    packed_a = packing.pack_step_sign(_pad_state(step, block_g, 1.0),
-                                      _pad_state(sign, block_g, 1.0))
-    packed_b = packing.pack_step_sign(_pad_state(step2, block_g, 1.0),
-                                      _pad_state(sign2, block_g, 1.0))
-    ma, pa, mb, pb = frugal2u_pallas_fused_window(
-        items, m_p, packed_a, m2_p, packed_b, q_p, seed, window,
-        t_offset=t_offset, g_offset=g_offset,
-        block_g=block_g, block_t=block_t, interpret=interpret)
-    step_a, sign_a = packing.unpack_step_sign(pa)
-    step_b, sign_b = packing.unpack_step_sign(pb)
-    return (ma[:g], step_a.astype(dt)[:g], sign_a.astype(dt)[:g],
-            mb[:g], step_b.astype(dt)[:g], sign_b.astype(dt)[:g])
-
-
-@functools.partial(jax.jit, static_argnames=("drift", "lanes"))
-def _cpu2_decay(items, m, step, sign, quantile, seed, t_offset, g_offset,
-                drift=None, lanes=1):
-    st, _ = frugal.frugal2u_process_seeded(
-        frugal.Frugal2UState(m, step, sign), items, seed, quantile,
-        t_offset=t_offset, g_offset=g_offset, lanes_per_group=lanes,
-        drift=drift)
-    return st.m, st.step, st.sign
-
-
-@functools.partial(jax.jit, static_argnames=("drift", "algo", "lanes"))
-def _cpu_window(items, m, step, sign, m2, step2, sign2, quantile, seed,
-                t_offset, g_offset, drift=None, algo="2u", lanes=1):
-    st, _ = drift_mod.window_process_seeded(
-        drift_mod.WindowState(m, step, sign, m2, step2, sign2), items, seed,
-        quantile, drift, t_offset=t_offset, g_offset=g_offset,
-        lanes_per_group=lanes, algo=algo)
-    return tuple(st)
-
-
-def frugal2u_update_auto_fused_decay(
-    items, m, step, sign, quantile, key=None, *, seed=None, drift,
-    t_offset=0, g_offset=0, lanes_per_group=1, **kw,
-):
-    """Decayed-2U fused dispatch: Pallas on TPU, jitted jnp scan elsewhere.
-
-    `drift` is a core.drift.DriftConfig with mode 'decay'. Bit-identical
-    across the two dispatch targets and to the jnp-backend scan.
-    """
-    s = _as_seed(key, seed)
-    if _on_tpu():
-        if lanes_per_group > 1:
-            items = jnp.repeat(items, lanes_per_group, axis=1)
-        return frugal2u_update_blocked_fused_decay(
-            items, m, step, sign, quantile, s, drift.alpha_bits,
-            drift.floor_bits, t_offset, g_offset, interpret=False, **kw)
-    q = jnp.broadcast_to(jnp.asarray(quantile, m.dtype), m.shape)
-    return _cpu2_decay(items.astype(m.dtype), m, step, sign, q, s, t_offset,
-                       g_offset, drift=drift, lanes=lanes_per_group)
-
-
-def frugal1u_update_auto_fused_window(
-    items, m, m2, quantile, key=None, *, seed=None, drift,
-    t_offset=0, g_offset=0, lanes_per_group=1, **kw,
-):
-    """Windowed-1U fused dispatch. Returns (m, m2)."""
-    s = _as_seed(key, seed)
-    if _on_tpu():
-        if lanes_per_group > 1:
-            items = jnp.repeat(items, lanes_per_group, axis=1)
-        return frugal1u_update_blocked_fused_window(
-            items, m, m2, quantile, s, drift.window, t_offset, g_offset,
-            interpret=False, **kw)
-    q = jnp.broadcast_to(jnp.asarray(quantile, m.dtype), m.shape)
-    one = jnp.ones_like(m)
-    out = _cpu_window(items.astype(m.dtype), m, one, one, m2, one, one, q,
-                      s, t_offset, g_offset, drift=drift, algo="1u",
-                      lanes=lanes_per_group)
-    return out[0], out[3]
-
-
-def frugal2u_update_auto_fused_window(
-    items, m, step, sign, m2, step2, sign2, quantile, key=None, *,
-    seed=None, drift, t_offset=0, g_offset=0, lanes_per_group=1, **kw,
-):
-    """Windowed-2U fused dispatch. Returns the six plane arrays."""
-    s = _as_seed(key, seed)
-    if _on_tpu():
-        if lanes_per_group > 1:
-            items = jnp.repeat(items, lanes_per_group, axis=1)
-        return frugal2u_update_blocked_fused_window(
-            items, m, step, sign, m2, step2, sign2, quantile, s,
-            drift.window, t_offset, g_offset, interpret=False, **kw)
-    q = jnp.broadcast_to(jnp.asarray(quantile, m.dtype), m.shape)
-    return _cpu_window(items.astype(m.dtype), m, step, sign, m2, step2,
-                       sign2, q, s, t_offset, g_offset, drift=drift,
-                       algo="2u", lanes=lanes_per_group)
-
-
-# ------------------------------------------------- deprecated rand-operand path
-def _warn_rand_operand(name: str, repl: str):
-    warnings.warn(
-        f"kernels.ops.{name} materializes a rand[T, G] operand and is "
-        f"deprecated; use {repl} (on-chip counter RNG, half the HBM "
-        "traffic) or the repro.api.QuantileFleet facade. The rand-operand "
-        "path will be removed in a future release.",
-        DeprecationWarning, stacklevel=3)
-
-
-@functools.partial(jax.jit, static_argnames=("block_g", "block_t", "interpret"))
-def _frugal1u_update_blocked(
-    items: Array, rand: Array, m: Array, quantile: Array,
-    *, block_g: int = 128, block_t: int = 256, interpret: bool = True,
-) -> Array:
-    g = m.shape[0]
-    dt = m.dtype
-    items = items.astype(dt)
-    rand = rand.astype(dt)
-    quantile = jnp.broadcast_to(jnp.asarray(quantile, dt), (g,))
-    items, rand = _pad_stream(items, rand, block_t, block_g)
-    m_p = _pad_state(m, block_g, 0.0)
-    q_p = _pad_state(quantile, block_g, 0.5)
-    out = frugal1u_pallas(items, rand, m_p, q_p,
-                          block_g=block_g, block_t=block_t, interpret=interpret)
-    return out[:g]
-
-
-def frugal1u_update_blocked(items, rand, m, quantile, **kw) -> Array:
-    """DEPRECATED: Frugal-1U with a materialized rand[T, G] operand.
-
-    Spends half the kernel's HBM input bandwidth streaming uniforms — use
-    frugal1u_update_blocked_fused. Kept for the fed-uniform test sweep.
-    Emits DeprecationWarning on every call.
-    """
-    _warn_rand_operand("frugal1u_update_blocked",
-                       "frugal1u_update_blocked_fused")
-    return _frugal1u_update_blocked(items, rand, m, quantile, **kw)
-
-
-@functools.partial(jax.jit, static_argnames=("block_g", "block_t", "interpret"))
-def _frugal2u_update_blocked(
-    items: Array, rand: Array, m: Array, step: Array, sign: Array, quantile: Array,
-    *, block_g: int = 128, block_t: int = 256, interpret: bool = True,
-):
-    g = m.shape[0]
-    dt = m.dtype
-    items = items.astype(dt)
-    rand = rand.astype(dt)
-    quantile = jnp.broadcast_to(jnp.asarray(quantile, dt), (g,))
-    items, rand = _pad_stream(items, rand, block_t, block_g)
-    m_p = _pad_state(m, block_g, 0.0)
-    step_p = _pad_state(step, block_g, 1.0)
-    sign_p = _pad_state(sign, block_g, 1.0)
-    q_p = _pad_state(quantile, block_g, 0.5)
-    m2, step2, sign2 = frugal2u_pallas(
-        items, rand, m_p, step_p, sign_p, q_p,
-        block_g=block_g, block_t=block_t, interpret=interpret)
-    return m2[:g], step2[:g], sign2[:g]
-
-
-def frugal2u_update_blocked(items, rand, m, step, sign, quantile, **kw):
-    """DEPRECATED: Frugal-2U with a materialized rand[T, G] operand.
-
-    Returns (m, step, sign), each [G]. Use frugal2u_update_blocked_fused.
-    Emits DeprecationWarning on every call.
-    """
-    _warn_rand_operand("frugal2u_update_blocked",
-                       "frugal2u_update_blocked_fused")
-    return _frugal2u_update_blocked(items, rand, m, step, sign, quantile, **kw)
-
-
-def frugal1u_update_auto(items, rand, m, quantile, **kw):
-    """DEPRECATED: rand-operand auto dispatch (use frugal1u_update_auto_fused).
-
-    Emits DeprecationWarning on every call.
-    """
-    _warn_rand_operand("frugal1u_update_auto", "frugal1u_update_auto_fused")
-    if _on_tpu():
-        return _frugal1u_update_blocked(items, rand, m, quantile,
-                                        interpret=False, **kw)
-    q = jnp.broadcast_to(jnp.asarray(quantile, m.dtype), m.shape)
-    return ref.frugal1u_ref(items.astype(m.dtype), rand.astype(m.dtype), m, q)
-
-
-def frugal2u_update_auto(items, rand, m, step, sign, quantile, **kw):
-    """DEPRECATED: rand-operand auto dispatch (use frugal2u_update_auto_fused).
-
-    Emits DeprecationWarning on every call.
-    """
-    _warn_rand_operand("frugal2u_update_auto", "frugal2u_update_auto_fused")
-    if _on_tpu():
-        return _frugal2u_update_blocked(items, rand, m, step, sign, quantile,
-                                        interpret=False, **kw)
-    q = jnp.broadcast_to(jnp.asarray(quantile, m.dtype), m.shape)
-    return ref.frugal2u_ref(items.astype(m.dtype), rand.astype(m.dtype),
-                            m, step, sign, q)
+# Hand-specialized fused entry points, replaced by the program pair above.
+frugal1u_update_blocked_fused = _removed("frugal1u_update_blocked_fused",
+                                         _FUSED_WHY)
+frugal2u_update_blocked_fused = _removed("frugal2u_update_blocked_fused",
+                                         _FUSED_WHY)
+frugal1u_update_auto_fused = _removed("frugal1u_update_auto_fused",
+                                      _FUSED_WHY)
+frugal2u_update_auto_fused = _removed("frugal2u_update_auto_fused",
+                                      _FUSED_WHY)
+frugal2u_update_blocked_fused_decay = _removed(
+    "frugal2u_update_blocked_fused_decay", _FUSED_WHY)
+frugal2u_update_auto_fused_decay = _removed(
+    "frugal2u_update_auto_fused_decay", _FUSED_WHY)
+frugal1u_update_blocked_fused_window = _removed(
+    "frugal1u_update_blocked_fused_window", _FUSED_WHY)
+frugal1u_update_auto_fused_window = _removed(
+    "frugal1u_update_auto_fused_window", _FUSED_WHY)
+frugal2u_update_blocked_fused_window = _removed(
+    "frugal2u_update_blocked_fused_window", _FUSED_WHY)
+frugal2u_update_auto_fused_window = _removed(
+    "frugal2u_update_auto_fused_window", _FUSED_WHY)

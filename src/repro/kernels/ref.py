@@ -1,18 +1,20 @@
-"""Pure-jnp oracles for the Pallas kernels (required ref.py).
+"""Pure-jnp oracles for the program-parameterized Pallas kernel.
 
 Straight lax.scan transcriptions of the paper's algorithms — no Pallas, no
-blocking — used by the kernel test sweep for bit-exact comparison. Test-only:
-the production off-TPU dispatch runs core.frugal instead (kernels/ops.py), so
-this file stays an independent transcription to validate against.
+blocking, no shared tick code with the production paths — used by the
+kernel test sweep for bit-exact comparison. Test-only: the production
+off-TPU dispatch runs core.frugal.program_process_seeded (kernels/ops.py),
+so this file stays an INDEPENDENT transcription to validate against.
 
-Two flavours per algorithm, sharing one tick transcription within this file:
+``frugal{1,2}u_ref_fused`` generate uniforms tick-by-tick from the SAME
+counter hash the fused kernel uses (repro.core.rng), keyed on
+(seed, t_offset + t, g_offset + g). Bit-exact against the program kernel
+for any block shape. No [T, G] uniforms tensor is ever materialized.
 
-  * ``frugal{1,2}u_ref``       — consumes fed-in ``rand[T, G]`` uniforms
-    (oracle for the deprecated operand-rand kernels).
-  * ``frugal{1,2}u_ref_fused`` — generates uniforms tick-by-tick from the
-    SAME counter hash the fused Pallas kernels use (repro.core.rng), keyed on
-    (seed, t_offset + t, g). Bit-exact against frugal{1,2}u_pallas_fused for
-    any block shape. No [T, G] uniforms tensor is ever materialized.
+(The fed-``rand[T, G]`` oracle flavours died with the rand-operand kernel
+paths — the lane-program engine has no fed-uniform ingest surface; the
+paper-pseudocode cross-check lives in core/reference.py's scalar
+transcriptions, pinned by tests/test_frugal_equivalence.py.)
 """
 from __future__ import annotations
 
@@ -25,14 +27,14 @@ Array = jax.Array
 
 
 def _tick1u(m, s, r, quantile):
-    """One Frugal-1U tick (paper Alg. 2), shared by both oracle flavours."""
+    """One Frugal-1U tick (paper Alg. 2)."""
     up = (s > m) & (r > 1.0 - quantile)
     down = (s < m) & (r > quantile)
     return m + up.astype(m.dtype) - down.astype(m.dtype)
 
 
 def _tick2u(m, step, sign, s, r, quantile):
-    """One Frugal-2U tick (paper Alg. 3), shared by both oracle flavours."""
+    """One Frugal-2U tick (paper Alg. 3)."""
     one = jnp.ones((), m.dtype)
     up = (s > m) & (r > 1.0 - quantile)
     down = (s < m) & (r > quantile)
@@ -55,30 +57,6 @@ def _tick2u(m, step, sign, s, r, quantile):
     step2 = jnp.where(up, step_u, jnp.where(down, step_d, step))
     sign2 = jnp.where(up, one, jnp.where(down, -one, sign))
     return m2, step2, sign2
-
-
-def frugal1u_ref(items: Array, rand: Array, m: Array, quantile: Array) -> Array:
-    """[T, G] sequential Frugal-1U; returns updated m [G]."""
-
-    def tick(m, xs):
-        s, r = xs
-        return _tick1u(m, s, r, quantile), None
-
-    m, _ = jax.lax.scan(tick, m, (items, rand))
-    return m
-
-
-def frugal2u_ref(
-    items: Array, rand: Array, m: Array, step: Array, sign: Array, quantile: Array
-):
-    """[T, G] sequential Frugal-2U; returns (m, step, sign)."""
-
-    def tick(carry, xs):
-        s, r = xs
-        return _tick2u(*carry, s, r, quantile), None
-
-    (m, step, sign), _ = jax.lax.scan(tick, (m, step, sign), (items, rand))
-    return m, step, sign
 
 
 def frugal1u_ref_fused(
@@ -105,8 +83,9 @@ def frugal2u_ref_fused(
 ):
     """[T, G] sequential Frugal-2U with counter-hashed uniforms.
 
-    Returns (m, step, sign). Bit-exact vs frugal2u_pallas_fused (which carries
-    the packed (step, sign) word — core.packing round-trips exactly).
+    Returns (m, step, sign). Bit-exact vs the program kernel's '2u' family
+    (which carries the packed (step, sign) word — core.packing round-trips
+    exactly).
     """
     t, g = items.shape
     seed = jnp.asarray(seed, jnp.int32)

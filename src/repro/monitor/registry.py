@@ -53,7 +53,7 @@ def _mk_fleet(g: int, quantile: float, seed: int,
     if g == 0:
         return None
     return QuantileFleet.create(
-        FleetSpec(num_groups=g, quantiles=(quantile,), algo="2u",
+        FleetSpec(num_groups=g, quantiles=(quantile,), program="2u",
                   backend="jnp"), init=init, seed=seed)
 
 

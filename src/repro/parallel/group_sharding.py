@@ -54,72 +54,50 @@ def group_mesh(num_devices: Optional[int] = None,
     return Mesh(np.asarray(devs[:n]), (axis_name,))
 
 
-def _pad_lane_fill(field: str) -> float:
-    # Pad lanes carry the same dummy state ops.py uses for block padding.
-    return {"m": 0.0, "step": 1.0, "sign": 1.0, "quantile": 0.5,
-            "m2": 0.0, "step2": 1.0, "sign2": 1.0}[field]
+def _pad_lane_fill(layout, field: str) -> float:
+    # Pad lanes carry the same dummy state ops.py uses for block padding:
+    # the program layout's fills, plus the quantile plane (not a layout
+    # plane — it rides every sketch).
+    return 0.5 if field == "quantile" else layout.pad_fill(field)
 
 
-# One jitted shard_map per (mesh, algo, drift, shard width, chunking) —
-# cached so repeated ingest calls hit the same compiled executable. Meshes
-# hash by device list + axis names, so a fleet reuses its entry across
-# calls. Only windowed fleets (drift mode 'window') widen the signature
-# with the three shadow-plane operands — drift-free and decay fleets keep
-# the original 3-state body, so the vanilla hot path is untouched (no
-# placeholder [Gp] arrays ride along; e9 gates this path's scaling).
+def _sketch_from_planes(program, planes, quantile) -> GroupedQuantileSketch:
+    """Assemble a local (per-shard) sketch from a program-ordered plane
+    tuple — the inverse of GroupedQuantileSketch.planes()."""
+    fields = {"step": None, "sign": None, "m2": None, "step2": None,
+              "sign2": None}
+    fields.update(zip(program.layout.plane_fields, planes))
+    return GroupedQuantileSketch(quantile=quantile, algo=program.algo,
+                                 drift=program.drift, **fields)
+
+
+# One jitted shard_map per (mesh, program, shard width, chunking) — cached
+# so repeated ingest calls hit the same compiled executable. Meshes hash by
+# device list + axis names, so a fleet reuses its entry across calls. The
+# ONE body's operand width derives from the program's StateLayout — a 1U
+# fleet moves one plane, a windowed 2U fleet six; no placeholder [Gp]
+# arrays ever ride along (e9 gates the vanilla hot path's scaling), and
+# the old 3-plane/6-plane body fork is gone.
 @functools.lru_cache(maxsize=None)
-def _sharded_ingest_fn(mesh: Mesh, axis: str, algo: str, shard_g: int,
-                       chunk_t: int, drift=None):
-    windowed = drift_is_windowed(drift)
-
-    def local_sketch(m, step, sign, m2, step2, sign2, quantile):
-        if algo == "1u":
-            return GroupedQuantileSketch(
-                m=m, step=None, sign=None, quantile=quantile, m2=m2,
-                algo="1u", drift=drift)
-        return GroupedQuantileSketch(
-            m=m, step=step, sign=sign, quantile=quantile, m2=m2,
-            step2=step2, sign2=sign2, algo="2u", drift=drift)
-
+def _sharded_ingest_fn(mesh: Mesh, axis: str, program, shard_g: int,
+                       chunk_t: int):
+    n = program.layout.num_planes
     state_spec = P(axis)
 
-    if windowed:
-        def body(items, m, step, sign, m2, step2, sign2, quantile, seed,
-                 t0, g0_base):
-            g0 = g0_base + jax.lax.axis_index(axis) * shard_g
-            local = local_sketch(m, step, sign, m2, step2, sign2, quantile)
-            out = streaming.ingest_array(local, items, seed=seed,
-                                         chunk_t=chunk_t, g_offset=g0,
-                                         t_offset=t0)
-            if algo == "1u":
-                return out.m, step, sign, out.m2, step2, sign2
-            return out.m, out.step, out.sign, out.m2, out.step2, out.sign2
-
-        fn = shard_map_compat(
-            body, mesh=mesh,
-            in_specs=(P(None, axis), state_spec, state_spec, state_spec,
-                      state_spec, state_spec, state_spec,
-                      state_spec, P(), P(), P()),
-            out_specs=(state_spec, state_spec, state_spec,
-                       state_spec, state_spec, state_spec))
-        return jax.jit(fn)
-
-    def body(items, m, step, sign, quantile, seed, t0, g0_base):
+    def body(items, quantile, seed, t0, g0_base, *planes):
         # g0_base shifts every shard when THIS WHOLE FLEET is itself a
         # column slice of a larger one (the facade cursor's g_offset).
         g0 = g0_base + jax.lax.axis_index(axis) * shard_g
-        local = local_sketch(m, step, sign, None, None, None, quantile)
+        local = _sketch_from_planes(program, planes, quantile)
         out = streaming.ingest_array(local, items, seed=seed, chunk_t=chunk_t,
                                      g_offset=g0, t_offset=t0)
-        if algo == "1u":
-            return out.m, step, sign
-        return out.m, out.step, out.sign
+        return out.planes()
 
     fn = shard_map_compat(
         body, mesh=mesh,
-        in_specs=(P(None, axis), state_spec, state_spec, state_spec,
-                  state_spec, P(), P(), P()),
-        out_specs=(state_spec, state_spec, state_spec))
+        in_specs=(P(None, axis), state_spec, P(), P(), P())
+        + (state_spec,) * n,
+        out_specs=(state_spec,) * n)
     return jax.jit(fn)
 
 
@@ -202,32 +180,21 @@ class ShardedGroupFleet:
         gp = -(-g // n) * n
         sharding = NamedSharding(mesh, P(axis))
 
+        layout = sketch.program.layout
+
         def place(x, field):
             x = jnp.broadcast_to(jnp.asarray(x, jnp.float32), (g,))
             if gp != g:
                 x = jnp.pad(x, (0, gp - g),
-                            constant_values=_pad_lane_fill(field))
+                            constant_values=_pad_lane_fill(layout, field))
             return jax.device_put(x, sharding)
 
-        m = place(sketch.m, "m")
-        q = place(sketch.quantile, "quantile")
-
-        def place_opt(x, field):
-            return None if x is None else place(x, field)
-
-        if sketch.algo == "1u":
-            padded = GroupedQuantileSketch(
-                m=m, step=None, sign=None, quantile=q,
-                m2=place_opt(sketch.m2, "m2"), algo="1u",
-                drift=sketch.drift)
-        else:
-            padded = GroupedQuantileSketch(
-                m=m, step=place(sketch.step, "step"),
-                sign=place(sketch.sign, "sign"), quantile=q,
-                m2=place_opt(sketch.m2, "m2"),
-                step2=place_opt(sketch.step2, "step2"),
-                sign2=place_opt(sketch.sign2, "sign2"), algo="2u",
-                drift=sketch.drift)
+        padded = sketch.with_planes(
+            tuple(place(p, f)
+                  for f, p in zip(layout.plane_fields, sketch.planes())))
+        padded = dataclasses.replace(padded,
+                                     quantile=place(sketch.quantile,
+                                                    "quantile"))
         return ShardedGroupFleet(sketch=padded, num_groups=g, mesh=mesh,
                                  axis=axis, lanes_per_group=lanes_per_group)
 
@@ -259,32 +226,12 @@ class ShardedGroupFleet:
     def _run_sharded(self, items: Array, seed, t0, chunk_t: int,
                      g_offset=0) -> "ShardedGroupFleet":
         sk = self.sketch
-        fn = _sharded_ingest_fn(self.mesh, self.axis, self.algo,
-                                self.shard_groups, chunk_t, sk.drift)
-        one = jnp.ones((self.padded_groups,), jnp.float32)
-        step = sk.step if sk.step is not None else one
-        sign = sk.sign if sk.sign is not None else one
+        fn = _sharded_ingest_fn(self.mesh, self.axis, sk.program,
+                                self.shard_groups, chunk_t)
         scalars = (jnp.asarray(seed, jnp.int32), jnp.asarray(t0, jnp.int32),
                    jnp.asarray(g_offset, jnp.int32))
-        windowed = drift_is_windowed(sk.drift)
-        upd = {}
-        if windowed:
-            step2 = sk.step2 if sk.step2 is not None else one
-            sign2 = sk.sign2 if sk.sign2 is not None else one
-            m, step, sign, m2, step2, sign2 = fn(
-                items, sk.m, step, sign, sk.m2, step2, sign2, sk.quantile,
-                *scalars)
-            upd["m2"] = m2
-            if self.algo != "1u":
-                upd.update(step2=step2, sign2=sign2)
-        else:
-            m, step, sign = fn(items, sk.m, step, sign, sk.quantile,
-                               *scalars)
-        upd["m"] = m
-        if self.algo != "1u":
-            upd.update(step=step, sign=sign)
-        new = dataclasses.replace(sk, **upd)
-        return dataclasses.replace(self, sketch=new)
+        planes = fn(items, sk.quantile, *scalars, *sk.planes())
+        return dataclasses.replace(self, sketch=sk.with_planes(planes))
 
     def ingest_array(self, items, key: Optional[Array] = None,
                      chunk_t: int = 4096, *, seed=None,
@@ -330,27 +277,21 @@ class ShardedGroupFleet:
     def estimate(self, t_next=None) -> np.ndarray:
         """Current per-group estimates [G] — the one gathering read.
 
-        A windowed fleet (drift mode 'window') answers from the OLDER plane
-        of each lane's pair, which is a function of the absolute stream
-        tick: pass `t_next` (items ingested so far — what a facade cursor
-        carries) or use repro.api.QuantileFleet, which threads it for you.
-        Reading a windowed fleet without the tick would silently return the
-        just-restarted plane half the epochs, so it raises instead."""
-        from repro.core.drift import query_plane_is_primary
-
+        Layout-driven: only the program's query planes are gathered (a
+        windowed fleet transfers its two m planes, never the step/sign
+        words). A windowed fleet answers from the OLDER plane of each
+        lane's pair, which is a function of the absolute stream tick: pass
+        `t_next` (items ingested so far — what a facade cursor carries) or
+        use repro.api.QuantileFleet, which threads it for you. Reading a
+        windowed fleet without the tick would silently return the
+        just-restarted plane half the epochs, so the program's query
+        raises instead."""
         sk = self.sketch
         n = self.num_groups
-        if not drift_is_windowed(sk.drift):
-            return np.asarray(jax.device_get(sk.m))[:n]
-        if t_next is None:
-            raise ValueError(
-                "windowed fleet: estimate() needs t_next (absolute items "
-                "ingested) to select the older plane — or read through "
-                "repro.api.QuantileFleet, whose cursor carries it")
-        m = np.asarray(jax.device_get(sk.m))[:n]
-        m2 = np.asarray(jax.device_get(sk.m2))[:n]
-        primary = query_plane_is_primary(t_next, sk.drift.window)
-        return np.where(primary, m, m2)
+        prog = sk.program
+        m_planes = tuple(np.asarray(jax.device_get(getattr(sk, f)))[:n]
+                         for f in prog.layout.query_fields)
+        return prog.run_query(m_planes, t_next=t_next)
 
     def unshard(self) -> GroupedQuantileSketch:
         """Gather the fleet back into a host-resident unsharded sketch."""
@@ -406,8 +347,10 @@ class ShardedGroupFleet:
         train.checkpoint.restore_checkpoint(shardings=...) to re-place a
         saved fleet directly onto this mesh (elastic restore)."""
         sh = NamedSharding(self.mesh, P(self.axis))
-        windowed = drift_is_windowed(self.sketch.drift)
+        layout = self.sketch.program.layout
+        shadow = layout.has_shadow
+        paired = self.algo != "1u"
         return PackedSketchState(
-            m=sh, step_sign=None if self.algo == "1u" else sh, quantile=sh,
-            m2=sh if windowed else None,
-            step_sign2=sh if windowed and self.algo != "1u" else None)
+            m=sh, step_sign=sh if paired else None, quantile=sh,
+            m2=sh if shadow else None,
+            step_sign2=sh if shadow and paired else None)

@@ -43,8 +43,8 @@ import jax.numpy as jnp
 
 from repro.api.fleet import QuantileFleet
 from repro.api.spec import FleetSpec, StreamCursor
-from repro.core.drift import DriftConfig
 from repro.core.frugal import Frugal2UState
+from repro.core.program import make_program
 from repro.core.sketch import GroupedQuantileSketch
 
 Array = jax.Array
@@ -99,12 +99,13 @@ class SLOFleet:
     def _spec(self, cap_routes: int) -> FleetSpec:
         """Fleet spec for `cap_routes` route groups: one quantile lane per
         metric — the single definition of the lane layout (route-major,
-        metric-minor: lane = route_idx · n_metrics + metric_idx)."""
-        drift = DriftConfig(mode="decay", half_life=self.decay_half_life) \
-            if self.windowed else None
+        metric-minor: lane = route_idx · n_metrics + metric_idx). Lanes run
+        the registered '2u-decay' / '2u' lane programs (core.program)."""
+        program = make_program("2u-decay", half_life=self.decay_half_life) \
+            if self.windowed else "2u"
         return FleetSpec(num_groups=cap_routes,
                          quantiles=tuple(q for _, q in self.metrics),
-                         algo="2u", backend="jnp", drift=drift)
+                         backend="jnp", program=program)
 
     # ----------------------------------------------- facade state, projected
     # The fleet owns all device state; these views keep the historical

@@ -97,9 +97,10 @@ def _sync_sketch_drift(restored, like):
 
     def sync(r, l):
         if is_sk(r) and is_sk(l) and r.drift != l.drift:
-            from repro.core.drift import is_windowed
-
-            if (r.m2 is not None) != is_windowed(l.drift):
+            # Layout check: the stored shadow-plane presence must match the
+            # template program's layout (a windowed sketch restored as
+            # vanilla/decay — or vice versa — is the wrong config).
+            if (r.m2 is not None) != l.program.layout.has_shadow:
                 raise ValueError(
                     f"checkpoint sketch {'has' if r.m2 is not None else 'lacks'}"
                     f" a window shadow plane but the restore template's "

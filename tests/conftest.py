@@ -21,3 +21,90 @@ def pytest_configure(config):
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+# --------------------------------------------------------------------------
+# Shared LaneProgram bit-exactness harness.
+#
+# ONE parametrized sweep replaces the copy-pasted backend × chunking × mesh
+# loops that used to live in test_drift / test_fleet_api /
+# test_group_sharding: the `lane_program` fixture enumerates EVERY family
+# registered in core.program (canonical small-parameter instances), so a
+# newly registered rule gets its cross-backend coverage for free — no test
+# edits. The harness compares the ESTIMATES and the FULL persistent plane
+# state (every layout field, gathered/unsharded) bit-for-bit, across:
+#   * backend jnp (pure scan), fused (program kernel, two chunk sizes, a
+#     split ingest + a re-chunked stream ingest), sharded (each requested
+#     mesh size, ragged lane counts included);
+#   * a multi-quantile (Q=2) lane plane, so lane fan-out is covered too.
+# --------------------------------------------------------------------------
+# Enumerating the registry imports repro.core.program (and therefore jax)
+# at collection time — the same cost every test module in this suite
+# already pays by importing jax at module level; the payoff is that a
+# newly registered family appears as a test id with zero test edits.
+def _all_program_instances():
+    from repro.core import program as program_mod
+
+    return program_mod.test_instances()
+
+
+@pytest.fixture(params=_all_program_instances(),
+                ids=lambda p: p.family)
+def lane_program(request):
+    """Every registered LaneProgram family, one canonical instance each."""
+    return request.param
+
+
+def run_program_invariance_sweep(program, mesh_sizes=(1,), g=5,
+                                 quantiles=(0.5, 0.9), t=400, seed=9,
+                                 data_seed=4):
+    """Assert `program` is bit-exact across backend × chunking × mesh.
+
+    Builds one fleet per (backend, chunk_t, mesh) configuration, ingests the
+    same [t, g] stream split across ingest()/ingest_stream() calls, and
+    requires identical estimates AND identical full plane state everywhere.
+    Returns the reference estimate plane for optional further checks.
+    """
+    import jax
+    from repro.api import FleetSpec, QuantileFleet
+    from repro.parallel.group_sharding import group_mesh
+
+    items = np.random.default_rng(data_seed).integers(
+        0, 800, (t, g)).astype(np.float32)
+    n_dev = len(jax.devices())
+    configs = [("jnp", 4096, None), ("fused", 64, None), ("fused", 333, None)]
+    for n in mesh_sizes:
+        if n <= n_dev:
+            configs.append(("sharded", 100, group_mesh(n)))
+
+    plane_fields = program.layout.plane_fields
+    ref_est = ref_state = ref_cfg = None
+    for backend, chunk, mesh in configs:
+        spec = FleetSpec(num_groups=g, quantiles=quantiles, backend=backend,
+                         chunk_t=chunk, mesh=mesh, program=program)
+        fl = QuantileFleet.create(spec, seed=seed)
+        cut = max(1, t // 3)
+        fl = fl.ingest(items[:cut]).ingest_stream([items[cut:cut + 51],
+                                                   items[cut + 51:]])
+        est = fl.estimate()
+        sk = fl._lane_sketch()
+        state = {f: np.asarray(getattr(sk, f)) for f in plane_fields}
+        if ref_est is None:
+            ref_est, ref_state, ref_cfg = est, state, (backend, chunk)
+            continue
+        np.testing.assert_array_equal(
+            ref_est, est,
+            err_msg=f"{program.family}: estimates diverge between "
+                    f"{ref_cfg} and ({backend}, {chunk})")
+        for f in plane_fields:
+            np.testing.assert_array_equal(
+                ref_state[f], state[f],
+                err_msg=f"{program.family}: plane {f!r} diverges between "
+                        f"{ref_cfg} and ({backend}, {chunk})")
+    return ref_est
+
+
+@pytest.fixture
+def program_sweep():
+    """The shared harness as a fixture (callable) for test modules."""
+    return run_program_invariance_sweep

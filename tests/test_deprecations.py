@@ -1,7 +1,10 @@
-"""The rand-operand kernel entry points are deprecation shims: every call
-must emit DeprecationWarning (pinned here so a later PR can delete the
-paths knowing nothing silent depends on them), while the fused paths and
-the facade stay warning-free."""
+"""The pre-program kernel entry points are REMOVED: the long-deprecated
+rand-operand paths (warned on every call since PR 3) and the five
+hand-specialized fused variants (collapsed into the program kernel family).
+Their names remain importable as stubs so stale callers fail with a clear
+ValueError naming the replacement — pinned here — while the program engine
+and the facade stay warning-free (tier-1 promotes DeprecationWarning to
+error, pytest.ini)."""
 import warnings
 
 import numpy as np
@@ -10,12 +13,16 @@ import jax.numpy as jnp
 import pytest
 
 from repro.kernels import (
+    frugal_update_auto,
     frugal1u_update_auto,
+    frugal1u_update_auto_fused,
     frugal1u_update_blocked,
     frugal2u_update_auto,
+    frugal2u_update_auto_fused_window,
     frugal2u_update_blocked,
-    frugal1u_update_auto_fused,
+    frugal2u_update_blocked_fused,
 )
+from repro.core import program as program_mod
 
 G, T = 8, 16
 
@@ -32,9 +39,11 @@ def _operands():
 
 @pytest.mark.parametrize("call", ["1u_blocked", "2u_blocked", "1u_auto",
                                   "2u_auto"])
-def test_rand_operand_paths_warn(call):
+def test_rand_operand_paths_are_removed_with_named_replacement(call):
+    """The rand[T, G]-operand entry points raise (not warn) and the error
+    names the program-engine replacement and the migration doc."""
     items, rand, m, one, q = _operands()
-    with pytest.warns(DeprecationWarning, match="rand\\[T, G\\] operand"):
+    with pytest.raises(ValueError, match=r"frugal_update_auto") as ei:
         if call == "1u_blocked":
             frugal1u_update_blocked(items, rand, m, q, interpret=True)
         elif call == "2u_blocked":
@@ -44,34 +53,56 @@ def test_rand_operand_paths_warn(call):
             frugal1u_update_auto(items, rand, m, q)
         else:
             frugal2u_update_auto(items, rand, m, one, one, q)
+    msg = str(ei.value)
+    assert "removed" in msg and "DESIGN.md" in msg
+    assert "rand[T, G]" in msg          # says WHY, not just what
 
 
-def test_warning_fires_on_every_call_not_just_trace():
-    """jit caching must not swallow the warning after the first call."""
+@pytest.mark.parametrize("name,fn", [
+    ("frugal2u_update_blocked_fused", frugal2u_update_blocked_fused),
+    ("frugal1u_update_auto_fused", frugal1u_update_auto_fused),
+    ("frugal2u_update_auto_fused_window", frugal2u_update_auto_fused_window),
+])
+def test_fused_specializations_are_removed_with_named_replacement(name, fn):
+    with pytest.raises(ValueError, match=r"program") as ei:
+        fn()
+    msg = str(ei.value)
+    assert name in msg and "frugal_update_auto" in msg
+    assert "QuantileFleet" in msg       # the facade is the first-choice path
+
+
+def test_removal_error_fires_on_every_call_shape():
+    """The stubs must raise regardless of arguments (nothing silently
+    computes), including keyword-only historic spellings."""
     items, rand, m, one, q = _operands()
     for _ in range(2):
-        with pytest.warns(DeprecationWarning):
-            frugal1u_update_blocked(items, rand, m, q, interpret=True)
+        with pytest.raises(ValueError):
+            frugal1u_update_blocked(items, rand, m, q)
+    with pytest.raises(ValueError):
+        frugal1u_update_blocked()
 
 
-def test_fused_and_facade_paths_are_warning_free():
+def test_program_engine_and_facade_paths_are_warning_free():
     items, _, m, _, q = _operands()
     from repro.api import FleetSpec, QuantileFleet
 
     with warnings.catch_warnings():
-        warnings.simplefilter("error", DeprecationWarning)
-        frugal1u_update_auto_fused(items, m, q, key=jax.random.PRNGKey(0))
+        warnings.simplefilter("error")
+        frugal_update_auto(items, (m,), q, key=jax.random.PRNGKey(0),
+                           program=program_mod.family_base("1u"))
         fleet = QuantileFleet.create(FleetSpec(num_groups=G), seed=0)
         fleet.ingest(np.asarray(items))
 
 
-def test_deprecated_path_still_computes_correctly():
-    """Shim ≠ stub: the deprecated path keeps returning the oracle result
-    until it is actually removed."""
-    items, rand, m, one, q = _operands()
-    from repro.kernels.ref import frugal1u_ref
+def test_replacement_actually_computes_the_same_rule():
+    """The error's named replacement is real: the program pair reproduces
+    the trajectory the removed fused path used to produce (pinned against
+    the independent ref oracle, as the old path's tests were)."""
+    items, _, m, one, q = _operands()
+    from repro.kernels import ref
 
-    with pytest.warns(DeprecationWarning):
-        got = frugal1u_update_blocked(items, rand, m, q, interpret=True)
-    want = frugal1u_ref(items, rand, m, q)
-    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    got = frugal_update_auto(items, (m, one, one), q, seed=7,
+                             program=program_mod.family_base("2u"))
+    want = ref.frugal2u_ref_fused(items, m, one, one, q, 7)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

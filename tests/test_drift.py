@@ -17,12 +17,10 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.api import DriftConfig, FleetSpec, QuantileFleet
-from repro.core import GroupedQuantileSketch, ingest_array, ingest_stream
+from repro.api import DriftConfig, FleetSpec, QuantileFleet, make_program
+from repro.core import GroupedQuantileSketch
 from repro.core import drift as drift_mod
 from repro.core import frugal
-from repro.core import rng as crng
-from repro.kernels import ops
 from repro.parallel.group_sharding import group_mesh
 from repro.train.checkpoint import restore_checkpoint, save_checkpoint
 
@@ -31,13 +29,6 @@ try:
     HAS_HYPOTHESIS = True
 except ImportError:
     HAS_HYPOTHESIS = False
-
-N_DEV = len(jax.devices())
-multidevice = pytest.mark.skipif(
-    N_DEV < 2,
-    reason="needs >= 2 devices — run under "
-           "XLA_FLAGS=--xla_force_host_platform_device_count=8 "
-           "(the multi-device CI job does)")
 
 DECAY = DriftConfig(mode="decay", half_life=48)
 WINDOW = DriftConfig(mode="window", window=96)
@@ -150,26 +141,27 @@ def test_window_tracks_recent_distribution():
 
 
 # --------------------------------- backend x chunking x mesh invariance
+# The generic backend x chunking x mesh sweep for EVERY registered program
+# (drift rules included) lives in tests/conftest.py's shared harness and
+# runs from test_fleet_api.py — this file keeps only drift-SPECIFIC cases:
+# nonstandard rule parameters, and splits landing exactly on window
+# boundaries.
 CASES = [("decay-2u", "2u", DECAY), ("window-1u", "1u", WINDOW),
          ("window-2u", "2u", WINDOW)]
 
+NONSTANDARD = [make_program("2u-decay", half_life=7),
+               make_program("1u-window", window=70),
+               make_program("2u-window", window=33)]
 
-@pytest.mark.parametrize("name,algo,cfg", CASES, ids=[c[0] for c in CASES])
-def test_backend_and_chunking_invariance_single_device(name, algo, cfg):
-    g, qs = 5, (0.5, 0.9)
-    items = _items(400, g, seed=4)
-    outs = []
-    for backend, chunk, mesh in (("jnp", 4096, None), ("fused", 64, None),
-                                 ("fused", 333, None),
-                                 ("sharded", 100, group_mesh(1))):
-        spec = FleetSpec(num_groups=g, quantiles=qs, algo=algo,
-                         backend=backend, chunk_t=chunk, mesh=mesh,
-                         drift=cfg)
-        fl = QuantileFleet.create(spec, seed=9)
-        fl = fl.ingest(items[:157]).ingest(items[157:])
-        outs.append(fl.estimate())
-    for o in outs[1:]:
-        np.testing.assert_array_equal(outs[0], o)
+
+@pytest.mark.parametrize("prog", NONSTANDARD,
+                         ids=[f"{p.family}-odd" for p in NONSTANDARD])
+def test_nonstandard_drift_params_bit_exact_across_backends(prog,
+                                                            program_sweep):
+    """Rule parameters are dynamic operands — odd half-lives / window
+    lengths must be exactly as backend-invariant as the canonical ones the
+    shared harness sweeps."""
+    program_sweep(prog, mesh_sizes=(1,), t=250)
 
 
 @pytest.mark.parametrize("name,algo,cfg", CASES, ids=[c[0] for c in CASES])
@@ -190,44 +182,9 @@ def test_stream_continuation_across_window_boundaries(name, algo, cfg):
                                       err_msg=f"split={split}")
 
 
-@pytest.mark.parametrize("name,algo,cfg", CASES, ids=[c[0] for c in CASES])
-def test_sharded_drift_state_matches_unsharded(name, algo, cfg):
-    """Not just estimates: the FULL plane state (both window planes, the
-    decayed step word) must match the unsharded trajectory."""
-    g = 13
-    items = _items(300, g, seed=6)
-    key = jax.random.PRNGKey(3)
-    base = GroupedQuantileSketch.create(g, quantile=0.7, algo=algo,
-                                        drift=cfg)
-    ref = base.process(jnp.asarray(items), key)
-    from repro.parallel import ShardedGroupFleet
-    fleet = ShardedGroupFleet.create(g, quantile=0.7, algo=algo, drift=cfg,
-                                     mesh=group_mesh(1))
-    out = fleet.ingest_array(items, key, chunk_t=77).unshard()
-    for f in ("m", "step", "sign", "m2", "step2", "sign2"):
-        a, b = getattr(ref, f), getattr(out, f)
-        assert (a is None) == (b is None), f
-        if a is not None:
-            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
-                                          err_msg=f)
-
-
-@multidevice
-@pytest.mark.parametrize("n_dev", [2, 4, 8])
-@pytest.mark.parametrize("name,algo,cfg", CASES, ids=[c[0] for c in CASES])
-def test_drift_invariant_to_mesh_size(name, algo, cfg, n_dev):
-    if n_dev > N_DEV:
-        pytest.skip(f"only {N_DEV} devices")
-    g, qs = 11, (0.5, 0.99)   # ragged: pads on every mesh size
-    items = _items(250, g, seed=7)
-    ref = QuantileFleet.create(
-        FleetSpec(num_groups=g, quantiles=qs, algo=algo, backend="fused",
-                  chunk_t=48, drift=cfg), seed=5).ingest(items)
-    sh = QuantileFleet.create(
-        FleetSpec(num_groups=g, quantiles=qs, algo=algo, backend="sharded",
-                  chunk_t=48, mesh=group_mesh(n_dev), drift=cfg),
-        seed=5).ingest(items)
-    np.testing.assert_array_equal(ref.estimate(), sh.estimate())
+# (The sharded full-plane-state and mesh-size sweeps are owned by the
+# shared harness: it compares every plane field through _lane_sketch() —
+# i.e. an unshard — for each mesh size, per registered program.)
 
 
 if HAS_HYPOTHESIS:
@@ -256,49 +213,9 @@ else:  # pragma: no cover
 
 
 # ------------------------------------------------------- kernels (interpret)
-@pytest.mark.kernel
-@pytest.mark.parametrize("block", [(64, 4), (256, 128)])
-def test_decay_kernel_matches_scan_bit_for_bit(block):
-    bt, bg = block
-    t, g = 300, 7
-    items = jnp.asarray(_items(t, g, seed=8, domain=500))
-    seed = crng.seed_from_key(jax.random.PRNGKey(5))
-    q = jnp.full((g,), 0.3, jnp.float32)
-    m0 = jnp.zeros((g,), jnp.float32)
-    one = jnp.ones((g,), jnp.float32)
-    want = ops.frugal2u_update_auto_fused_decay(items, m0, one, one, q,
-                                                seed=seed, drift=DECAY)
-    got = ops.frugal2u_update_blocked_fused_decay(
-        items, m0, one, one, q, seed, DECAY.alpha_bits, DECAY.floor_bits,
-        block_g=bg, block_t=bt, interpret=True)
-    for w, g_ in zip(want, got):
-        np.testing.assert_array_equal(np.asarray(w), np.asarray(g_))
-
-
-@pytest.mark.kernel
-@pytest.mark.parametrize("block", [(64, 4), (256, 128)])
-def test_window_kernels_match_scan_bit_for_bit(block):
-    bt, bg = block
-    t, g = 300, 7
-    items = jnp.asarray(_items(t, g, seed=9, domain=500))
-    seed = crng.seed_from_key(jax.random.PRNGKey(6))
-    q = jnp.full((g,), 0.5, jnp.float32)
-    m0 = jnp.zeros((g,), jnp.float32)
-    one = jnp.ones((g,), jnp.float32)
-    want2 = ops.frugal2u_update_auto_fused_window(
-        items, m0, one, one, m0, one, one, q, seed=seed, drift=WINDOW)
-    got2 = ops.frugal2u_update_blocked_fused_window(
-        items, m0, one, one, m0, one, one, q, seed, WINDOW.window,
-        block_g=bg, block_t=bt, interpret=True)
-    for w, g_ in zip(want2, got2):
-        np.testing.assert_array_equal(np.asarray(w), np.asarray(g_))
-    want1 = ops.frugal1u_update_auto_fused_window(items, m0, m0, q,
-                                                  seed=seed, drift=WINDOW)
-    got1 = ops.frugal1u_update_blocked_fused_window(
-        items, m0, m0, q, seed, WINDOW.window, block_g=bg, block_t=bt,
-        interpret=True)
-    for w, g_ in zip(want1, got1):
-        np.testing.assert_array_equal(np.asarray(w), np.asarray(g_))
+# The per-rule Pallas-vs-scan pins moved to tests/test_kernels.py, which
+# sweeps EVERY registered program's kernel against the program scan across
+# block tilings — drift rules get that coverage from the registry.
 
 
 # -------------------------------------------------- event lanes + serving

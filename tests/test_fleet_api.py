@@ -22,13 +22,6 @@ try:
 except ImportError:
     HAS_HYPOTHESIS = False
 
-N_DEV = len(jax.devices())
-multidevice = pytest.mark.skipif(
-    N_DEV < 2,
-    reason="needs >= 2 devices — run under "
-           "XLA_FLAGS=--xla_force_host_platform_device_count=8 "
-           "(the multi-device CI job does)")
-
 
 def _items(t, g, seed=0, domain=800):
     rng = np.random.default_rng(seed)
@@ -88,21 +81,15 @@ def test_q1_sharded_fleet_reproduces_sharded_legacy():
 
 
 # ------------------------------------------------- Q>1 lane-plane invariance
-def test_multi_q_backends_agree_bit_for_bit():
-    t, g = 300, 9
-    items = _items(t, g, seed=4)
-    qs = (0.25, 0.5, 0.95)
-    fleets = []
-    for backend, chunk in (("jnp", 4096), ("fused", 57), ("fused", 300)):
-        spec = FleetSpec(num_groups=g, quantiles=qs, backend=backend,
-                         chunk_t=chunk)
-        fl = QuantileFleet.create(spec, seed=11)
-        fl = fl.ingest(items[:87]).ingest_stream([items[87:200],
-                                                  items[200:]])
-        fleets.append(fl.estimate())
-    np.testing.assert_array_equal(fleets[0], fleets[1])
-    np.testing.assert_array_equal(fleets[0], fleets[2])
-    assert fleets[0].shape == (g, len(qs))
+def test_registered_programs_bit_exact_across_backend_chunking_mesh(
+        lane_program, program_sweep):
+    """THE shared sweep (tests/conftest.py): every registered LaneProgram
+    — vanilla, drift, and DP rules alike — must produce bit-identical
+    estimates AND full plane state across backend jnp/fused x two chunk
+    sizes x split ingest/stream ingest x every available mesh size, on a
+    Q=2 multi-quantile lane plane. New programs registered in
+    core.program.test_instances() are swept automatically."""
+    program_sweep(lane_program, mesh_sizes=(1, 2, 4, 8))
 
 
 def test_multi_q_lane_hashes_its_own_stream():
@@ -118,21 +105,6 @@ def test_multi_q_lane_hashes_its_own_stream():
     sk = fl._lane_sketch()
     assert not np.array_equal(np.asarray(sk.step[0:1]),
                               np.asarray(sk.step[1:2])) or a != b
-
-
-def test_multi_q_invariant_to_lane_shard_layout_single_device():
-    """mesh=1 sharded lane plane == unsharded, bit-for-bit (the g_offset
-    slice invariant that multi-device meshes build on)."""
-    t, g = 180, 10
-    items = _items(t, g, seed=6)
-    qs = (0.5, 0.99)
-    ref = QuantileFleet.create(
-        FleetSpec(num_groups=g, quantiles=qs, backend="fused", chunk_t=64),
-        seed=7).ingest(items)
-    sh = QuantileFleet.create(
-        FleetSpec(num_groups=g, quantiles=qs, backend="sharded", chunk_t=64,
-                  mesh=group_mesh(1)), seed=7).ingest(items)
-    np.testing.assert_array_equal(ref.estimate(), sh.estimate())
 
 
 def test_g_offset_cursor_respected_on_every_backend():
@@ -164,23 +136,6 @@ def test_g_offset_cursor_respected_on_every_backend():
         [_items(t, off // len(qs), seed=99), items], axis=1)
     lanes = wide.ingest(wide_items).estimate()[off // len(qs):]
     np.testing.assert_array_equal(lanes, outs[0])
-
-
-@multidevice
-@pytest.mark.parametrize("n_dev", [2, 4, 8])
-def test_multi_q_invariant_to_mesh_size(n_dev):
-    if n_dev > N_DEV:
-        pytest.skip(f"only {N_DEV} devices")
-    t, g = 150, 11   # 11 groups x 3 lanes = 33 lanes, ragged over the mesh
-    items = _items(t, g, seed=8)
-    qs = (0.25, 0.5, 0.9)
-    ref = QuantileFleet.create(
-        FleetSpec(num_groups=g, quantiles=qs, backend="fused", chunk_t=32),
-        seed=9).ingest(items)
-    sh = QuantileFleet.create(
-        FleetSpec(num_groups=g, quantiles=qs, backend="sharded", chunk_t=32,
-                  mesh=group_mesh(n_dev)), seed=9).ingest(items)
-    np.testing.assert_array_equal(ref.estimate(), sh.estimate())
 
 
 if HAS_HYPOTHESIS:

@@ -25,11 +25,12 @@ from repro.core import (
 )
 from repro.core import rng as crng
 from repro.core.reference import frugal1u_scalar, frugal2u_scalar
-from repro.kernels import (
-    frugal1u_update_blocked_fused,
-    frugal2u_update_blocked_fused,
-)
+from repro.core import program as program_mod
+from repro.kernels import frugal_update_blocked
 from repro.kernels import ref as kref
+
+_P1U = program_mod.family_base("1u")
+_P2U = program_mod.family_base("2u")
 
 
 def _run_both_1u(stream, rands, q):
@@ -100,8 +101,8 @@ def test_fused_1u_kernel_matches_fused_ref_bit_exact(t, g, q):
     m = jnp.zeros((g,), jnp.float32)
     qv = jnp.full((g,), q, jnp.float32)
     seed = 77
-    got = frugal1u_update_blocked_fused(items, m, qv, seed,
-                                        block_g=128, block_t=64, interpret=True)
+    (got,) = frugal_update_blocked(items, (m,), qv, seed, program=_P1U,
+                                   block_g=128, block_t=64, interpret=True)
     want = kref.frugal1u_ref_fused(items, m, qv, seed)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
@@ -116,8 +117,9 @@ def test_fused_2u_kernel_matches_fused_ref_bit_exact(t, g, q):
     sign = jnp.ones((g,), jnp.float32)
     qv = jnp.full((g,), q, jnp.float32)
     seed = 99
-    got = frugal2u_update_blocked_fused(items, m, step, sign, qv, seed,
-                                        block_g=128, block_t=64, interpret=True)
+    got = frugal_update_blocked(items, (m, step, sign), qv, seed,
+                                program=_P2U, block_g=128, block_t=64,
+                                interpret=True)
     want = kref.frugal2u_ref_fused(items, m, step, sign, qv, seed)
     for a, b, name in zip(got, want, ("m", "step", "sign")):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
@@ -136,8 +138,8 @@ def test_fused_full_stack_bit_exact_under_one_key():
     core_out, _ = frugal2u_process(st2, items, key=key, quantile=0.7)
     qv = jnp.full((g,), 0.7, jnp.float32)
     ref_out = kref.frugal2u_ref_fused(items, st2.m, st2.step, st2.sign, qv, seed)
-    kern_out = frugal2u_update_blocked_fused(items, st2.m, st2.step, st2.sign,
-                                             qv, seed, interpret=True)
+    kern_out = frugal_update_blocked(items, (st2.m, st2.step, st2.sign), qv,
+                                     seed, program=_P2U, interpret=True)
     for a, b, c in zip(core_out, ref_out, kern_out):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
         np.testing.assert_array_equal(np.asarray(b), np.asarray(c))

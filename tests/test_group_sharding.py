@@ -177,31 +177,11 @@ def _mesh_sizes():
     return [n for n in (2, 4, 8) if n <= N_DEV]
 
 
-@multidevice
-@pytest.mark.parametrize("algo", ["1u", "2u"])
-def test_sharded_bit_identical_across_mesh_sizes(algo):
-    """The acceptance bar: 2/4/8-way sharded ingest == single-device fused
-    path, bit-for-bit, for 1U and 2U — including ragged G (37 groups pad
-    differently for every mesh size)."""
-    t, g = 700, 37
-    items = _items(t, g, seed=6)
-    key = jax.random.PRNGKey(4)
-    base = GroupedQuantileSketch.create(g, quantile=0.5, algo=algo) \
-        .process(jnp.asarray(items), key)
-    for n in _mesh_sizes():
-        fleet = ShardedGroupFleet.create(g, quantile=0.5, algo=algo,
-                                         mesh=group_mesh(n))
-        fa = fleet.ingest_array(items, key, chunk_t=256)
-        np.testing.assert_array_equal(np.asarray(base.m), fa.estimate(),
-                                      err_msg=f"algo={algo} mesh={n}")
-        fs = fleet.ingest_stream([items[:50], items[50:400], items[400:]],
-                                 key, chunk_t=128)
-        np.testing.assert_array_equal(np.asarray(base.m), fs.estimate(),
-                                      err_msg=f"algo={algo} stream mesh={n}")
-        if algo == "2u":
-            un = fa.unshard()
-            np.testing.assert_array_equal(np.asarray(base.step),
-                                          np.asarray(un.step))
+# (The 2/4/8-way mesh x chunking x ragged-G bit-exactness sweep for every
+# registered program — 1U and 2U included — is owned by the shared harness
+# in tests/conftest.py, driven from test_fleet_api.py; this file keeps the
+# direct ShardedGroupFleet API surfaces, the hypothesis property, and the
+# subprocess proof.)
 
 
 @multidevice

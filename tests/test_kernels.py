@@ -1,6 +1,8 @@
-"""Pallas kernel validation: shape/dtype sweep vs the pure-jnp ref oracle
-(interpret mode executes the kernel body on CPU; equality must be bit-exact
-since both sides consume identical fed-in uniforms)."""
+"""Program-kernel validation: the ONE Pallas kernel family
+(kernels.frugal_update via kernels.ops.frugal_update_blocked) must match
+the independent jnp oracles (kernels/ref.py) and the program-generic scan
+bit-for-bit, for every registered program, across shapes and block tilings
+(interpret mode executes the kernel body on CPU)."""
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -14,29 +16,31 @@ try:
 except ModuleNotFoundError:
     HAS_HYPOTHESIS = False
 
-from repro.kernels import (
-    frugal1u_update_blocked_fused,
-    frugal2u_update_blocked_fused,
-)
-# The fed-uniform sweep drives the rand-operand kernels through their
-# warning-free internal impls: tier-1 promotes DeprecationWarning to error
-# (pytest.ini), and the deprecation shim's warning is pinned in
-# tests/test_deprecations.py — the ONLY place allowed to expect it.
-from repro.kernels.ops import (
-    _frugal1u_update_blocked as frugal1u_update_blocked,
-    _frugal2u_update_blocked as frugal2u_update_blocked,
-)
+from repro.core import program as program_mod
+from repro.core.frugal import program_process_seeded
+from repro.kernels import frugal_update_blocked
 from repro.kernels import ref
 
 pytestmark = pytest.mark.kernel
+
+SEED = 2024
 
 
 def _mk(t, g, seed=0, dtype=np.float32, domain=200):
     rng = np.random.default_rng(seed)
     items = rng.integers(0, domain, size=(t, g)).astype(dtype)
-    rand = rng.random((t, g)).astype(dtype)
-    m = rng.integers(0, domain, size=g).astype(dtype)
-    return jnp.asarray(items), jnp.asarray(rand), jnp.asarray(m)
+    m = rng.integers(0, domain, size=g).astype(np.float32)
+    return jnp.asarray(items), jnp.asarray(m)
+
+
+def _init_planes(program, m):
+    """Program planes from an m vector: heads start at m (copies), pair
+    planes at 1 — the same convention GroupedQuantileSketch.create uses."""
+    layout = program.layout
+    return tuple(
+        m if f == "m" else (jnp.array(m) if f in layout.heads
+                            else jnp.ones_like(m))
+        for f in layout.plane_fields)
 
 
 SHAPES = [
@@ -47,26 +51,31 @@ SHAPES = [
 
 @pytest.mark.parametrize("t,g", SHAPES)
 @pytest.mark.parametrize("q", [0.1, 0.5, 0.9])
-def test_frugal1u_kernel_matches_ref(t, g, q):
-    items, rand, m = _mk(t, g, seed=t * 1000 + g)
+def test_program_kernel_1u_matches_independent_ref(t, g, q):
+    items, m = _mk(t, g, seed=t * 1000 + g)
     qv = jnp.full((g,), q, jnp.float32)
-    got = frugal1u_update_blocked(items, rand, m, qv, interpret=True)
-    want = ref.frugal1u_ref(items, rand, m, qv)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+    prog = program_mod.family_base("1u")
+    (got,) = frugal_update_blocked(items, (m,), qv, SEED, program=prog,
+                                   interpret=True)
+    want = ref.frugal1u_ref_fused(items, m, qv, SEED)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
 @pytest.mark.parametrize("t,g", SHAPES)
 @pytest.mark.parametrize("q", [0.1, 0.5, 0.9])
-def test_frugal2u_kernel_matches_ref(t, g, q):
-    items, rand, m = _mk(t, g, seed=t * 7 + g)
+def test_program_kernel_2u_matches_independent_ref(t, g, q):
+    items, m = _mk(t, g, seed=t * 7 + g)
     step = jnp.ones((g,), jnp.float32)
     sign = jnp.ones((g,), jnp.float32)
     qv = jnp.full((g,), q, jnp.float32)
-    got = frugal2u_update_blocked(items, rand, m, step, sign, qv, interpret=True)
-    want = ref.frugal2u_ref(items, rand, m, step, sign, qv)
+    prog = program_mod.family_base("2u")
+    got = frugal_update_blocked(items, (m, step, sign), qv, SEED,
+                                program=prog, interpret=True)
+    want = ref.frugal2u_ref_fused(items, m, step, sign, qv, SEED)
     for a, b, name in zip(got, want, ("m", "step", "sign")):
-        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=0, atol=0,
-                                   err_msg=f"{name} mismatch at ({t},{g},q={q})")
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"{name} mismatch at ({t},{g},q={q})")
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -75,104 +84,106 @@ def test_kernel_dtype_sweep(dtype):
     t, g = 128, 128
     rng = np.random.default_rng(3)
     items = jnp.asarray(rng.integers(0, 50, (t, g)), dtype)
-    rand = jnp.asarray(rng.random((t, g)), jnp.float32)
     m = jnp.zeros((g,), jnp.float32)
     qv = jnp.full((g,), 0.5, jnp.float32)
-    got = frugal1u_update_blocked(items, rand, m, qv, interpret=True)
-    want = ref.frugal1u_ref(items.astype(jnp.float32), rand, m, qv)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+    prog = program_mod.family_base("1u")
+    (got,) = frugal_update_blocked(items, (m,), qv, SEED, program=prog,
+                                   interpret=True)
+    want = ref.frugal1u_ref_fused(items.astype(jnp.float32), m, qv, SEED)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
-def test_kernel_block_shape_sweep():
-    """Block shapes must not change results (tiling-invariance)."""
-    t, g = 512, 384
-    items, rand, m = _mk(t, g, seed=11)
+def _scan_planes(program, items, planes, qv, seed):
+    out, _ = program_process_seeded(program, planes, items, seed, qv)
+    return tuple(np.asarray(p) for p in out)
+
+
+def test_program_kernel_block_shape_sweep_every_family():
+    """Block shapes must not change a single bit of any program's result
+    (absolute-index RNG keys + VMEM-resident plane state). One loop over
+    the registry is the whole tiling matrix — the five per-rule sweeps this
+    replaces are a registry entry each."""
+    t, g = 160, 130
+    items, m = _mk(t, g, seed=11)
     qv = jnp.full((g,), 0.7, jnp.float32)
-    ref_out = np.asarray(ref.frugal1u_ref(items, rand, m, qv))
-    for bg in (128, 256):
-        for bt in (64, 256, 512):
-            got = frugal1u_update_blocked(items, rand, m, qv,
-                                          block_g=bg, block_t=bt, interpret=True)
-            np.testing.assert_allclose(np.asarray(got), ref_out, rtol=0, atol=0,
-                                       err_msg=f"block ({bt},{bg})")
+    for prog in program_mod.test_instances():
+        planes = _init_planes(prog, jnp.zeros((g,), jnp.float32))
+        want = _scan_planes(prog, items, planes, qv, SEED)
+        for bg in (64, 128):
+            for bt in (32, 256):
+                got = frugal_update_blocked(items, planes, qv, SEED,
+                                            program=prog, block_g=bg,
+                                            block_t=bt, interpret=True)
+                for f, a, b in zip(prog.layout.plane_fields, got, want):
+                    np.testing.assert_array_equal(
+                        np.asarray(a), b,
+                        err_msg=f"{prog.family} {f} block ({bt},{bg})")
 
 
 def test_kernel_nan_padding_is_noop():
-    """NaN ticks must leave state untouched (the ragged/padding contract)."""
+    """NaN ticks must leave state untouched (the ragged/padding contract),
+    for every registered program — including the window rules, whose epoch
+    restarts are gated on item validity."""
     t, g = 64, 128
-    items, rand, m = _mk(t, g, seed=5)
+    items, m = _mk(t, g, seed=5)
     qv = jnp.full((g,), 0.5, jnp.float32)
-    out1 = frugal1u_update_blocked(items, rand, m, qv, interpret=True)
-    # append a NaN block
     items2 = jnp.concatenate([items, jnp.full((32, g), jnp.nan, jnp.float32)])
-    rand2 = jnp.concatenate([rand, jnp.full((32, g), 0.99, jnp.float32)])
-    out2 = frugal1u_update_blocked(items2, rand2, m, qv, interpret=True)
-    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=0, atol=0)
+    for prog in program_mod.test_instances():
+        planes = _init_planes(prog, m)
+        out1 = frugal_update_blocked(items, planes, qv, SEED, program=prog,
+                                     interpret=True)
+        out2 = frugal_update_blocked(items2, planes, qv, SEED, program=prog,
+                                     interpret=True)
+        for f, a, b in zip(prog.layout.plane_fields, out1, out2):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"{prog.family} {f} perturbed by NaN ticks")
 
 
-def test_kernel_per_group_quantiles():
+def test_kernel_per_lane_quantiles():
     """One call, heterogeneous quantile targets across lanes."""
     t, g = 2048, 8
     rng = np.random.default_rng(9)
     items = jnp.asarray(rng.integers(0, 1000, (t, g)), jnp.float32)
-    rand = jnp.asarray(rng.random((t, g)), jnp.float32)
     m = jnp.full((g,), 500.0, jnp.float32)
     qv = jnp.asarray([0.1, 0.2, 0.3, 0.4, 0.6, 0.7, 0.8, 0.9], jnp.float32)
     step = jnp.ones((g,), jnp.float32)
     sign = jnp.ones((g,), jnp.float32)
-    m2, _, _ = frugal2u_update_blocked(items, rand, m, step, sign, qv, interpret=True)
+    prog = program_mod.family_base("2u")
+    m2, _, _ = frugal_update_blocked(items, (m, step, sign), qv, SEED,
+                                     program=prog, interpret=True)
     # final estimates must be ordered like their target quantiles (loose check)
     est = np.asarray(m2)
     assert est[0] < est[-1], f"q10 {est[0]} !< q90 {est[-1]}"
-    want = ref.frugal2u_ref(items, rand, m, step, sign, qv)
-    np.testing.assert_allclose(est, np.asarray(want[0]), rtol=0, atol=0)
+    want = ref.frugal2u_ref_fused(items, m, step, sign, qv, SEED)
+    np.testing.assert_array_equal(est, np.asarray(want[0]))
 
 
-def test_fused_kernel_block_shape_sweep():
-    """Fused kernels key the RNG on ABSOLUTE (tick, group) indices, so block
-    shape must not change a single bit of the result."""
-    t, g = 512, 384
-    items, _, m = _mk(t, g, seed=21)
-    qv = jnp.full((g,), 0.7, jnp.float32)
-    step = jnp.ones((g,), jnp.float32)
-    sign = jnp.ones((g,), jnp.float32)
-    seed = 2024
-    ref1 = np.asarray(ref.frugal1u_ref_fused(items, m, qv, seed))
-    ref2 = [np.asarray(x) for x in
-            ref.frugal2u_ref_fused(items, m, step, sign, qv, seed)]
-    for bg in (128, 256):
-        for bt in (64, 256, 512):
-            got1 = frugal1u_update_blocked_fused(
-                items, m, qv, seed, block_g=bg, block_t=bt, interpret=True)
-            np.testing.assert_array_equal(np.asarray(got1), ref1,
-                                          err_msg=f"1u block ({bt},{bg})")
-            got2 = frugal2u_update_blocked_fused(
-                items, m, step, sign, qv, seed, block_g=bg, block_t=bt,
-                interpret=True)
-            for a, b, name in zip(got2, ref2, ("m", "step", "sign")):
-                np.testing.assert_array_equal(
-                    np.asarray(a), b, err_msg=f"2u {name} block ({bt},{bg})")
+def test_rule_scalars_are_dynamic_operands():
+    """Two instances of one family with different parameters must share the
+    compiled kernel (family_base compile key) yet produce their own
+    trajectories — the scalar slots are dynamic operands."""
+    t, g = 300, 7
+    items, _ = _mk(t, g, seed=8, domain=500)
+    qv = jnp.full((g,), 0.3, jnp.float32)
+    m0 = jnp.zeros((g,), jnp.float32)
+    one = jnp.ones((g,), jnp.float32)
+    outs = {}
+    for hl in (8, 48):
+        prog = program_mod.make_program("2u-decay", half_life=hl)
+        got = frugal_update_blocked(items, (m0, one, one), qv, SEED,
+                                    program=prog, block_g=4, block_t=64,
+                                    interpret=True)
+        want = _scan_planes(prog, items, (m0, one, one), qv, SEED)
+        for f, a, b in zip(prog.layout.plane_fields, got, want):
+            np.testing.assert_array_equal(np.asarray(a), b,
+                                          err_msg=f"half_life={hl} {f}")
+        outs[hl] = np.asarray(got[1])
+    assert not np.array_equal(outs[8], outs[48]), \
+        "different half-lives must yield different step trajectories"
 
 
 if HAS_HYPOTHESIS:
-
-    @settings(max_examples=20, deadline=None)
-    @given(
-        t=st.integers(1, 80),
-        g=st.integers(1, 140),
-        seed=st.integers(0, 2**31 - 1),
-        q=st.sampled_from([0.25, 0.5, 0.75]),
-    )
-    def test_property_kernel_equals_ref_arbitrary_shapes(t, g, seed, q):
-        items, rand, m = _mk(t, g, seed=seed)
-        qv = jnp.full((g,), q, jnp.float32)
-        step = jnp.ones((g,), jnp.float32)
-        sign = jnp.ones((g,), jnp.float32)
-        got = frugal2u_update_blocked(items, rand, m, step, sign, qv,
-                                      block_g=128, block_t=64, interpret=True)
-        want = ref.frugal2u_ref(items, rand, m, step, sign, qv)
-        for a, b in zip(got, want):
-            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=0, atol=0)
 
     @settings(max_examples=15, deadline=None)
     @given(
@@ -180,17 +191,40 @@ if HAS_HYPOTHESIS:
         g=st.integers(1, 140),
         seed=st.integers(0, 2**31 - 1),
     )
-    def test_property_fused_kernel_equals_fused_ref_arbitrary_shapes(t, g, seed):
-        items, _, m = _mk(t, g, seed=seed)
+    def test_property_program_kernel_equals_ref_arbitrary_shapes(t, g, seed):
+        items, m = _mk(t, g, seed=seed)
         qv = jnp.full((g,), 0.5, jnp.float32)
         step = jnp.ones((g,), jnp.float32)
         sign = jnp.ones((g,), jnp.float32)
-        got = frugal2u_update_blocked_fused(items, m, step, sign, qv, seed,
-                                            block_g=128, block_t=64,
-                                            interpret=True)
+        prog = program_mod.family_base("2u")
+        got = frugal_update_blocked(items, (m, step, sign), qv, seed,
+                                    program=prog, block_g=128, block_t=64,
+                                    interpret=True)
         want = ref.frugal2u_ref_fused(items, m, step, sign, qv, seed)
         for a, b in zip(got, want):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        t=st.integers(1, 60),
+        g=st.integers(1, 100),
+        seed=st.integers(0, 2**31 - 1),
+        family=st.sampled_from([p.family
+                                for p in program_mod.test_instances()]),
+    )
+    def test_property_program_kernel_equals_scan_arbitrary_shapes(
+            t, g, seed, family):
+        prog = next(p for p in program_mod.test_instances()
+                    if p.family == family)
+        items, m = _mk(t, g, seed=seed)
+        qv = jnp.full((g,), 0.5, jnp.float32)
+        planes = _init_planes(prog, m)
+        got = frugal_update_blocked(items, planes, qv, seed, program=prog,
+                                    block_g=128, block_t=64, interpret=True)
+        want = _scan_planes(prog, items, planes, qv, seed)
+        for f, a, b in zip(prog.layout.plane_fields, got, want):
+            np.testing.assert_array_equal(np.asarray(a), b,
+                                          err_msg=f"{family} {f}")
 
 else:
 

@@ -1,28 +1,20 @@
-"""The ops.py padding contract, pinned down for BOTH kernel generations:
+"""The ops.py padding contract, pinned for the program kernel pair:
 
   * T padding: NaN-padded ticks are bit-identical no-ops (NaN compares False
     both ways, so a padded tick never moves state);
-  * G padding: lanes beyond the real group count carry dummy state and are
-    dropped on return — real lanes must be bit-identical to an unpadded call.
+  * G padding: lanes beyond the real lane count carry the layout's dummy
+    state and are dropped on return — real lanes must be bit-identical to an
+    unpadded call.
 
-The fused kernels additionally key their on-chip RNG on absolute indices, so
-padding must not perturb the uniforms real ticks consume.
+The kernel keys its on-chip RNG on absolute indices, so padding must not
+perturb the uniforms real ticks consume — for ANY registered program.
 """
 import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.kernels import (
-    frugal1u_update_blocked_fused,
-    frugal2u_update_blocked_fused,
-)
-# Warning-free internal impls of the deprecated rand-operand wrappers:
-# tier-1 runs with DeprecationWarning promoted to error (pytest.ini), and
-# only tests/test_deprecations.py may expect the shim's warning.
-from repro.kernels.ops import (
-    _frugal1u_update_blocked as frugal1u_update_blocked,
-    _frugal2u_update_blocked as frugal2u_update_blocked,
-)
+from repro.core import program as program_mod
+from repro.kernels import frugal_update_blocked
 
 SEED = 424242
 
@@ -30,111 +22,65 @@ SEED = 424242
 def _mk(t, g, seed=0, domain=300):
     rng = np.random.default_rng(seed)
     items = jnp.asarray(rng.integers(0, domain, (t, g)), jnp.float32)
-    rand = jnp.asarray(rng.random((t, g)), jnp.float32)
     m = jnp.asarray(rng.integers(0, domain, g), jnp.float32)
-    return items, rand, m
+    return items, m
+
+
+def _init_planes(program, m):
+    layout = program.layout
+    return tuple(
+        m if f == "m" else (jnp.array(m) if f in layout.heads
+                            else jnp.ones_like(m))
+        for f in layout.plane_fields)
+
+
+@pytest.fixture(params=[p.family for p in program_mod.test_instances()])
+def program(request):
+    return next(p for p in program_mod.test_instances()
+                if p.family == request.param)
 
 
 # ------------------------------------------------------------- NaN tick no-op
-@pytest.mark.parametrize("entry", ["old", "fused"])
-def test_nan_padded_ticks_are_bit_identical_noops_1u(entry):
+def test_nan_padded_ticks_are_bit_identical_noops(program):
     t, g = 96, 130
-    items, rand, m = _mk(t, g, seed=1)
+    items, m = _mk(t, g, seed=1)
     qv = jnp.full((g,), 0.5, jnp.float32)
+    planes = _init_planes(program, m)
     nan_block = jnp.full((64, g), jnp.nan, jnp.float32)
-    items2 = jnp.concatenate([items, nan_block])
-    if entry == "old":
-        rand2 = jnp.concatenate([rand, jnp.full((64, g), 0.99, jnp.float32)])
-        out1 = frugal1u_update_blocked(items, rand, m, qv, interpret=True)
-        out2 = frugal1u_update_blocked(items2, rand2, m, qv, interpret=True)
-    else:
-        out1 = frugal1u_update_blocked_fused(items, m, qv, SEED, interpret=True)
-        out2 = frugal1u_update_blocked_fused(items2, m, qv, SEED, interpret=True)
-    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
-
-
-@pytest.mark.parametrize("entry", ["old", "fused"])
-def test_nan_padded_ticks_are_bit_identical_noops_2u(entry):
-    t, g = 96, 130
-    items, rand, m = _mk(t, g, seed=2)
-    step = jnp.ones((g,), jnp.float32)
-    sign = jnp.ones((g,), jnp.float32)
-    qv = jnp.full((g,), 0.9, jnp.float32)
-    nan_block = jnp.full((32, g), jnp.nan, jnp.float32)
-    items2 = jnp.concatenate([items, nan_block])
-    if entry == "old":
-        rand2 = jnp.concatenate([rand, jnp.full((32, g), 0.01, jnp.float32)])
-        out1 = frugal2u_update_blocked(items, rand, m, step, sign, qv,
-                                       interpret=True)
-        out2 = frugal2u_update_blocked(items2, rand2, m, step, sign, qv,
-                                       interpret=True)
-    else:
-        out1 = frugal2u_update_blocked_fused(items, m, step, sign, qv, SEED,
-                                             interpret=True)
-        out2 = frugal2u_update_blocked_fused(items2, m, step, sign, qv, SEED,
-                                             interpret=True)
-    for a, b, name in zip(out1, out2, ("m", "step", "sign")):
-        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
-                                      err_msg=f"{name} perturbed by NaN ticks")
+    out1 = frugal_update_blocked(items, planes, qv, SEED, program=program,
+                                 interpret=True)
+    out2 = frugal_update_blocked(jnp.concatenate([items, nan_block]), planes,
+                                 qv, SEED, program=program, interpret=True)
+    for f, a, b in zip(program.layout.plane_fields, out1, out2):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"{program.family}: {f} perturbed by NaN ticks")
 
 
 # ------------------------------------------------------- G-lane padding drop
-@pytest.mark.parametrize("entry", ["old", "fused"])
 @pytest.mark.parametrize("g", [1, 127, 129, 250])
-def test_padded_g_lanes_are_dropped_1u(entry, g):
+def test_padded_g_lanes_are_dropped(program, g):
     """A non-multiple-of-block G must return exactly [G] real lanes, each
     bit-identical to what a wider (pre-padded) call computes for them."""
     t = 64
-    items, rand, m = _mk(t, g, seed=g)
+    items, m = _mk(t, g, seed=g)
     qv = jnp.full((g,), 0.5, jnp.float32)
-    if entry == "old":
-        out = frugal1u_update_blocked(items, rand, m, qv, interpret=True)
-    else:
-        out = frugal1u_update_blocked_fused(items, m, qv, SEED, interpret=True)
-    assert out.shape == (g,)
+    planes = _init_planes(program, m)
+    out = frugal_update_blocked(items, planes, qv, SEED, program=program,
+                                interpret=True)
+    assert all(x.shape == (g,) for x in out)
 
     # widen by hand with junk lanes; real lanes must be untouched
     gp = (-g) % 128
     items_w = jnp.pad(items, ((0, 0), (0, gp)), constant_values=123.0)
-    m_w = jnp.pad(m, (0, gp), constant_values=7.0)
     q_w = jnp.pad(qv, (0, gp), constant_values=0.25)
-    if entry == "old":
-        rand_w = jnp.pad(rand, ((0, 0), (0, gp)), constant_values=0.9)
-        out_w = frugal1u_update_blocked(items_w, rand_w, m_w, q_w, interpret=True)
-    else:
-        out_w = frugal1u_update_blocked_fused(items_w, m_w, q_w, SEED,
-                                              interpret=True)
-    np.testing.assert_array_equal(np.asarray(out), np.asarray(out_w)[:g])
-
-
-@pytest.mark.parametrize("entry", ["old", "fused"])
-def test_padded_g_lanes_are_dropped_2u(entry):
-    t, g = 64, 130
-    items, rand, m = _mk(t, g, seed=11)
-    step = jnp.ones((g,), jnp.float32)
-    sign = jnp.ones((g,), jnp.float32)
-    qv = jnp.full((g,), 0.5, jnp.float32)
-    if entry == "old":
-        out = frugal2u_update_blocked(items, rand, m, step, sign, qv,
-                                      interpret=True)
-    else:
-        out = frugal2u_update_blocked_fused(items, m, step, sign, qv, SEED,
-                                            interpret=True)
-    assert all(x.shape == (g,) for x in out)
-
-    gp = (-g) % 128
-    items_w = jnp.pad(items, ((0, 0), (0, gp)), constant_values=50.0)
-    m_w = jnp.pad(m, (0, gp), constant_values=0.0)
-    step_w = jnp.pad(step, (0, gp), constant_values=1.0)
-    sign_w = jnp.pad(sign, (0, gp), constant_values=1.0)
-    q_w = jnp.pad(qv, (0, gp), constant_values=0.5)
-    if entry == "old":
-        rand_w = jnp.pad(rand, ((0, 0), (0, gp)), constant_values=0.5)
-        out_w = frugal2u_update_blocked(items_w, rand_w, m_w, step_w, sign_w,
-                                        q_w, interpret=True)
-    else:
-        out_w = frugal2u_update_blocked_fused(items_w, m_w, step_w, sign_w,
-                                              q_w, SEED, interpret=True)
-    for a, b, name in zip(out, out_w, ("m", "step", "sign")):
-        np.testing.assert_array_equal(np.asarray(a), np.asarray(b)[:g],
-                                      err_msg=f"{name} real lanes perturbed")
+    layout = program.layout
+    planes_w = tuple(
+        jnp.pad(p, (0, gp), constant_values=7.0 if f in layout.heads else 1.0)
+        for f, p in zip(layout.plane_fields, planes))
+    out_w = frugal_update_blocked(items_w, planes_w, q_w, SEED,
+                                  program=program, interpret=True)
+    for f, a, b in zip(layout.plane_fields, out, out_w):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)[:g],
+            err_msg=f"{program.family}: {f} real lanes perturbed")

@@ -1,9 +1,13 @@
 """Public-API lint (repro.api.lint): every subpackage `__all__` name must
 resolve — export drift (like the near-miss in PR 2's parallel/__init__.py)
-fails here AND in the dedicated CI step."""
+fails here AND in the dedicated CI step — and every registered LaneProgram
+must be whole (packing spec, query, scalar slots matching the tick's scan
+signature)."""
+import dataclasses
+
 import pytest
 
-from repro.api.lint import check_public_api, iter_subpackages
+from repro.api.lint import check_programs, check_public_api, iter_subpackages
 
 
 def test_every_dunder_all_name_resolves():
@@ -39,3 +43,34 @@ def test_facade_names_resolve_from_top_level():
     for name in ("QuantileFleet", "FleetSpec", "StreamCursor",
                  "QuantileEstimator", "FrugalEstimator"):
         assert getattr(repro, name) is not None
+
+
+def test_every_registered_program_validates():
+    families = check_programs()
+    # the five legacy rules plus the DP rule must all be registered
+    for fam in ("1u", "2u", "2u-decay", "1u-window", "2u-window", "2u-dp"):
+        assert fam in families
+
+
+def test_half_registered_program_fails_lint():
+    """A program whose packing spec does not cover its planes, or whose
+    scalar slots do not resolve, must be refused at REGISTRATION (layout
+    __post_init__) or by validate_program — never surface as a user-side
+    shape error."""
+    from repro.core.program import (LaneProgram, StateLayout, family_base,
+                                    validate_program)
+
+    with pytest.raises(ValueError, match="packing"):
+        StateLayout(plane_fields=("m", "step", "sign"),
+                    packing=(("m", None),))       # pairs not enumerated
+    with pytest.raises(ValueError, match="query_fields"):
+        StateLayout(plane_fields=("m",), packing=(("m", None),),
+                    query_fields=("m2",))         # queries a missing plane
+
+    base = family_base("2u")
+    # declares a scalar slot its parameters cannot resolve
+    broken = dataclasses.replace(
+        base, layout=dataclasses.replace(base.layout,
+                                         scalar_names=("half_life_ticks",)))
+    with pytest.raises((AssertionError, ValueError)):
+        validate_program(broken)

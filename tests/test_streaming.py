@@ -103,6 +103,7 @@ def test_ingest_stream_survives_int32_tick_wraparound():
     OverflowError — the unbounded-stream contract. Simulated by starting
     the rechunker near the boundary via many chunks... too slow to reach
     for real, so exercise the wrap helper plus a kernel call at the edge."""
+    from repro.core import program as program_mod
     from repro.core import rng as crng
     from repro.kernels import ops
 
@@ -110,9 +111,10 @@ def test_ingest_stream_survives_int32_tick_wraparound():
     assert crng.wrap_i32(2**31 - 1) == 2**31 - 1
     assert crng.wrap_i32(2**32 + 5) == 5
     # a fused call at a wrapped offset must execute cleanly
-    m = ops.frugal1u_update_auto_fused(
-        jnp.ones((8, 4), jnp.float32), jnp.zeros((4,), jnp.float32), 0.5,
-        seed=1, t_offset=crng.wrap_i32(2**31 + 3))
+    (m,) = ops.frugal_update_auto(
+        jnp.ones((8, 4), jnp.float32), (jnp.zeros((4,), jnp.float32),), 0.5,
+        seed=1, program=program_mod.family_base("1u"),
+        t_offset=crng.wrap_i32(2**31 + 3))
     assert m.shape == (4,)
     assert bool(jnp.all(jnp.isfinite(m)))
     # both continuation entry points wrap a past-2^31 t_offset identically
