@@ -1,0 +1,177 @@
+"""E12 (ours) — resilience layer overhead: hardened vs bare hot path.
+
+The resilience layer (DESIGN.md §12) must be close to free when nothing is
+failing: disarmed chaos hooks are no-op constants, the lane health scan is
+one jitted pass over G words, and the format-4 per-leaf CRC adds one
+zlib.crc32 over bytes that were being written anyway. Measured here at
+G = 4096 over a full operational cycle per rep:
+
+  * bare     — ingest_stream + save_checkpoint(checksum=False): the
+               pre-resilience cycle (format-4 layout, no CRC list, no
+               health scan, spec health policy left at its default),
+  * hardened — spec(health="quarantine") + ingest_stream + check_health()
+               + save_checkpoint(checksum=True): everything §12 arms in
+               production.
+
+Gate: hardened cycle time ≤ 1.05× bare (recorded as `gate_met`; loud
+warning, not a hard assert — wall-clock on shared CI is too noisy, the
+check_gates step re-runs and enforces). The run also asserts the two
+trajectories are BIT-IDENTICAL and that check_health() on a healthy fleet
+is a pure no-op on state — the speed comparison is meaningless if the
+hardened arm computed something else.
+
+Results land in artifacts/bench/e12_resilience_overhead.json AND repo-root
+BENCH_resilience_overhead.json for the PR-over-PR trajectory.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.api import FleetSpec, QuantileFleet
+from repro.train import checkpoint as ckpt
+from .common import save_result, csv_line
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(_ROOT, "BENCH_resilience_overhead.json")
+
+# Maximum tolerated hardened/bare cycle-time ratio.
+GATE_MAX_OVERHEAD = 1.05
+
+
+def _median_time(fn, reps):
+    jax.block_until_ready(fn())               # warm-up / compile, drained
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def run(quick: bool = True, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    g = 4096
+    t_items = 2_000 if quick else 10_000
+    chunk_t = 512
+    reps = 5 if quick else 9
+    items = jnp.asarray(rng.normal(100.0, 15.0, (t_items, g)), jnp.float32)
+    counter_seed = 17
+
+    spec_bare = FleetSpec(num_groups=g, quantiles=(0.5,), backend="fused",
+                          chunk_t=chunk_t)
+    spec_hard = FleetSpec(num_groups=g, quantiles=(0.5,), backend="fused",
+                          chunk_t=chunk_t, health="quarantine")
+
+    work = tempfile.mkdtemp(prefix="bench_e12_")
+    dir_bare = os.path.join(work, "bare")
+    dir_hard = os.path.join(work, "hard")
+
+    # steady-state cycle: the cursor advancing between reps changes t_offset
+    # VALUES only, not shapes, so the jitted paths stay cached. Each rep is
+    # one full operational cycle: ingest the slab, (hardened: scan lanes),
+    # checkpoint. step counts up so save never hits the idempotent-resave
+    # fast path.
+    state = {"bare": QuantileFleet.create(spec_bare, seed=counter_seed),
+             "hard": QuantileFleet.create(spec_hard, seed=counter_seed),
+             "bare_step": 0, "hard_step": 0}
+
+    def bare():
+        state["bare"] = state["bare"].ingest(items)
+        state["bare_step"] += 1
+        ckpt.save_checkpoint(dir_bare, state["bare_step"],
+                             state["bare"].checkpoint_state(),
+                             keep=2, checksum=False)
+        return state["bare"].state.m
+
+    def hardened():
+        fleet = state["hard"].ingest(items)
+        fleet, report = fleet.check_health()
+        assert report.healthy       # clean data: the scan must stay quiet
+        state["hard"] = fleet
+        state["hard_step"] += 1
+        ckpt.save_checkpoint(dir_hard, state["hard_step"],
+                             fleet.checkpoint_state(),
+                             keep=2, checksum=True)
+        return fleet.state.m
+
+    # correctness first: the comparison is void if trajectories diverge.
+    # check_health on a healthy fleet must be a state no-op, so both arms
+    # walk the identical trajectory from the identical seed.
+    f_a = QuantileFleet.create(spec_bare, seed=counter_seed).ingest(items)
+    f_b = QuantileFleet.create(spec_hard, seed=counter_seed).ingest(items)
+    f_b, rep0 = f_b.check_health()
+    assert rep0.healthy and rep0.quarantined == 0
+    np.testing.assert_array_equal(np.asarray(f_a.state.m),
+                                  np.asarray(f_b.state.m))
+
+    t_bare = _median_time(bare, reps)
+    t_hard = _median_time(hardened, reps)
+    overhead = t_hard / t_bare
+    gate_met = overhead <= GATE_MAX_OVERHEAD
+
+    # component timings (not gated, recorded for the trajectory): the scan
+    # alone, and the CRC delta on the checkpoint write alone.
+    fleet_scan = state["hard"]
+
+    def scan_only():
+        _, report = fleet_scan.check_health()
+        return report.corrupt_lanes
+
+    t_scan = _median_time(lambda: jnp.zeros(()) if scan_only() >= 0 else 0,
+                          max(3, reps - 2))
+    blob = state["hard"].checkpoint_state()
+    steps = {"c0": 0, "c1": 0}
+
+    def _save(tag, checksum):
+        # fresh step each call: the idempotent-resave fast path must not
+        # turn later reps into no-ops
+        steps[tag] += 1
+        ckpt.save_checkpoint(os.path.join(work, tag), steps[tag], blob,
+                             keep=1, checksum=checksum)
+        return jnp.zeros(())
+
+    t_ck_plain = _median_time(lambda: _save("c0", False), max(3, reps - 2))
+    t_ck_crc = _median_time(lambda: _save("c1", True), max(3, reps - 2))
+    shutil.rmtree(work, ignore_errors=True)
+
+    us_bare = t_bare / (t_items * g) * 1e6
+    us_hard = t_hard / (t_items * g) * 1e6
+
+    payload = {
+        "g": g, "t_items": t_items, "chunk_t": chunk_t, "reps": reps,
+        "bare_cycle_s": t_bare, "hardened_cycle_s": t_hard,
+        "bare_us_per_item": us_bare, "hardened_us_per_item": us_hard,
+        "hardened_overhead_ratio": overhead,
+        "gate_max_overhead": GATE_MAX_OVERHEAD, "gate_met": bool(gate_met),
+        "health_scan_s": t_scan,
+        "ckpt_plain_s": t_ck_plain, "ckpt_crc_s": t_ck_crc,
+        "ckpt_crc_delta_s": t_ck_crc - t_ck_plain,
+        "bit_exact_vs_bare": True,
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=1)
+    save_result("e12_resilience_overhead", payload)
+
+    if not gate_met:
+        print(f"WARNING: resilience overhead {overhead:.3f}x exceeds gate "
+              f"{GATE_MAX_OVERHEAD}x (see {BENCH_JSON}; re-check on an "
+              "unloaded machine)", flush=True)
+
+    lines = [
+        csv_line("resilience_bare_cycle", us_bare,
+                 f"g={g};chunk_t={chunk_t}"),
+        csv_line("resilience_hardened_cycle", us_hard,
+                 f"overhead={overhead:.3f}x;gate_met={gate_met}"),
+        csv_line("resilience_health_scan", t_scan / g * 1e6,
+                 f"ckpt_crc_delta_s={t_ck_crc - t_ck_plain:.4f}"),
+    ]
+    return lines, payload

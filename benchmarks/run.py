@@ -23,7 +23,7 @@ def main() -> None:
         bench_combined_stream, bench_groupby_twitter,
         bench_convergence_theory, bench_program_engine,
         bench_kernel_throughput, bench_sharded_fleet, bench_fleet_api,
-        bench_drift_tracking)
+        bench_drift_tracking, bench_resilience_overhead)
 
     suite = {
         "e1": ("static_cauchy (paper Fig 4)", bench_static_cauchy.run),
@@ -42,6 +42,8 @@ def main() -> None:
         "e10": ("fleet_api overhead + Q-lanes (ours)", bench_fleet_api.run),
         "e11": ("drift_tracking decay vs vanilla (ours)",
                 bench_drift_tracking.run),
+        "e12": ("resilience overhead hardened vs bare (ours)",
+                bench_resilience_overhead.run),
     }
     only = set(args.only.split(",")) if args.only else None
     if only:

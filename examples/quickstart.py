@@ -50,12 +50,49 @@ import tempfile
 
 with tempfile.TemporaryDirectory() as ckpt_dir:
     half = QuantileFleet.create(spec, seed=0).ingest(items[:T // 2])
-    half.checkpoint(ckpt_dir, step=1)             # format-3, 2 words/lane
+    half.checkpoint(ckpt_dir, step=1)     # format-4: 2 words/lane + CRC32
     resumed = QuantileFleet.restore(ckpt_dir, spec).ingest(items[T // 2:])
 assert np.array_equal(resumed.estimate(), fleet.estimate()), \
     "a restored fleet continues its exact trajectory"
 print("checkpoint -> restore -> continue: bit-identical to the "
       "uninterrupted run")
+
+# ---- resilience: self-healing lanes + verified checkpoints -----------------
+# (DESIGN.md section 12.) Lane health derives from each program's DECLARED
+# plane invariants (heads finite, sign exactly +-1, step must survive its
+# own packing); FleetSpec(health=...) picks the policy: "raise" (default)
+# turns corruption into a loud LaneCorruptionError, "quarantine" re-
+# initializes each corrupt lane bit-exactly to a fresh lane at the current
+# cursor, so the fleet rejoins its deterministic trajectory. The seeded
+# chaos harness injects a single bit flip mid-stream here — in production
+# the hooks are disarmed no-op constants (gated <= 1.05x by bench e12).
+import dataclasses
+
+from repro.resilience import chaos
+
+hard_spec = dataclasses.replace(spec, backend="jnp", health="quarantine")
+flip = chaos.Fault(kind="flip", at=T - 100, plane=2, lane=7, bit=22)
+with chaos.armed(chaos.FaultPlan(faults=[flip])):
+    hard = QuantileFleet.create(hard_spec, seed=0).ingest_stream(
+        items[i:i + 500] for i in range(0, T, 500))
+assert hard.health().corrupt_lanes == 1
+hard, report = hard.check_health()                # quarantine: heal + report
+assert hard.health().healthy
+print(f"chaos bit flip -> {report}; fleet healthy again "
+      f"({report.quarantined} lane re-initialized at the cursor)")
+
+# Format-4 restore verifies every leaf against the manifest CRC32: a
+# corrupt step is QUARANTINED (renamed *.corrupt) and restore falls back
+# to the newest intact committed step instead of resurrecting rotten bytes.
+with tempfile.TemporaryDirectory() as ckpt_dir:
+    half.checkpoint(ckpt_dir, step=1)
+    fleet.checkpoint(ckpt_dir, step=2)
+    chaos.corrupt_leaf_bytes(f"{ckpt_dir}/step_00000002", mode="rewrite")
+    fallback = QuantileFleet.restore(ckpt_dir, spec)
+assert np.array_equal(fallback.estimate(), half.estimate()), \
+    "fallback must land on the older INTACT step"
+print("corrupt newest checkpoint -> restore quarantined it and fell back "
+      "to the intact step")
 
 # ---- lane programs: swap the update rule, keep the fleet -------------------
 # The update rule is a FleetSpec field: program="2u" is the paper's

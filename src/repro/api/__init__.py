@@ -5,10 +5,13 @@
                   and StreamCursor (explicit (seed, t_offset, g_offset)
                   stream position — functional advance, checkpointable).
   fleet.py      — QuantileFleet: ingest/ingest_stream/tick_lanes/estimate/
-                  grow/checkpoint over a (G × Q) multi-quantile lane plane,
-                  bit-identical across backends, Q=1 bit-identical to the
-                  legacy sketch entry points (now thin shims — DESIGN.md §9
-                  has the migration table).
+                  grow/checkpoint/health over a (G × Q) multi-quantile lane
+                  plane, bit-identical across backends, Q=1 bit-identical
+                  to the legacy sketch entry points (now thin shims —
+                  DESIGN.md §9 has the migration table). ingest_stream is
+                  crash-consistent (resumable StreamInterrupted +
+                  skip_items) and check_health applies FleetSpec's lane
+                  health policy (DESIGN.md §12).
   estimators.py — FrugalEstimator: frugal lanes behind the baselines'
                   QuantileEstimator protocol (one benchmark battery loop).
   lint.py       — public-API export lint (CI step + tier-1 test).

@@ -12,7 +12,7 @@ QuantileFleet folds them into one surface:
     fleet = QuantileFleet.create(spec, seed=0)
     fleet = fleet.ingest(items)          # [t, G] block; cursor auto-advances
     fleet.estimate()                     # [G, Q] numpy
-    fleet.checkpoint(ckpt_dir, step=n)   # format-3, bit-exact resume
+    fleet.checkpoint(ckpt_dir, step=n)   # format-4, checksummed, bit-exact resume
 
 Design points:
 
@@ -33,6 +33,16 @@ Design points:
     supports sparse event ingestion — `tick_lanes` / `tick_lanes_sparse` —
     where each lane's k-th event consumes uniform (seed, k, lane)
     regardless of batching. serve.SLOFleet runs on exactly this.
+  * **Resilient by construction.** `ingest_stream` is crash-consistent: a
+    dying source surfaces as a resumable chaos.StreamInterrupted carrying
+    the fleet advanced through every fully-applied chunk, and
+    `skip_items=err.items_applied` replays only the uncommitted suffix —
+    bit-exact with the uninterrupted run. `health()`/`check_health()` scan
+    the lane planes against the program's declared StateLayout invariants
+    and apply FleetSpec's health policy ("raise" / "quarantine" /
+    "ignore"); quarantined lanes are re-initialized in place and, because
+    uniforms key on the absolute (seed, tick, lane), tick on bit-exactly
+    like lanes created at the current cursor (DESIGN.md §12).
 
 The facade is a registered pytree (spec static, state + cursor dynamic), so
 jnp-backend fleets ride inside jitted train/serve steps — the monitor
@@ -42,7 +52,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Iterable, Optional, Union
+from typing import Iterable, Optional, Tuple, Union
 
 import numpy as np
 import jax
@@ -53,6 +63,8 @@ from repro.core import program as program_mod
 from repro.core import rng as crng
 from repro.core.sketch import GroupedQuantileSketch
 from repro.parallel.group_sharding import ShardedGroupFleet
+from repro.resilience import chaos
+from repro.resilience import health as health_mod
 
 from .spec import FleetSpec, StreamCursor
 
@@ -162,6 +174,41 @@ class QuantileFleet:
             return self.state.unshard()
         return self.state
 
+    # ---------------------------------------------------------------- health
+    def health(self) -> health_mod.HealthReport:
+        """Scan-only lane health report: every lane's planes checked against
+        the spec program's declared StateLayout invariants (finite heads,
+        exact ±1 signs, pack-round-trippable steps — resilience.health).
+        Never mutates or raises; `check_health` applies the policy."""
+        sk = self._lane_sketch()
+        return health_mod.report_for(self.spec.program, sk.planes(),
+                                     self.spec.health)
+
+    def check_health(self) -> Tuple["QuantileFleet", "health_mod.HealthReport"]:
+        """Scan lane health and APPLY spec.health: returns (fleet, report).
+
+        "raise"      — LaneCorruptionError if any lane is corrupt;
+        "quarantine" — corrupt lanes re-initialized in place (fresh default
+                       lane state; future ticks bit-exact with a lane
+                       CREATED at the current cursor — counter-hashed
+                       uniforms make healing ripple-free), healthy lanes
+                       untouched bit-for-bit;
+        "ignore"     — report only.
+        """
+        rep = self.health()
+        if rep.healthy or self.spec.health == "ignore":
+            return self, rep
+        if self.spec.health == "raise":
+            raise health_mod.LaneCorruptionError(str(rep))
+        sk = self._lane_sketch()
+        prog = self.spec.program
+        mask = health_mod.validate_planes(prog, sk.planes())
+        healed = sk.with_planes(
+            health_mod.heal_planes(prog, sk.planes(), mask))
+        rep = dataclasses.replace(rep, quarantined=rep.corrupt_lanes)
+        return dataclasses.replace(
+            self, state=self._place(self.spec, healed)), rep
+
     # ---------------------------------------------------------- block ingest
     def _as_items(self, items) -> Array:
         items = jnp.asarray(items, jnp.float32)
@@ -203,15 +250,34 @@ class QuantileFleet:
         return dataclasses.replace(self, state=state, cursor=cur.advance(t))
 
     def ingest_stream(self, chunks: Iterable,
-                      chunk_t: Optional[int] = None) -> "QuantileFleet":
+                      chunk_t: Optional[int] = None,
+                      skip_items: int = 0) -> "QuantileFleet":
         """Ingest an unbounded host-side stream of [t_i, G] blocks with
         O(chunk_t · G) transient memory (core.streaming re-chunker under the
         hood — identical blocking, bit-identical result to `ingest` of the
         concatenated stream). The cursor advances by the number of REAL
-        items, so successive calls continue the uniform stream seamlessly."""
+        items, so successive calls continue the uniform stream seamlessly.
+
+        Crash consistency: if the source raises mid-stream, the exception
+        re-raises as a resumable chaos.StreamInterrupted whose `fleet` is
+        THIS fleet advanced through every fully-applied chunk (cursor
+        included) and whose `items_applied` counts the committed leading
+        items of the ORIGINAL stream (skip_items-cumulative). Resume with
+
+            fleet = err.fleet.ingest_stream(same_stream,
+                                            skip_items=err.items_applied)
+
+        and the final state is bit-identical to the uninterrupted run —
+        no item is ever dropped or double-applied (tests/test_resilience.py
+        kills ingest at every chunk boundary to prove it). `skip_items`
+        drops that many leading real rows host-side before any work."""
         self._require_scalar_clock("ingest_stream")
         chunk_t = chunk_t or self.spec.chunk_t
         cur = self.cursor
+        skip_items = int(skip_items)
+        if skip_items:
+            chunks = streaming.drop_leading_items(chunks, skip_items,
+                                                  self.num_groups)
         counted = [0]
 
         def counting():
@@ -223,27 +289,66 @@ class QuantileFleet:
                 counted[0] += shape[0] if shape else 1
                 yield c
 
-        if isinstance(self.state, ShardedGroupFleet):
-            state = self.state.ingest_stream(
-                counting(), seed=cur.seed, chunk_t=chunk_t,
-                t_offset=int(cur.t_offset), g_offset=int(cur.g_offset))
-        elif self.spec.backend == "jnp":
-            state = self.state
-            t_base = int(cur.t_offset)
-            for block, t0 in streaming.rechunk_blocks(
-                    counting(), self.num_groups, chunk_t):
-                state = state.process_seeded(
-                    jnp.asarray(block), cur.seed,
-                    t_offset=crng.wrap_i32(t_base + t0),
-                    g_offset=cur.g_offset,
+        try:
+            if isinstance(self.state, ShardedGroupFleet):
+                state = self.state.ingest_stream(
+                    counting(), seed=cur.seed, chunk_t=chunk_t,
+                    t_offset=int(cur.t_offset), g_offset=int(cur.g_offset))
+            elif self.spec.backend == "jnp":
+                state = self._ingest_stream_jnp(counting(), chunk_t, counted)
+            else:
+                state = streaming.ingest_stream(
+                    self.state, counting(), seed=cur.seed, chunk_t=chunk_t,
+                    t_offset=int(cur.t_offset), g_offset=cur.g_offset,
                     lanes_per_group=self.num_quantiles)
-        else:
-            state = streaming.ingest_stream(
-                self.state, counting(), seed=cur.seed, chunk_t=chunk_t,
-                t_offset=int(cur.t_offset), g_offset=cur.g_offset,
-                lanes_per_group=self.num_quantiles)
+        except chaos.StreamInterrupted as e:
+            applied = e.items_applied
+            partial = dataclasses.replace(self, state=e.state,
+                                          cursor=cur.advance(applied))
+            total = skip_items + applied
+            raise chaos.StreamInterrupted(
+                f"{e}; resume with err.fleet.ingest_stream(stream, "
+                f"skip_items={total}) over the ORIGINAL stream",
+                state=e.state, fleet=partial, items_applied=total) from e
         return dataclasses.replace(self, state=state,
                                    cursor=cur.advance(counted[0]))
+
+    def _ingest_stream_jnp(self, chunks, chunk_t: int, counted):
+        """jnp-backend stream loop — mirrors core.streaming.ingest_stream's
+        crash-consistency contract (fully-applied chunks only; staged
+        partial buffers die with the interrupt) over process_seeded."""
+        cur = self.cursor
+        state = self.state
+        t_base = int(cur.t_offset)
+        applied = 0
+        blocks = streaming.rechunk_blocks(chunks, self.num_groups, chunk_t)
+        while True:
+            try:
+                block, t0 = next(blocks)
+            except StopIteration:
+                break
+            except (ValueError, TypeError):
+                raise   # malformed input — not resumable
+            except Exception as e:
+                raise chaos.StreamInterrupted(
+                    f"stream source failed after {applied} applied "
+                    f"item(s): {e}", state=state,
+                    items_applied=applied) from e
+            state = state.process_seeded(
+                jnp.asarray(block), cur.seed,
+                t_offset=crng.wrap_i32(t_base + t0),
+                g_offset=cur.g_offset,
+                lanes_per_group=self.num_quantiles)
+            applied = min(counted[0], applied + chunk_t)
+            state = chaos.corrupt_sketch(state, t_base + int(t0),
+                                         t_base + int(t0) + chunk_t)
+            try:
+                chaos.count_event("ingest")
+            except chaos.StreamFault as e:
+                raise chaos.StreamInterrupted(
+                    f"stream fault after {applied} applied item(s): {e}",
+                    state=state, items_applied=applied) from e
+        return state
 
     # ---------------------------------------------------------- event ingest
     def tick_lanes(self, items, mask=None) -> "QuantileFleet":
@@ -397,7 +502,7 @@ class QuantileFleet:
     # -------------------------------------------------------- serialization
     def checkpoint_state(self) -> dict:
         """Checkpoint pytree: the lane sketch (stored PACKED — 1-2 words per
-        lane, format 3) plus the cursor (int32 leaves). Bit-exact resume:
+        lane, format 4) plus the cursor (int32 leaves). Bit-exact resume:
         restoring and continuing reproduces the uninterrupted trajectory."""
         return {"sketch": self._lane_sketch(), "cursor": self.cursor}
 
@@ -454,7 +559,9 @@ class QuantileFleet:
         return cls(state=cls._place(spec, sk), cursor=cursor, spec=spec)
 
     def checkpoint(self, ckpt_dir: str, step: int, keep: int = 3) -> str:
-        """Write a committed format-3 checkpoint (train.checkpoint layout)."""
+        """Write a committed, per-leaf-checksummed format-4 checkpoint
+        (train.checkpoint layout — restore verifies the CRCs and falls back
+        to the newest intact step, quarantining corrupt ones)."""
         from repro.train import checkpoint as ckpt
         return ckpt.save_checkpoint(ckpt_dir, step, self.checkpoint_state(),
                                     keep=keep)

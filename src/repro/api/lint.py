@@ -9,9 +9,13 @@ each `__all__` entry.
 
 It also lints the LaneProgram registry (check_programs): every registered
 family's canonical instance must declare a packing spec that enumerates its
-planes, a query function that answers, and kernel scalar slots that match
-its scan signature (a smoke tick runs with exactly the declared operands) —
-so a half-registered program fails CI, not a user's first ingest.
+planes, a query function that answers, kernel scalar slots that match its
+scan signature (a smoke tick runs with exactly the declared operands), and
+— since the resilience layer — an invariant DOMAIN for every plane field
+(StateLayout.invariants: 'finite'/'step'/'sign'), because lane health
+scanning (resilience.health.validate_planes) is derived from those
+declarations; a program whose planes can't be health-checked fails CI, not
+a user's first check_health().
 
 CI runs both as a dedicated step (`python -m repro.api.lint`);
 tests/test_public_api runs them in tier-1.

@@ -116,6 +116,16 @@ class FleetSpec:
                  `program=`, kept for compatibility and always consistent
                  with it. Any program is invariant to backend × chunking ×
                  mesh, like everything else here.
+    health     — lane-corruption policy for QuantileFleet.check_health()
+                 (resilience.health.HEALTH_POLICIES):
+                 "raise"      : LaneCorruptionError on any invariant
+                                violation (default — loud failure);
+                 "quarantine" : re-initialize corrupt lanes in place (fresh
+                                lane state at the current cursor — future
+                                ticks are bit-exact with a fleet whose lane
+                                STARTED there) and count them in the
+                                HealthReport;
+                 "ignore"     : report only, never mutate or raise.
 
     Hashable → usable as static pytree metadata / jit static argument.
     """
@@ -128,6 +138,7 @@ class FleetSpec:
     mesh: Optional[Mesh] = None
     drift: Optional[DriftConfig] = None
     program: Optional[Union[str, LaneProgram]] = None
+    health: str = "raise"
 
     def __post_init__(self):
         qs = tuple(float(q) for q in np.atleast_1d(np.asarray(self.quantiles,
@@ -149,6 +160,11 @@ class FleetSpec:
             raise ValueError(f"chunk_t must be positive, got {self.chunk_t}")
         if self.mesh is not None and self.backend != "sharded":
             raise ValueError("mesh= only applies to backend='sharded'")
+        from repro.resilience.health import HEALTH_POLICIES
+        if self.health not in HEALTH_POLICIES:
+            raise ValueError(
+                f"health must be one of {HEALTH_POLICIES}, got "
+                f"{self.health!r}")
         if self.drift is not None:
             self.drift.validate_for_algo(self.algo)
         prog = self.program

@@ -86,6 +86,22 @@ def unpack_step_sign(packed: Array) -> Tuple[Array, Array]:
     return step, sign
 
 
+def step_sign_word_canonical(packed: Array) -> Array:
+    """Bool mask: True where `packed` is a word pack_step_sign can emit.
+
+    The canonical set is {0, 0x80000000} ∪ {e' in [64, 158]} ∪
+    {e' in [160, 254]} (e' = biased exponent field, step's own float sign
+    bit free) — exactly the words for which decode → re-encode round-trips
+    bit-for-bit, which is how this predicate computes it. Everything else
+    (e' in [1, 63], e' = 159 or 255, zero-exponent words with mantissa
+    bits) can only arise from corruption of the serialized word and is
+    what resilience.health / the checkpoint CRCs exist to catch; the
+    detectable-vs-absorbable map is pinned in tests/test_packing.py.
+    """
+    packed = jnp.asarray(packed, jnp.int32)
+    return pack_step_sign(*unpack_step_sign(packed)) == packed
+
+
 class PackedFrugal2UState(NamedTuple):
     """Serialized Frugal-2U fleet: exactly two words per group."""
 

@@ -78,6 +78,11 @@ Array = jax.Array
 _DP_SALT = int(np.int32(np.uint32(0x5DEECE66).view(np.int32)))
 
 
+# Plane-invariant domains resilience.health knows how to check. Every
+# registered layout must assign one to each plane field (validate_program).
+_INVARIANT_DOMAINS = ("finite", "step", "sign")
+
+
 # ---------------------------------------------------------------- StateLayout
 @dataclasses.dataclass(frozen=True)
 class StateLayout:
@@ -96,12 +101,20 @@ class StateLayout:
                    rule parameter sweep never recompiles.
     query_fields — estimate planes a read must gather (the window rules
                    need both heads to pick the older plane).
+    invariants   — (field, domain) health declarations, one per plane
+                   field: 'finite' (estimate heads), 'step' (finite AND
+                   value-round-trips through the packed word), 'sign'
+                   (exactly ±1). resilience.health.validate_planes derives
+                   its vectorized corruption check from these, so a
+                   program only gets self-healing if it declares them —
+                   validate_program refuses registration otherwise.
     """
 
     plane_fields: Tuple[str, ...]
     packing: Tuple[Tuple[str, Optional[Tuple[str, str]]], ...]
     scalar_names: Tuple[str, ...] = ()
     query_fields: Tuple[str, ...] = ("m",)
+    invariants: Tuple[Tuple[str, str], ...] = ()
 
     def __post_init__(self):
         flat = []
@@ -117,6 +130,20 @@ class StateLayout:
             raise ValueError(
                 f"query_fields {self.query_fields} must be packing heads "
                 f"{self.heads}")
+        seen = set()
+        for field, domain in self.invariants:
+            if field not in self.plane_fields:
+                raise ValueError(
+                    f"invariant declared for unknown plane field {field!r} "
+                    f"(plane_fields {self.plane_fields})")
+            if domain not in _INVARIANT_DOMAINS:
+                raise ValueError(
+                    f"invariant domain {domain!r} for plane {field!r} is not "
+                    f"one of {_INVARIANT_DOMAINS}")
+            if field in seen:
+                raise ValueError(
+                    f"duplicate invariant declaration for plane {field!r}")
+            seen.add(field)
 
     # ------------------------------------------------------------ properties
     @property
@@ -333,20 +360,28 @@ def _trace_window(prog, planes, t_abs):
 
 
 # ----------------------------------------------------------------- registry
-_L_1U = StateLayout(plane_fields=("m",), packing=(("m", None),))
+_L_1U = StateLayout(plane_fields=("m",), packing=(("m", None),),
+                    invariants=(("m", "finite"),))
 _L_2U = StateLayout(plane_fields=("m", "step", "sign"),
-                    packing=(("m", ("step", "sign")),))
+                    packing=(("m", ("step", "sign")),),
+                    invariants=(("m", "finite"), ("step", "step"),
+                                ("sign", "sign")))
+# dataclasses.replace inherits _L_2U's invariants — derived layouts keep
+# their health coverage without restating it.
 _L_2U_DECAY = dataclasses.replace(_L_2U,
                                   scalar_names=("alpha_bits", "floor_bits"))
 _L_1U_WINDOW = StateLayout(plane_fields=("m", "m2"),
                            packing=(("m", None), ("m2", None)),
                            scalar_names=("window",),
-                           query_fields=("m", "m2"))
+                           query_fields=("m", "m2"),
+                           invariants=(("m", "finite"), ("m2", "finite")))
 _L_2U_WINDOW = StateLayout(
     plane_fields=("m", "step", "sign", "m2", "step2", "sign2"),
     packing=(("m", ("step", "sign")), ("m2", ("step2", "sign2"))),
     scalar_names=("window",),
-    query_fields=("m", "m2"))
+    query_fields=("m", "m2"),
+    invariants=(("m", "finite"), ("step", "step"), ("sign", "sign"),
+                ("m2", "finite"), ("step2", "step"), ("sign2", "sign")))
 
 
 def _refuse_params(family, **kw):
@@ -500,6 +535,23 @@ def validate_program(prog: LaneProgram) -> None:
     layout = prog.layout  # __post_init__ already validated field coverage
     if prog.algo not in ("1u", "2u"):
         raise AssertionError(f"{prog.family}: algo {prog.algo!r}")
+
+    # Health coverage: every plane field must declare an invariant domain,
+    # or resilience.health cannot validate (and so cannot self-heal) this
+    # program's lanes. Heads/query planes must be 'finite' — a query must
+    # never read a plane the health check would not flag on NaN/inf.
+    inv = dict(layout.invariants)
+    missing_inv = [f for f in layout.plane_fields if f not in inv]
+    if missing_inv:
+        raise AssertionError(
+            f"{prog.family}: plane field(s) {missing_inv} declare no "
+            "invariant domain — add invariants=((field, domain), ...) to the "
+            "StateLayout so resilience.health.validate_planes covers them")
+    for f in layout.heads:
+        if inv[f] != "finite":
+            raise AssertionError(
+                f"{prog.family}: estimate head {f!r} must declare the "
+                f"'finite' invariant, not {inv[f]!r}")
     vals = prog.scalar_values()
     if len(vals) != len(layout.scalar_names):
         raise AssertionError(

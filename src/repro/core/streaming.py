@@ -35,8 +35,35 @@ import jax.numpy as jnp
 
 from . import rng as crng
 from .sketch import GroupedQuantileSketch
+# chaos imports only numpy/stdlib at module level, so this cannot cycle even
+# though repro.core's package init imports THIS module.
+from repro.resilience import chaos
 
 Array = jax.Array
+
+
+def drop_leading_items(chunks: Iterable, skip: int, num_groups: int):
+    """Drop the first `skip` real rows of a [t_i, G] block stream.
+
+    The resume half of crash-consistent ingest: after a StreamInterrupted
+    carrying items_applied=k, re-feeding the SAME stream through
+    `drop_leading_items(stream, k, G)` (or `skip_items=k` on any
+    ingest_stream) replays only the uncommitted suffix. Because interrupts
+    land on chunk boundaries, the re-chunker re-blocks the suffix exactly
+    as the uninterrupted run would have, so the resume is bit-exact.
+    """
+    remaining = int(skip)
+    if remaining < 0:
+        raise ValueError(f"skip_items must be >= 0, got {skip}")
+    for chunk in chunks:
+        chunk = _as_2d(chunk, num_groups)
+        if remaining:
+            take = min(remaining, chunk.shape[0])
+            remaining -= take
+            if take == chunk.shape[0]:
+                continue
+            chunk = chunk[take:]
+        yield chunk
 
 
 def _apply_chunk(sk: GroupedQuantileSketch, chunk: Array, seed, t_offset,
@@ -118,6 +145,7 @@ def ingest_stream(
     *,
     seed=None,
     lanes_per_group: int = 1,
+    skip_items: int = 0,
 ) -> GroupedQuantileSketch:
     """Ingest an unbounded host-side stream of [t_i, G] blocks.
 
@@ -134,6 +162,17 @@ def ingest_stream(
     drives a G·Q lane-plane sketch from G-column blocks (multi-quantile —
     see repro.api.QuantileFleet, which owns the cursor bookkeeping for all
     of the above).
+
+    Crash consistency: if the chunk iterator raises mid-stream, the
+    exception is re-raised as a resumable chaos.StreamInterrupted whose
+    `state` holds every FULLY-applied chunk and whose `items_applied`
+    counts the committed leading items. Any partially-staged re-chunker
+    buffer is DISCARDED (those items are not in `state` and not counted),
+    so a retry that re-feeds the same stream with
+    `skip_items=err.items_applied` can never double-apply an item and ends
+    bit-identical to the uninterrupted run. Interrupts land only on
+    chunk_t boundaries (or at stream end), so the resumed re-chunking
+    realigns exactly.
     """
     if seed is None:
         assert key is not None, "need key= or seed="
@@ -145,10 +184,45 @@ def ingest_stream(
         raise ValueError(
             f"sketch lanes {sketch.num_groups} not divisible by "
             f"lanes_per_group={lanes_per_group}")
-    for block, t0 in rechunk_blocks(chunks, num_cols, chunk_t):
+    if skip_items:
+        chunks = drop_leading_items(chunks, skip_items, num_cols)
+
+    consumed = [0]   # real rows handed to the re-chunker so far
+
+    def counted(src):
+        for c in src:
+            c = _as_2d(c, num_cols)
+            consumed[0] += c.shape[0]
+            yield c
+
+    applied = 0      # real rows fully applied to `sketch` by THIS call
+    blocks = rechunk_blocks(counted(chunks), num_cols, chunk_t)
+    while True:
+        try:
+            block, t0 = next(blocks)
+        except StopIteration:
+            break
+        except (ValueError, TypeError):
+            raise   # malformed input (chunk shape/chunk_t) — not resumable
+        except Exception as e:
+            # Source died. The staged partial buffer dies with the
+            # generator — `applied` excludes it, so resume cannot
+            # double-apply. (chaos.StreamFault takes this path too.)
+            raise chaos.StreamInterrupted(
+                f"stream source failed after {applied} applied item(s): {e}",
+                state=sketch, items_applied=applied) from e
         sketch = _apply_chunk(sketch, jnp.asarray(block), seed,
                               crng.wrap_i32(t_offset + t0), g_offset,
                               lanes_per_group)
+        applied = min(consumed[0], applied + chunk_t)
+        sketch = chaos.corrupt_sketch(sketch, t_offset + int(t0),
+                                      t_offset + int(t0) + chunk_t)
+        try:
+            chaos.count_event("ingest")
+        except chaos.StreamFault as e:
+            raise chaos.StreamInterrupted(
+                f"stream fault after {applied} applied item(s): {e}",
+                state=sketch, items_applied=applied) from e
     return sketch
 
 

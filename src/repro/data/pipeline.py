@@ -9,14 +9,74 @@ examples/train_lm.py and the fault-tolerance tests); a real deployment swaps
 
 Per-feature frugal skew sketches (q50/q99 of token ids per position bucket)
 are exposed for the data-quality monitor example.
+
+Resilience: `RetryPolicy` + `with_retry` give any batch source bounded
+exponential-backoff retry with a wall-clock deadline. `SyntheticCorpus`
+takes a policy (`retry=`) and wires it around each batch draw; because
+batch RNG keys on (seed, host_id, step), a retried draw is bit-identical
+to the first attempt — transient source faults never perturb the token
+stream. The deterministic chaos harness (repro.resilience.chaos) injects
+its 'pipeline'-scoped faults at the same point, which is how
+tests/test_resilience.py drives the retry path.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+import time
+from typing import Callable, Dict, Iterator, Optional
 
 import numpy as np
 import jax.numpy as jnp
+
+from repro.resilience import chaos
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retry with exponential backoff and a hard deadline.
+
+    max_retries    — retries AFTER the first attempt (total attempts =
+                     max_retries + 1).
+    backoff_s      — sleep before the first retry.
+    backoff_factor — multiplier per subsequent retry.
+    deadline_s     — wall-clock budget for the whole call, sleeps included;
+                     a retry that would overshoot it re-raises instead.
+    """
+
+    max_retries: int = 3
+    backoff_s: float = 0.05
+    backoff_factor: float = 2.0
+    deadline_s: float = 30.0
+
+    def __post_init__(self):
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got "
+                             f"{self.max_retries}")
+        if self.backoff_s < 0 or self.backoff_factor < 1.0:
+            raise ValueError("backoff_s must be >= 0 and backoff_factor "
+                             ">= 1.0")
+
+
+def with_retry(fn: Callable, policy: Optional[RetryPolicy], *,
+               sleep=time.sleep, clock=time.monotonic):
+    """Call `fn()` under `policy`; transient faults (chaos.StreamFault —
+    the class deterministic injection raises, and the one a real reader
+    should raise for retryable I/O) are retried with exponential backoff.
+    policy=None means no retry. `sleep`/`clock` are injectable for tests."""
+    if policy is None:
+        return fn()
+    start = clock()
+    delay = policy.backoff_s
+    for attempt in range(policy.max_retries + 1):
+        try:
+            return fn()
+        except chaos.StreamFault:
+            out_of_budget = (clock() - start) + delay > policy.deadline_s
+            if attempt == policy.max_retries or out_of_budget:
+                raise
+            sleep(delay)
+            delay *= policy.backoff_factor
+    raise AssertionError("unreachable")  # pragma: no cover
 
 
 @dataclasses.dataclass
@@ -34,8 +94,11 @@ class DataConfig:
 class SyntheticCorpus:
     """Deterministic, shardable synthetic token stream."""
 
-    def __init__(self, cfg: DataConfig):
+    def __init__(self, cfg: DataConfig, retry: Optional[RetryPolicy] = None,
+                 _sleep=time.sleep):
         self.cfg = cfg
+        self.retry = retry
+        self._sleep = _sleep
         rng = np.random.default_rng(cfg.seed)
         # fixed bigram table: tok -> likely successor (learnable signal)
         self.succ = rng.integers(0, cfg.vocab_size, size=cfg.vocab_size)
@@ -45,6 +108,14 @@ class SyntheticCorpus:
             (self.cfg.seed, self.cfg.host_id, step))
 
     def batch(self, step: int) -> Dict[str, np.ndarray]:
+        """One deterministic batch; retried under `self.retry` (the draw
+        keys on (seed, host, step), so attempt N is bit-identical to
+        attempt 1)."""
+        return with_retry(lambda: self._batch_once(step), self.retry,
+                          sleep=self._sleep)
+
+    def _batch_once(self, step: int) -> Dict[str, np.ndarray]:
+        chaos.count_event("pipeline")
         c = self.cfg
         rng = self._batch_rng(step)
         z = rng.zipf(c.zipf_a, size=(c.batch_size, c.seq_len + 1))

@@ -37,6 +37,7 @@ from repro.core import rng as crng
 from repro.core import streaming
 from repro.core.drift import is_windowed as drift_is_windowed
 from repro.core.sketch import GroupedQuantileSketch, PackedSketchState
+from repro.resilience import chaos
 from .pipeline_parallel import shard_map_compat
 
 Array = jax.Array
@@ -256,21 +257,57 @@ class ShardedGroupFleet:
 
     def ingest_stream(self, chunks: Iterable, key: Optional[Array] = None,
                       chunk_t: int = 4096, *, seed=None, t_offset: int = 0,
-                      g_offset: int = 0) -> "ShardedGroupFleet":
+                      g_offset: int = 0,
+                      skip_items: int = 0) -> "ShardedGroupFleet":
         """Sharded equivalent of core.streaming.ingest_stream: the same host
         re-chunker (identical blocking), one sharded fused dispatch per
         [chunk_t, G] block. `t_offset` continues an earlier stream's tick
         counter and `g_offset` shifts the fleet's lane keys (see
-        ingest_array)."""
+        ingest_array). Crash-consistent with the same contract as the core
+        entry point: a dying source raises a resumable
+        chaos.StreamInterrupted whose `state` is the fleet advanced through
+        every fully-applied chunk, and `skip_items=err.items_applied`
+        replays only the uncommitted suffix, bit-exact."""
         if seed is None:
             assert key is not None, "need key= or seed="
             seed = crng.seed_from_key(key)
-        fleet = self
         cols = self.num_groups // self.lanes_per_group
-        for block, t0 in streaming.rechunk_blocks(chunks, cols, chunk_t):
+        if skip_items:
+            chunks = streaming.drop_leading_items(chunks, skip_items, cols)
+
+        consumed = [0]
+
+        def counted(src):
+            for c in src:
+                c = streaming._as_2d(c, cols)
+                consumed[0] += c.shape[0]
+                yield c
+
+        fleet = self
+        applied = 0
+        blocks = streaming.rechunk_blocks(counted(chunks), cols, chunk_t)
+        while True:
+            try:
+                block, t0 = next(blocks)
+            except StopIteration:
+                break
+            except (ValueError, TypeError):
+                raise   # malformed input — not resumable
+            except Exception as e:
+                raise chaos.StreamInterrupted(
+                    f"stream source failed after {applied} applied "
+                    f"item(s): {e}", state=fleet,
+                    items_applied=applied) from e
             fleet = fleet._run_sharded(fleet._pad_items(block), seed,
                                        crng.wrap_i32(t_offset + t0), chunk_t,
                                        crng.wrap_i32(g_offset))
+            applied = min(consumed[0], applied + chunk_t)
+            try:
+                chaos.count_event("ingest")
+            except chaos.StreamFault as e:
+                raise chaos.StreamInterrupted(
+                    f"stream fault after {applied} applied item(s): {e}",
+                    state=fleet, items_applied=applied) from e
         return fleet
 
     # ----------------------------------------------------------------- reads

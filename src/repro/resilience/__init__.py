@@ -1,0 +1,28 @@
+"""Resilience: deterministic fault injection + state integrity (PR 6).
+
+Two halves:
+  chaos  — seeded FaultPlan + the injection hooks production code paths
+           call (zero-cost no-ops unless a plan is armed);
+  health — StateLayout-derived lane invariant validation and self-healing
+           (surfaced as repro.api.QuantileFleet.health()/check_health()
+           under FleetSpec's health policy).
+
+Import order matters: chaos must bind before health, because
+core/streaming.py does `from repro.resilience import chaos` at module
+level while THIS package may still be mid-init (health touches repro.core
+lazily for the same reason).
+"""
+from . import chaos
+from . import health
+from .chaos import (CheckpointKilled, Fault, FaultPlan, StreamFault,
+                    StreamInterrupted)
+from .health import (HEALTH_POLICIES, HealthReport, LaneCorruptionError,
+                     heal_planes, validate_planes)
+
+__all__ = [
+    "chaos", "health",
+    "Fault", "FaultPlan", "StreamFault", "StreamInterrupted",
+    "CheckpointKilled",
+    "HEALTH_POLICIES", "HealthReport", "LaneCorruptionError",
+    "validate_planes", "heal_planes",
+]

@@ -1,0 +1,262 @@
+"""Deterministic fault injection: the engine behind tests/test_resilience.py.
+
+A `FaultPlan` is a seeded, replayable set of faults; `armed(plan)` installs
+it for the duration of a `with` block. The production code paths
+(core/streaming.py ingest loops, train/checkpoint.py save/restore,
+data/pipeline.py batch fetch) call the tiny hook functions below at their
+injection points. Every hook starts with `if _ACTIVE is None: return` —
+one module-global read — so an unarmed process pays nothing; there is no
+per-item work even when armed (hooks fire per chunk / per protocol phase).
+
+Fault kinds:
+  'stream'      — raise StreamFault when the scoped event counter reaches
+                  `at` (scope 'ingest' counts fully-applied chunks inside
+                  ingest_stream; scope 'pipeline' counts batch-fetch
+                  attempts in data.pipeline).
+  'flip'        — XOR bit `bit` of plane `plane`, lane `lane`, the first
+                  time the ingest clock covers tick `at` (simulates an
+                  in-memory single-event upset; resilience.health is what
+                  detects it).
+  'ckpt_kill'   — raise CheckpointKilled at checkpoint-protocol phase
+                  `phase` ('after_leaves': between leaf write and manifest;
+                  'before_marker': between dir rename and COMMITTED marker).
+  'ckpt_garble' — after a step commits, truncate or bit-garble its leaf
+                  file on disk (simulates post-commit media rot; the
+                  format-4 CRCs catch it at restore).
+  'drop_shard'  — make the next shard read raise FileNotFoundError
+                  (simulates a lost shard file under a committed step).
+
+Each fault fires at most once. Module-level imports are numpy/stdlib ONLY:
+core/streaming.py (itself imported by repro.core's package init) imports
+this module at module level, so anything heavier here would cycle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from contextlib import contextmanager
+from typing import Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "Fault", "FaultPlan", "StreamFault", "StreamInterrupted",
+    "CheckpointKilled", "armed", "active", "count_event", "corrupt_sketch",
+    "on_checkpoint_phase", "on_checkpoint_committed", "on_restore_shard",
+    "corrupt_leaf_bytes",
+]
+
+
+class StreamFault(RuntimeError):
+    """A transient stream-source failure (injected or real). Retryable:
+    data.pipeline.RetryPolicy bounds the retries; ingest_stream surfaces it
+    wrapped in a resumable StreamInterrupted."""
+
+
+class CheckpointKilled(RuntimeError):
+    """Injected kill inside the checkpoint write protocol (chaos only)."""
+
+
+class StreamInterrupted(RuntimeError):
+    """ingest_stream died mid-stream — carries everything needed to resume.
+
+    `state`          — the sketch/fleet with every FULLY-applied chunk in it
+                       (the partially-staged tail is discarded, never
+                       half-applied).
+    `items_applied`  — how many leading items of the ORIGINAL stream are
+                       already committed; re-feed the same stream with
+                       `skip_items=items_applied` for a bit-exact resume.
+    `fleet`          — set by repro.api.QuantileFleet: a facade whose cursor
+                       is already advanced, so the retry is just
+                       `err.fleet.ingest_stream(stream, skip_items=err.items_applied)`.
+    """
+
+    def __init__(self, message, *, state=None, fleet=None, items_applied=0):
+        super().__init__(message)
+        self.state = state
+        self.fleet = fleet
+        self.items_applied = int(items_applied)
+
+
+@dataclasses.dataclass
+class Fault:
+    kind: str                      # 'stream'|'flip'|'ckpt_kill'|'ckpt_garble'|'drop_shard'
+    at: int = 1                    # 'stream': event count; 'flip': absolute tick
+    scope: str = "ingest"          # 'stream': which event counter
+    plane: int = 0                 # 'flip': plane-field index
+    lane: int = 0                  # 'flip': lane index
+    bit: int = 0                   # 'flip': bit 0..31 of the f32 plane word
+    mode: str = "garble"           # 'ckpt_garble': 'garble' | 'truncate'
+    phase: str = "after_leaves"    # 'ckpt_kill': protocol phase
+
+
+class FaultPlan:
+    """A deterministic set of faults; each fires at most once per arming."""
+
+    def __init__(self, faults=(), seed: int = 0):
+        self.faults: Tuple[Fault, ...] = tuple(faults)
+        self.seed = int(seed)
+        self._fired = set()
+        self._counts = {}
+
+    # ------------------------------------------------------------ constructors
+    @classmethod
+    def stream_kill(cls, after_chunks: int, scope: str = "ingest") -> "FaultPlan":
+        """Kill the stream after `after_chunks` fully-applied chunks."""
+        return cls(faults=[Fault(kind="stream", at=int(after_chunks),
+                                 scope=scope)])
+
+    @classmethod
+    def seeded_kill(cls, seed: int, n_chunks: int,
+                    scope: str = "ingest") -> "FaultPlan":
+        """The chaos-matrix plan: one stream kill at a seeded chunk boundary
+        in [1, n_chunks] — sweeping seeds sweeps the kill point."""
+        rng = np.random.default_rng(seed)
+        at = int(rng.integers(1, max(1, int(n_chunks)) + 1))
+        return cls(faults=[Fault(kind="stream", at=at, scope=scope)],
+                   seed=seed)
+
+    # ----------------------------------------------------------------- matching
+    def fired(self) -> int:
+        return len(self._fired)
+
+    def _take(self, kind: str, **match) -> Optional[Fault]:
+        for i, f in enumerate(self.faults):
+            if i in self._fired or f.kind != kind:
+                continue
+            if any(getattr(f, k) != v for k, v in match.items()):
+                continue
+            self._fired.add(i)
+            return f
+        return None
+
+    def _take_stream(self, scope: str) -> Optional[Fault]:
+        n = self._counts.get(scope, 0) + 1
+        self._counts[scope] = n
+        return self._take("stream", scope=scope, at=n)
+
+    def _take_flips(self, t_lo: int, t_hi: int):
+        out = []
+        for i, f in enumerate(self.faults):
+            if i not in self._fired and f.kind == "flip" \
+                    and t_lo <= f.at < t_hi:
+                self._fired.add(i)
+                out.append(f)
+        return out
+
+
+_ACTIVE: Optional[FaultPlan] = None
+
+
+def active() -> Optional[FaultPlan]:
+    return _ACTIVE
+
+
+@contextmanager
+def armed(plan: FaultPlan):
+    """Install `plan` for the block (re-entrant: restores the previous)."""
+    global _ACTIVE
+    prev, _ACTIVE = _ACTIVE, plan
+    try:
+        yield plan
+    finally:
+        _ACTIVE = prev
+
+
+# ----------------------------------------------------------------------- hooks
+def count_event(scope: str = "ingest") -> None:
+    """Tick the armed plan's `scope` counter; raise StreamFault when a
+    'stream' fault is scheduled at this count. No-op when disarmed."""
+    if _ACTIVE is None:
+        return
+    f = _ACTIVE._take_stream(scope)
+    if f is not None:
+        raise StreamFault(
+            f"injected stream fault: {scope} event {f.at} "
+            f"(plan seed {_ACTIVE.seed})")
+
+
+def corrupt_sketch(sketch, t_lo: int, t_hi: int):
+    """Apply any 'flip' faults whose tick lands in [t_lo, t_hi) to the
+    sketch's planes (raw f32 bit flips — what a memory upset does). Returns
+    the sketch unchanged when disarmed or no flip is due."""
+    if _ACTIVE is None:
+        return sketch
+    flips = _ACTIVE._take_flips(int(t_lo), int(t_hi))
+    if not flips:
+        return sketch
+    import jax.numpy as jnp  # lazy: keep module-level imports numpy-only
+
+    planes = [np.asarray(p).copy() for p in sketch.planes()]
+    for f in flips:
+        pi = f.plane % len(planes)
+        raw = planes[pi].view(np.uint32)
+        raw[f.lane % raw.shape[0]] ^= np.uint32(1) << np.uint32(f.bit % 32)
+    return sketch.with_planes(tuple(jnp.asarray(p) for p in planes))
+
+
+def on_checkpoint_phase(phase: str) -> None:
+    """Raise CheckpointKilled if a 'ckpt_kill' fault targets this phase."""
+    if _ACTIVE is None:
+        return
+    if _ACTIVE._take("ckpt_kill", phase=phase) is not None:
+        raise CheckpointKilled(f"injected kill at checkpoint phase {phase!r}")
+
+
+def on_checkpoint_committed(step_dir: str) -> None:
+    """Post-commit media-rot injection: garble/truncate a leaf file of the
+    just-committed step if a 'ckpt_garble' fault is armed."""
+    if _ACTIVE is None:
+        return
+    f = _ACTIVE._take("ckpt_garble")
+    if f is not None:
+        corrupt_leaf_bytes(step_dir, mode=f.mode)
+
+
+def on_restore_shard(shard_path: str) -> None:
+    """Make the next shard read fail if a 'drop_shard' fault is armed."""
+    if _ACTIVE is None:
+        return
+    if _ACTIVE._take("drop_shard") is not None:
+        raise FileNotFoundError(f"injected shard drop: {shard_path}")
+
+
+def corrupt_leaf_bytes(step_dir: str, mode: str = "garble") -> str:
+    """Corrupt a committed step's shard file in place (also usable directly
+    from tests, without an armed plan). Three flavors of rot:
+      'truncate' — halve the file (torn write; the zip container breaks);
+      'garble'   — XOR 8 raw bytes ~60% in (media rot; the zip member's own
+                   CRC breaks on read);
+      'rewrite'  — flip one byte of leaf_0's DATA and re-write a perfectly
+                   valid npz (silent corruption the container cannot see —
+                   only the format-4 manifest CRC32 catches this one).
+    Returns the path touched."""
+    shards = sorted(fn for fn in os.listdir(step_dir)
+                    if fn.startswith("shard_") and fn.endswith(".npz"))
+    if not shards:
+        raise FileNotFoundError(f"no shard files under {step_dir}")
+    path = os.path.join(step_dir, shards[0])
+    size = os.path.getsize(path)
+    if mode == "truncate":
+        with open(path, "r+b") as f:
+            f.truncate(max(1, size // 2))
+    elif mode == "garble":
+        off = max(0, int(size * 0.6) - 8)
+        with open(path, "r+b") as f:
+            f.seek(off)
+            blob = f.read(8)
+            f.seek(off)
+            f.write(bytes(b ^ 0xFF for b in blob))
+    elif mode == "rewrite":
+        with np.load(path) as data:
+            arrs = {k: data[k].copy() for k in data.files}
+        for k in sorted(arrs):
+            flat = arrs[k].reshape(-1).view(np.uint8)
+            if flat.size:
+                flat[flat.size // 2] ^= np.uint8(0x04)
+                break
+        with open(path, "wb") as f:
+            np.savez(f, **arrs)
+    else:
+        raise ValueError(f"unknown corruption mode {mode!r}")
+    return path

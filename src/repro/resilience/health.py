@@ -1,0 +1,131 @@
+"""Lane health: vectorized plane-invariant validation + self-healing.
+
+A frugal lane is 1-2 words with zero redundancy, so a flipped bit silently
+poisons its estimate forever — unless the state violates an invariant the
+program's StateLayout declares (core.program: every registered layout MUST
+declare a domain per plane field, enforced by validate_program/lint):
+
+  'finite' — estimate heads must be finite (a NaN/inf head can only enter
+             through non-finite stream items, which every ingest path
+             already masks out);
+  'sign'   — direction planes are EXACTLY ±1.0 (the tick writes nothing
+             else);
+  'step'   — step planes must be finite AND value-round-trip through the
+             packed (step, sign) word (core.packing) — the serialized form
+             every checkpoint and kernel operand uses, so a state that
+             cannot survive its own serialization is corrupt by definition.
+
+`validate_planes` evaluates all of a program's declared invariants in one
+jitted pass over the [L] lane planes; `heal_planes` re-initializes flagged
+lanes to fresh default lane state (heads 0.0, pair planes 1.0 — exactly
+what GroupedQuantileSketch.create writes). Because every uniform is
+counter-hashed on the absolute (seed, tick, lane), a lane healed at stream
+position t ticks on bit-exactly like a lane that was CREATED at position t
+— quarantine has no downstream ripple (asserted in tests/test_resilience.py).
+
+Policy plumbing lives in repro.api: FleetSpec(health=...) ∈ HEALTH_POLICIES
+and QuantileFleet.health()/check_health() apply it; serve.slo.SLOFleet
+accumulates the reports so the serving layer can alert instead of quietly
+publishing garbage p99s.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+__all__ = ["HEALTH_POLICIES", "HealthReport", "LaneCorruptionError",
+           "validate_planes", "heal_planes"]
+
+HEALTH_POLICIES = ("raise", "quarantine", "ignore")
+
+
+class LaneCorruptionError(RuntimeError):
+    """Raised by the 'raise' health policy when any lane violates its
+    program's declared plane invariants."""
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthReport:
+    """Outcome of one fleet health scan."""
+
+    total_lanes: int
+    corrupt_lanes: int
+    lane_ids: Tuple[int, ...]      # indices of flagged lanes
+    policy: str                    # the FleetSpec policy in force
+    quarantined: int = 0           # lanes re-initialized by this check
+
+    @property
+    def healthy(self) -> bool:
+        return self.corrupt_lanes == 0
+
+    def __str__(self):
+        if self.healthy:
+            return f"HealthReport(healthy, {self.total_lanes} lanes)"
+        shown = ", ".join(map(str, self.lane_ids[:8]))
+        more = "" if self.corrupt_lanes <= 8 else ", ..."
+        return (f"HealthReport({self.corrupt_lanes}/{self.total_lanes} lanes "
+                f"corrupt [{shown}{more}], policy={self.policy}, "
+                f"quarantined={self.quarantined})")
+
+
+@functools.partial(jax.jit, static_argnames=("program",))
+def _corrupt_mask(planes, program):
+    from repro.core import packing  # lazy: avoid import cycle at module load
+
+    layout = program.layout
+    by_field = dict(zip(layout.plane_fields, planes))
+    bad = jnp.zeros(jnp.shape(planes[0]), bool)
+    for field, domain in layout.invariants:
+        x = by_field[field]
+        if domain == "finite":
+            bad |= ~jnp.isfinite(x)
+        elif domain == "sign":
+            bad |= (x != jnp.float32(1.0)) & (x != jnp.float32(-1.0))
+        elif domain == "step":
+            bad |= ~jnp.isfinite(x)
+        else:  # pragma: no cover - layout __post_init__ refuses unknowns
+            raise ValueError(f"unknown invariant domain {domain!r}")
+    # Pack round-trip per plane-pair: VALUE equality (not bit equality), so
+    # legitimate flush/saturate states (-0.0 step, exactly-clipped steps)
+    # absorb, while out-of-domain or mismatched (step, sign) combinations —
+    # states the lane's own serialization would silently rewrite — flag.
+    for head, pair in layout.packing:
+        if pair is None:
+            continue
+        step, sign = by_field[pair[0]], by_field[pair[1]]
+        s2, g2 = packing.unpack_step_sign(packing.pack_step_sign(step, sign))
+        bad |= (s2 != step) | (g2 != sign)
+    return bad
+
+
+def validate_planes(program, planes):
+    """[L] bool mask, True where a lane violates `program`'s declared
+    invariants. One jitted fused pass; compiled once per program."""
+    return _corrupt_mask(tuple(jnp.asarray(p) for p in planes), program)
+
+
+def heal_planes(program, planes, corrupt_mask):
+    """Re-initialize flagged lanes to fresh default lane state in place.
+
+    The fill is layout.pad_fill per field — identical to what
+    GroupedQuantileSketch.create writes — so with counter-hashed uniforms
+    the healed lane's future is bit-identical to a lane created at the
+    current cursor position."""
+    layout = program.layout
+    mask = jnp.asarray(corrupt_mask, bool)
+    return tuple(
+        jnp.where(mask, jnp.float32(layout.pad_fill(f)), jnp.asarray(p))
+        for f, p in zip(layout.plane_fields, planes))
+
+
+def report_for(program, planes, policy: str) -> HealthReport:
+    """Build a scan-only HealthReport (no healing applied)."""
+    mask = np.asarray(validate_planes(program, planes))
+    ids = tuple(int(i) for i in np.nonzero(mask)[0])
+    return HealthReport(total_lanes=int(mask.shape[0]),
+                        corrupt_lanes=len(ids), lane_ids=ids, policy=policy)

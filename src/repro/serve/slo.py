@@ -75,11 +75,20 @@ class SLOFleet:
     all-time mass; if you need the hard last-W..2W-events guarantee, build
     the fleet directly: QuantileFleet.create(FleetSpec(...,
     drift=DriftConfig(mode="window", window=W)), per_lane_clock=True).
+
+    `health_policy` (default "quarantine") is the lane-corruption policy
+    (resilience.health) the underlying fleet runs under: `check_health()`
+    scans every lane against its program's declared invariants and — under
+    "quarantine" — re-initializes corrupt lanes in place rather than
+    letting a flipped bit publish garbage p99s forever. The fleet
+    accumulates `quarantined_total` and keeps the `last_health` report so
+    the serving layer can alert on it.
     """
 
     def __init__(self, metrics: Sequence[Tuple[str, float]] = DEFAULT_METRICS,
                  seed: int = 0, capacity: int = 64,
-                 windowed: bool = False, decay_half_life: int = 4096):
+                 windowed: bool = False, decay_half_life: int = 4096,
+                 health_policy: str = "quarantine"):
         if not metrics:
             raise ValueError("need at least one (name, quantile) metric")
         self.metrics = tuple((str(n), float(q)) for n, q in metrics)
@@ -90,6 +99,9 @@ class SLOFleet:
         self.seed = int(seed)
         self.windowed = bool(windowed)
         self.decay_half_life = int(decay_half_life)
+        self.health_policy = str(health_policy)
+        self.quarantined_total = 0
+        self.last_health = None
         self._routes: Dict[str, int] = {}
         self._pending: List[Tuple[int, float]] = []
         self._fleet = QuantileFleet.create(
@@ -105,7 +117,8 @@ class SLOFleet:
             if self.windowed else "2u"
         return FleetSpec(num_groups=cap_routes,
                          quantiles=tuple(q for _, q in self.metrics),
-                         backend="jnp", program=program)
+                         backend="jnp", program=program,
+                         health=self.health_policy)
 
     # ----------------------------------------------- facade state, projected
     # The fleet owns all device state; these views keep the historical
@@ -278,6 +291,21 @@ class SLOFleet:
                           for i, (name, _) in enumerate(self.metrics)}
         return out
 
+    def check_health(self):
+        """Flush pending events, then scan every lane against its program's
+        declared invariants under `health_policy` (resilience.health):
+        "quarantine" re-initializes corrupt lanes in place (bit-exact with
+        a lane freshly created at its current tick — counter-hashed
+        uniforms), "raise" throws LaneCorruptionError, "ignore" only
+        reports. Returns the HealthReport; `quarantined_total` /
+        `last_health` accumulate for dashboards."""
+        self.flush()
+        fleet, rep = self._fleet.check_health()
+        self._fleet = fleet
+        self.quarantined_total += rep.quarantined
+        self.last_health = rep
+        return rep
+
     def memory_words(self) -> int:
         """Persistent SKETCH words per (route × metric) lane — 2, like the
         paper (checkpoints add one int32 RNG-tick word per lane on top)."""
@@ -303,6 +331,7 @@ class SLOFleet:
                         "seed": self.seed,
                         "windowed": self.windowed,
                         "decay_half_life": self.decay_half_life,
+                        "health_policy": self.health_policy,
                         }).encode("utf-8"), np.uint8).copy()
         return {
             "sketch": Frugal2UState(m=self._m, step=self._step,
@@ -318,7 +347,9 @@ class SLOFleet:
         fleet = cls(metrics=[tuple(mq) for mq in meta["metrics"]],
                     seed=int(meta["seed"]), capacity=1,
                     windowed=bool(meta.get("windowed", False)),
-                    decay_half_life=int(meta.get("decay_half_life", 4096)))
+                    decay_half_life=int(meta.get("decay_half_life", 4096)),
+                    health_policy=str(meta.get("health_policy",
+                                               "quarantine")))
         sk = state["sketch"]
         cap = int(np.shape(sk.m)[0]) // fleet.n_metrics
         spec = fleet._spec(cap)

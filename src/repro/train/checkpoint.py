@@ -1,15 +1,30 @@
-"""Fault-tolerant checkpointing: atomic, sharded, keep-k, resumable.
+"""Fault-tolerant checkpointing: atomic, checksummed, keep-k, self-verifying.
 
 Layout (one directory per step):
     <dir>/step_000042/
-        manifest.json      — step, pytree structure, leaf shapes/dtypes, mesh
+        manifest.json      — step, pytree structure, leaf shapes/dtypes,
+                             per-leaf CRC32s (format 4)
         shard_<host>.npz   — this host's param/optimizer leaves (flat index)
     <dir>/step_000042.COMMITTED   — empty marker, written LAST (atomic rename)
+    <dir>/step_000041.corrupt/    — a quarantined step restore refused
 
-Crash-safety: writers write into step_X.tmp/, fsync, rename to step_X/, then
-create the COMMITTED marker. Readers only consider steps with markers. A
-preempted/killed trainer restarts from the newest committed step (tested in
-tests/test_fault_tolerance.py by killing a trainer subprocess mid-run).
+Crash-safety: writers write into step_X.tmp/ (leaf file AND manifest each
+fsync'd — a kill between leaf-write and manifest-write can never surface a
+torn step as committed), rename to step_X/, then create the COMMITTED
+marker. Readers only consider steps with markers. A preempted/killed
+trainer restarts from the newest committed step (tested in
+tests/test_fault_tolerance.py by killing a trainer subprocess mid-run;
+kills at every protocol phase injected in tests/test_resilience.py).
+
+Integrity (format 4): the manifest records a CRC32 per leaf; restore
+verifies them (plus the container's own readability) and, when a committed
+step turns out corrupt, QUARANTINES it — marker removed, directory renamed
+`*.corrupt` — then falls back to the newest step that DOES verify, so one
+rotted checkpoint never needs manual intervention. Formats 2/3 predate the
+checksums and still restore (nothing to verify); `save_checkpoint(...,
+checksum=False)` still writes format 3. Template mismatches (wrong leaf
+count / format-1/2 layouts) are NOT corruption: they raise plain
+ValueError and the step is left alone.
 
 Elastic re-sharding: leaves are stored UNSHARDED per host here (single-host
 container); `restore` accepts any device mesh and re-places leaves with the
@@ -20,6 +35,7 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import zlib
 from typing import Any, Optional, Tuple
 
 import jax
@@ -30,8 +46,20 @@ from typing import NamedTuple
 from repro.core.frugal import Frugal2UState
 from repro.core.packing import PackedFrugal2UState, pack_frugal2u, unpack_frugal2u
 from repro.core.sketch import GroupedQuantileSketch, PackedSketchState
+from repro.resilience import chaos
 
 _SKETCH_NODES = (Frugal2UState, GroupedQuantileSketch)
+
+
+class CheckpointCorruptError(ValueError):
+    """A committed checkpoint step failed integrity verification (unreadable
+    manifest/shard, CRC mismatch, missing leaf). Distinct from template
+    mismatches (plain ValueError): corruption triggers quarantine +
+    fallback; a wrong template must never destroy a good checkpoint."""
+
+
+def _leaf_crc32(arr) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
 
 
 class _PackedSketchNode(NamedTuple):
@@ -157,7 +185,7 @@ def _flatten(tree):
 
 
 def save_checkpoint(ckpt_dir: str, step: int, state: Any, keep: int = 3,
-                    host_id: int = 0) -> str:
+                    host_id: int = 0, checksum: bool = True) -> str:
     os.makedirs(ckpt_dir, exist_ok=True)
     name = f"step_{step:08d}"
     tmp = os.path.join(ckpt_dir, name + ".tmp")
@@ -173,48 +201,82 @@ def save_checkpoint(ckpt_dir: str, step: int, state: Any, keep: int = 3,
 
     leaves, treedef = _flatten(_pack_sketches(state))
     arrs = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
-    np.savez(os.path.join(tmp, f"shard_{host_id}.npz"), **arrs)
+    # The leaf file is fsync'd (not just the manifest): otherwise a power
+    # cut after the rename could commit a manifest whose leaf bytes never
+    # hit the platter — exactly the torn state the marker protocol exists
+    # to rule out.
+    with open(os.path.join(tmp, f"shard_{host_id}.npz"), "wb") as f:
+        np.savez(f, **arrs)
+        f.flush()
+        os.fsync(f.fileno())
+    chaos.on_checkpoint_phase("after_leaves")
     manifest = {
         "step": step,
         "num_leaves": len(leaves),
         "treedef": str(treedef),
         "shapes": [list(np.shape(a)) for a in leaves],
         "dtypes": [str(np.asarray(l).dtype) for l in leaves],
-        # format 3 (supersets 2): Frugal2UState nodes stored packed (2
-        # leaves: m, step_sign) instead of unpacked (3 leaves), and whole
-        # GroupedQuantileSketch nodes (repro.api fleet lane planes) stored
-        # as PackedSketchState (m, step_sign, quantile — 1-2 words per
-        # lane); StreamCursor nodes ride as 3 int32 leaves. Trees without
-        # sketch/cursor nodes are laid out identically to format 2, and
-        # restore keys on leaf layout, so format-2 checkpoints of such
-        # trees stay readable. Windowed sketches (core.drift mode
-        # 'window') append their shadow plane as two extra leaves
-        # (m2, step_sign2); drift-free trees are byte-identical to
-        # pre-drift format 3.
-        "format": 3,
+        # format 4 (supersets 3): adds per-leaf CRC32s ("crc32"), verified
+        # on restore — a silently rotted leaf quarantines the step and
+        # restore falls back to the newest verified one. Format-3 layout
+        # (Frugal2UState packed to 2 leaves, whole GroupedQuantileSketch
+        # nodes as PackedSketchState at 1-2 words per lane, StreamCursor
+        # as 3 int32 leaves, window shadow planes as 2 extra leaves) is
+        # unchanged; readers treat a missing "crc32" as format 3 —
+        # restorable, nothing to verify. checksum=False still writes
+        # format 3.
+        "format": 4 if checksum else 3,
     }
+    if checksum:
+        manifest["crc32"] = [_leaf_crc32(arrs[f"leaf_{i}"])
+                             for i in range(len(leaves))]
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
         f.flush()
         os.fsync(f.fileno())
     os.replace(tmp, final)                       # atomic on POSIX
+    chaos.on_checkpoint_phase("before_marker")
     with open(marker, "w") as f:                 # commit marker LAST
         f.write("ok")
         f.flush()
         os.fsync(f.fileno())
+    chaos.on_checkpoint_committed(final)
     _gc(ckpt_dir, keep)
     return final
 
 
 def _gc(ckpt_dir: str, keep: int):
+    keep = max(1, int(keep))     # never GC the newest verified checkpoint
     steps = committed_steps(ckpt_dir)
     for s in steps[:-keep]:
         name = f"step_{s:08d}"
-        shutil.rmtree(os.path.join(ckpt_dir, name), ignore_errors=True)
+        # Marker FIRST: readers only consider marked steps, so a concurrent
+        # restore/fallback scan sees either a complete step or none at all
+        # (and tolerates ENOENT if it raced the removal mid-read).
         try:
             os.remove(os.path.join(ckpt_dir, name + ".COMMITTED"))
         except OSError:
             pass
+        shutil.rmtree(os.path.join(ckpt_dir, name), ignore_errors=True)
+
+
+def _quarantine(ckpt_dir: str, step: int) -> None:
+    """Hide a corrupt committed step from future scans: drop its marker,
+    rename the directory to *.corrupt (kept for forensics, never GC'd)."""
+    name = f"step_{step:08d}"
+    try:
+        os.remove(os.path.join(ckpt_dir, name + ".COMMITTED"))
+    except OSError:
+        pass
+    src = os.path.join(ckpt_dir, name)
+    dst = src + ".corrupt"
+    try:
+        if os.path.isdir(dst):
+            shutil.rmtree(dst, ignore_errors=True)
+        if os.path.isdir(src):
+            os.rename(src, dst)
+    except OSError:
+        pass      # already gone / raced — the marker removal is what matters
 
 
 def committed_steps(ckpt_dir: str):
@@ -235,18 +297,48 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
 def restore_checkpoint(ckpt_dir: str, like: Any, step: Optional[int] = None,
                        shardings: Any = None, host_id: int = 0) -> Tuple[Any, int]:
     """Restore into the structure of `like`. `shardings` (optional pytree of
-    NamedSharding) re-places leaves onto a NEW mesh — the elastic path."""
-    if step is None:
-        step = latest_step(ckpt_dir)
-        if step is None:
-            raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
+    NamedSharding) re-places leaves onto a NEW mesh — the elastic path.
+
+    Integrity: format-4 steps verify every leaf against the manifest CRC32s.
+    A committed step that fails verification (or cannot be read at all) is
+    QUARANTINED — marker removed, directory renamed `*.corrupt` — and, when
+    `step` was not pinned, the scan falls back to the next-newest committed
+    step until one verifies. With `step` pinned the CheckpointCorruptError
+    propagates (the caller asked for THAT step; no silent substitution).
+    Template mismatches (leaf count / old formats) raise plain ValueError
+    and never quarantine. A step directory that vanishes mid-scan (GC race)
+    is skipped silently.
+    """
+    if step is not None:
+        try:
+            return _restore_step(ckpt_dir, step, like, shardings, host_id)
+        except CheckpointCorruptError:
+            _quarantine(ckpt_dir, step)
+            raise
+    corrupt = []
+    for s in reversed(committed_steps(ckpt_dir)):
+        try:
+            return _restore_step(ckpt_dir, s, like, shardings, host_id)
+        except CheckpointCorruptError as e:
+            corrupt.append(f"step {s}: {e}")
+            _quarantine(ckpt_dir, s)
+            continue
+        except FileNotFoundError:
+            continue                 # GC'd between listing and read — skip
+    if corrupt:
+        raise CheckpointCorruptError(
+            f"no committed checkpoint in {ckpt_dir} verifies; quarantined "
+            + "; ".join(corrupt))
+    raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
+
+
+def _restore_step(ckpt_dir: str, step: int, like: Any, shardings: Any,
+                  host_id: int) -> Tuple[Any, int]:
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
-    data = np.load(os.path.join(path, f"shard_{host_id}.npz"))
+    if not os.path.isdir(path):
+        raise FileNotFoundError(f"checkpoint step directory {path} is gone")
     leaves, treedef = _flatten(_pack_sketch_template(like))
 
-    # Refuse mismatched layouts instead of zipping leaves by index into the
-    # wrong slots (e.g. a format-1 checkpoint stores Frugal2UState unpacked
-    # as 3 leaves; silently restoring it would shift every later leaf).
     manifest_path = os.path.join(path, "manifest.json")
     try:
         with open(manifest_path) as f:
@@ -255,11 +347,20 @@ def restore_checkpoint(ckpt_dir: str, like: Any, step: Optional[int] = None,
         # A half-written manifest can only exist if the COMMITTED marker
         # protocol was bypassed (manual copy, disk fault) — name the file
         # instead of surfacing a bare JSON parse error.
-        raise ValueError(
+        raise CheckpointCorruptError(
             f"checkpoint manifest {manifest_path} is corrupt or truncated "
             f"({e}); the step directory was not written by the committed-"
             "checkpoint protocol — restore from an earlier committed step"
         ) from e
+    except FileNotFoundError as e:
+        raise CheckpointCorruptError(
+            f"checkpoint manifest {manifest_path} is missing from a "
+            "committed step — corrupt or truncated step directory") from e
+
+    # Refuse mismatched layouts instead of zipping leaves by index into the
+    # wrong slots (e.g. a format-1 checkpoint stores Frugal2UState unpacked
+    # as 3 leaves; silently restoring it would shift every later leaf).
+    # Plain ValueError: the TEMPLATE disagrees, the bytes may be fine.
     fmt = manifest.get("format", 1)
     if manifest.get("num_leaves") != len(leaves):
         raise ValueError(
@@ -268,12 +369,38 @@ def restore_checkpoint(ckpt_dir: str, like: Any, step: Optional[int] = None,
             "format-1 checkpoints store Frugal-2U sketches unpacked and are "
             "not readable by this version — re-save from the old layout.")
 
+    shard_path = os.path.join(path, f"shard_{host_id}.npz")
+    chaos.on_restore_shard(shard_path)
+    crcs = manifest.get("crc32") if fmt >= 4 else None
+    raw = []
+    try:
+        with np.load(shard_path) as data:
+            for i in range(len(leaves)):
+                arr = data[f"leaf_{i}"]
+                if crcs is not None and _leaf_crc32(arr) != int(crcs[i]):
+                    raise CheckpointCorruptError(
+                        f"checkpoint leaf {i} in {shard_path} fails its "
+                        "manifest CRC32 — bytes corrupt or truncated")
+                raw.append(arr)
+    except CheckpointCorruptError:
+        raise
+    except FileNotFoundError as e:
+        raise CheckpointCorruptError(
+            f"checkpoint shard {shard_path} is missing from a committed "
+            "step") from e
+    except Exception as e:
+        # Torn/garbled npz container: zipfile.BadZipFile, zlib errors,
+        # KeyError on a missing leaf entry, struct errors on truncation.
+        raise CheckpointCorruptError(
+            f"checkpoint shard {shard_path} is unreadable "
+            f"({type(e).__name__}: {e}) — corrupt or truncated") from e
+
     sh_leaves = None
     if shardings is not None:
         sh_leaves, _ = _flatten(_pack_sketch_shardings(shardings))
     restored = []
     for i, ref in enumerate(leaves):
-        arr = data[f"leaf_{i}"]
+        arr = raw[i]
         if sh_leaves is not None:
             arr = jax.device_put(arr, sh_leaves[i])
         else:

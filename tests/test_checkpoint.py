@@ -187,3 +187,87 @@ def test_format2_checkpoint_under_format3_sketch_reader(tmp_path):
     like = {"sk": GroupedQuantileSketch.create(g, quantile=0.5, algo="2u")}
     with pytest.raises(ValueError, match="format 2"):
         ck.restore_checkpoint(d, like)
+
+
+# ---------------------------------------- format-4 integrity + GC/scan races
+def test_format4_manifest_carries_per_leaf_crc32(tmp_path):
+    import json as _json
+    import zlib as _zlib
+
+    d = str(tmp_path)
+    path = ck.save_checkpoint(d, 1, _state(1))
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = _json.load(f)
+    assert manifest["format"] == 4
+    assert len(manifest["crc32"]) == manifest["num_leaves"]
+    data = np.load(os.path.join(path, "shard_0.npz"))
+    for i, crc in enumerate(manifest["crc32"]):
+        arr = data[f"leaf_{i}"]
+        assert _zlib.crc32(np.ascontiguousarray(arr).tobytes()) \
+            & 0xFFFFFFFF == crc
+
+
+def test_crc_mismatch_quarantines_and_falls_back(tmp_path):
+    """Flip one data byte inside an otherwise perfectly valid npz: only the
+    format-4 manifest CRC can catch it. Restore quarantines the step
+    (marker gone, dir renamed *.corrupt) and falls back."""
+    from repro.resilience import chaos
+
+    d = str(tmp_path)
+    ck.save_checkpoint(d, 1, _state(1))
+    ck.save_checkpoint(d, 2, _state(2))
+    chaos.corrupt_leaf_bytes(os.path.join(d, "step_00000002"), "rewrite")
+    restored, step = ck.restore_checkpoint(d, _state(0))
+    assert step == 1
+    assert float(restored["b"][0]) == 1.0
+    assert ck.committed_steps(d) == [1]
+    assert os.path.isdir(os.path.join(d, "step_00000002.corrupt"))
+
+
+def test_gc_never_removes_newest_even_with_keep_zero(tmp_path):
+    """keep<=0 is clamped to 1: GC may never delete the only checkpoint a
+    crash recovery could restore from."""
+    d = str(tmp_path)
+    for s in (1, 2, 3):
+        ck.save_checkpoint(d, s, _state(s), keep=0)
+    assert ck.committed_steps(d) == [3]
+    _, step = ck.restore_checkpoint(d, _state(0))
+    assert step == 3
+
+
+def test_scan_tolerates_step_dir_vanishing_midway(tmp_path):
+    """GC/restore race: a marker whose step directory is already gone (GC
+    removed it between listing and read) is skipped silently and the scan
+    falls back to an older intact step — no crash, no quarantine of the
+    older step."""
+    import shutil
+
+    d = str(tmp_path)
+    ck.save_checkpoint(d, 1, _state(1))
+    ck.save_checkpoint(d, 2, _state(2))
+    # simulate the race: dir gone, marker still listed
+    shutil.rmtree(os.path.join(d, "step_00000002"))
+    restored, step = ck.restore_checkpoint(d, _state(0))
+    assert step == 1
+    assert float(restored["b"][0]) == 1.0
+
+
+def test_gc_removes_marker_before_directory(tmp_path):
+    """The GC order contract behind the race tolerance above: after GC, no
+    marker may point at a deleted directory (readers only consider marked
+    steps, so marker-first removal keeps every visible step complete)."""
+    d = str(tmp_path)
+    for s in (1, 2, 3, 4):
+        ck.save_checkpoint(d, s, _state(s), keep=2)
+    for s in ck.committed_steps(d):
+        assert os.path.isdir(os.path.join(d, f"step_{s:08d}"))
+    assert ck.committed_steps(d) == [3, 4]
+
+
+def test_idempotent_resave_skips_committed_step(tmp_path):
+    d = str(tmp_path)
+    path1 = ck.save_checkpoint(d, 1, _state(1))
+    path2 = ck.save_checkpoint(d, 1, _state(99))   # already committed: no-op
+    assert path1 == path2
+    restored, _ = ck.restore_checkpoint(d, _state(0))
+    assert float(restored["b"][0]) == 1.0

@@ -21,9 +21,12 @@ import pytest
 from repro.core.packing import (
     _MAX_STEP,
     pack_step_sign,
+    step_sign_word_canonical,
     unpack_step_sign,
 )
+from repro.core.program import make_program
 from repro.core.sketch import GroupedQuantileSketch
+from repro.resilience.health import validate_planes
 
 # Only the property tests need hypothesis; a missing dev dep must not kill
 # collection under -x.
@@ -136,6 +139,61 @@ if HAS_HYPOTHESIS:
         s2, g2 = _roundtrip(float(step), sign)
         assert np.float32(s2).view(np.int32) == step.view(np.int32)
         assert g2 == sign
+
+    @settings(max_examples=200, deadline=None)
+    @given(exp=st.integers(-63, 31), mant=st.integers(0, 2 ** 23 - 1),
+           neg=st.booleans(), sign=st.sampled_from([1.0, -1.0]),
+           bit=st.integers(0, 31))
+    def test_property_single_bit_flip_detectable_or_absorbed(
+            exp, mant, neg, sign, bit):
+        """The resilience layer's detectable-vs-absorbable map for a single
+        bit flip of a packed (step, sign) word, pinned exactly:
+
+        canonical words (what pack_step_sign can emit) are
+          {w : w & 0x7FFFFFFF == 0} ∪ {e' ∈ [64, 158]} ∪ {e' ∈ [160, 254]}
+        with e' = (w >> 23) & 0xFF. A flipped word either stays canonical
+        (the flip is ABSORBED into a valid neighboring lane state — decodes
+        finite, in-domain, sign exactly ±1) or is non-canonical, in which
+        case decode canonicalizes it (re-packing the decoded value yields a
+        DIFFERENT word — word-level detectability), and
+        resilience.health's 'step' invariant flags it — except the one
+        absorbed class e' == 0 with a non-zero mantissa, which decodes to
+        the legitimate flushed state (0, ±1) and is deliberately silent."""
+        step = np.float32((1.0 + mant * 2.0 ** -23) * 2.0 ** exp)
+        if neg:
+            step = -step
+        word = int(np.asarray(pack_step_sign(jnp.float32(step),
+                                             jnp.float32(sign))))
+        u = (word & 0xFFFFFFFF) ^ (1 << bit)
+        flipped = jnp.asarray(np.uint32(u).view(np.int32))
+
+        e = (u >> 23) & 0xFF
+        expect_canonical = ((u & 0x7FFFFFFF) == 0) or (64 <= e <= 158) \
+            or (160 <= e <= 254)
+        canonical = bool(np.asarray(step_sign_word_canonical(flipped)))
+        assert canonical == expect_canonical, hex(u)
+
+        s2, g2 = unpack_step_sign(flipped)
+        s2, g2 = float(s2), float(g2)
+        # Decode NEVER emits a state outside the lane domain — garbage in,
+        # canonical out (no NaN/inf step, sign exactly ±1).
+        assert g2 in (1.0, -1.0), hex(u)
+        absorbed_zero = (e == 0) and (u & 0x7FFFFFFF) != 0
+        if not canonical:
+            repacked = int(np.asarray(pack_step_sign(jnp.float32(s2),
+                                                     jnp.float32(g2))))
+            assert repacked != int(np.int32(np.uint32(u))), hex(u)
+
+        # The health scan's 'step' invariant flags EXACTLY the states whose
+        # value doesn't survive their own serialization: every non-canonical
+        # flip except the absorbed zero class.
+        prog = make_program("2u")
+        flagged = bool(np.asarray(validate_planes(
+            prog, (jnp.zeros((1,), jnp.float32),
+                   jnp.asarray([s2], jnp.float32),
+                   jnp.asarray([g2], jnp.float32))))[0])
+        assert flagged == ((not canonical) and not absorbed_zero), \
+            (hex(u), s2, g2)
 
 else:
 

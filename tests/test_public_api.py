@@ -74,3 +74,50 @@ def test_half_registered_program_fails_lint():
                                          scalar_names=("half_life_ticks",)))
     with pytest.raises((AssertionError, ValueError)):
         validate_program(broken)
+
+
+def test_program_without_invariants_fails_lint():
+    """Every plane field must declare an invariant DOMAIN (resilience.health
+    derives lane corruption scanning from these declarations): a program
+    stripped of its invariants must fail validate_program, and a layout
+    declaring an unknown domain / unknown field / duplicate must be refused
+    at construction."""
+    from repro.core.program import (StateLayout, family_base,
+                                    validate_program)
+
+    base = family_base("2u")
+    stripped = dataclasses.replace(
+        base, layout=dataclasses.replace(base.layout, invariants=()))
+    with pytest.raises(AssertionError, match="invariant"):
+        validate_program(stripped)
+
+    # heads must be scanned for finiteness specifically
+    wrong_head = dataclasses.replace(
+        base, layout=dataclasses.replace(
+            base.layout, invariants=(("m", "sign"), ("step", "step"),
+                                     ("sign", "sign"))))
+    with pytest.raises(AssertionError, match="finite"):
+        validate_program(wrong_head)
+
+    with pytest.raises(ValueError, match="unknown plane field"):
+        StateLayout(plane_fields=("m",), packing=(("m", None),),
+                    invariants=(("step", "finite"),))
+    with pytest.raises(ValueError, match="not one of"):
+        StateLayout(plane_fields=("m",), packing=(("m", None),),
+                    invariants=(("m", "positive"),))
+    with pytest.raises(ValueError, match="duplicate"):
+        StateLayout(plane_fields=("m",), packing=(("m", None),),
+                    invariants=(("m", "finite"), ("m", "finite")))
+
+
+def test_every_registered_program_declares_full_invariants():
+    """Pin the registry-wide guarantee check_health depends on: every
+    registered family's every plane field carries a domain declaration."""
+    from repro.core import program as program_mod
+
+    for fam in program_mod.registered_families():
+        layout = program_mod.family_base(fam).layout
+        declared = dict(layout.invariants)
+        assert set(declared) == set(layout.plane_fields), fam
+        for head in layout.heads:
+            assert declared[head] == "finite", (fam, head)

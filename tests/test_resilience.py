@@ -1,0 +1,453 @@
+"""Chaos suite: deterministic fault injection across the resilience layer.
+
+Four guarantees under test (DESIGN.md §12):
+
+  * kill-anywhere ingest  — a stream that dies at ANY chunk boundary
+    surfaces as a resumable StreamInterrupted; re-feeding the same stream
+    with skip_items=err.items_applied ends bit-identical to the
+    uninterrupted run, for every registered lane program × every backend;
+  * checksummed restore   — a committed checkpoint whose bytes rot after
+    commit (truncated / garbled / silently-rewritten shard) is quarantined
+    at restore and the scan falls back to the newest step that verifies;
+  * torn-write exclusion  — a kill at any checkpoint-protocol phase never
+    exposes a torn step as committed, and the save is re-runnable;
+  * self-healing lanes    — an in-memory bit flip is caught by the
+    program's declared invariants, and a quarantined lane's future is
+    bit-exact with a lane freshly created at the same cursor position.
+
+The kill matrix sweeps CHAOS_SEEDS (comma-separated env, default "0") —
+CI's chaos job runs three seeds so the kill point moves across runs while
+every individual run stays deterministic.
+"""
+import dataclasses
+import os
+import zlib
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.api import FleetSpec, QuantileFleet, StreamCursor
+from repro.data.pipeline import DataConfig, RetryPolicy, SyntheticCorpus, \
+    with_retry
+from repro.parallel.group_sharding import group_mesh
+from repro.resilience import (CheckpointKilled, Fault, FaultPlan,
+                              LaneCorruptionError, StreamInterrupted, chaos)
+from repro.serve.slo import SLOFleet
+from repro.train import checkpoint as ckpt
+
+SEEDS = tuple(int(s) for s in os.environ.get("CHAOS_SEEDS", "0").split(","))
+
+G, T, CHUNK = 4, 200, 32
+N_CHUNKS = -(-T // CHUNK)
+BACKENDS = ("jnp", "fused", "sharded")
+
+
+def _data(seed=4):
+    rng = np.random.default_rng(seed)
+    return rng.normal(5.0, 2.0, size=(T, G)).astype(np.float32)
+
+
+def _blocks(data):
+    # Ragged on purpose: interrupts must land on RE-CHUNKED boundaries,
+    # not on source-block boundaries.
+    return [data[0:37], data[37:81], data[81:]]
+
+
+def _spec(program, backend, **kw):
+    mesh = group_mesh(min(2, len(jax.devices()))) \
+        if backend == "sharded" else None
+    return FleetSpec(num_groups=G, quantiles=(0.5, 0.9), backend=backend,
+                     chunk_t=CHUNK, mesh=mesh, program=program, **kw)
+
+
+def _assert_fleet_equal(a: QuantileFleet, b: QuantileFleet, what=""):
+    assert np.array_equal(a.estimate(), b.estimate()), what
+    for f, pa, pb in zip(a.spec.program.layout.plane_fields,
+                         a._lane_sketch().planes(),
+                         b._lane_sketch().planes()):
+        assert np.array_equal(np.asarray(pa), np.asarray(pb)), (what, f)
+    assert int(a.cursor.t_offset) == int(b.cursor.t_offset), what
+    assert int(a.cursor.seed) == int(b.cursor.seed), what
+
+
+# --------------------------------------------------------------- kill matrix
+@pytest.mark.parametrize("chaos_seed", SEEDS)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_kill_anywhere_resume_bit_exact(lane_program, backend, chaos_seed):
+    """Kill ingest at a seeded chunk boundary; resume must be bit-exact."""
+    # Spread kill points across the (program, seed) grid deterministically.
+    plan_seed = chaos_seed * 1009 + \
+        zlib.crc32(lane_program.family.encode()) % 997
+    plan = FaultPlan.seeded_kill(plan_seed, N_CHUNKS)
+    kill_after = plan.faults[0].at
+
+    data = _data()
+    spec = _spec(lane_program, backend)
+    ref = QuantileFleet.create(spec, seed=3).ingest_stream(
+        iter(_blocks(data)), chunk_t=CHUNK)
+
+    fleet = QuantileFleet.create(spec, seed=3)
+    with chaos.armed(plan):
+        with pytest.raises(StreamInterrupted) as ei:
+            fleet.ingest_stream(iter(_blocks(data)), chunk_t=CHUNK)
+    err = ei.value
+    assert err.items_applied == min(kill_after * CHUNK, T)
+    assert err.fleet is not None
+    assert int(err.fleet.cursor.t_offset) == err.items_applied
+
+    resumed = err.fleet.ingest_stream(iter(_blocks(data)), chunk_t=CHUNK,
+                                      skip_items=err.items_applied)
+    _assert_fleet_equal(ref, resumed,
+                        (lane_program.family, backend, kill_after))
+
+
+def test_source_exception_discards_staged_partial():
+    """A source dying mid-block commits only FULL chunks: the 8 staged rows
+    beyond the first chunk_t boundary are discarded, not half-applied."""
+    data = _data()
+    spec = _spec("2u", "fused")
+
+    def dying():
+        yield data[:40]                  # 32 applied + 8 staged
+        raise OSError("socket reset")
+
+    fleet = QuantileFleet.create(spec, seed=3)
+    with pytest.raises(StreamInterrupted) as ei:
+        fleet.ingest_stream(dying(), chunk_t=CHUNK)
+    err = ei.value
+    assert err.items_applied == CHUNK
+
+    ref = QuantileFleet.create(spec, seed=3).ingest_stream(
+        iter(_blocks(data)), chunk_t=CHUNK)
+    resumed = err.fleet.ingest_stream(iter(_blocks(data)), chunk_t=CHUNK,
+                                      skip_items=err.items_applied)
+    _assert_fleet_equal(ref, resumed)
+
+
+def test_malformed_chunks_still_raise_value_error():
+    """Shape errors are caller bugs, not transient faults — they must stay
+    plain ValueError, never a resumable StreamInterrupted."""
+    fleet = QuantileFleet.create(_spec("2u", "fused"), seed=0)
+    with pytest.raises(ValueError):
+        fleet.ingest_stream([np.zeros((5, 3), np.float32)])
+
+
+def test_skip_items_validation():
+    fleet = QuantileFleet.create(_spec("2u", "fused"), seed=0)
+    with pytest.raises(ValueError):
+        fleet.ingest_stream([_data()], skip_items=-1)
+
+
+def test_seeded_kill_plans_are_deterministic():
+    a, b = FaultPlan.seeded_kill(7, 10), FaultPlan.seeded_kill(7, 10)
+    assert a.faults == b.faults
+    assert 1 <= a.faults[0].at <= 10
+
+
+# ---------------------------------------------------------- self-healing lanes
+def _with_planes(fleet: QuantileFleet, planes) -> QuantileFleet:
+    sk = fleet._lane_sketch()
+    return dataclasses.replace(
+        fleet, state=sk.with_planes(tuple(jnp.asarray(p) for p in planes)))
+
+
+def _corrupted(fleet: QuantileFleet, plane: int, lane: int,
+               value: float) -> QuantileFleet:
+    planes = [np.asarray(p).copy() for p in fleet._lane_sketch().planes()]
+    planes[plane][lane] = value
+    return _with_planes(fleet, planes)
+
+
+@pytest.mark.parametrize("backend", ("jnp", "fused"))
+def test_bitflip_quarantine_heal_bit_exact(backend):
+    """An injected in-memory bit flip is detected by the program's declared
+    invariants; quarantine re-initializes the lane in place, and its future
+    is bit-exact with a lane CREATED at the current cursor (counter-hashed
+    uniforms have no history)."""
+    data = _data()
+    spec = _spec("2u", backend, health="quarantine")
+    t1 = 96                                    # 3 whole chunks
+    # sign plane (index 2), lane 3, bit 22: ±1.0 -> ±1.5, out of domain.
+    # The flip lands in the LAST chunk window before the health scan —
+    # earlier flips can be legitimately overwritten by later ticks (the
+    # rule rewrites sign in-domain), which is absorption, not detection.
+    plan = FaultPlan(faults=[Fault(kind="flip", at=70, plane=2, lane=3,
+                                   bit=22)])
+
+    fleet = QuantileFleet.create(spec, seed=3)
+    with chaos.armed(plan):
+        fleet = fleet.ingest_stream([data[:t1]], chunk_t=CHUNK)
+    assert plan.fired() == 1
+    rep = fleet.health()
+    assert not rep.healthy and rep.lane_ids == (3,)
+
+    fleet, rep = fleet.check_health()
+    assert rep.quarantined == 1
+    assert fleet.health().healthy
+    fleet = fleet.ingest_stream([data[t1:]], chunk_t=CHUNK)
+
+    # Lane 3 == the same lane of a fleet whose lanes STARTED at tick t1.
+    fresh = QuantileFleet.create(
+        spec, seed=3, cursor=StreamCursor.create(seed=3, t_offset=t1))
+    fresh = fresh.ingest_stream([data[t1:]], chunk_t=CHUNK)
+    for pa, pb in zip(fleet._lane_sketch().planes(),
+                      fresh._lane_sketch().planes()):
+        assert np.asarray(pa)[3] == np.asarray(pb)[3]
+
+    # Every OTHER lane is untouched: bit-exact with the uninterrupted run.
+    ref = QuantileFleet.create(spec, seed=3).ingest_stream([data],
+                                                           chunk_t=CHUNK)
+    keep = np.ones((spec.num_lanes,), bool)
+    keep[3] = False
+    for pa, pb in zip(fleet._lane_sketch().planes(),
+                      ref._lane_sketch().planes()):
+        assert np.array_equal(np.asarray(pa)[keep], np.asarray(pb)[keep])
+
+
+def test_health_policy_raise():
+    fleet = QuantileFleet.create(
+        FleetSpec(num_groups=G, backend="jnp", health="raise"),
+        seed=0).ingest(_data())
+    bad = _corrupted(fleet, plane=2, lane=1, value=-1.5)
+    with pytest.raises(LaneCorruptionError, match="1/4 lanes"):
+        bad.check_health()
+    # scan-only health() never raises
+    assert bad.health().corrupt_lanes == 1
+
+
+def test_health_policy_ignore_reports_without_mutating():
+    fleet = QuantileFleet.create(
+        FleetSpec(num_groups=G, backend="jnp", health="ignore"),
+        seed=0).ingest(_data())
+    bad = _corrupted(fleet, plane=0, lane=2, value=np.nan)
+    out, rep = bad.check_health()
+    assert out is bad
+    assert rep.corrupt_lanes == 1 and rep.quarantined == 0
+
+
+def test_healthy_fleet_check_is_identity():
+    fleet = QuantileFleet.create(
+        FleetSpec(num_groups=G, backend="jnp", health="quarantine"),
+        seed=0).ingest(_data())
+    out, rep = fleet.check_health()
+    assert out is fleet and rep.healthy and rep.quarantined == 0
+
+
+def test_step_plane_roundtrip_invariant_catches_unpackable_state():
+    """A step value the packed (step, sign) word cannot represent — e.g. a
+    huge out-of-range float planted by corruption — flags even though it is
+    finite (the 'step' domain round-trips through core.packing)."""
+    fleet = QuantileFleet.create(
+        FleetSpec(num_groups=G, backend="jnp", health="ignore"),
+        seed=0).ingest(_data())
+    bad = _corrupted(fleet, plane=1, lane=0, value=1e38)  # > 2^32 clip range
+    assert bad.health().lane_ids == (0,)
+
+
+def test_fleet_spec_rejects_unknown_health_policy():
+    with pytest.raises(ValueError, match="health"):
+        FleetSpec(num_groups=4, health="retry-forever")
+
+
+def test_slo_fleet_quarantine_accumulates():
+    fl = SLOFleet(seed=1, capacity=4)
+    for i in range(40):
+        fl.observe("api", "ttft_q99_ms", 100.0 + i)
+        fl.observe("api", "tok_q50_ms", 10.0 + 0.1 * i)
+    fl.flush()
+    assert fl.check_health().healthy and fl.quarantined_total == 0
+
+    sk = fl._fleet._lane_sketch()
+    planes = [np.asarray(p).copy() for p in sk.planes()]
+    planes[2][0] = 5.0                       # sign plane garbage, lane 0
+    fl._fleet = dataclasses.replace(
+        fl._fleet, state=sk.with_planes(tuple(jnp.asarray(p)
+                                              for p in planes)))
+    rep = fl.check_health()
+    assert rep.quarantined == 1 and fl.quarantined_total == 1
+    assert fl.last_health is rep
+    assert fl.check_health().healthy
+
+
+# ------------------------------------------------------- checkpoint integrity
+def _two_step_dir(tmp_path, spec, data):
+    d = str(tmp_path)
+    f1 = QuantileFleet.create(spec, seed=1).ingest(data)
+    f1.checkpoint(d, step=1)
+    f2 = f1.ingest(data)
+    f2.checkpoint(d, step=2)
+    return d, f1, f2
+
+
+@pytest.mark.parametrize("mode", ("truncate", "garble", "rewrite"))
+def test_corrupt_newest_step_falls_back_and_quarantines(tmp_path, mode):
+    """Post-commit rot on the newest step: restore verifies, quarantines it
+    (marker dropped, dir renamed *.corrupt) and falls back to step 1 —
+    'rewrite' leaves a perfectly valid npz container, so only the format-4
+    manifest CRC32 can catch it."""
+    data = _data()
+    spec = FleetSpec(num_groups=G, backend="fused")
+    d, f1, f2 = _two_step_dir(tmp_path, spec, data)
+
+    chaos.corrupt_leaf_bytes(os.path.join(d, "step_00000002"), mode)
+    restored = QuantileFleet.restore(d, spec)
+    _assert_fleet_equal(restored, f1, mode)
+    assert ckpt.committed_steps(d) == [1]
+    assert os.path.isdir(os.path.join(d, "step_00000002.corrupt"))
+
+    # Re-ingesting from the fallback reproduces step 2 bit-exactly.
+    _assert_fleet_equal(restored.ingest(data), f2, mode)
+
+
+def test_pinned_corrupt_step_raises_and_quarantines(tmp_path):
+    """With step= pinned there is no silent substitution: the corruption
+    error propagates (named 'corrupt or truncated') and the step is still
+    quarantined."""
+    data = _data()
+    spec = FleetSpec(num_groups=G, backend="fused")
+    d, f1, _ = _two_step_dir(tmp_path, spec, data)
+    chaos.corrupt_leaf_bytes(os.path.join(d, "step_00000002"), "rewrite")
+    with pytest.raises(ckpt.CheckpointCorruptError,
+                       match="corrupt or truncated"):
+        QuantileFleet.restore(d, spec, step=2)
+    assert ckpt.committed_steps(d) == [1]
+    assert os.path.isdir(os.path.join(d, "step_00000002.corrupt"))
+
+
+def test_every_step_corrupt_raises_named_error(tmp_path):
+    data = _data()
+    spec = FleetSpec(num_groups=G, backend="fused")
+    d, _, _ = _two_step_dir(tmp_path, spec, data)
+    chaos.corrupt_leaf_bytes(os.path.join(d, "step_00000001"), "garble")
+    chaos.corrupt_leaf_bytes(os.path.join(d, "step_00000002"), "truncate")
+    with pytest.raises(ckpt.CheckpointCorruptError, match="verifies"):
+        QuantileFleet.restore(d, spec)
+    assert ckpt.committed_steps(d) == []
+
+
+def test_dropped_shard_read_skips_to_older_step(tmp_path):
+    """A shard read failing with ENOENT (GC race / transient FS) is a SKIP,
+    not corruption: restore falls back without quarantining — the step's
+    bytes may be fine next scan."""
+    data = _data()
+    spec = FleetSpec(num_groups=G, backend="fused")
+    d, f1, _ = _two_step_dir(tmp_path, spec, data)
+    with chaos.armed(FaultPlan(faults=[Fault(kind="drop_shard")])):
+        restored = QuantileFleet.restore(d, spec)
+    _assert_fleet_equal(restored, f1)
+    assert ckpt.committed_steps(d) == [1, 2]   # nothing quarantined
+
+
+@pytest.mark.parametrize("phase", ("after_leaves", "before_marker"))
+def test_checkpoint_kill_never_exposes_torn_step(tmp_path, phase):
+    """Kill the writer between ANY two protocol phases: the step must not
+    be visible as committed, older steps must restore, and re-running the
+    save must succeed."""
+    data = _data()
+    spec = FleetSpec(num_groups=G, backend="fused")
+    d = str(tmp_path)
+    f1 = QuantileFleet.create(spec, seed=1).ingest(data)
+    f1.checkpoint(d, step=1)
+    f2 = f1.ingest(data)
+    with chaos.armed(FaultPlan(faults=[Fault(kind="ckpt_kill",
+                                             phase=phase)])):
+        with pytest.raises(CheckpointKilled):
+            f2.checkpoint(d, step=2)
+    assert ckpt.committed_steps(d) == [1]
+    _assert_fleet_equal(QuantileFleet.restore(d, spec), f1, phase)
+
+    f2.checkpoint(d, step=2)                   # crash recovery: re-save
+    assert ckpt.committed_steps(d) == [1, 2]
+    _assert_fleet_equal(QuantileFleet.restore(d, spec), f2, phase)
+
+
+def test_format3_unchecksummed_save_still_restores(tmp_path):
+    import json
+    data = _data()
+    spec = FleetSpec(num_groups=G, backend="fused")
+    d = str(tmp_path)
+    f1 = QuantileFleet.create(spec, seed=1).ingest(data)
+    ckpt.save_checkpoint(d, 1, f1.checkpoint_state(), checksum=False)
+    with open(os.path.join(d, "step_00000001", "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["format"] == 3 and "crc32" not in manifest
+    restored = QuantileFleet.restore(d, spec)
+    _assert_fleet_equal(restored, f1)
+
+
+# ----------------------------------------------------------- pipeline retries
+def test_pipeline_retry_backoff_then_bit_identical_batch():
+    sleeps = []
+    corpus = SyntheticCorpus(
+        DataConfig(), retry=RetryPolicy(max_retries=3, backoff_s=0.01,
+                                        backoff_factor=2.0, deadline_s=60.0),
+        _sleep=sleeps.append)
+    ref = SyntheticCorpus(DataConfig()).batch(5)
+    plan = FaultPlan(faults=[Fault(kind="stream", at=1, scope="pipeline"),
+                             Fault(kind="stream", at=2, scope="pipeline")])
+    with chaos.armed(plan):
+        batch = corpus.batch(5)
+    assert sleeps == [0.01, 0.02]
+    # the retried draw keys on (seed, host, step): bit-identical
+    assert np.array_equal(batch["tokens"], ref["tokens"])
+    assert np.array_equal(batch["targets"], ref["targets"])
+
+
+def test_pipeline_retry_exhaustion_reraises():
+    sleeps = []
+    corpus = SyntheticCorpus(
+        DataConfig(), retry=RetryPolicy(max_retries=2, backoff_s=0.01),
+        _sleep=sleeps.append)
+    plan = FaultPlan(faults=[Fault(kind="stream", at=i, scope="pipeline")
+                             for i in range(1, 6)])
+    with chaos.armed(plan):
+        with pytest.raises(chaos.StreamFault):
+            corpus.batch(0)
+    assert len(sleeps) == 2                    # 3 attempts, 2 backoffs
+
+
+def test_retry_deadline_cuts_backoff_short():
+    clock = [0.0]
+
+    def fn():
+        chaos.count_event("pipeline")
+        return "ok"
+
+    plan = FaultPlan(faults=[Fault(kind="stream", at=i, scope="pipeline")
+                             for i in range(1, 10)])
+    with chaos.armed(plan):
+        with pytest.raises(chaos.StreamFault):
+            with_retry(fn, RetryPolicy(max_retries=8, backoff_s=1.0,
+                                       backoff_factor=2.0, deadline_s=3.0),
+                       sleep=lambda s: clock.__setitem__(0, clock[0] + s),
+                       clock=lambda: clock[0])
+    assert clock[0] == 3.0                     # slept 1 + 2, then gave up
+
+
+def test_no_retry_policy_means_no_retry():
+    corpus = SyntheticCorpus(DataConfig())    # retry=None
+    plan = FaultPlan(faults=[Fault(kind="stream", at=1, scope="pipeline")])
+    with chaos.armed(plan):
+        with pytest.raises(chaos.StreamFault):
+            corpus.batch(0)
+
+
+# ----------------------------------------------------------------- harness
+def test_hooks_are_noops_when_disarmed():
+    assert chaos.active() is None
+    chaos.count_event("ingest")                # no raise
+    chaos.on_checkpoint_phase("after_leaves")
+    chaos.on_restore_shard("/nonexistent")
+    sk = QuantileFleet.create(_spec("2u", "jnp"), seed=0)._lane_sketch()
+    assert chaos.corrupt_sketch(sk, 0, 100) is sk
+
+
+def test_armed_restores_previous_plan():
+    outer, inner = FaultPlan(), FaultPlan()
+    with chaos.armed(outer):
+        with chaos.armed(inner):
+            assert chaos.active() is inner
+        assert chaos.active() is outer
+    assert chaos.active() is None
