@@ -12,9 +12,8 @@ from __future__ import annotations
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
-from repro.core import GroupedQuantileSketch
+from repro.api import FleetSpec, QuantileFleet
 from repro.core.reference import relative_mass_error
 from repro.data.streams import (
     twitter_like_interval_streams, daily_combined_interval_streams, pad_ragged)
@@ -23,9 +22,10 @@ from .common import baseline_run, save_result, csv_line, fraction_within
 
 def _fleet_errors(streams, q, algo, seed=0):
     items = pad_ragged(streams)
-    sk = GroupedQuantileSketch.create(len(streams), quantile=q, algo=algo)
-    sk = sk.process(jnp.asarray(items), jax.random.PRNGKey(seed))
-    ests = np.asarray(sk.m)
+    spec = FleetSpec(num_groups=len(streams), quantiles=(q,), algo=algo)
+    fleet = QuantileFleet.create(spec, key=jax.random.PRNGKey(seed))
+    fleet = fleet.ingest(items)
+    ests = fleet.estimate(q)
     return [relative_mass_error(float(e), sorted(s.tolist()), q)
             for e, s in zip(ests, streams)]
 

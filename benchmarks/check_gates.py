@@ -1,13 +1,13 @@
 """Perf-gate checker for the bench-regression CI job.
 
-Each systems benchmark (e7-e12) records its own gate threshold and verdict
+Each systems benchmark (e7-e13) records its own gate threshold and verdict
 in a repo-root BENCH_*.json (the PR-over-PR perf trajectory files). The
 benchmarks themselves only WARN on a miss — wall-clock on a shared CI
 runner is too noisy to hard-fail inside the bench — so this checker is the
 single place that turns a freshly-rerun gate verdict into a CI failure.
 
-Usage (after `python -m benchmarks.run --only e7,e8,e9,e10,e11,e12` rewrote
-files):  python -m benchmarks.check_gates
+Usage (after `python -m benchmarks.run --only e7,e8,e9,e10,e11,e12,e13`
+rewrote files):  python -m benchmarks.check_gates
 """
 from __future__ import annotations
 
@@ -32,6 +32,8 @@ GATES = (
      "decayed lanes re-converge >= 2x faster than vanilla after a shift"),
     ("BENCH_resilience_overhead.json", "e12",
      "hardened cycle (health scan + CRC checkpoint) <= 1.05x bare"),
+    ("BENCH_sparse_ingest.json", "e13",
+     "4096-event Zipf round at L=2^22 <= 1.5x the L=2^16 time (O(events))"),
 )
 
 # e9 is the one gate bound by RUNNER CAPABILITY, not code: it measures

@@ -23,7 +23,8 @@ def main() -> None:
         bench_combined_stream, bench_groupby_twitter,
         bench_convergence_theory, bench_program_engine,
         bench_kernel_throughput, bench_sharded_fleet, bench_fleet_api,
-        bench_drift_tracking, bench_resilience_overhead)
+        bench_drift_tracking, bench_resilience_overhead,
+        bench_sparse_ingest)
 
     suite = {
         "e1": ("static_cauchy (paper Fig 4)", bench_static_cauchy.run),
@@ -44,6 +45,8 @@ def main() -> None:
                 bench_drift_tracking.run),
         "e12": ("resilience overhead hardened vs bare (ours)",
                 bench_resilience_overhead.run),
+        "e13": ("sparse ingest flat-in-L + million-lane Zipf serve (ours)",
+                bench_sparse_ingest.run),
     }
     only = set(args.only.split(",")) if args.only else None
     if only:

@@ -62,6 +62,7 @@ from repro.core import frugal, streaming
 from repro.core import program as program_mod
 from repro.core import rng as crng
 from repro.core.sketch import GroupedQuantileSketch
+from repro.kernels import ops as kernel_ops
 from repro.parallel.group_sharding import ShardedGroupFleet
 from repro.resilience import chaos
 from repro.resilience import health as health_mod
@@ -89,17 +90,39 @@ def _lane_tick(planes, ticks, q, items, seed, g_offset, scalars, program):
     return program.run_tick(planes, items, r, ctx)
 
 
-@functools.partial(jax.jit, static_argnames=("program",))
-def _lane_tick_sparse(planes_s, ticks_s, q_s, lanes, items, seed, g_offset,
-                      scalars, program):
-    """The same tick on a gathered O(events) lane slice — uniforms still key
-    on the ABSOLUTE lane index and the lane's own tick, so the trajectory is
-    bit-identical to the dense round."""
-    g_ids = jnp.asarray(g_offset, jnp.int32) + lanes
-    r = crng.counter_uniform(seed, ticks_s, g_ids)
-    ctx = frugal.TickCtx(quantile=q_s, t=ticks_s, seed=seed, lanes=g_ids,
-                         scalars=scalars)
-    return program.run_tick(planes_s, items, r, ctx)
+def _check_sparse_lanes(lanes, items, mask):
+    """Opt-in debug check for the tick_lanes_sparse lane contract: masked-in
+    lanes must be DISTINCT (a lane's same-round events would race in the
+    scatter and share one tick's uniform) and no masked-out pad slot may
+    name a masked-in lane (duplicate scatter indices write in undefined
+    order — the pad's unchanged state could clobber the real update).
+    Host-side and eager-only by design: it is a debugging aid, not a hot
+    path."""
+    try:
+        ln = np.asarray(lanes)
+        if mask is None:
+            mk = ~np.isnan(np.asarray(items))
+        else:
+            mk = np.asarray(mask) != 0
+    except jax.errors.TracerArrayConversionError as e:
+        raise ValueError(
+            "check_duplicates needs concrete (eager) lanes/mask — drop the "
+            "flag inside jit") from e
+    real = ln[mk]
+    uniq, counts = np.unique(real, return_counts=True)
+    dupes = uniq[counts > 1]
+    if dupes.size:
+        raise ValueError(
+            f"tick_lanes_sparse: lanes {dupes[:8].tolist()} repeat within "
+            "one round — split same-lane events into successive calls in "
+            "arrival order (serve.SLOFleet.flush does this)")
+    bad_pads = np.intersect1d(ln[~mk], uniq)
+    if bad_pads.size:
+        raise ValueError(
+            f"tick_lanes_sparse: masked-out pad slots reuse event lanes "
+            f"{bad_pads[:8].tolist()} — pad with lanes that have NO event "
+            "this round (duplicate scatter indices write in undefined "
+            "order)")
 
 
 @jax.tree_util.register_dataclass
@@ -357,10 +380,13 @@ class QuantileFleet:
 
         With a per-lane cursor, each lane's clock advances only where `mask`
         is 1 (default: where items are non-NaN) — a lane's k-th event always
-        consumes uniform (seed, k, lane) regardless of batching. With the
-        scalar clock every lane shares the tick and the clock advances by 1
-        (block semantics — what the in-step monitor fleets use). jit-safe:
-        jnp-backend fleets may call this inside a traced step.
+        consumes uniform (seed, k, lane) regardless of batching. Items on
+        masked-OUT lanes are forced to NaN first, so mask 0 is a TRUE no-op:
+        a lane's state never moves without its clock (the counter-RNG stream
+        would silently desync). With the scalar clock every lane shares the
+        tick and the clock advances by 1 (block semantics — what the in-step
+        monitor fleets use); a mask is meaningless there and raises. jit-
+        safe: jnp-backend fleets may call this inside a traced step.
         """
         if isinstance(self.state, ShardedGroupFleet):
             raise NotImplementedError(
@@ -372,6 +398,16 @@ class QuantileFleet:
             raise ValueError(
                 f"lane items shape {items.shape} != [{self.num_lanes}]")
         cur = self.cursor
+        if not cur.per_lane and mask is not None:
+            raise ValueError(
+                "tick_lanes(mask=...) needs a per-lane cursor: with the "
+                "scalar clock every lane's tick advances together, so a "
+                "mask cannot hold individual clocks back — pass NaN items "
+                "for no-op lanes, or create the fleet with "
+                "per_lane_clock=True")
+        if mask is not None:
+            mask = jnp.asarray(mask, jnp.int32)
+            items = jnp.where(mask == 0, jnp.nan, items)
         prog = self.spec.program
         planes = _lane_tick(
             sk.planes(), cur.t_offset, sk.quantile, items, cur.seed,
@@ -386,15 +422,28 @@ class QuantileFleet:
             cur = cur.advance(1)
         return dataclasses.replace(self, state=state, cursor=cur)
 
-    def tick_lanes_sparse(self, lanes, items, mask=None) -> "QuantileFleet":
+    def tick_lanes_sparse(self, lanes, items, mask=None, *,
+                          donate: bool = False,
+                          check_duplicates: bool = False) -> "QuantileFleet":
         """O(events) event round: gather the named lanes, tick them, scatter
-        back — a handful of events against millions of lanes never does
-        O(L) work. Requires a per-lane cursor; `lanes` must not repeat
+        back IN PLACE — a handful of events against millions of lanes never
+        does O(L) work (kernels.ops.frugal_update_sparse: the gather→tick→
+        scatter Pallas kernel on TPU, the donation-aware jitted scatter pair
+        elsewhere). Requires a per-lane cursor; `lanes` must not repeat
         within one call (split same-lane events into successive rounds, in
         arrival order — serve.SLOFleet.flush does exactly this). Lanes with
-        mask 0 (NaN item) scatter their own unchanged state back, so
-        callers may pad the lane list to a stable shape with any lane that
-        has no event this round."""
+        mask 0 scatter their own unchanged state back — items there are
+        forced to NaN first, so a masked-out slot can never move state
+        without advancing the lane's clock — and callers may pad the lane
+        list to a stable shape with any lane that has no event this round.
+
+        `donate=True` releases THIS fleet's state buffers to the round so
+        the scatters run in place (per-round cost flat in L — the serve
+        path's mode); the old fleet object becomes unusable. The default
+        keeps functional semantics at the price of one [L] copy per plane.
+        `check_duplicates=True` adds an eager host-side round-contract
+        check (distinct masked-in lanes; pads off event lanes) — a debug
+        aid for new callers, not a hot-path default."""
         if isinstance(self.state, ShardedGroupFleet):
             raise NotImplementedError("tick_lanes_sparse on a sharded fleet")
         if not self.cursor.per_lane:
@@ -404,20 +453,22 @@ class QuantileFleet:
         cur = self.cursor
         lanes = jnp.asarray(lanes, jnp.int32)
         items = jnp.asarray(items, jnp.float32)
+        if lanes.shape != items.shape or lanes.ndim != 1:
+            raise ValueError(
+                f"lanes {lanes.shape} and items {items.shape} must be "
+                "matching [K] vectors")
+        if check_duplicates:
+            _check_sparse_lanes(lanes, items, mask)
         if mask is None:
             mask = jnp.where(jnp.isnan(items), 0, 1).astype(jnp.int32)
-        prog = self.spec.program
-        q_lanes = jnp.broadcast_to(
-            jnp.asarray(sk.quantile, sk.m.dtype), sk.m.shape)[lanes]
-        planes_full = sk.planes()
-        out_s = _lane_tick_sparse(
-            tuple(p[lanes] for p in planes_full), cur.t_offset[lanes],
-            q_lanes, lanes, items, cur.seed, cur.g_offset, self._scalars(),
-            program=program_mod.family_base(prog.kernel_family))
-        state = sk.with_planes(tuple(
-            p.at[lanes].set(o) for p, o in zip(planes_full, out_s)))
-        ticks = cur.t_offset.at[lanes].add(mask)
-        return dataclasses.replace(self, state=state,
+        else:
+            mask = jnp.asarray(mask, jnp.int32)
+            items = jnp.where(mask == 0, jnp.nan, items)
+        planes, ticks = kernel_ops.frugal_update_sparse(
+            lanes, items, mask, sk.planes(), cur.t_offset, sk.quantile,
+            cur.seed, self._scalars(), program=self.spec.program,
+            g_offset=cur.g_offset, donate=donate)
+        return dataclasses.replace(self, state=sk.with_planes(planes),
                                    cursor=cur._replace(t_offset=ticks))
 
     def _scalars(self):

@@ -3,18 +3,23 @@
   frugal_update.py — ONE pl.pallas_call kernel family parameterized by a
                      core.program.LaneProgram (grouped frugal lanes, VMEM-
                      resident state, sequential-T/parallel-G grid, on-chip
-                     counter RNG, packed plane-pair state words).
+                     counter RNG, packed plane-pair state words), plus the
+                     event-round scatter kernel (gather→tick→scatter
+                     against resident aliased state, DESIGN.md §13).
   ops.py           — the single jit'd blocked/auto entry-point pair:
-                     padding, dtype, packing, TPU/interpret dispatch.
+                     padding, dtype, packing, TPU/interpret dispatch; and
+                     frugal_update_sparse, the O(events) event round
+                     (donation-aware two-phase jnp scatter off-TPU).
                      (Plus ValueError stubs for the removed pre-program
                      entry points, naming the replacement.)
   ref.py           — pure-jnp lax.scan oracles for bit-exact validation.
 """
 
-from .frugal_update import frugal_program_pallas
+from .frugal_update import frugal_program_pallas, frugal_program_scatter_pallas
 from .ops import (
     frugal_update_auto,
     frugal_update_blocked,
+    frugal_update_sparse,
     # Removed-path stubs: importable, raise ValueError on call with a
     # migration pointer (tests/test_deprecations.py pins the errors).
     frugal1u_update_blocked,
@@ -38,6 +43,8 @@ from .ops import (
 # public surface (repro.api.lint checks every listed name resolves).
 __all__ = [
     "frugal_program_pallas",
+    "frugal_program_scatter_pallas",
     "frugal_update_auto",
     "frugal_update_blocked",
+    "frugal_update_sparse",
 ]

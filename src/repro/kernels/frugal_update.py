@@ -119,6 +119,126 @@ def _seed_operand(seed, t_offset, g_offset, scalars=()) -> Array:
     return jnp.stack(parts)
 
 
+def _scatter_kernel(meta_ref, lanes_ref, mask_ref, items_ref, q_ref,
+                    *state_refs, program, block_k):
+    """Gather→tick→scatter body: one sequential pass over this grid step's
+    event slots. Per event, the lane's planes are loaded from the full [L]
+    state refs at a dynamic index, ticked once with the lane's own
+    counter-hash uniform, and stored back — O(events) loads/stores total,
+    never an O(L) pass. The state refs are input/output-ALIASED full
+    arrays (memory space ANY: they stay put; nothing blocks them through
+    VMEM), so grid steps revisit the same buffers ("arbitrary" semantics).
+
+    Events are pre-segmented by the caller: within one dispatch no masked-in
+    lane repeats (duplicate stores would race in a parallel schedule), and
+    masked-out pad slots carry NaN items — their load/tick/store round-trips
+    the lane's state bit-exactly, so padding never perturbs anything.
+    """
+    layout = program.layout
+    np_ = layout.num_planes
+    n_state = np_ + 1
+    # state_refs = n_state inputs then n_state outputs; the outputs ALIAS
+    # the inputs (same buffers), so the body reads and writes only the
+    # output refs — no copy-in pass (which would be the O(L) work this
+    # kernel exists to avoid).
+    out_refs = state_refs[n_state:]
+    plane_refs, ticks_ref = out_refs[:np_], out_refs[np_]
+    blk = pl.program_id(0)
+    seed = meta_ref[0]
+    g0 = meta_ref[2]   # the dense family's operand layout; slot 1 (t_offset)
+                       # is unused — event ticks come from the [L] clock
+    scalars = tuple(meta_ref[3 + k] for k in range(len(layout.scalar_names)))
+
+    def body(k, carry):
+        e = blk * block_k + k
+        lane = lanes_ref[e]
+        planes_e = tuple(r[pl.ds(lane, 1)] for r in plane_refs)
+        tick = ticks_ref[pl.ds(lane, 1)]
+        item = items_ref[0, pl.ds(e, 1)]
+        q = q_ref[0, pl.ds(e, 1)]
+        g_id = g0 + lane
+        u = crng.counter_uniform(seed, tick, g_id)
+        ctx = frugal.TickCtx(quantile=q, t=tick, seed=seed, lanes=g_id,
+                             scalars=scalars)
+        out = program.run_tick(planes_e, item, u, ctx)
+        for r, o in zip(plane_refs, out):
+            r[pl.ds(lane, 1)] = o
+        ticks_ref[pl.ds(lane, 1)] = tick + mask_ref[e]
+        return carry
+
+    jax.lax.fori_loop(0, block_k, body, 0)
+
+
+def frugal_program_scatter_pallas(
+    program,          # core.program.LaneProgram (STATIC compile key —
+                      # callers pass family_base)
+    lanes: Array,     # [K] int32 event lane ids (masked-in ids distinct)
+    items: Array,     # [K] float32 (NaN where mask == 0)
+    mask: Array,      # [K] int32 — 1 advances the lane clock, 0 is padding
+    planes,           # layout.num_planes UNPACKED plane arrays, each [L]
+    ticks: Array,     # [L] int32 per-lane clock
+    quantile: Array,  # [K] float32 — each event lane's own target, gathered
+    seed,             # int32 counter RNG seed
+    scalars=(),       # program's dynamic int32 scalar operands
+    *,
+    g_offset=0,       # absolute lane index of state row 0 (sharded fleets)
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    """O(events) sparse event round for ANY registered lane program.
+
+    The dense family streams [T, G] blocks through VMEM tiles; this kernel
+    is its event-mode sibling: K event slots against L resident lanes,
+    K % block_k == 0 (pad with mask-0 NaN slots on any lane that has no
+    event this round). State rides UNPACKED planes — the serialized
+    (step,sign) word packing exists to halve O(L)-scale HBM block traffic,
+    but here traffic is O(K); per-event repacking would buy nothing and
+    packing on dispatch would cost the O(L) pass this kernel exists to
+    avoid. Returns (planes, ticks) updated.
+
+    Bit-exactness: the tick expression, uniform keying (seed, per-lane
+    tick, absolute lane id) and NaN no-op contract are identical to the
+    dense kernel and the jnp scan, so a sparse round reproduces the dense
+    `tick_lanes` round bit-for-bit (tests/conftest.py sweeps every
+    registered program over both paths).
+    """
+    layout = program.layout
+    (k,) = lanes.shape
+    assert k % block_k == 0, (k, block_k)
+    assert len(planes) == layout.num_planes, (len(planes), layout.num_planes)
+    grid = (k // block_k,)
+
+    # Full-array state blocks, revisited by every grid step; events/quantile
+    # ride [1, K] VMEM rows (the kernel indexes columns dynamically).
+    state_spec = pl.BlockSpec(memory_space=getattr(pltpu, "ANY", None)
+                              or pltpu.TPUMemorySpace.ANY)
+    event_spec = pl.BlockSpec((1, k), lambda i, *_: (0, 0))
+
+    n_state = layout.num_planes + 1    # planes + ticks
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,         # meta, lanes, mask
+        grid=grid,
+        in_specs=[event_spec, event_spec] + [state_spec] * n_state,
+        out_specs=[state_spec] * n_state,
+    )
+    # Input operand i (counting the scalar-prefetch operands first) aliases
+    # output i - 5: the planes and ticks update in place.
+    aliases = {5 + i: i for i in range(n_state)}
+    meta = _seed_operand(seed, 0, g_offset, scalars)
+    outs = pl.pallas_call(
+        functools.partial(_scatter_kernel, program=program, block_k=block_k),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(p.shape, p.dtype) for p in planes]
+        + [jax.ShapeDtypeStruct(ticks.shape, ticks.dtype)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        input_output_aliases=aliases,
+        interpret=interpret,
+    )(meta, jnp.asarray(lanes, jnp.int32), jnp.asarray(mask, jnp.int32),
+      items[None, :], quantile[None, :], *planes, ticks)
+    return tuple(outs[:-1]), outs[-1]
+
+
 def frugal_program_pallas(
     program,          # core.program.LaneProgram (STATIC — compile key;
                       # callers pass family_base so parameter sweeps share

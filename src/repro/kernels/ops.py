@@ -38,7 +38,7 @@ from repro.core import frugal
 from repro.core import program as program_mod
 from repro.core import rng as crng
 
-from .frugal_update import frugal_program_pallas
+from .frugal_update import frugal_program_pallas, frugal_program_scatter_pallas
 
 Array = jax.Array
 
@@ -164,6 +164,111 @@ def frugal_update_auto(items, planes, quantile, key=None, *, seed=None,
                         jnp.asarray(g_offset, jnp.int32),
                         program=program_mod.family_base(program.kernel_family),
                         lanes=lanes_per_group)
+
+
+# ------------------------------------------------------------------- sparse
+# O(events) event rounds. Two dispatches, by design:
+#
+#   1. `_sparse_gather_ticks` — a tiny NON-donating jit that gathers the
+#      event lanes' clocks.
+#   2. `_sparse_scatter[_donated]` — the round itself: gather planes, tick,
+#      scatter back. With donation the plane/ticks scatters alias their
+#      input buffers and XLA updates them IN PLACE — O(events) work against
+#      an [L]-lane fleet.
+#
+# Why ticks can't be gathered inside step 2: XLA's copy-insertion refuses
+# to alias a donated buffer that one op GATHERS from while another op
+# SCATTERS into (the scatter lowers to an in-place while-loop whose operand
+# must be exclusively owned), so a fused gather+scatter of `ticks` inserts
+# a full [L] copy — the exact O(L) pass this path exists to kill. Feeding
+# the pre-gathered [K] clocks in leaves `ticks` write-only inside the
+# donated executable and the copy vanishes (verified against compiled HLO;
+# benchmarks/bench_sparse_ingest.py gates flatness in L). The PLANE buffers
+# tolerate the fused gather because their gathers fuse into the [K]-shaped
+# tick computation that XLA schedules wholly before the scatters.
+@jax.jit
+def _sparse_gather_ticks(ticks, lanes):
+    return ticks[lanes]
+
+
+def _sparse_round(lanes, items, mask, planes, ticks, ticks_s, quantile,
+                  seed, g_offset, scalars, program):
+    """One sparse event round, jnp. Uniforms key on (seed, the lane's own
+    pre-gathered tick, absolute lane id) — identical to the dense round, so
+    the trajectory is bit-exact with `tick_lanes` on the same events."""
+    g_ids = jnp.asarray(g_offset, jnp.int32) + lanes
+    q = jnp.asarray(quantile, planes[0].dtype)
+    q_s = q[lanes] if q.ndim else jnp.broadcast_to(q, lanes.shape)
+    u = crng.counter_uniform(seed, ticks_s, g_ids)
+    ctx = frugal.TickCtx(quantile=q_s, t=ticks_s, seed=seed, lanes=g_ids,
+                         scalars=scalars)
+    out_s = program.run_tick(tuple(p[lanes] for p in planes), items, u, ctx)
+    new_planes = tuple(p.at[lanes].set(o) for p, o in zip(planes, out_s))
+    new_ticks = ticks.at[lanes].set(ticks_s + mask)
+    return new_planes, new_ticks
+
+
+_sparse_scatter = jax.jit(_sparse_round, static_argnames=("program",))
+_sparse_scatter_donated = jax.jit(_sparse_round,
+                                  static_argnames=("program",),
+                                  donate_argnums=(3, 4))
+
+
+def frugal_update_sparse(lanes, items, mask, planes, ticks, quantile,
+                         seed, scalars=(), *, program, g_offset=0,
+                         donate=False, block_k: int = 128,
+                         interpret=None):
+    """Program-parameterized O(events) event round: gather the `lanes`
+    rows of `planes`/`ticks`, tick them once, scatter back.
+
+    `planes` is the program's ordered UNPACKED plane tuple (each [L]),
+    `ticks` the per-lane clock [L]; returns the updated (planes, ticks).
+    Masked-out slots (mask 0) MUST carry NaN items (repro.api forces this)
+    and round-trip their lane bit-exactly — pad with any lane that has no
+    masked-in event this round. Masked-in lanes must be distinct.
+
+    `donate=True` hands the caller's plane/tick buffers to XLA for in-place
+    scatters — per-round cost flat in L — and INVALIDATES them: only pass
+    it when the previous fleet state is dead (serve.SLOFleet's flush loop
+    is the intended caller). With donate=False the round stays one fused
+    executable but XLA copies each [L] plane to preserve the inputs.
+
+    On TPU the round runs as the gather→tick→scatter Pallas kernel
+    (kernels/frugal_update.py) against resident state; elsewhere as the
+    jitted jnp scatter pair. Bit-identical either way.
+    """
+    base = program_mod.family_base(program.kernel_family)
+    scalars = tuple(jnp.asarray(v, jnp.int32) for v in scalars) \
+        or tuple(jnp.asarray(v, jnp.int32) for v in program.scalar_values())
+    lanes = jnp.asarray(lanes, jnp.int32)
+    mask = jnp.asarray(mask, jnp.int32)
+    items = jnp.asarray(items, planes[0].dtype)
+    seed = jnp.asarray(seed, jnp.int32)
+    use_pallas = _on_tpu() if interpret is None else True
+    if use_pallas:
+        k = lanes.shape[0]
+        kp = (-k) % block_k
+        if kp:
+            # Pad with mask-0 NaN slots on the first event's lane: a NaN
+            # tick round-trips state bit-exactly and a duplicate STORE of
+            # an unchanged value is safe under the kernel's sequential
+            # ("arbitrary") grid semantics.
+            lanes = jnp.concatenate(
+                [lanes, jnp.broadcast_to(lanes[:1], (kp,))])
+            items = jnp.concatenate(
+                [items, jnp.full((kp,), jnp.nan, items.dtype)])
+            mask = jnp.concatenate([mask, jnp.zeros((kp,), jnp.int32)])
+        q = jnp.asarray(quantile, planes[0].dtype)
+        q_s = q[lanes] if q.ndim else jnp.broadcast_to(q, lanes.shape)
+        return frugal_program_scatter_pallas(
+            base, lanes, items, mask, tuple(planes), ticks, q_s, seed,
+            scalars, g_offset=g_offset, block_k=block_k,
+            interpret=bool(interpret))
+    ticks_s = _sparse_gather_ticks(ticks, lanes)
+    step = _sparse_scatter_donated if donate else _sparse_scatter
+    return step(lanes, items, mask, tuple(planes), ticks, ticks_s,
+                quantile, seed, jnp.asarray(g_offset, jnp.int32), scalars,
+                program=base)
 
 
 # ------------------------------------------------------------ removed paths

@@ -214,46 +214,59 @@ class SLOFleet:
         split into successive rounds (order preserved) so each consumes its
         own tick's uniform; distinct lanes share a round. Dense and sparse
         round paths are trajectory-identical (uniforms key on absolute lane
-        index + per-lane tick, regardless of how the batch is laid out)."""
+        index + per-lane tick, regardless of how the batch is laid out).
+
+        Round assignment is one vectorized numpy pass — a lane's r-th event
+        in the batch goes to round r. The STABLE sort by lane keeps each
+        lane's events in arrival order, so position minus run start IS the
+        occurrence rank; no per-event Python loop survives between the
+        observe() buffer and the device dispatch.
+        """
         if not self._pending:
             return
         events, self._pending = self._pending, []
-        # A lane's r-th event in this batch goes to round r (its events are
-        # already in arrival order), so round assignment is O(1) per event.
-        lane_counts: Dict[int, int] = {}
-        rounds: List[List[Tuple[int, float]]] = []
-        for lane, value in events:
-            r = lane_counts.get(lane, 0)
-            lane_counts[lane] = r + 1
-            if r == len(rounds):
-                rounds.append([])
-            rounds[r].append((lane, value))
+        n = len(events)
+        lanes = np.fromiter((l for l, _ in events), np.int64, n)
+        vals = np.fromiter((v for _, v in events), np.float32, n)
+        order = np.argsort(lanes, kind="stable")
+        sorted_lanes = lanes[order]
+        run_start = np.zeros(n, np.int64)
+        if n > 1:
+            new_run = np.r_[True, sorted_lanes[1:] != sorted_lanes[:-1]]
+            starts = np.flatnonzero(new_run)
+            run_start = np.repeat(starts, np.diff(np.r_[starts, n]))
+        round_of = np.empty(n, np.int64)
+        round_of[order] = np.arange(n) - run_start
+        n_rounds = int(round_of.max()) + 1
         c = self._cap_routes * self.n_metrics
         if c <= self.DENSE_LANES_MAX:
-            for evs in rounds:
-                items = np.full((c,), np.nan, np.float32)
-                occ = np.zeros((c,), np.int32)
-                for lane, value in evs:
-                    items[lane] = value
-                    occ[lane] = 1
-                self._fleet = self._fleet.tick_lanes(jnp.asarray(items),
-                                                     jnp.asarray(occ))
+            # One [n_rounds, C] scatter builds every round's item/occ plane.
+            items = np.full((n_rounds, c), np.nan, np.float32)
+            occ = np.zeros((n_rounds, c), np.int32)
+            items[round_of, lanes] = vals
+            occ[round_of, lanes] = 1
+            for r in range(n_rounds):
+                self._fleet = self._fleet.tick_lanes(jnp.asarray(items[r]),
+                                                     jnp.asarray(occ[r]))
             return
-        for evs in rounds:
-            self._flush_round_sparse(evs, c)
+        for r in range(n_rounds):
+            sel = round_of == r   # boolean select keeps arrival order
+            self._flush_round_sparse(lanes[sel].astype(np.int32),
+                                     vals[sel], c)
 
-    def _flush_round_sparse(self, evs: List[Tuple[int, float]], c: int):
+    def _flush_round_sparse(self, lanes: np.ndarray, vals: np.ndarray,
+                            c: int):
         """O(events) round: the fleet gathers the event lanes, ticks them,
-        scatters back. The lane list is padded to a power of two (bounding
-        jit recompiles) with a lane that is NOT in the round, so the scatter
-        writes every padded slot's own unchanged state — no duplicate-index
-        races."""
-        k = len(evs)
+        scatters back IN PLACE (`donate=True` — the pre-round fleet is dead
+        the moment the round applies, so its buffers are free to reuse; this
+        is what keeps a round flat in capacity). The lane list is padded to
+        a power of two (bounding jit recompiles) with a lane that is NOT in
+        the round, so the scatter writes every padded slot's own unchanged
+        state — no duplicate-index races."""
+        k = len(lanes)
         kp = 1 << max(0, (k - 1)).bit_length() if k > 1 else 1
         if k == c:
             kp = k   # every lane has an event: nothing free to pad with
-        lanes = np.fromiter((l for l, _ in evs), np.int32, k)
-        vals = np.fromiter((v for _, v in evs), np.float32, k)
         if kp > k:
             in_round = set(lanes.tolist())
             pad_lane = next(i for i in range(c) if i not in in_round)
@@ -264,7 +277,8 @@ class SLOFleet:
         mask = np.zeros((kp,), np.int32)
         mask[:k] = 1
         self._fleet = self._fleet.tick_lanes_sparse(
-            jnp.asarray(lanes), jnp.asarray(vals), jnp.asarray(mask))
+            jnp.asarray(lanes), jnp.asarray(vals), jnp.asarray(mask),
+            donate=True)
 
     # ---------------------------------------------------------------- reads
     def estimate(self, route: str, metric: str) -> float:

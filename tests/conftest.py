@@ -101,6 +101,69 @@ def run_program_invariance_sweep(program, mesh_sizes=(1,), g=5,
                 ref_state[f], state[f],
                 err_msg=f"{program.family}: plane {f!r} diverges between "
                         f"{ref_cfg} and ({backend}, {chunk})")
+
+    # ---- sparse event-round phase -------------------------------------
+    # Event mode must be bit-exact too: dense `tick_lanes` rounds vs the
+    # sparse gather→tick→scatter path (jnp, jnp+donation, and the Pallas
+    # scatter kernel in interpret mode), same counter uniforms keyed on
+    # absolute lane id + per-lane tick. Three fleets are created (NOT
+    # aliased) because the donated leg invalidates its own buffers.
+    import jax.numpy as jnp
+    from repro.kernels import ops as kernel_ops
+
+    ev_spec = FleetSpec(num_groups=g, quantiles=quantiles, backend="fused",
+                        program=program)
+    L = ev_spec.num_lanes
+    fl_dense = QuantileFleet.create(ev_spec, seed=seed, per_lane_clock=True)
+    fl_sp = QuantileFleet.create(ev_spec, seed=seed, per_lane_clock=True)
+    fl_dn = QuantileFleet.create(ev_spec, seed=seed, per_lane_clock=True)
+    sk0 = fl_dense._lane_sketch()
+    pal_planes = tuple(jnp.asarray(p) for p in sk0.planes())
+    pal_ticks = jnp.zeros((L,), jnp.int32)
+    ev_rng = np.random.default_rng(data_seed + 1)
+    for r in range(5):
+        k = int(ev_rng.integers(1, L + 1))
+        lanes = np.sort(ev_rng.choice(L, size=k, replace=False)) \
+            .astype(np.int32)
+        vals = ev_rng.integers(0, 800, k).astype(np.float32)
+        mask = np.ones(k, np.int32)
+        if r == 2 and k < L:   # cover a masked-out pad slot
+            pad = next(i for i in range(L) if i not in set(lanes.tolist()))
+            lanes = np.append(lanes, np.int32(pad))
+            vals = np.append(vals, np.float32(np.nan))
+            mask = np.append(mask, np.int32(0))
+        dense_items = np.full(L, np.nan, np.float32)
+        dense_items[lanes[mask == 1]] = vals[mask == 1]
+        fl_dense = fl_dense.tick_lanes(dense_items,
+                                       (~np.isnan(dense_items)).astype(
+                                           np.int32))
+        fl_sp = fl_sp.tick_lanes_sparse(lanes, vals, mask)
+        fl_dn = fl_dn.tick_lanes_sparse(lanes, vals, mask, donate=True)
+        pal_planes, pal_ticks = kernel_ops.frugal_update_sparse(
+            lanes, vals, mask, pal_planes, pal_ticks, sk0.quantile,
+            fl_dense.cursor.seed, fl_dense._scalars(), program=program,
+            interpret=True)
+    ref = fl_dense._lane_sketch()
+    for tag, fl in (("sparse-jnp", fl_sp), ("sparse-donated", fl_dn)):
+        np.testing.assert_array_equal(
+            fl_dense.estimate(), fl.estimate(),
+            err_msg=f"{program.family}: {tag} estimates diverge from dense")
+        sk = fl._lane_sketch()
+        for f in plane_fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(ref, f)), np.asarray(getattr(sk, f)),
+                err_msg=f"{program.family}: {tag} plane {f!r} diverges")
+        np.testing.assert_array_equal(
+            np.asarray(fl_dense.cursor.t_offset),
+            np.asarray(fl.cursor.t_offset),
+            err_msg=f"{program.family}: {tag} lane clocks diverge")
+    for f, p in zip(plane_fields, pal_planes):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref, f)), np.asarray(p),
+            err_msg=f"{program.family}: pallas scatter plane {f!r} diverges")
+    np.testing.assert_array_equal(
+        np.asarray(fl_dense.cursor.t_offset), np.asarray(pal_ticks),
+        err_msg=f"{program.family}: pallas scatter lane clocks diverge")
     return ref_est
 
 

@@ -1,0 +1,38 @@
+"""Benchmark data must be identical across fresh interpreter processes.
+
+E3's generator seed once came from `hash(kind)`, which Python salts
+per-process (PYTHONHASHSEED) — the "same" benchmark run produced different
+stream data every invocation. The seed now derives from zlib.crc32; this
+pins it by hashing the generated data in two subprocesses launched with
+DIFFERENT explicit hash seeds (the adversarial case for the old bug).
+"""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "src")
+
+_SNIPPET = (
+    "from benchmarks.bench_groupby_tcp import stream_data_digest;"
+    "print(stream_data_digest())"
+)
+
+
+def _digest_in_fresh_process(hash_seed: str) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join([SRC, ROOT])
+    env["PYTHONHASHSEED"] = hash_seed
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    r = subprocess.run([sys.executable, "-c", _SNIPPET], env=env,
+                       capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, r.stderr[-2000:]
+    return r.stdout.strip()
+
+
+def test_tcp_stream_data_identical_across_processes():
+    d1 = _digest_in_fresh_process("0")
+    d2 = _digest_in_fresh_process("12345")
+    assert d1 == d2, (
+        "stream data depends on the per-process hash salt again "
+        f"({d1} != {d2})")

@@ -239,6 +239,85 @@ def test_tick_lanes_dense_equals_sparse_trajectory():
                                   np.asarray(sparse.cursor.t_offset))
 
 
+def test_tick_lanes_sparse_mask_zero_is_true_noop():
+    """mask=0 with a NON-NaN item must neither move the lane's state nor
+    advance its clock — the whole round must equal one that never named the
+    lane at all (the old behavior mutated state without the clock, silently
+    desyncing the lane's counter-RNG stream)."""
+    spec = FleetSpec(num_groups=6, quantiles=(0.5,), backend="jnp")
+    padded = QuantileFleet.create(spec, seed=3, per_lane_clock=True)
+    plain = QuantileFleet.create(spec, seed=3, per_lane_clock=True)
+    warm_l = np.asarray([0, 2, 4], np.int32)
+    warm_v = np.asarray([5.0, 7.0, 2.0], np.float32)
+    padded = padded.tick_lanes_sparse(warm_l, warm_v)
+    plain = plain.tick_lanes_sparse(warm_l, warm_v)
+    # lane 0 rides along masked-out with a live (non-NaN) item
+    padded = padded.tick_lanes_sparse(np.asarray([0, 2], np.int32),
+                                      np.asarray([123.0, 9.0], np.float32),
+                                      np.asarray([0, 1], np.int32))
+    plain = plain.tick_lanes_sparse(np.asarray([2], np.int32),
+                                    np.asarray([9.0], np.float32))
+    np.testing.assert_array_equal(padded.estimate(), plain.estimate())
+    np.testing.assert_array_equal(np.asarray(padded.cursor.t_offset),
+                                  np.asarray(plain.cursor.t_offset))
+    fields = spec.program.layout.plane_fields
+    for f in fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(padded._lane_sketch(), f)),
+            np.asarray(getattr(plain._lane_sketch(), f)),
+            err_msg=f"masked-out slot moved plane {f!r}")
+
+
+def test_tick_lanes_mask_on_scalar_clock_raises():
+    """A mask on a scalar-clock fleet used to be silently dropped; it now
+    raises (every lane's tick advances together there — individual clocks
+    cannot be held back)."""
+    spec = FleetSpec(num_groups=4, quantiles=(0.5,), backend="jnp")
+    fl = QuantileFleet.create(spec, seed=0)   # scalar clock
+    with pytest.raises(ValueError, match="per-lane cursor"):
+        fl.tick_lanes(np.ones(4, np.float32), np.ones(4, np.int32))
+    # per-lane cursor accepts the same call
+    fl2 = QuantileFleet.create(spec, seed=0, per_lane_clock=True)
+    fl2.tick_lanes(np.ones(4, np.float32), np.ones(4, np.int32))
+
+
+def test_tick_lanes_sparse_duplicate_check():
+    spec = FleetSpec(num_groups=8, quantiles=(0.5,), backend="jnp")
+    fl = QuantileFleet.create(spec, seed=1, per_lane_clock=True)
+    with pytest.raises(ValueError, match="repeat within"):
+        fl.tick_lanes_sparse(np.asarray([2, 2], np.int32),
+                             np.asarray([1.0, 2.0], np.float32),
+                             check_duplicates=True)
+    with pytest.raises(ValueError, match="pad slots reuse"):
+        fl.tick_lanes_sparse(np.asarray([1, 1], np.int32),
+                             np.asarray([1.0, np.nan], np.float32),
+                             np.asarray([1, 0], np.int32),
+                             check_duplicates=True)
+    # distinct lanes + clean pads pass the check
+    fl.tick_lanes_sparse(np.asarray([1, 3, 5], np.int32),
+                         np.asarray([1.0, 2.0, np.nan], np.float32),
+                         np.asarray([1, 1, 0], np.int32),
+                         check_duplicates=True)
+
+
+def test_tick_lanes_sparse_donate_matches_functional():
+    """donate=True (the serve path's in-place mode) must be bit-exact with
+    the default functional round — only the buffer lifetime differs."""
+    spec = FleetSpec(num_groups=5, quantiles=(0.5, 0.9), backend="jnp")
+    fn = QuantileFleet.create(spec, seed=7, per_lane_clock=True)
+    dn = QuantileFleet.create(spec, seed=7, per_lane_clock=True)
+    rng = np.random.default_rng(2)
+    for _ in range(6):
+        k = int(rng.integers(1, 8))
+        lanes = rng.choice(10, size=k, replace=False).astype(np.int32)
+        vals = rng.integers(0, 500, k).astype(np.float32)
+        fn = fn.tick_lanes_sparse(lanes, vals)
+        dn = dn.tick_lanes_sparse(lanes, vals, donate=True)
+    np.testing.assert_array_equal(fn.estimate(), dn.estimate())
+    np.testing.assert_array_equal(np.asarray(fn.cursor.t_offset),
+                                  np.asarray(dn.cursor.t_offset))
+
+
 def test_tick_lanes_scalar_clock_inside_jit():
     """jnp-backend fleets ride inside jitted steps (the monitor path)."""
     spec = FleetSpec(num_groups=6, quantiles=(0.99,), backend="jnp")

@@ -269,6 +269,31 @@ def test_slo_sparse_flush_matches_dense_trajectory():
                           np.asarray(small._ticks[:lanes]))
 
 
+def test_slo_heavy_same_lane_burst_matches_dense():
+    """Many events on ONE lane inside a single flush: round-splitting must
+    serialize them in arrival order (event r consumes uniform (seed, r,
+    lane)), identically on the dense and sparse paths — the worst case for
+    the vectorized round assignment (one run owns nearly every round)."""
+    small = SLOFleet(seed=9, capacity=8)            # dense rounds
+    big = SLOFleet(seed=9, capacity=4096)           # sparse rounds
+    assert big._cap_routes * big.n_metrics > SLOFleet.DENSE_LANES_MAX
+    rng = np.random.default_rng(11)
+    burst = [float(v) for v in rng.lognormal(2.5, 0.5, 97)]
+    for f in (small, big):
+        # one background event on another lane, then the burst on one lane
+        f.observe("other", "tok_q50_ms", 3.0)
+        for v in burst:
+            f.observe("hot", "ttft_q99_ms", v)
+        f.flush()
+    assert big.summaries() == small.summaries()
+    lanes = big.num_lanes
+    assert np.array_equal(np.asarray(big._ticks[:lanes]),
+                          np.asarray(small._ticks[:lanes]))
+    # the hot lane really consumed one tick per burst event
+    assert int(np.asarray(big._ticks)[big.lane("hot", "ttft_q99_ms")]) \
+        == len(burst)
+
+
 def test_slo_fleet_grows_without_perturbing_existing_lanes():
     fleet = SLOFleet(seed=2, capacity=1)
     vals = np.random.default_rng(3).lognormal(2.0, 0.5, 200)
