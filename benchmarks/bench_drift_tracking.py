@@ -40,7 +40,7 @@ import jax.numpy as jnp
 from repro.core import frugal
 from repro.core.drift import DriftConfig, window_init, window_process_seeded
 from repro.data.streams import dynamic_cauchy_stream
-from .common import save_result, csv_line
+from .common import save_result, csv_line, write_bench_json
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH_JSON = os.path.join(_ROOT, "BENCH_drift_tracking.json")
@@ -186,6 +186,5 @@ def run(quick: bool = True, seed: int = 0):
               f"{GATE_MIN_RECONVERGE_SPEEDUP}x", flush=True)
 
     save_result("e11_drift_tracking", payload)
-    with open(BENCH_JSON, "w") as f:
-        json.dump(payload, f, indent=1, default=float)
+    write_bench_json(BENCH_JSON, payload)
     return lines, payload

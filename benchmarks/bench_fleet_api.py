@@ -38,7 +38,7 @@ from repro.core import GroupedQuantileSketch
 from repro.core import program as program_mod
 from repro.core import rng as crng
 from repro.kernels import frugal_update_auto
-from .common import save_result, csv_line
+from .common import save_result, csv_line, write_bench_json
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH_JSON = os.path.join(_ROOT, "BENCH_fleet_api.json")
@@ -138,8 +138,7 @@ def run(quick: bool = True, seed: int = 0):
         "q4_vs_q1_lane_throughput_ratio": q_ratio,
         "bit_exact_vs_direct": True,
     }
-    with open(BENCH_JSON, "w") as f:
-        json.dump(payload, f, indent=1)
+    write_bench_json(BENCH_JSON, payload)
     save_result("e10_fleet_api", payload)
 
     if not gate_met:

@@ -38,7 +38,7 @@ from repro.core.reference import frugal2u_scalar
 from repro.core import frugal2u_init, frugal2u_process
 from repro.core import program as program_mod
 from repro.kernels import frugal_update_blocked
-from .common import save_result, csv_line
+from .common import save_result, csv_line, write_bench_json
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH_JSON = os.path.join(_ROOT, "BENCH_kernel_throughput.json")
@@ -126,8 +126,7 @@ def run(quick: bool = True, seed: int = 0):
                               "G>=4096 — rerun unloaded; investigate if it persists"))
 
     save_result("e8_kernel_throughput", payload)
-    with open(BENCH_JSON, "w") as f:
-        json.dump(payload, f, indent=1, default=float)
+    write_bench_json(BENCH_JSON, payload)
     return lines, payload
 
 

@@ -42,7 +42,7 @@ from repro.core import program as program_mod
 from repro.core import rng as crng
 from repro.core.drift import WindowState, window_update
 from repro.kernels.ops import frugal_update_auto
-from .common import save_result, csv_line
+from .common import save_result, csv_line, write_bench_json
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH_JSON = os.path.join(_ROOT, "BENCH_program_engine.json")
@@ -178,8 +178,7 @@ def run(quick: bool = True, seed: int = 0):
         "window2u_overhead_ratio": t_engine_w / t_direct_w,
         "bit_exact_vs_direct": True,
     }
-    with open(BENCH_JSON, "w") as f:
-        json.dump(payload, f, indent=1)
+    write_bench_json(BENCH_JSON, payload)
     save_result("e7_program_engine", payload)
 
     if not gate_met:

@@ -37,7 +37,7 @@ import jax.numpy as jnp
 
 from repro.api import FleetSpec, QuantileFleet
 from repro.train import checkpoint as ckpt
-from .common import save_result, csv_line
+from .common import save_result, csv_line, write_bench_json
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH_JSON = os.path.join(_ROOT, "BENCH_resilience_overhead.json")
@@ -157,8 +157,7 @@ def run(quick: bool = True, seed: int = 0):
         "ckpt_crc_delta_s": t_ck_crc - t_ck_plain,
         "bit_exact_vs_bare": True,
     }
-    with open(BENCH_JSON, "w") as f:
-        json.dump(payload, f, indent=1)
+    write_bench_json(BENCH_JSON, payload)
     save_result("e12_resilience_overhead", payload)
 
     if not gate_met:

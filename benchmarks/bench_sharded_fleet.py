@@ -130,13 +130,12 @@ def run(quick: bool = True, seed: int = 0):
                      "rerun unloaded; investigate if it persists")
 
     try:
-        from .common import save_result
+        from .common import save_result, write_bench_json
     except ImportError:  # invoked as a script rather than -m benchmarks.*
         sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
-        from common import save_result
+        from common import save_result, write_bench_json
     save_result("e9_sharded_fleet", payload)
-    with open(BENCH_JSON, "w") as f:
-        json.dump(payload, f, indent=1, default=float)
+    write_bench_json(BENCH_JSON, payload)
     return lines, payload
 
 

@@ -36,7 +36,7 @@ import jax.numpy as jnp
 from repro.api import FleetSpec, QuantileFleet
 from repro.core import program as program_mod
 from repro.serve import SLOFleet
-from .common import save_result, csv_line
+from .common import save_result, csv_line, write_bench_json
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH_JSON = os.path.join(_ROOT, "BENCH_sparse_ingest.json")
@@ -199,8 +199,7 @@ def run(quick: bool = True, seed: int = 0):
         "bit_exact_vs_dense": bit_exact,
         **slo,
     }
-    with open(BENCH_JSON, "w") as f:
-        json.dump(payload, f, indent=1)
+    write_bench_json(BENCH_JSON, payload)
     save_result("e13_sparse_ingest", payload)
 
     if not gate_met:

@@ -34,6 +34,9 @@ GATES = (
      "hardened cycle (health scan + CRC checkpoint) <= 1.05x bare"),
     ("BENCH_sparse_ingest.json", "e13",
      "4096-event Zipf round at L=2^22 <= 1.5x the L=2^16 time (O(events))"),
+    ("BENCH_service_e2e.json", "e14",
+     "service ingest with live snapshot queries >= 0.85x ingest-only at "
+     "G=2^20; every served answer bit-exact vs offline replay"),
 )
 
 # e9 is the one gate bound by RUNNER CAPABILITY, not code: it measures

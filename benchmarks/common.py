@@ -74,6 +74,32 @@ def fraction_within(errors: List[float], band: float = 0.1) -> float:
     return float(np.mean([abs(e) <= band for e in errors]))
 
 
+def run_metadata() -> Dict:
+    """Self-describing run-record stamp (wall-clock, device count, backend,
+    versions) — one definition (repro.service.telemetry.runtime_metadata)
+    instead of each bench re-rolling its own ad hoc metadata."""
+    from repro.service.telemetry import runtime_metadata
+
+    return runtime_metadata()
+
+
+def write_bench_json(path: str, payload: Dict,
+                     telemetry_counters: Optional[Dict] = None) -> Dict:
+    """Write one repo-root BENCH_*.json perf-trajectory record with the
+    shared `meta` stamp embedded (and optionally the run's telemetry
+    counters). Returns the stamped payload. `gate_met` and the gate fields
+    stay top-level — benchmarks.check_gates reads them there."""
+    payload = dict(payload)
+    meta = run_metadata()
+    if telemetry_counters:
+        meta["telemetry"] = {k: int(v)
+                             for k, v in sorted(telemetry_counters.items())}
+    payload["meta"] = meta
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return payload
+
+
 def save_result(name: str, payload: Dict):
     os.makedirs(ART_DIR, exist_ok=True)
     with open(os.path.join(ART_DIR, f"{name}.json"), "w") as f:

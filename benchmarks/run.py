@@ -24,7 +24,7 @@ def main() -> None:
         bench_convergence_theory, bench_program_engine,
         bench_kernel_throughput, bench_sharded_fleet, bench_fleet_api,
         bench_drift_tracking, bench_resilience_overhead,
-        bench_sparse_ingest)
+        bench_sparse_ingest, bench_service_e2e)
 
     suite = {
         "e1": ("static_cauchy (paper Fig 4)", bench_static_cauchy.run),
@@ -47,6 +47,8 @@ def main() -> None:
                 bench_resilience_overhead.run),
         "e13": ("sparse ingest flat-in-L + million-lane Zipf serve (ours)",
                 bench_sparse_ingest.run),
+        "e14": ("streaming service e2e ingest + live queries (ours)",
+                bench_service_e2e.run),
     }
     only = set(args.only.split(",")) if args.only else None
     if only:

@@ -517,6 +517,37 @@ class QuantileFleet:
         return QuantileFleet(state=state, cursor=cur, spec=spec)
 
     # ----------------------------------------------------------------- reads
+    def query_view(self) -> Tuple[Tuple[np.ndarray, ...], np.ndarray, int,
+                                  np.ndarray]:
+        """Host-OWNED `(m_planes, t_next, seed, lanes)` — the one gathering
+        read behind `estimate()` and repro.service snapshots.
+
+        Only the layout's query planes transfer (a windowed sharded fleet
+        moves its two m planes, never the step/sign words), and every array
+        is a real `copy=True` host copy: a snapshot taken here can never
+        alias a device buffer that a later `tick_lanes_sparse(donate=True)`
+        round overwrites in place — the exact bug class an async serve path
+        would otherwise hit."""
+        prog = self.spec.program
+        fields = prog.layout.query_fields
+        if isinstance(self.state, ShardedGroupFleet):
+            pad = self.state.sketch
+            n = self.state.num_groups
+            m_planes = tuple(
+                np.array(jax.device_get(getattr(pad, f))[:n],
+                         dtype=np.float32, copy=True) for f in fields)
+        else:
+            m_planes = tuple(
+                np.array(jax.device_get(getattr(self.state, f)),
+                         dtype=np.float32, copy=True) for f in fields)
+        cur = self.cursor
+        g_off = int(np.asarray(jax.device_get(cur.g_offset)))
+        t_next = np.array(jax.device_get(cur.t_offset), dtype=np.int32,
+                          copy=True)
+        seed = int(np.asarray(jax.device_get(cur.seed)))
+        lanes = g_off + np.arange(self.num_lanes, dtype=np.int64)
+        return m_planes, t_next, seed, lanes
+
     def estimate(self, quantile: Optional[float] = None) -> np.ndarray:
         """Current estimates as [G, Q] numpy (the one gathering read); with
         `quantile=` one tracked target's [G] column.
@@ -529,22 +560,8 @@ class QuantileFleet:
         the layout's query planes are gathered — a windowed sharded fleet
         transfers its two m planes, never the step/sign words."""
         prog = self.spec.program
-        fields = prog.layout.query_fields
-        if isinstance(self.state, ShardedGroupFleet):
-            pad = self.state.sketch
-            n = self.state.num_groups
-            m_planes = tuple(np.asarray(jax.device_get(getattr(pad, f)))[:n]
-                             for f in fields)
-        else:
-            m_planes = tuple(np.asarray(jax.device_get(getattr(self.state, f)))
-                             for f in fields)
-        cur = self.cursor
-        g_off = int(np.asarray(jax.device_get(cur.g_offset)))
-        m = prog.run_query(
-            m_planes,
-            t_next=np.asarray(jax.device_get(cur.t_offset)),
-            seed=int(np.asarray(jax.device_get(cur.seed))),
-            lanes=g_off + np.arange(self.num_lanes, dtype=np.int64))
+        m_planes, t_next, seed, lanes = self.query_view()
+        m = prog.run_query(m_planes, t_next=t_next, seed=seed, lanes=lanes)
         plane = np.asarray(m).reshape(self.num_groups, self.num_quantiles)
         if quantile is None:
             return plane

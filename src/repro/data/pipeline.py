@@ -22,13 +22,97 @@ tests/test_resilience.py drives the retry path.
 from __future__ import annotations
 
 import dataclasses
+import queue
+import threading
 import time
 from typing import Callable, Dict, Iterator, Optional
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.resilience import chaos
+
+
+class _PrefetchDone:
+    """Queue sentinel: the source is exhausted."""
+
+
+class _PrefetchError:
+    """Queue sentinel: the source raised; re-raise at the consumer's
+    matching position (a retryable chaos.StreamFault stays a StreamFault)."""
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
+def prefetch_to_device(it: Iterator, depth: int = 1,
+                       transfer: Optional[Callable] = None) -> Iterator:
+    """Device put-ahead: a daemon thread draws the NEXT item from `it` and
+    stages it on device while the consumer computes on the current one —
+    the double-buffering every ingest/train loop here wants, in one place.
+
+    `transfer` maps one drawn item to its device-resident form (default:
+    `jax.device_put` on every array leaf via tree_map — dict batches and
+    bare ndarrays both work). Values and order are bit-identical to the
+    undecorated iterator: staging only moves the host→device copy off the
+    consumer's critical path, it never reorders or re-draws. `depth` bounds
+    the put-ahead queue (1 = classic double buffering), so transient
+    consumer stalls can't balloon host memory.
+
+    Exceptions from the source re-raise at the consumer's matching pull
+    (type preserved — a retryable StreamFault is still a StreamFault).
+    Closing the returned generator (GC, `break`) stops the worker promptly;
+    the thread is daemonic so a leaked iterator can't hang interpreter
+    shutdown.
+    """
+    if transfer is None:
+        transfer = lambda x: jax.tree_util.tree_map(jax.device_put, x)
+    if depth <= 0:
+        return (transfer(x) for x in it)
+
+    q: "queue.Queue" = queue.Queue(maxsize=int(depth))
+    stop = threading.Event()
+
+    def worker():
+        try:
+            for item in it:
+                staged = transfer(item)
+                while not stop.is_set():
+                    try:
+                        q.put(staged, timeout=0.05)
+                        break
+                    except queue.Full:
+                        continue
+                else:
+                    return
+            tail = _PrefetchDone()
+        except BaseException as e:  # noqa: BLE001 — relayed, not swallowed
+            tail = _PrefetchError(e)
+        while not stop.is_set():
+            try:
+                q.put(tail, timeout=0.05)
+                return
+            except queue.Full:
+                continue
+
+    thread = threading.Thread(target=worker, name="prefetch_to_device",
+                              daemon=True)
+
+    def consume():
+        thread.start()
+        try:
+            while True:
+                got = q.get()
+                if isinstance(got, _PrefetchDone):
+                    return
+                if isinstance(got, _PrefetchError):
+                    raise got.exc
+                yield got
+        finally:
+            stop.set()
+
+    return consume()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,12 +215,25 @@ class SyntheticCorpus:
             "targets": toks[:, 1:].astype(np.int32),
         }
 
-    def iterate(self, start_step: int = 0) -> Iterator[Dict[str, jnp.ndarray]]:
+    def _raw_iter(self, start_step: int) -> Iterator[Dict[str, np.ndarray]]:
         step = start_step
         while True:
-            b = self.batch(step)
-            yield {k: jnp.asarray(v) for k, v in b.items()}
+            yield self.batch(step)
             step += 1
+
+    def iterate(self, start_step: int = 0,
+                prefetch: int = 1) -> Iterator[Dict[str, jnp.ndarray]]:
+        """Endless device-resident batch stream from `start_step`.
+
+        `prefetch` >= 1 stages the next batch (host draw + device_put) on a
+        background thread while the training step computes — real put-ahead,
+        not just lazy conversion. `prefetch=0` keeps the legacy synchronous
+        path. Both yield bit-identical values in the same order: batch RNG
+        keys on (seed, host_id, step), never on staging."""
+        if prefetch <= 0:
+            return ({k: jnp.asarray(v) for k, v in b.items()}
+                    for b in self._raw_iter(start_step))
+        return prefetch_to_device(self._raw_iter(start_step), depth=prefetch)
 
 
 def make_data_iter(cfg: DataConfig, start_step: int = 0):

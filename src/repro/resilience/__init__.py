@@ -14,15 +14,15 @@ lazily for the same reason).
 """
 from . import chaos
 from . import health
-from .chaos import (CheckpointKilled, Fault, FaultPlan, StreamFault,
-                    StreamInterrupted)
+from .chaos import (CheckpointKilled, Fault, FaultPlan, QueryStalled,
+                    StreamFault, StreamInterrupted)
 from .health import (HEALTH_POLICIES, HealthReport, LaneCorruptionError,
                      heal_planes, validate_planes)
 
 __all__ = [
     "chaos", "health",
     "Fault", "FaultPlan", "StreamFault", "StreamInterrupted",
-    "CheckpointKilled",
+    "CheckpointKilled", "QueryStalled",
     "HEALTH_POLICIES", "HealthReport", "LaneCorruptionError",
     "validate_planes", "heal_planes",
 ]

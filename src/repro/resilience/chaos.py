@@ -25,6 +25,11 @@ Fault kinds:
                   format-4 CRCs catch it at restore).
   'drop_shard'  — make the next shard read raise FileNotFoundError
                   (simulates a lost shard file under a committed step).
+  'query_stall' — raise QueryStalled when the scoped query counter reaches
+                  `at` (scope 'query' counts snapshot captures in
+                  repro.service). A reader dying MID-capture must leave
+                  ingest untouched and the retried answer bit-identical —
+                  snapshot reads never hold fleet state.
 
 Each fault fires at most once. Module-level imports are numpy/stdlib ONLY:
 core/streaming.py (itself imported by repro.core's package init) imports
@@ -41,9 +46,9 @@ import numpy as np
 
 __all__ = [
     "Fault", "FaultPlan", "StreamFault", "StreamInterrupted",
-    "CheckpointKilled", "armed", "active", "count_event", "corrupt_sketch",
-    "on_checkpoint_phase", "on_checkpoint_committed", "on_restore_shard",
-    "corrupt_leaf_bytes",
+    "CheckpointKilled", "QueryStalled", "armed", "active", "count_event",
+    "corrupt_sketch", "on_checkpoint_phase", "on_checkpoint_committed",
+    "on_restore_shard", "on_query_event", "corrupt_leaf_bytes",
 ]
 
 
@@ -55,6 +60,13 @@ class StreamFault(RuntimeError):
 
 class CheckpointKilled(RuntimeError):
     """Injected kill inside the checkpoint write protocol (chaos only)."""
+
+
+class QueryStalled(RuntimeError):
+    """Injected death of a reader mid-snapshot-capture (chaos only). The
+    contract it probes: a query holds no fleet state, so a stalled/killed
+    read must leave ingest unperturbed and a retried query at the same
+    cursor must answer bit-identically."""
 
 
 class StreamInterrupted(RuntimeError):
@@ -80,9 +92,9 @@ class StreamInterrupted(RuntimeError):
 
 @dataclasses.dataclass
 class Fault:
-    kind: str                      # 'stream'|'flip'|'ckpt_kill'|'ckpt_garble'|'drop_shard'
-    at: int = 1                    # 'stream': event count; 'flip': absolute tick
-    scope: str = "ingest"          # 'stream': which event counter
+    kind: str                      # 'stream'|'flip'|'ckpt_kill'|'ckpt_garble'|'drop_shard'|'query_stall'
+    at: int = 1                    # 'stream'/'query_stall': event count; 'flip': absolute tick
+    scope: str = "ingest"          # 'stream'/'query_stall': which event counter
     plane: int = 0                 # 'flip': plane-field index
     lane: int = 0                  # 'flip': lane index
     bit: int = 0                   # 'flip': bit 0..31 of the f32 plane word
@@ -116,6 +128,22 @@ class FaultPlan:
         return cls(faults=[Fault(kind="stream", at=at, scope=scope)],
                    seed=seed)
 
+    @classmethod
+    def query_stall(cls, at: int, scope: str = "query") -> "FaultPlan":
+        """Kill the `at`-th snapshot capture mid-read (QueryStalled)."""
+        return cls(faults=[Fault(kind="query_stall", at=int(at),
+                                 scope=scope)])
+
+    @classmethod
+    def seeded_query_stall(cls, seed: int, n_queries: int,
+                           scope: str = "query") -> "FaultPlan":
+        """Chaos-matrix plan: one mid-capture reader death at a seeded query
+        index in [1, n_queries]."""
+        rng = np.random.default_rng(seed)
+        at = int(rng.integers(1, max(1, int(n_queries)) + 1))
+        return cls(faults=[Fault(kind="query_stall", at=at, scope=scope)],
+                   seed=seed)
+
     # ----------------------------------------------------------------- matching
     def fired(self) -> int:
         return len(self._fired)
@@ -134,6 +162,14 @@ class FaultPlan:
         n = self._counts.get(scope, 0) + 1
         self._counts[scope] = n
         return self._take("stream", scope=scope, at=n)
+
+    def _take_query(self, scope: str) -> Optional[Fault]:
+        # tuple key keeps the query counter disjoint from the stream
+        # counters even if a caller reuses a scope string
+        key = ("query_stall", scope)
+        n = self._counts.get(key, 0) + 1
+        self._counts[key] = n
+        return self._take("query_stall", scope=scope, at=n)
 
     def _take_flips(self, t_lo: int, t_hi: int):
         out = []
@@ -173,6 +209,21 @@ def count_event(scope: str = "ingest") -> None:
     if f is not None:
         raise StreamFault(
             f"injected stream fault: {scope} event {f.at} "
+            f"(plan seed {_ACTIVE.seed})")
+
+
+def on_query_event(scope: str = "query") -> None:
+    """Tick the armed plan's query counter; raise QueryStalled when a
+    'query_stall' fault is scheduled at this count. Called mid-snapshot-
+    capture by repro.service (after the fleet version is pinned, before the
+    planes gather) — the worst place for a reader to die. No-op when
+    disarmed."""
+    if _ACTIVE is None:
+        return
+    f = _ACTIVE._take_query(scope)
+    if f is not None:
+        raise QueryStalled(
+            f"injected query stall: {scope} capture {f.at} "
             f"(plan seed {_ACTIVE.seed})")
 
 

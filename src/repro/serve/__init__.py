@@ -1,6 +1,8 @@
 """Serving substrate: batched KV-cache engine + frugal SLO telemetry."""
 
-from .engine import ServeEngine, Request
+from .engine import ServeEngine, Request, RouteStats
 from .slo import SLOFleet, DEFAULT_METRICS
 
+# __all__ names only the live API: RouteStats is a removed-path stub (it
+# raises with the replacement named) kept importable for stale callers.
 __all__ = ["ServeEngine", "Request", "SLOFleet", "DEFAULT_METRICS"]

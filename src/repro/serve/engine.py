@@ -28,6 +28,25 @@ import numpy as np
 from .slo import SLOFleet
 
 
+class RouteStats:
+    """REMOVED — the seed-era per-route Python stats dict (one scalar
+    frugal sketch per (route, metric), hand-seeded numpy RNG per lane).
+    It predates the fleet facade: per-route Python objects cost a dict
+    lookup + interpreter loop per event and its `len(route_stats)+2`
+    seeding collided lane streams across routes. Kept as a stub so stale
+    callers fail loudly with the replacement named (the PR-5 kernel-stub
+    convention), pinned in tests/test_deprecations.py."""
+
+    def __init__(self, *args, **kwargs):
+        raise ValueError(
+            "serve.engine.RouteStats was removed: per-route scalar sketches "
+            "(one Python object + numpy RNG per route) predate the fleet "
+            "era — use serve.SLOFleet (routes x metrics lanes on one "
+            "repro.api.QuantileFleet, vectorized ticks) or "
+            "repro.service.StreamingService for the full concurrent "
+            "ingest/query path; see DESIGN.md §14")
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -43,7 +62,7 @@ class Request:
 
 class ServeEngine:
     def __init__(self, model, params, batch_slots: int = 4, max_len: int = 512,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0, telemetry=None):
         self.model = model
         self.params = params
         self.b = batch_slots
@@ -54,9 +73,13 @@ class ServeEngine:
         self.slot_pos = np.zeros(batch_slots, dtype=np.int64)
         self.queue: List[Request] = []
         self.done: List[Request] = []
+        # Duck-typed counter sink (repro.service.Telemetry fits): engine
+        # request/step counts and the SLO fleet's flush accounting land in
+        # one observability readout.
+        self.telemetry = telemetry
         # Per-(route, metric) Frugal-2U lanes, one fleet; lane RNG streams
         # derive from the counter hash on the absolute lane index.
-        self.slo = SLOFleet(seed=seed)
+        self.slo = SLOFleet(seed=seed, telemetry=telemetry)
         self._rng = np.random.default_rng(seed)
         self._decode = jax.jit(
             lambda p, t, c, pos: model.decode_step(p, t, c, pos))
@@ -65,6 +88,8 @@ class ServeEngine:
     def submit(self, req: Request):
         req.t_submit = time.time()
         self.queue.append(req)
+        if self.telemetry is not None:
+            self.telemetry.count("requests_submitted")
 
     # ------------------------------------------------------------ internals
     def _admit(self):
@@ -124,6 +149,8 @@ class ServeEngine:
                 self.slo.observe(r.route, "len_q50", float(len(r.output)))
                 self.done.append(r)
                 self.slot_req[i] = None
+                if self.telemetry is not None:
+                    self.telemetry.count("requests_completed")
         # One vectorized frugal tick batch for everything this step observed.
         self.slo.flush()
         return len(active)
@@ -136,5 +163,19 @@ class ServeEngine:
             ticks += 1
         return ticks
 
+    def stats_snapshot(self):
+        """A consistent repro.service.Snapshot of the SLO route fleet —
+        pinned to one cursor, host-owned, auditable offline. The engine's
+        read path runs through the service snapshot protocol; the legacy
+        ad hoc per-route dict reads (RouteStats) are gone."""
+        return self.slo.snapshot()
+
     def stats_summary(self) -> Dict[str, Dict[str, float]]:
-        return self.slo.summaries()
+        """Per-route {metric: estimate} from ONE consistent snapshot (every
+        route's numbers come from the same cursor — the legacy path read
+        the live fleet route by route)."""
+        snap = self.stats_snapshot()
+        plane = snap.estimate()          # [cap_routes, n_metrics]
+        return {route: {name: float(plane[idx, i])
+                        for i, (name, _) in enumerate(self.slo.metrics)}
+                for route, idx in self.slo._routes.items()}

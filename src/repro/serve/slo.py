@@ -88,9 +88,14 @@ class SLOFleet:
     def __init__(self, metrics: Sequence[Tuple[str, float]] = DEFAULT_METRICS,
                  seed: int = 0, capacity: int = 64,
                  windowed: bool = False, decay_half_life: int = 4096,
-                 health_policy: str = "quarantine"):
+                 health_policy: str = "quarantine", telemetry=None):
         if not metrics:
             raise ValueError("need at least one (name, quantile) metric")
+        # Duck-typed observability sink (anything with .count(name, n) —
+        # repro.service.Telemetry fits): SLO event/flush/quarantine counts
+        # flow into the service's counters without serve importing the
+        # service package (no cycle). None = no accounting, zero overhead.
+        self.telemetry = telemetry
         self.metrics = tuple((str(n), float(q)) for n, q in metrics)
         self.n_metrics = len(self.metrics)
         self._metric_idx = {n: i for i, (n, _) in enumerate(self.metrics)}
@@ -226,6 +231,9 @@ class SLOFleet:
             return
         events, self._pending = self._pending, []
         n = len(events)
+        if self.telemetry is not None:
+            self.telemetry.count("slo_events_flushed", n)
+            self.telemetry.count("slo_flushes")
         lanes = np.fromiter((l for l, _ in events), np.int64, n)
         vals = np.fromiter((v for _, v in events), np.float32, n)
         order = np.argsort(lanes, kind="stable")
@@ -305,6 +313,16 @@ class SLOFleet:
                           for i, (name, _) in enumerate(self.metrics)}
         return out
 
+    def snapshot(self):
+        """Consistent copy-on-query capture of the whole route fleet — a
+        repro.service.Snapshot (host copies of the query planes + cursor):
+        the read path dashboards should prefer, because the answer is
+        pinned to one cursor and auditable offline. Lazy import: service
+        composes serve-side pieces, never the reverse at module level."""
+        self.flush()
+        from repro.service.snapshot import Snapshot
+        return Snapshot.capture(self._fleet, telemetry=self.telemetry)
+
     def check_health(self):
         """Flush pending events, then scan every lane against its program's
         declared invariants under `health_policy` (resilience.health):
@@ -318,6 +336,8 @@ class SLOFleet:
         self._fleet = fleet
         self.quarantined_total += rep.quarantined
         self.last_health = rep
+        if self.telemetry is not None and rep.quarantined:
+            self.telemetry.count("quarantined_lanes", rep.quarantined)
         return rep
 
     def memory_words(self) -> int:

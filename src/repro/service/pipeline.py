@@ -1,0 +1,104 @@
+"""Async host→device ingest: double-buffered chunk staging over the fleet.
+
+The pipeline has three stages, overlapped two-deep:
+
+  stage 0  SOURCE   — the caller's chunk iterator draws/receives the next
+                      [t, G] host block (network read, RNG draw, ...);
+  stage 1  STAGE    — a put-ahead thread (`data.pipeline.prefetch_to_device`
+                      — the same primitive the train loop uses) moves the
+                      block to device while the previous chunk computes;
+  stage 2  APPLY    — the ingest thread runs `fleet.ingest(chunk)` and
+                      blocks on the result, which is the pipeline's
+                      backpressure: at most `depth` staged chunks + one in
+                      compute are ever alive, so host memory stays bounded
+                      no matter how fast the source is.
+
+Each applied chunk yields a NEW immutable fleet (functional ingest); the
+`on_chunk` callback is where the server publishes that version for
+readers. Blocking per chunk is deliberate: it gives honest per-chunk
+latency numbers and a real publication point — an unbounded dispatch queue
+would "publish" fleets whose device work hasn't happened yet.
+
+Telemetry (optional, duck-typed): items/chunks counters, a chunks-in-
+flight gauge, and per-chunk apply latency into the `ingest_chunk_ms`
+histogram.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Iterable, Optional
+
+import jax
+import numpy as np
+
+from repro.api.fleet import QuantileFleet
+from repro.data.pipeline import prefetch_to_device
+
+
+def _block_on(fleet: QuantileFleet) -> None:
+    """Wait for the fleet's device work (publication barrier)."""
+    state = fleet.state
+    sk = getattr(state, "sketch", state)   # sharded fleets wrap the sketch
+    jax.block_until_ready(sk.m)
+
+
+class IngestPipeline:
+    """Double-buffered host→device chunk ingest over one QuantileFleet.
+
+    `depth` is the put-ahead queue bound (1 = classic double buffering).
+    `transfer=None` disables device staging (chunks pass through as-is) —
+    useful when the source already yields device arrays.
+    """
+
+    def __init__(self, depth: int = 1, telemetry=None,
+                 transfer: Optional[Callable] = jax.device_put):
+        self.depth = int(depth)
+        self.telemetry = telemetry
+        self._transfer = transfer
+
+    def run(self, fleet: QuantileFleet, chunks: Iterable,
+            on_chunk: Optional[Callable] = None) -> QuantileFleet:
+        """Drive `chunks` ([t, G] blocks) through `fleet`; returns the final
+        fleet. `on_chunk(new_fleet, n_items)` fires after each chunk's
+        device work completes — the server's publication hook."""
+        tel = self.telemetry
+        # in-flight = staged on device but not yet applied; the staging
+        # thread increments (inside `transfer`), the apply loop decrements,
+        # so the gauge really tracks the put-ahead occupancy 0..depth+1.
+        in_flight = [0]
+        lock = threading.Lock()
+
+        def bump(d: int):
+            with lock:
+                in_flight[0] += d
+                tel.gauge("chunks_in_flight", in_flight[0])
+
+        if self._transfer is None:
+            staged = iter(chunks)
+        else:
+            base = self._transfer
+
+            def transfer(x):
+                y = base(x)
+                if tel is not None:
+                    bump(+1)
+                return y
+
+            staged = prefetch_to_device(iter(chunks), depth=self.depth,
+                                        transfer=transfer)
+        for chunk in staged:
+            t0 = time.perf_counter()
+            n = int(np.shape(chunk)[0])
+            fleet = fleet.ingest(chunk)
+            _block_on(fleet)
+            if tel is not None:
+                tel.observe_ms("ingest_chunk_ms",
+                               (time.perf_counter() - t0) * 1e3)
+                tel.count("items_ingested", n)
+                tel.count("chunks_ingested")
+                if self._transfer is not None:
+                    bump(-1)
+            if on_chunk is not None:
+                on_chunk(fleet, n)
+        return fleet

@@ -82,6 +82,24 @@ def test_removal_error_fires_on_every_call_shape():
         frugal1u_update_blocked()
 
 
+def test_route_stats_is_removed_with_named_replacement():
+    """The seed-era per-route stats object (serve.engine.RouteStats) is a
+    ValueError stub: the error must say it was removed, WHY (per-route
+    Python objects / colliding lane seeding), and name both replacements
+    (SLOFleet for the lanes, repro.service for the full read path)."""
+    from repro.serve import RouteStats
+    from repro.serve.engine import RouteStats as direct
+
+    assert RouteStats is direct
+    for call in (lambda: RouteStats(), lambda: RouteStats("route-a"),
+                 lambda: RouteStats(metrics=("q50",), seed=3)):
+        with pytest.raises(ValueError, match=r"SLOFleet") as ei:
+            call()
+        msg = str(ei.value)
+        assert "removed" in msg
+        assert "repro.service" in msg and "DESIGN.md" in msg
+
+
 def test_program_engine_and_facade_paths_are_warning_free():
     items, _, m, _, q = _operands()
     from repro.api import FleetSpec, QuantileFleet

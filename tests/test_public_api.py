@@ -16,7 +16,7 @@ def test_every_dunder_all_name_resolves():
     # mean the walker silently skipped them
     for pkg in ("repro", "repro.api", "repro.core", "repro.core.baselines",
                 "repro.kernels", "repro.parallel", "repro.serve",
-                "repro.monitor"):
+                "repro.service", "repro.monitor"):
         assert pkg in exported and exported[pkg], f"{pkg} exports nothing?"
 
 

@@ -1,0 +1,373 @@
+"""repro.service: snapshot consistency, pipeline put-ahead, chaos, telemetry.
+
+The load-bearing guarantees (DESIGN.md §14):
+
+  * snapshot consistency — a query interleaved with ingest at ANY chunk
+    boundary answers bit-identically to a single-threaded replay of the
+    same cursor, across jnp/fused/sharded and the `2u-dp` program (whose
+    Laplace noise replays from (seed^salt, t_next, lane));
+  * donation immunity    — a Snapshot owns real host copies, so
+    tick_lanes_sparse(donate=True) rounds that overwrite the old device
+    buffers in place never mutate an already-taken snapshot;
+  * query_stall chaos    — a reader killed mid-capture leaves ingest
+    untouched and the retried capture answers bit-identically;
+  * put-ahead pipeline   — data.pipeline.prefetch_to_device overlaps the
+    source draw with consumer compute (proven by event ordering, not
+    wall-clock), yields bit-identical values, and relays source errors;
+  * DP tenant gating     — untrusted tenants read only the noised release,
+    deterministic at a cursor; unknown tenants read nothing.
+"""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+import jax
+
+from repro.api import FleetSpec, QuantileFleet
+from repro.core.program import make_program
+from repro.data.pipeline import DataConfig, SyntheticCorpus, \
+    prefetch_to_device
+from repro.parallel.group_sharding import group_mesh
+from repro.resilience import FaultPlan, QueryStalled, chaos
+from repro.service import (IngestPipeline, Snapshot, StreamingService,
+                           Telemetry, TenantPolicy, runtime_metadata)
+
+SEEDS = tuple(int(s) for s in os.environ.get("CHAOS_SEEDS", "0").split(","))
+
+G, CHUNK_T, N_CHUNKS = 8, 16, 6
+BACKENDS = ("jnp", "fused", "sharded")
+
+
+def _chunks(seed=0, n=N_CHUNKS, t=CHUNK_T, g=G):
+    rng = np.random.default_rng(seed)
+    return [rng.normal(3.0, 2.0, size=(t, g)).astype(np.float32)
+            for _ in range(n)]
+
+
+def _spec(backend="fused", program=None, g=G, quantiles=(0.5, 0.9)):
+    mesh = group_mesh(min(2, len(jax.devices()))) \
+        if backend == "sharded" else None
+    return FleetSpec(num_groups=g, quantiles=quantiles, backend=backend,
+                     chunk_t=CHUNK_T, mesh=mesh,
+                     program=program if program is not None else "2u")
+
+
+# ------------------------------------------------------- snapshot consistency
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("program", ["2u", "2u-dp", "2u-window"])
+def test_snapshot_at_every_boundary_matches_replay(backend, program):
+    """Interleave ingest chunks and snapshot queries at EVERY chunk
+    boundary; each answer must be bit-identical to a fresh single-threaded
+    fleet replayed to the same cursor. Covers the plain head query, the
+    window plane selection (t_next parity), and the 2u-dp noised release
+    (noise a pure function of (seed^salt, t_next, lane))."""
+    prog = make_program(program, window=24) if program == "2u-window" \
+        else (make_program(program, epsilon=0.7) if program == "2u-dp"
+              else program)
+    spec = _spec(backend, program=prog)
+    svc = StreamingService(spec, seed=11)
+    chunks = _chunks(seed=2)
+    answers = []
+    for c in chunks:
+        answers.append(svc.snapshot().estimate())       # pre-chunk boundary
+        svc.ingest(c)
+    answers.append(svc.snapshot().estimate())
+    # single-threaded replay on the jnp backend (cross-backend agreement is
+    # part of what this pins)
+    ref = QuantileFleet.create(_spec("jnp", program=prog), seed=11)
+    np.testing.assert_array_equal(answers[0], ref.estimate())
+    for i, c in enumerate(chunks):
+        ref = ref.ingest(c)
+        np.testing.assert_array_equal(
+            answers[i + 1], ref.estimate(),
+            err_msg=f"boundary {i + 1} diverges from replay")
+
+
+@pytest.mark.parametrize("chaos_seed", SEEDS)
+def test_threaded_queries_under_ingest_match_replay(chaos_seed):
+    """Concurrent mode: queries race the background ingest thread; every
+    answer must still be exact at ITS cursor (the snapshot pins a published
+    fleet version — there are no torn reads to be had)."""
+    spec = _spec("fused", g=32)
+    svc = StreamingService(spec, seed=chaos_seed)
+    chunks = _chunks(seed=chaos_seed + 7, n=10, g=32)
+
+    def slow():
+        for c in chunks:
+            time.sleep(0.001)
+            yield c
+
+    svc.start(slow())
+    seen = {}
+    while svc.ingest_running:
+        s = svc.snapshot()
+        seen[s.items_ingested] = s.estimate()
+    svc.join()
+    final = svc.snapshot()
+    seen[final.items_ingested] = final.estimate()
+    assert final.items_ingested == 10 * CHUNK_T
+
+    ref = QuantileFleet.create(_spec("jnp", g=32), seed=chaos_seed)
+    if 0 in seen:
+        np.testing.assert_array_equal(seen[0], ref.estimate())
+    done = 0
+    for c in chunks:
+        ref = ref.ingest(c)
+        done += CHUNK_T
+        if done in seen:
+            np.testing.assert_array_equal(seen[done], ref.estimate(),
+                                          err_msg=f"cursor {done}")
+
+
+def test_snapshot_survives_donated_sparse_rounds():
+    """The donation-aliasing bug class the ISSUE names: a snapshot captured
+    BEFORE tick_lanes_sparse(donate=True) rounds must not change when the
+    donated rounds overwrite the old device buffers in place."""
+    spec = FleetSpec(num_groups=64, quantiles=(0.5,), backend="fused")
+    fleet = QuantileFleet.create(spec, seed=5, per_lane_clock=True)
+    rng = np.random.default_rng(0)
+    fleet = fleet.tick_lanes(rng.normal(size=64).astype(np.float32))
+    snap = Snapshot.capture(fleet)
+    before = snap.estimate().copy()
+    for _ in range(20):
+        lanes = rng.choice(64, size=8, replace=False).astype(np.int32)
+        vals = rng.normal(size=8).astype(np.float32)
+        fleet = fleet.tick_lanes_sparse(lanes, vals, donate=True)
+    np.testing.assert_array_equal(snap.estimate(), before)
+    # and the planes themselves are host-owned numpy, not device aliases
+    assert all(isinstance(p, np.ndarray) for p in snap.m_planes)
+
+
+# ------------------------------------------------------------- chaos: stall
+@pytest.mark.parametrize("chaos_seed", SEEDS)
+def test_query_stall_leaves_ingest_unperturbed_and_retry_exact(chaos_seed):
+    """Kill the reader mid-capture at a seeded query index: ingest's final
+    state must equal the never-queried run bit-for-bit, and re-asking at
+    the same cursor must answer identically to an unstalled service."""
+    spec = _spec("fused")
+    chunks = _chunks(seed=3)
+    n_queries = N_CHUNKS + 1
+    plan = FaultPlan.seeded_query_stall(chaos_seed, n_queries)
+
+    svc = StreamingService(spec, seed=9)
+    stalled_at = []
+    with chaos.armed(plan):
+        for i, c in enumerate(chunks):
+            try:
+                svc.query()
+            except QueryStalled:
+                stalled_at.append(i)
+                got = svc.query()               # immediate retry
+                clean = StreamingService(spec, seed=9)
+                for cc in chunks[:i]:
+                    clean.ingest(cc)
+                np.testing.assert_array_equal(got, clean.query())
+            svc.ingest(c)
+    assert plan.fired() == 1 and len(stalled_at) == 1
+    assert svc.stats()["counters"]["queries_stalled"] == 1
+
+    ref = QuantileFleet.create(spec, seed=9)
+    for c in chunks:
+        ref = ref.ingest(c)
+    np.testing.assert_array_equal(svc.snapshot().estimate(), ref.estimate())
+
+
+def test_query_stall_fires_inside_threaded_service():
+    """The stall hook also fires on the concurrent path and is counted."""
+    svc = StreamingService(_spec("fused"), seed=1)
+    svc.ingest(_chunks(n=1)[0])
+    with chaos.armed(FaultPlan.query_stall(at=1)):
+        with pytest.raises(QueryStalled):
+            svc.query()
+        after = svc.query()
+    np.testing.assert_array_equal(after, svc.query())
+    assert svc.stats()["counters"]["queries_stalled"] == 1
+
+
+# --------------------------------------------------------------- DP tenants
+def test_tenant_gating_trusted_vs_dp_vs_unknown():
+    svc = StreamingService(_spec("fused"), seed=4,
+                           tenants=[TenantPolicy("partner", epsilon=0.5)])
+    for c in _chunks(seed=5, n=3):
+        svc.ingest(c)
+    raw = svc.query()                           # internal = trusted
+    noised = svc.query(tenant="partner")
+    assert raw.shape == noised.shape
+    assert not np.array_equal(raw, noised)      # the release IS perturbed
+    # deterministic at a cursor: same snapshot, same tenant, same answer
+    np.testing.assert_array_equal(noised, svc.query(tenant="partner"))
+    # ...and replayable offline through the same 2u-dp query
+    snap = svc.snapshot()
+    np.testing.assert_array_equal(noised, snap.estimate_dp(0.5))
+    with pytest.raises(KeyError):
+        svc.query(tenant="nobody")
+    with pytest.raises(ValueError, match="epsilon"):
+        TenantPolicy("bad", epsilon=0.0)
+
+
+def test_dp_program_fleet_is_not_double_noised():
+    """A fleet already running 2u-dp releases through its OWN calibrated
+    noise for every tenant — estimate_dp must not stack a second draw."""
+    prog = make_program("2u-dp", epsilon=1.0)
+    svc = StreamingService(_spec("fused", program=prog), seed=2,
+                           tenants=[TenantPolicy("ext", epsilon=1.0)])
+    svc.ingest(_chunks(n=1)[0])
+    np.testing.assert_array_equal(svc.query(), svc.query(tenant="ext"))
+
+
+# ------------------------------------------------------------- put-ahead
+def test_prefetch_values_bit_identical_and_on_device():
+    corpus = SyntheticCorpus(DataConfig(seed=3))
+    plain = [corpus.batch(s) for s in range(4)]
+    it = corpus.iterate(prefetch=1)
+    for step in range(4):
+        got = next(it)
+        assert isinstance(got["tokens"], jax.Array)
+        np.testing.assert_array_equal(np.asarray(got["tokens"]),
+                                      plain[step]["tokens"])
+        np.testing.assert_array_equal(np.asarray(got["targets"]),
+                                      plain[step]["targets"])
+    # legacy synchronous path stays available and identical
+    it0 = corpus.iterate(prefetch=0)
+    np.testing.assert_array_equal(np.asarray(next(it0)["tokens"]),
+                                  plain[0]["tokens"])
+
+
+def test_prefetch_overlaps_source_with_consumer_compute():
+    """Deterministic overlap proof (no wall-clock): with depth=1 the
+    worker must have STARTED drawing item k+1 before the consumer asks for
+    it. The source records draw starts; the consumer records pulls; for
+    every pull k >= 1 the draw of k+1 must already have begun."""
+    draws = []
+
+    def source():
+        for k in range(5):
+            draws.append(k)
+            yield np.full((2, 2), k, np.float32)
+
+    it = prefetch_to_device(source(), depth=1)
+    first = next(it)                # consumer takes item 0
+    # worker is free to stage item 1 (and draw 2 into the queue slot);
+    # wait (bounded) until the put-ahead actually drew item 1
+    deadline = time.monotonic() + 5.0
+    while len(draws) < 2 and time.monotonic() < deadline:
+        time.sleep(0.001)
+    assert len(draws) >= 2, "no put-ahead: item 1 was never drawn while " \
+                            "the consumer held item 0"
+    np.testing.assert_array_equal(np.asarray(first), 0.0)
+    rest = [int(np.asarray(x)[0, 0]) for x in it]
+    assert rest == [1, 2, 3, 4]
+
+
+def test_prefetch_relays_source_errors_with_type():
+    def source():
+        yield np.zeros((1, 2), np.float32)
+        raise chaos.StreamFault("boom")
+
+    it = prefetch_to_device(source(), depth=1)
+    next(it)
+    with pytest.raises(chaos.StreamFault, match="boom"):
+        next(it)
+
+
+def test_pipeline_counts_and_histograms():
+    tel = Telemetry()
+    pipe = IngestPipeline(depth=1, telemetry=tel)
+    fleet = QuantileFleet.create(_spec("fused"), seed=0)
+    versions = []
+    pipe.run(fleet, _chunks(n=4), on_chunk=lambda f, n: versions.append(f))
+    assert len(versions) == 4
+    c = tel.counters()
+    assert c["items_ingested"] == 4 * CHUNK_T
+    assert c["chunks_ingested"] == 4
+    lat = tel.latency_quantiles()
+    assert lat["ingest_chunk_ms"]["p50"] >= 0.0
+    assert np.isfinite(lat["ingest_chunk_ms"]["p99"])
+
+
+# -------------------------------------------------------------- telemetry
+def test_telemetry_counters_are_monotonic_and_thread_safe():
+    tel = Telemetry()
+    threads = [threading.Thread(
+        target=lambda: [tel.count("x") for _ in range(500)])
+        for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert tel.counters()["x"] == 2000
+    with pytest.raises(ValueError):
+        tel.count("x", -1)
+    with pytest.raises(KeyError):
+        tel.observe_ms("nope", 1.0)
+
+
+def test_telemetry_histogram_is_replayable():
+    """Same observations through the same flush pattern -> identical
+    frugal histogram state (the machinery is deterministic even though
+    real latencies aren't)."""
+    def feed():
+        tel = Telemetry(seed=7)
+        for i in range(50):
+            tel.observe_ms("query_ms", float(i % 11))
+            if i % 8 == 0:
+                tel.flush()
+        return tel.latency_quantiles()
+
+    assert feed() == feed()
+
+
+def test_slo_fleet_threads_telemetry_and_snapshot_reads():
+    from repro.serve.slo import SLOFleet
+
+    tel = Telemetry()
+    slo = SLOFleet(seed=0, telemetry=tel)
+    for i in range(10):
+        slo.observe(f"route-{i % 3}", "tok_q50_ms", float(i))
+    slo.flush()
+    c = tel.counters()
+    assert c["slo_events_flushed"] == 10 and c["slo_flushes"] == 1
+    snap = slo.snapshot()                      # service-snapshot read path
+    plane = snap.estimate()
+    for r, idx in slo._routes.items():
+        assert plane[idx, 1] == pytest.approx(slo.estimate(r, "tok_q50_ms"))
+
+
+def test_runtime_metadata_is_self_describing():
+    meta = runtime_metadata()
+    for key in ("unix_time", "wall_clock_utc", "device_count", "backend",
+                "jax_version", "python_version", "cpu_count"):
+        assert key in meta
+    assert meta["device_count"] >= 1
+
+
+# ------------------------------------------------------------------ misc api
+def test_service_rejects_ambiguous_construction_and_double_start():
+    with pytest.raises(ValueError, match="exactly one"):
+        StreamingService()
+    spec = _spec("fused")
+    with pytest.raises(ValueError, match="exactly one"):
+        StreamingService(spec, fleet=QuantileFleet.create(spec, seed=0))
+    svc = StreamingService(spec, seed=0)
+    svc.start(iter([]))
+    # the empty stream may finish instantly, but start() guards on the
+    # un-joined thread REFERENCE, not is_alive() — no race
+    with pytest.raises(RuntimeError, match="join"):
+        svc.start(iter([]))
+    svc.join()
+
+
+def test_join_reraises_ingest_errors():
+    svc = StreamingService(_spec("fused"), seed=0)
+
+    def dying():
+        yield _chunks(n=1)[0]
+        raise RuntimeError("source died")
+
+    svc.start(dying())
+    with pytest.raises(RuntimeError, match="source died"):
+        svc.join()
+    # the fully-applied chunk IS published
+    assert svc.snapshot().items_ingested == CHUNK_T
