@@ -1,12 +1,12 @@
 """Perf-gate checker for the bench-regression CI job.
 
-Each systems benchmark (e7-e13) records its own gate threshold and verdict
+Each systems benchmark (e7-e15) records its own gate threshold and verdict
 in a repo-root BENCH_*.json (the PR-over-PR perf trajectory files). The
 benchmarks themselves only WARN on a miss — wall-clock on a shared CI
 runner is too noisy to hard-fail inside the bench — so this checker is the
 single place that turns a freshly-rerun gate verdict into a CI failure.
 
-Usage (after `python -m benchmarks.run --only e7,e8,e9,e10,e11,e12,e13`
+Usage (after `python -m benchmarks.run --only e7,...,e15`
 rewrote files):  python -m benchmarks.check_gates
 """
 from __future__ import annotations
@@ -37,6 +37,9 @@ GATES = (
     ("BENCH_service_e2e.json", "e14",
      "service ingest with live snapshot queries >= 0.85x ingest-only at "
      "G=2^20; every served answer bit-exact vs offline replay"),
+    ("BENCH_mesh2d.json", "e15",
+     "2-D (2x4) aggregate ingest >= 0.5x the 1-D (8x1) lane shard at "
+     "G=2^20, shard_map-vs-loop bit-exactness asserted pre-timing"),
 )
 
 # e9 is the one gate bound by RUNNER CAPABILITY, not code: it measures

@@ -24,7 +24,7 @@ def main() -> None:
         bench_convergence_theory, bench_program_engine,
         bench_kernel_throughput, bench_sharded_fleet, bench_fleet_api,
         bench_drift_tracking, bench_resilience_overhead,
-        bench_sparse_ingest, bench_service_e2e)
+        bench_sparse_ingest, bench_service_e2e, bench_mesh2d)
 
     suite = {
         "e1": ("static_cauchy (paper Fig 4)", bench_static_cauchy.run),
@@ -49,6 +49,8 @@ def main() -> None:
                 bench_sparse_ingest.run),
         "e14": ("streaming service e2e ingest + live queries (ours)",
                 bench_service_e2e.run),
+        "e15": ("2-D mesh ingest vs 1-D + elastic reshard (ours)",
+                bench_mesh2d.run),
     }
     only = set(args.only.split(",")) if args.only else None
     if only:

@@ -1,20 +1,27 @@
 """repro.api — the one fleet API (paper: "any quantile, one or two words").
 
   spec.py       — FleetSpec (static fleet description: algo, quantile
-                  VECTOR, backend ∈ {jnp, fused, sharded}, chunk_t, mesh)
-                  and StreamCursor (explicit (seed, t_offset, g_offset)
-                  stream position — functional advance, checkpointable).
+                  VECTOR, chunk_t, and the declarative placement surface
+                  `topology=TopologySpec(data=..., lanes=..., devices=...)`
+                  — backend/mesh are derived; the legacy backend="sharded"/
+                  mesh= spelling maps on with a DeprecationWarning,
+                  DESIGN.md §9) and StreamCursor (explicit (seed, t_offset,
+                  g_offset) stream position — functional advance,
+                  checkpointable).
   fleet.py      — QuantileFleet: ingest/ingest_stream/tick_lanes/estimate/
-                  grow/checkpoint/health over a (G × Q) multi-quantile lane
-                  plane, bit-identical across backends, Q=1 bit-identical
-                  to the legacy sketch entry points (now thin shims —
-                  DESIGN.md §9 has the migration table). ingest_stream is
-                  crash-consistent (resumable StreamInterrupted +
-                  skip_items) and check_health applies FleetSpec's lane
-                  health policy (DESIGN.md §12).
+                  grow/sync/reshard/checkpoint/health over a (G × Q)
+                  multi-quantile lane plane, bit-identical across every
+                  placement (single, 1-D lane-sharded, 2-D data × lane mesh
+                  — DESIGN.md §15), Q=1 bit-identical to the legacy sketch
+                  entry points (now thin shims — DESIGN.md §9 has the
+                  migration table). ingest_stream is crash-consistent
+                  (resumable StreamInterrupted + skip_items) and
+                  check_health applies FleetSpec's lane health policy
+                  (DESIGN.md §12).
   estimators.py — FrugalEstimator: frugal lanes behind the baselines'
                   QuantileEstimator protocol (one benchmark battery loop).
-  lint.py       — public-API export lint (CI step + tier-1 test).
+  lint.py       — public-API export lint + deprecated-placement-spelling
+                  source scan (CI step + tier-1 test).
 """
 
 from repro.core.baselines.protocol import QuantileEstimator
@@ -25,11 +32,12 @@ from repro.core.program import (
     make_program,
     registered_families,
 )
+from repro.parallel.topology import TopologySpec
 
 from .spec import BACKENDS, FleetSpec, StreamCursor
 from .fleet import QuantileFleet
 from .estimators import FrugalEstimator
-from .lint import check_programs, check_public_api
+from .lint import check_programs, check_public_api, check_topology_spellings
 
 __all__ = [
     "BACKENDS",
@@ -38,6 +46,7 @@ __all__ = [
     "StateLayout",
     "make_program",
     "registered_families",
+    "TopologySpec",
     "FleetSpec",
     "StreamCursor",
     "QuantileFleet",
@@ -45,4 +54,5 @@ __all__ = [
     "FrugalEstimator",
     "check_programs",
     "check_public_api",
+    "check_topology_spellings",
 ]

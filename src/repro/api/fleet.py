@@ -26,9 +26,14 @@ Design points:
     off its ABSOLUTE lane id, so a Q=1 fleet is bit-identical to the legacy
     single-target sketch and Q>1 estimates are invariant to chunking and to
     how lanes land on devices.
-  * **Backend-pluggable.** backend ∈ {jnp, fused, sharded} selects the
-    execution engine; trajectories are bit-identical across all three (the
-    counter RNG keys on absolute (seed, tick, lane) — DESIGN.md §4).
+  * **Placement-declarative.** `FleetSpec(topology=TopologySpec(data=R,
+    lanes=S))` is the one placement surface: single-device fleets run the
+    jnp/fused engines, a lane-sharded topology runs the 1-D sharded fleet,
+    and data>1 runs the 2-D (data × lane) mesh (parallel.mesh2d) whose
+    replicas ingest disjoint chunk shards and merge through the pinned
+    deterministic rule of DESIGN.md §15. Trajectories are bit-identical
+    across every placement (the counter RNG keys on absolute (seed, tick,
+    lane) — DESIGN.md §4); `reshard(topology)` re-places a LIVE fleet.
   * **Event-stream lanes.** A per-lane cursor (t_offset as an [L] vector)
     supports sparse event ingestion — `tick_lanes` / `tick_lanes_sparse` —
     where each lane's k-th event consumes uniform (seed, k, lane)
@@ -64,6 +69,8 @@ from repro.core import rng as crng
 from repro.core.sketch import GroupedQuantileSketch
 from repro.kernels import ops as kernel_ops
 from repro.parallel.group_sharding import ShardedGroupFleet
+from repro.parallel.mesh2d import Mesh2DFleet
+from repro.parallel.topology import TopologySpec
 from repro.resilience import chaos
 from repro.resilience import health as health_mod
 
@@ -131,11 +138,12 @@ class QuantileFleet:
     """A (G × Q) fleet of frugal quantile lanes behind one ingest/query API.
 
     Functional: every mutating call returns a new fleet. `state` is the lane
-    sketch (host/single-device for backends jnp/fused, lane-sharded for
-    backend sharded); `cursor` is the fleet's absolute stream position.
+    sketch (host/single-device for single placement, lane-sharded for a 1-D
+    topology, replica-stacked Mesh2DFleet for a 2-D one); `cursor` is the
+    fleet's absolute stream position.
     """
 
-    state: Union[GroupedQuantileSketch, ShardedGroupFleet]
+    state: Union[GroupedQuantileSketch, ShardedGroupFleet, Mesh2DFleet]
     cursor: StreamCursor
     spec: FleetSpec = dataclasses.field(metadata=dict(static=True))
 
@@ -164,9 +172,15 @@ class QuantileFleet:
 
     @staticmethod
     def _place(spec: FleetSpec, sk: GroupedQuantileSketch):
+        """Lay a canonical [L] sketch out on the spec's topology. For the
+        2-D mesh every replica starts at the canonical state — placement
+        from a sketch is by definition a sync point (DESIGN.md §15)."""
         if spec.backend == "sharded":
             return ShardedGroupFleet.from_sketch(
                 sk, spec.mesh, lanes_per_group=spec.num_quantiles)
+        if spec.backend == "mesh2d":
+            return Mesh2DFleet.from_sketch(
+                sk, spec.topology, lanes_per_group=spec.num_quantiles)
         return sk
 
     # ------------------------------------------------------------ properties
@@ -192,8 +206,10 @@ class QuantileFleet:
         return self.spec.memory_words()
 
     def _lane_sketch(self) -> GroupedQuantileSketch:
-        """The [L]-lane sketch view of `state` (host-gathering if sharded)."""
-        if isinstance(self.state, ShardedGroupFleet):
+        """The canonical [L]-lane sketch view of `state` (host-gathering if
+        sharded; for a 2-D fleet the replicas fold through the pinned merge
+        rule — reading here is a merge, not a mutation)."""
+        if isinstance(self.state, (ShardedGroupFleet, Mesh2DFleet)):
             return self.state.unshard()
         return self.state
 
@@ -217,6 +233,10 @@ class QuantileFleet:
                        uniforms make healing ripple-free), healthy lanes
                        untouched bit-for-bit;
         "ignore"     — report only.
+
+        On a 2-D placement the scan and the heal run over the MERGED
+        canonical lanes, and re-placing the healed sketch broadcasts it to
+        every replica — quarantine is a sync point (DESIGN.md §15).
         """
         rep = self.health()
         if rep.healthy or self.spec.health == "ignore":
@@ -257,7 +277,7 @@ class QuantileFleet:
         t = items.shape[0]
         cur = self.cursor
         q = self.num_quantiles
-        if isinstance(self.state, ShardedGroupFleet):
+        if isinstance(self.state, (ShardedGroupFleet, Mesh2DFleet)):
             state = self.state.ingest_array(
                 items, seed=cur.seed, chunk_t=self.spec.chunk_t,
                 t_offset=int(cur.t_offset), g_offset=int(cur.g_offset))
@@ -313,7 +333,7 @@ class QuantileFleet:
                 yield c
 
         try:
-            if isinstance(self.state, ShardedGroupFleet):
+            if isinstance(self.state, (ShardedGroupFleet, Mesh2DFleet)):
                 state = self.state.ingest_stream(
                     counting(), seed=cur.seed, chunk_t=chunk_t,
                     t_offset=int(cur.t_offset), g_offset=int(cur.g_offset))
@@ -388,10 +408,10 @@ class QuantileFleet:
         monitor fleets use); a mask is meaningless there and raises. jit-
         safe: jnp-backend fleets may call this inside a traced step.
         """
-        if isinstance(self.state, ShardedGroupFleet):
+        if isinstance(self.state, (ShardedGroupFleet, Mesh2DFleet)):
             raise NotImplementedError(
-                "tick_lanes on a sharded fleet — use backend 'jnp'/'fused' "
-                "for event-stream lanes")
+                "tick_lanes on a meshed fleet — event-stream lanes run the "
+                "single placement (TopologySpec()) engines")
         sk = self.state
         items = jnp.asarray(items, jnp.float32)
         if items.shape != (self.num_lanes,):
@@ -444,8 +464,8 @@ class QuantileFleet:
         `check_duplicates=True` adds an eager host-side round-contract
         check (distinct masked-in lanes; pads off event lanes) — a debug
         aid for new callers, not a hot-path default."""
-        if isinstance(self.state, ShardedGroupFleet):
-            raise NotImplementedError("tick_lanes_sparse on a sharded fleet")
+        if isinstance(self.state, (ShardedGroupFleet, Mesh2DFleet)):
+            raise NotImplementedError("tick_lanes_sparse on a meshed fleet")
         if not self.cursor.per_lane:
             raise ValueError("tick_lanes_sparse needs a per-lane cursor "
                              "(create with per_lane_clock=True)")
@@ -489,32 +509,78 @@ class QuantileFleet:
             raise ValueError(f"cannot shrink {self.num_groups} -> {num_groups}")
         if num_groups == self.num_groups:
             return self
-        if isinstance(self.state, ShardedGroupFleet):
-            raise NotImplementedError(
-                "grow_groups on a sharded fleet — unshard, grow, re-shard")
         spec = dataclasses.replace(self.spec, num_groups=num_groups)
         fresh = GroupedQuantileSketch.create_lanes(
             num_groups - self.num_groups, spec.quantiles, algo=spec.algo,
             init=init, drift=spec.drift)
-        sk = self.state
+        if isinstance(self.state, Mesh2DFleet):
+            # Per-replica append: every replica keeps its own lane state
+            # bit-for-bit — growth is NOT a sync point (DESIGN.md §15).
+            state = self.state.grow(fresh)
+        else:
+            # Single placement appends in place; a 1-D sharded fleet
+            # gathers its real lanes (no merge exists at data=1), appends,
+            # and re-shards — pad lanes are re-derived, real lanes ride
+            # untouched.
+            sk = self._lane_sketch()
 
-        def cat(a, b):
-            return None if a is None else jnp.concatenate([a, b])
+            def cat(a, b):
+                return None if a is None else jnp.concatenate([a, b])
 
-        state = dataclasses.replace(
-            sk, m=cat(sk.m, fresh.m), step=cat(sk.step, fresh.step),
-            sign=cat(sk.sign, fresh.sign),
-            m2=cat(sk.m2, fresh.m2), step2=cat(sk.step2, fresh.step2),
-            sign2=cat(sk.sign2, fresh.sign2),
-            quantile=jnp.concatenate([
-                jnp.broadcast_to(jnp.asarray(sk.quantile, sk.m.dtype),
-                                 sk.m.shape),
-                fresh.quantile]))
+            grown = dataclasses.replace(
+                sk, m=cat(sk.m, fresh.m), step=cat(sk.step, fresh.step),
+                sign=cat(sk.sign, fresh.sign),
+                m2=cat(sk.m2, fresh.m2), step2=cat(sk.step2, fresh.step2),
+                sign2=cat(sk.sign2, fresh.sign2),
+                quantile=jnp.concatenate([
+                    jnp.broadcast_to(jnp.asarray(sk.quantile, sk.m.dtype),
+                                     sk.m.shape),
+                    fresh.quantile]))
+            state = self._place(spec, grown)
         cur = self.cursor
         if cur.per_lane:
             pad = jnp.zeros((spec.num_lanes - self.num_lanes,), jnp.int32)
             cur = cur._replace(t_offset=jnp.concatenate([cur.t_offset, pad]))
         return QuantileFleet(state=state, cursor=cur, spec=spec)
+
+    # --------------------------------------------------------------- elastic
+    def sync(self) -> "QuantileFleet":
+        """Fold every data replica through the pinned merge rule and
+        broadcast the canonical state back (the DESIGN.md §15 sync point —
+        shard_map mode runs the hand-rolled all_gather+fold collective).
+        Idempotent, and the identity on single/1-D placements: they hold
+        exactly one stream trajectory."""
+        if isinstance(self.state, Mesh2DFleet):
+            return dataclasses.replace(self, state=self.state.sync())
+        return self
+
+    def reshard(self, topology: TopologySpec) -> "QuantileFleet":
+        """Re-place this LIVE fleet on `topology` — the elastic topology
+        change (grow/shrink the lane fleet, add/remove data replicas,
+        collapse to one device) without perturbing existing lanes:
+
+        * same data-replica count: every replica's lane state carries over
+          bit-for-bit (pure relayout, no merge);
+        * different replica count (including to/from single and 1-D): the
+          fleet passes through the pinned merge — a sync point — so
+          `estimate()` is invariant and the canonical trajectory continues.
+
+        The cursor is untouched: stream position is placement-independent.
+        """
+        spec = self.spec.with_topology(topology)
+        topo = spec.topology
+        if (isinstance(self.state, Mesh2DFleet)
+                and topo.placement == "mesh2d"
+                and topo.data == self.state.data_replicas):
+            old = self.state
+            quantile = np.asarray(jax.device_get(
+                old.sketch.quantile))[:, :old.num_groups]
+            state = Mesh2DFleet.from_replica_planes(
+                old.sketch, old.replica_planes(), quantile, topo,
+                lanes_per_group=spec.num_quantiles)
+        else:
+            state = self._place(spec, self._lane_sketch())
+        return QuantileFleet(state=state, cursor=self.cursor, spec=spec)
 
     # ----------------------------------------------------------------- reads
     def query_view(self) -> Tuple[Tuple[np.ndarray, ...], np.ndarray, int,
@@ -530,7 +596,14 @@ class QuantileFleet:
         would otherwise hit."""
         prog = self.spec.program
         fields = prog.layout.query_fields
-        if isinstance(self.state, ShardedGroupFleet):
+        if isinstance(self.state, Mesh2DFleet):
+            # Replicas fold through the pinned merge rule on read; the fold
+            # output is host-owned already, np.array(copy=True) for the
+            # no-alias guarantee.
+            m_planes = tuple(
+                np.array(p, dtype=np.float32, copy=True)
+                for p in self.state.merged_planes(fields))
+        elif isinstance(self.state, ShardedGroupFleet):
             pad = self.state.sketch
             n = self.state.num_groups
             m_planes = tuple(
@@ -629,18 +702,25 @@ class QuantileFleet:
     def checkpoint(self, ckpt_dir: str, step: int, keep: int = 3) -> str:
         """Write a committed, per-leaf-checksummed format-4 checkpoint
         (train.checkpoint layout — restore verifies the CRCs and falls back
-        to the newest intact step, quarantining corrupt ones)."""
+        to the newest intact step, quarantining corrupt ones).
+
+        The payload is the MERGED canonical lanes (a checkpoint is a sync
+        point), so `restore` can re-place it on ANY topology — the manifest
+        records the writer's topology as an informational stanza."""
         from repro.train import checkpoint as ckpt
         return ckpt.save_checkpoint(ckpt_dir, step, self.checkpoint_state(),
-                                    keep=keep)
+                                    keep=keep,
+                                    topology=self.spec.topology.describe())
 
     @classmethod
     def restore(cls, ckpt_dir: str, spec: FleetSpec,
                 step: Optional[int] = None,
                 per_lane_clock: bool = False) -> "QuantileFleet":
-        """Load the newest committed checkpoint (or `step`) into a fleet
-        with `spec`'s backend/mesh — re-backending at restore time is free
-        because all backends share the trajectory."""
+        """Load the newest committed checkpoint (or `step`) into a fleet on
+        `spec`'s topology — cross-shape restore is free because the payload
+        is the canonical merged lanes and every placement shares the
+        trajectory (save under (a×b), restore under (c×d), single, or 1-D:
+        same bits)."""
         from repro.train import checkpoint as ckpt
         like = cls.template_for(spec, per_lane_clock=per_lane_clock)
         state, _ = ckpt.restore_checkpoint(ckpt_dir, like=like, step=step)

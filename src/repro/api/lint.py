@@ -17,13 +17,23 @@ scanning (resilience.health.validate_planes) is derived from those
 declarations; a program whose planes can't be health-checked fails CI, not
 a user's first check_health().
 
-CI runs both as a dedicated step (`python -m repro.api.lint`);
+Since the TopologySpec redesign it also scans the tree's own sources
+(check_topology_spellings): `FleetSpec(topology=...)` is the ONE placement
+surface, and the deprecated `backend="sharded"` / `mesh=` spelling only
+survives for external callers (mapped + DeprecationWarning). No in-repo
+caller may use it — pytest.ini promotes DeprecationWarning to an error
+tier-1-wide, but benchmarks/examples run outside pytest, so the lint closes
+that gap at the source level.
+
+CI runs all three as a dedicated step (`python -m repro.api.lint`);
 tests/test_public_api runs them in tier-1.
 """
 from __future__ import annotations
 
 import importlib
+import os
 import pkgutil
+import re
 from typing import Dict, List, Tuple
 
 
@@ -75,6 +85,88 @@ def check_programs() -> Tuple[str, ...]:
     return program_mod.validate_registry()
 
 
+# The deprecated placement spelling, inside a FleetSpec(...) call span:
+# backend="sharded" or any mesh= keyword ((?!=) keeps `mesh ==` comparisons
+# out). Engine spellings backend="jnp"/"fused" are NOT placements and stay.
+_DEPRECATED_SPELLING = re.compile(
+    r"backend\s*=\s*['\"]sharded['\"]|\bmesh\s*=(?!=)")
+# Files that legitimately spell the deprecated form: the shim itself and
+# the test pinning its warning.
+_SPELLING_ALLOWLIST = frozenset({
+    "src/repro/api/spec.py",
+    "src/repro/api/lint.py",
+    "tests/test_deprecations.py",
+})
+
+
+_TRIPLE_STRING = re.compile(r"('''|\"\"\")(?:.|\n)*?\1")
+_LINE_COMMENT = re.compile(r"#[^\n]*")
+
+
+def _strip_prose(text: str) -> str:
+    """Blank out triple-quoted strings and # comments (newlines kept, so
+    reported line numbers stay true) — docstrings legitimately DESCRIBE the
+    deprecated spelling; only code may not use it."""
+    def blank(m):
+        return re.sub(r"[^\n]", " ", m.group(0))
+
+    return _LINE_COMMENT.sub(blank, _TRIPLE_STRING.sub(blank, text))
+
+
+def _fleet_spec_spans(text: str):
+    """Yield (offset, argument_text) for each FleetSpec(...) call in
+    `text` (prose pre-stripped), argument span found by paren balancing
+    (good enough for lint: parens inside string literals would only
+    over-extend a span, never hide one)."""
+    for m in re.finditer(r"\bFleetSpec\s*\(", text):
+        depth, i = 1, m.end()
+        while i < len(text) and depth:
+            if text[i] == "(":
+                depth += 1
+            elif text[i] == ")":
+                depth -= 1
+            i += 1
+        yield m.start(), text[m.end():i - 1]
+
+
+def check_topology_spellings(root: str = None) -> int:
+    """Assert no in-repo FleetSpec(...) call uses the deprecated
+    backend="sharded" / mesh= placement spelling (DESIGN.md §9 — the shim
+    exists for external callers only). Scans src/, tests/, benchmarks/,
+    examples/ sources; returns the number of files scanned. Raises
+    AssertionError listing every offending file:line."""
+    if root is None:
+        root = os.path.dirname(os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__)))))
+    offenders: List[str] = []
+    scanned = 0
+    for top in ("src", "tests", "benchmarks", "examples"):
+        base = os.path.join(root, top)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, _, files in os.walk(base):
+            for fn in sorted(files):
+                if not fn.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fn)
+                rel = os.path.relpath(path, root).replace(os.sep, "/")
+                if rel in _SPELLING_ALLOWLIST:
+                    continue
+                with open(path, encoding="utf-8") as f:
+                    text = _strip_prose(f.read())
+                scanned += 1
+                for pos, span in _fleet_spec_spans(text):
+                    if _DEPRECATED_SPELLING.search(span):
+                        line = text.count("\n", 0, pos) + 1
+                        offenders.append(f"  {rel}:{line}")
+    if offenders:
+        raise AssertionError(
+            "deprecated placement spelling in-repo (use FleetSpec("
+            "topology=TopologySpec(...)) — DESIGN.md §9):\n"
+            + "\n".join(offenders))
+    return scanned
+
+
 def main() -> None:  # pragma: no cover - CI entry point
     exported = check_public_api()
     total = sum(len(v) for v in exported.values())
@@ -83,6 +175,9 @@ def main() -> None:  # pragma: no cover - CI entry point
     families = check_programs()
     print(f"lane programs OK: {len(families)} registered families validate "
           f"({', '.join(families)})")
+    scanned = check_topology_spellings()
+    print(f"topology spellings OK: {scanned} source files free of the "
+          "deprecated backend='sharded'/mesh= placement spelling")
 
 
 if __name__ == "__main__":  # pragma: no cover

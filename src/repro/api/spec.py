@@ -19,6 +19,7 @@ where each lane's k-th event consumes uniform (seed, k, lane)).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import NamedTuple, Optional, Tuple, Union
 
 import numpy as np
@@ -29,9 +30,14 @@ from jax.sharding import Mesh
 from repro.core import rng as crng
 from repro.core.drift import DriftConfig
 from repro.core.program import LaneProgram, make_program, program_for
+from repro.parallel.topology import TopologySpec
 
 Array = jax.Array
 
+# User-spellable backends (execution ENGINES). "sharded" survives only as
+# the deprecated placement spelling — it normalizes onto topology= with a
+# DeprecationWarning; "mesh2d" is derived-only (spell it as
+# topology=TopologySpec(data=...)).
 BACKENDS = ("jnp", "fused", "sharded")
 
 
@@ -94,17 +100,34 @@ class FleetSpec:
     quantiles  — vector of targets per group; the fleet lays out a (G × Q)
                  lane plane, lane = g·Q + qi, each lane 1-2 memory words.
     algo       — "1u" (paper Alg. 2) or "2u" (paper Alg. 3).
-    backend    — "jnp"    : pure lax.scan ingest (runs anywhere, including
-                            inside an outer jit — monitors use this);
-                 "fused"  : chunked fused-kernel ingest (Pallas on TPU, the
-                            jitted jnp oracle elsewhere), O(chunk_t·G)
-                            transient memory for unbounded streams;
-                 "sharded": "fused" with the flattened lane axis sharded
-                            over `mesh` (parallel.group_sharding).
-                 All three produce bit-identical trajectories — the counter
-                 RNG keys on absolute (seed, tick, lane).
-    chunk_t    — tick-block size for chunked ingest ("fused"/"sharded").
-    mesh       — 1-D device mesh for "sharded" (default: all devices).
+    topology   — THE placement surface: a parallel.TopologySpec describing
+                 the (data × lane) device layout.
+                   TopologySpec()                — single device (default)
+                   TopologySpec(lanes=8)         — 1-D lane mesh
+                   TopologySpec(data=2, lanes=4) — 2-D mesh: 2 stream
+                                                   replicas × 4 lane shards
+                 1-D and single-device placements are bit-identical to
+                 every engine (the counter RNG keys on absolute
+                 (seed, tick, lane)); data > 1 replicas merge through the
+                 pinned deterministic rule (DESIGN.md §15). The spec
+                 normalizes `topology` device-resolved, so equal placements
+                 compare equal however they were spelled.
+    backend    — execution ENGINE for single-device placement:
+                 "jnp"   : pure lax.scan ingest (runs anywhere, including
+                           inside an outer jit — monitors use this);
+                 "fused" : chunked fused-kernel ingest (Pallas on TPU, the
+                           jitted jnp oracle elsewhere), O(chunk_t·G)
+                           transient memory for unbounded streams.
+                 Meshed placements always run the chunked engine; after
+                 normalization `backend` reads "sharded" (1-D) or "mesh2d"
+                 (2-D) as a derived value. Spelling backend="sharded" (with
+                 an optional raw `mesh=`) is DEPRECATED: it still builds a
+                 spec EQUAL to the topology= spelling, under a
+                 DeprecationWarning (migration table: DESIGN.md §9).
+    chunk_t    — tick-block size for chunked ingest; on a 2-D topology also
+                 the replica round-robin unit (chunk c → replica c mod R).
+    mesh       — DEPRECATED input (see backend); after normalization holds
+                 the derived 1-D lane mesh for sharded placement, else None.
     program    — THE update rule: a core.program.LaneProgram instance (or a
                  registered family name string, e.g. "2u-window" — default
                  parameters). Owns algo/drift when given; the legacy
@@ -139,6 +162,7 @@ class FleetSpec:
     drift: Optional[DriftConfig] = None
     program: Optional[Union[str, LaneProgram]] = None
     health: str = "raise"
+    topology: Optional[TopologySpec] = None
 
     def __post_init__(self):
         qs = tuple(float(q) for q in np.atleast_1d(np.asarray(self.quantiles,
@@ -153,13 +177,9 @@ class FleetSpec:
             raise ValueError(f"quantiles must lie in (0, 1), got {qs}")
         if self.algo not in ("1u", "2u"):
             raise ValueError(f"algo must be '1u' or '2u', got {self.algo!r}")
-        if self.backend not in BACKENDS:
-            raise ValueError(
-                f"backend must be one of {BACKENDS}, got {self.backend!r}")
         if self.chunk_t <= 0:
             raise ValueError(f"chunk_t must be positive, got {self.chunk_t}")
-        if self.mesh is not None and self.backend != "sharded":
-            raise ValueError("mesh= only applies to backend='sharded'")
+        self._normalize_topology()
         from repro.resilience.health import HEALTH_POLICIES
         if self.health not in HEALTH_POLICIES:
             raise ValueError(
@@ -188,6 +208,83 @@ class FleetSpec:
         object.__setattr__(self, "program", prog)
         object.__setattr__(self, "algo", prog.algo)
         object.__setattr__(self, "drift", prog.drift)
+
+    # -------------------------------------------------------------- topology
+    def _normalize_topology(self):
+        """Fold the placement spellings onto ONE normalized surface.
+
+        After this, `topology` is a device-resolved TopologySpec, `backend`
+        is the derived engine ("jnp"/"fused" single-device, "sharded" 1-D,
+        "mesh2d" 2-D), and `mesh` holds the derived 1-D lane mesh (sharded
+        placement) or None. The deprecated backend="sharded"/mesh=
+        spelling maps here — it builds a spec EQUAL to the topology=
+        spelling, under a DeprecationWarning. Normalized field values
+        round-trip through dataclasses.replace without re-warning."""
+        topo = self.topology
+        if topo is None:
+            if self.backend == "sharded" or self.mesh is not None:
+                if self.backend != "sharded":
+                    raise ValueError("mesh= only applies to "
+                                     "backend='sharded'")
+                warnings.warn(
+                    "FleetSpec(backend='sharded', mesh=...) is the "
+                    "deprecated placement spelling — pass FleetSpec("
+                    "topology=TopologySpec(lanes=...)) instead "
+                    "(parallel.TopologySpec; migration table in "
+                    "DESIGN.md §9)", DeprecationWarning, stacklevel=4)
+                topo = TopologySpec.from_mesh(self.mesh)
+            else:
+                if self.backend not in ("jnp", "fused"):
+                    raise ValueError(f"backend must be one of {BACKENDS}, "
+                                     f"got {self.backend!r}")
+                topo = TopologySpec()
+        else:
+            if not isinstance(topo, TopologySpec):
+                raise ValueError("topology must be a parallel.TopologySpec, "
+                                 f"got {type(topo).__name__}")
+            placement = topo.placement
+            if self.backend in ("jnp", "fused"):
+                if self.mesh is not None:
+                    raise ValueError(
+                        "mesh= is the deprecated placement spelling — fold "
+                        "the devices into topology= (DESIGN.md §9)")
+                if self.backend == "jnp" and placement != "single":
+                    raise ValueError(
+                        "backend='jnp' is the single-device scan engine; "
+                        "meshed topologies run the chunked engine — drop "
+                        "backend=")
+            elif not ((self.backend == "sharded" and placement == "sharded")
+                      or (self.backend == "mesh2d"
+                          and placement == "mesh2d")):
+                raise ValueError(
+                    f"backend={self.backend!r} contradicts topology "
+                    f"placement {placement!r} — topology= is the one "
+                    "placement surface (drop backend=/mesh=)")
+        topo = topo.resolve()
+        placement = topo.placement
+        if placement == "single":
+            backend = self.backend if self.backend in ("jnp", "fused") \
+                else "fused"
+            mesh = None
+        elif placement == "sharded":
+            backend, mesh = "sharded", topo.mesh1d()
+        else:
+            backend, mesh = "mesh2d", None
+        object.__setattr__(self, "topology", topo)
+        object.__setattr__(self, "backend", backend)
+        object.__setattr__(self, "mesh", mesh)
+
+    def with_topology(self, topology: TopologySpec) -> "FleetSpec":
+        """This spec re-placed on `topology` (the reshard/restore spelling).
+        The scan engine only exists single-device, so a fleet leaving
+        single placement rides the chunked engine."""
+        backend = self.backend if (self.backend in ("jnp", "fused") and
+                                   topology.placement == "single") \
+            else "fused"
+        return FleetSpec(num_groups=self.num_groups,
+                         quantiles=self.quantiles, backend=backend,
+                         chunk_t=self.chunk_t, program=self.program,
+                         health=self.health, topology=topology)
 
     # ------------------------------------------------------------ lane plane
     @property

@@ -278,6 +278,31 @@ def ingest_array(
     return sketch
 
 
+# One scan of _apply_chunk over [n, chunk_t, G] slabs at EXPLICIT absolute
+# tick offsets. ingest_array's slabs are contiguous (offsets = t0 + k·chunk_t);
+# a 2-D mesh replica's are strided (every R-th chunk of the stream —
+# parallel/mesh2d.py), so the offsets ride as an operand. Both execution
+# modes of the 2-D mesh (shard_map body and the sequential replica loop)
+# call THIS function, which is what makes them bit-identical by
+# construction rather than by test alone.
+@functools.partial(jax.jit, static_argnames=("lanes_per_group",))
+def ingest_slabs(sketch, slabs, offsets, seed, g_offset, *,
+                 lanes_per_group: int = 1):
+    """Apply [n, chunk_t, G] item slabs to `sketch`, slab k at absolute tick
+    offsets[k] (int32, wrapped). NaN rows are bit-exact no-ops, so callers
+    may pad slabs freely; offsets need not be contiguous, but the scan is
+    sequential, so each lane's own chunks must arrive in stream order —
+    which the 2-D mesh's ascending chunk assignment guarantees."""
+
+    def body(sk, xs):
+        slab, off = xs
+        return _apply_chunk(sk, slab, seed, off, g_offset,
+                            lanes_per_group), None
+
+    sketch, _ = jax.lax.scan(body, sketch, (slabs, offsets))
+    return sketch
+
+
 # The reshape-and-scan over full slabs is ONE jitted function, cached
 # across calls by (shapes, chunk_t, lanes, algo-in-treedef): a fleet
 # ingesting block after block (repro.api.QuantileFleet does) pays tracing

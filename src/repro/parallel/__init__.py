@@ -1,4 +1,4 @@
-"""Distribution substrate: sharding rules, collectives, pipeline stages,
+"""Distribution substrate: sharding rules, topologies, 2-D mesh fleets,
 gradient compression, group-sharded sketch fleets."""
 
 from .sharding import (
@@ -7,6 +7,16 @@ from .sharding import (
     dp_axes,
     set_activation_mesh,
     shard_activation,
+)
+from .topology import (
+    DATA_AXIS,
+    LANE_AXIS,
+    TopologySpec,
+)
+from .mesh2d import (
+    Mesh2DFleet,
+    merge_replica_planes,
+    shard_map_compat,
 )
 from .group_sharding import (
     GROUP_AXIS,
@@ -20,6 +30,12 @@ __all__ = [
     "dp_axes",
     "set_activation_mesh",
     "shard_activation",
+    "DATA_AXIS",
+    "LANE_AXIS",
+    "TopologySpec",
+    "Mesh2DFleet",
+    "merge_replica_planes",
+    "shard_map_compat",
     "GROUP_AXIS",
     "ShardedGroupFleet",
     "group_mesh",

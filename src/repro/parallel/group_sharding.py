@@ -38,7 +38,7 @@ from repro.core import streaming
 from repro.core.drift import is_windowed as drift_is_windowed
 from repro.core.sketch import GroupedQuantileSketch, PackedSketchState
 from repro.resilience import chaos
-from .pipeline_parallel import shard_map_compat
+from .mesh2d import pad_lane_fill, shard_map_compat
 
 Array = jax.Array
 
@@ -55,11 +55,9 @@ def group_mesh(num_devices: Optional[int] = None,
     return Mesh(np.asarray(devs[:n]), (axis_name,))
 
 
-def _pad_lane_fill(layout, field: str) -> float:
-    # Pad lanes carry the same dummy state ops.py uses for block padding:
-    # the program layout's fills, plus the quantile plane (not a layout
-    # plane — it rides every sketch).
-    return 0.5 if field == "quantile" else layout.pad_fill(field)
+# Pad-lane dummy state now lives in mesh2d.pad_lane_fill (both meshes pad
+# lanes the same way); the old private name stays as an alias for callers.
+_pad_lane_fill = pad_lane_fill
 
 
 def _sketch_from_planes(program, planes, quantile) -> GroupedQuantileSketch:

@@ -1,106 +1,37 @@
-"""Pipeline parallelism: GPipe-style microbatch schedule over a mesh axis.
+"""REMOVED: seed-era GPipe pipeline schedule (never reachable from the
+topology path).
 
-The multi-pod mesh's 'pod' axis defaults to DP, but PP across pods is the
-other production option at 1000+ nodes (weights never cross the DCN; only
-activations do). This module implements the schedule as a shard_map over the
-stage axis with lax.ppermute activation handoffs:
+The fleet's production placement is the (data × lane) 2-D mesh behind
+parallel.topology.TopologySpec / parallel.mesh2d.Mesh2DFleet: lanes are
+embarrassingly parallel and replicas merge through a pinned deterministic
+fold, so a microbatch pipeline schedule has no role in the frugal serving
+tier — `pipeline_forward` / `bubble_fraction` were only ever exercised by
+their own subprocess test. They remain importable as ValueError stubs
+naming the replacement (same convention as serve.engine.RouteStats; pinned
+in tests/test_deprecations.py).
 
-  * each stage holds `layers/num_stages` of the stack;
-  * M microbatches flow through; at tick t, stage s processes microbatch
-    t - s (bubble fraction = (S-1)/(M+S-1));
-  * activations hop stage->stage+1 via ppermute — point-to-point, no
-    all-gather; on real hardware XLA overlaps the permute with the next
-    microbatch's compute (double buffering falls out of the scan).
-
-`pipeline_forward` is schedule-exact (runs anywhere, verified against the
-sequential stack in tests via 4 host devices); `bubble_fraction` feeds the
-roofline discussion in EXPERIMENTS.md.
+`shard_map_compat` — the one genuinely load-bearing thing this module held
+— now lives in parallel.mesh2d (re-exported here for stale imports).
 """
 from __future__ import annotations
 
-from typing import Callable
+from .mesh2d import shard_map_compat  # noqa: F401  (back-compat re-export)
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-
-Array = jax.Array
-
-# jax.shard_map (kwarg check_vma) landed after 0.4.x; older jax ships it as
-# jax.experimental.shard_map.shard_map with the kwarg named check_rep.
-if hasattr(jax, "shard_map"):
-    _shard_map = jax.shard_map
-    _CHECK_KW = "check_vma"
-else:  # pragma: no cover - exercised on jax<0.5 installs
-    from jax.experimental.shard_map import shard_map as _shard_map
-    _CHECK_KW = "check_rep"
+_REMOVED = (
+    "parallel.pipeline_parallel.{name} was removed: the GPipe microbatch "
+    "schedule was a seed-era experiment never reachable from the fleet's "
+    "topology path. Production placement is the (data x lane) 2-D mesh — "
+    "declare FleetSpec(topology=TopologySpec(data=..., lanes=...)) "
+    "(repro.api) or use parallel.mesh2d.Mesh2DFleet directly; "
+    "DESIGN.md §15 documents the topology contract.")
 
 
-def shard_map_compat(f, *, mesh, in_specs, out_specs, check=False):
-    """Version-portable shard_map with replication checking disabled."""
-    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                      **{_CHECK_KW: check})
+def pipeline_forward(*args, **kwargs):
+    raise ValueError(_REMOVED.format(name="pipeline_forward"))
 
 
-def bubble_fraction(num_stages: int, num_microbatches: int) -> float:
-    return (num_stages - 1) / (num_microbatches + num_stages - 1)
+def bubble_fraction(*args, **kwargs):
+    raise ValueError(_REMOVED.format(name="bubble_fraction"))
 
 
-def pipeline_forward(
-    stage_fn: Callable,       # (stage_params, x [mb, ...]) -> y [mb, ...]
-    stage_params,             # pytree with leading dim = num_stages (sharded)
-    x: Array,                 # [num_microbatches, mb, ...] input microbatches
-    mesh: Mesh,
-    axis: str = "stage",
-) -> Array:
-    """GPipe forward over `axis`. Returns [num_microbatches, mb, ...]."""
-    n_stages = mesh.shape[axis]
-    n_micro = x.shape[0]
-
-    def per_stage(params_s, x_all):
-        # params_s: this stage's params (leading stage dim stripped by
-        # shard_map); x_all: [n_micro, mb, ...] (replicated copy; only
-        # stage 0 reads it).
-        params_s = jax.tree.map(lambda a: a[0], params_s)
-        stage = jax.lax.axis_index(axis)
-        mb_shape = x_all.shape[1:]
-        total = n_micro + n_stages - 1
-
-        def tick(carry, t):
-            outputs = carry
-            # receive from previous stage (stage 0 reads the input stream)
-            inp_idx = jnp.clip(t, 0, n_micro - 1)
-            my_in = jnp.where(stage == 0,
-                              x_all[inp_idx],
-                              outputs["buf"])
-            active = (t - stage >= 0) & (t - stage < n_micro)
-            y = stage_fn(params_s, my_in)
-            y = jnp.where(active, y, jnp.zeros_like(y))
-            # hand off to next stage
-            nxt = jax.lax.ppermute(
-                y, axis, [(i, (i + 1) % n_stages) for i in range(n_stages)])
-            # last stage collects its finished microbatch
-            out_idx = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
-            collect = (stage == n_stages - 1) & active
-            acc = jnp.where(
-                collect,
-                outputs["acc"].at[out_idx].set(y),
-                outputs["acc"])
-            return {"buf": nxt, "acc": acc}, None
-
-        init = {
-            "buf": jnp.zeros(mb_shape, x_all.dtype),
-            "acc": jnp.zeros((n_micro,) + mb_shape, x_all.dtype),
-        }
-        out, _ = jax.lax.scan(tick, init, jnp.arange(total))
-        # only the last stage's acc is meaningful; psum broadcasts it
-        # (zeros elsewhere) so every shard returns the same stream.
-        return jax.lax.psum(out["acc"], axis)
-
-    in_specs = (
-        jax.tree.map(lambda _: P(axis), stage_params),
-        P(),            # microbatch stream replicated
-    )
-    fn = shard_map_compat(
-        per_stage, mesh=mesh, in_specs=in_specs, out_specs=P())
-    return fn(stage_params, x)
+__all__ = ["shard_map_compat", "pipeline_forward", "bubble_fraction"]

@@ -185,7 +185,13 @@ def _flatten(tree):
 
 
 def save_checkpoint(ckpt_dir: str, step: int, state: Any, keep: int = 3,
-                    host_id: int = 0, checksum: bool = True) -> str:
+                    host_id: int = 0, checksum: bool = True,
+                    topology: Any = None) -> str:
+    """Write one committed step. `topology` (a JSON-able dict, e.g.
+    TopologySpec.describe()) records the WRITER's placement in the manifest
+    — informational only: the payload is placement-independent (fleet
+    checkpoints store merged canonical lanes), so restore never reads it,
+    but operators and the cross-shape tests can (`read_manifest`)."""
     os.makedirs(ckpt_dir, exist_ok=True)
     name = f"step_{step:08d}"
     tmp = os.path.join(ckpt_dir, name + ".tmp")
@@ -227,6 +233,10 @@ def save_checkpoint(ckpt_dir: str, step: int, state: Any, keep: int = 3,
         # format 3.
         "format": 4 if checksum else 3,
     }
+    if topology is not None:
+        # Format-4 stanza, additive: absent in older checkpoints, ignored
+        # by older readers (restore keys only on num_leaves/format/crc32).
+        manifest["topology"] = topology
     if checksum:
         manifest["crc32"] = [_leaf_crc32(arrs[f"leaf_{i}"])
                              for i in range(len(leaves))]
@@ -292,6 +302,20 @@ def committed_steps(ckpt_dir: str):
 def latest_step(ckpt_dir: str) -> Optional[int]:
     steps = committed_steps(ckpt_dir)
     return steps[-1] if steps else None
+
+
+def read_manifest(ckpt_dir: str, step: Optional[int] = None) -> dict:
+    """The manifest dict of a committed step (newest by default) — the
+    metadata read path for operators/tests (e.g. the format-4 "topology"
+    stanza recording the writer's placement). Raises FileNotFoundError when
+    no committed step exists."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
+    with open(os.path.join(ckpt_dir, f"step_{step:08d}",
+                           "manifest.json")) as f:
+        return json.load(f)
 
 
 def restore_checkpoint(ckpt_dir: str, like: Any, step: Optional[int] = None,

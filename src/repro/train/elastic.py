@@ -1,11 +1,19 @@
-"""Elastic scaling: re-shard a committed checkpoint onto a different mesh.
+"""Elastic scaling: restore a committed checkpoint onto a DIFFERENT topology.
 
 The checkpoint format stores leaves unsharded (per host), so scaling from N
 to M devices is: build abstract state for the SAME config, compute shardings
 on the NEW mesh, restore with device_put against those shardings. No
 resharding pass over the data, no divisibility coupling between old and new
-meshes. Used by tests/test_fault_tolerance.py::test_elastic_reshard (8 -> 4
-host devices in a subprocess).
+meshes. Two entry points:
+
+* `reshard_restore` — TrainState onto a new 1-D device mesh (the original
+  8 -> 4 device path, tests/test_fault_tolerance.py::test_elastic_reshard).
+* `fleet_reshard_restore` — a QuantileFleet checkpoint onto ANY
+  TopologySpec: fleet checkpoints store the MERGED canonical lanes (a sync
+  point — DESIGN.md §15), so save under (a×b) and restore under (c×d),
+  1-D, or single-device is a pure re-placement; state is bit-identical and
+  the continued trajectory bit-exact. This is the checkpoint half of the
+  elastic contract; `QuantileFleet.reshard` is the live half.
 """
 from __future__ import annotations
 
@@ -14,6 +22,7 @@ from typing import Any, Optional, Tuple
 import jax
 
 from repro.parallel.sharding import param_shardings
+from repro.parallel.topology import TopologySpec
 from . import checkpoint as ckpt_lib
 
 
@@ -41,3 +50,23 @@ def reshard_restore(
         monitors=mon_sh, qclip=qc_sh)
     return ckpt_lib.restore_checkpoint(ckpt_dir, like_state, step=step,
                                        shardings=shardings)
+
+
+def fleet_reshard_restore(
+    ckpt_dir: str,
+    spec,
+    topology: TopologySpec,
+    step: Optional[int] = None,
+    per_lane_clock: bool = False,
+):
+    """Restore a QuantileFleet checkpoint re-placed on `topology`.
+
+    `spec` is the fleet's FleetSpec under ANY placement (the lane plane —
+    num_groups × quantiles — must match the checkpoint; the placement is
+    overridden by `topology`). Returns the restored QuantileFleet; its
+    canonical lane state is bit-identical to the writer's regardless of the
+    writer's topology, because checkpoints are sync points."""
+    from repro.api import QuantileFleet
+
+    return QuantileFleet.restore(ckpt_dir, spec.with_topology(topology),
+                                 step=step, per_lane_clock=per_lane_clock)

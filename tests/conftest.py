@@ -66,8 +66,7 @@ def run_program_invariance_sweep(program, mesh_sizes=(1,), g=5,
     Returns the reference estimate plane for optional further checks.
     """
     import jax
-    from repro.api import FleetSpec, QuantileFleet
-    from repro.parallel.group_sharding import group_mesh
+    from repro.api import FleetSpec, QuantileFleet, TopologySpec
 
     items = np.random.default_rng(data_seed).integers(
         0, 800, (t, g)).astype(np.float32)
@@ -75,13 +74,13 @@ def run_program_invariance_sweep(program, mesh_sizes=(1,), g=5,
     configs = [("jnp", 4096, None), ("fused", 64, None), ("fused", 333, None)]
     for n in mesh_sizes:
         if n <= n_dev:
-            configs.append(("sharded", 100, group_mesh(n)))
+            configs.append(("fused", 100, TopologySpec(lanes=n)))
 
     plane_fields = program.layout.plane_fields
     ref_est = ref_state = ref_cfg = None
-    for backend, chunk, mesh in configs:
+    for backend, chunk, topo in configs:
         spec = FleetSpec(num_groups=g, quantiles=quantiles, backend=backend,
-                         chunk_t=chunk, mesh=mesh, program=program)
+                         chunk_t=chunk, topology=topo, program=program)
         fl = QuantileFleet.create(spec, seed=seed)
         cut = max(1, t // 3)
         fl = fl.ingest(items[:cut]).ingest_stream([items[cut:cut + 51],
@@ -101,6 +100,49 @@ def run_program_invariance_sweep(program, mesh_sizes=(1,), g=5,
                 ref_state[f], state[f],
                 err_msg=f"{program.family}: plane {f!r} diverges between "
                         f"{ref_cfg} and ({backend}, {chunk})")
+
+    # ---- cross-topology checkpoint restore phase ----------------------
+    # Save under a 2-D (2 × 1) topology, restore under single-device, a
+    # different replica count, and (devices allowing) a 1-D lane mesh: the
+    # payload is the merged canonical lane state (a checkpoint is a sync
+    # point — DESIGN.md §15), so every restored placement must carry
+    # identical plane bits, an identical cursor, and replay identical
+    # releases — including the 2u-dp family, whose Laplace noise keys
+    # deterministically on (seed, cursor, lane).
+    import tempfile
+    from repro.train import elastic
+
+    save_spec = FleetSpec(num_groups=g, quantiles=quantiles, chunk_t=64,
+                          program=program,
+                          topology=TopologySpec(data=2))
+    fl2 = QuantileFleet.create(save_spec, seed=seed)
+    fl2 = fl2.ingest(items[:cut]).ingest(items[cut:])
+    canon = fl2._lane_sketch()
+    restore_topos = [TopologySpec(), TopologySpec(data=3)]
+    restore_topos += [TopologySpec(lanes=n) for n in mesh_sizes
+                      if 1 < n <= n_dev]
+    if n_dev >= 2:
+        restore_topos.append(TopologySpec(data=2, lanes=2))
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        fl2.checkpoint(ckpt_dir, step=1)
+        for topo in restore_topos:
+            rs = elastic.fleet_reshard_restore(ckpt_dir, save_spec, topo)
+            rsk = rs._lane_sketch()
+            for f in plane_fields:
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(canon, f)),
+                    np.asarray(getattr(rsk, f)),
+                    err_msg=f"{program.family}: plane {f!r} not "
+                            f"bit-identical restored onto {topo}")
+            np.testing.assert_array_equal(
+                np.asarray(fl2.cursor.t_offset),
+                np.asarray(rs.cursor.t_offset),
+                err_msg=f"{program.family}: cursor diverges restored "
+                        f"onto {topo}")
+            np.testing.assert_array_equal(
+                fl2.estimate(), rs.estimate(),
+                err_msg=f"{program.family}: release replay diverges "
+                        f"restored onto {topo}")
 
     # ---- sparse event-round phase -------------------------------------
     # Event mode must be bit-exact too: dense `tick_lanes` rounds vs the

@@ -112,6 +112,87 @@ def test_program_engine_and_facade_paths_are_warning_free():
         fleet.ingest(np.asarray(items))
 
 
+# ------------------------------------------------ TopologySpec redesign pins
+def test_legacy_sharded_spelling_warns_and_builds_equal_spec():
+    """FleetSpec(backend='sharded', mesh=...) is the DEPRECATED placement
+    spelling: it must still build — via the mapping shim — a spec EQUAL
+    (== and hash) to the declarative FleetSpec(topology=TopologySpec(...))
+    one, under a DeprecationWarning naming the new surface. Exercised for
+    mesh=None (all devices) and an explicit lane mesh."""
+    from repro.api import FleetSpec, TopologySpec
+    from repro.parallel import group_mesh
+
+    n_dev = len(jax.devices())
+    cases = [(dict(backend="sharded"), TopologySpec(lanes=n_dev))]
+    if n_dev >= 2:
+        cases.append((dict(backend="sharded", mesh=group_mesh(2)),
+                      TopologySpec(lanes=2)))
+    for legacy_kw, topo in cases:
+        with pytest.warns(DeprecationWarning, match=r"TopologySpec"):
+            legacy = FleetSpec(num_groups=G, quantiles=(0.5,), **legacy_kw)
+        new = FleetSpec(num_groups=G, quantiles=(0.5,), topology=topo)
+        assert legacy == new, (legacy, new)
+        assert hash(legacy) == hash(new)
+        assert legacy.topology == new.topology
+
+
+def test_legacy_size_one_mesh_normalizes_to_single_placement():
+    """A 1-device lane mesh IS the single placement (1-device sharded is
+    bit-identical to the fused engine): the legacy spelling maps onto
+    TopologySpec() and the fused engine, still under the warning."""
+    from repro.api import FleetSpec, TopologySpec
+    from repro.parallel import group_mesh
+
+    with pytest.warns(DeprecationWarning):
+        legacy = FleetSpec(num_groups=G, backend="sharded",
+                           mesh=group_mesh(1))
+    assert legacy.backend == "fused" and legacy.mesh is None
+    assert legacy.topology == TopologySpec()
+    assert legacy == FleetSpec(num_groups=G, backend="fused")
+
+
+def test_mesh_without_sharded_backend_still_rejected():
+    from repro.api import FleetSpec
+    from repro.parallel import group_mesh
+
+    with pytest.raises(ValueError, match=r"mesh= only applies"):
+        FleetSpec(num_groups=G, backend="fused", mesh=group_mesh(1))
+
+
+def test_pipeline_parallel_is_removed_with_named_replacement():
+    """The seed-era GPipe schedule (parallel.pipeline_parallel) is a
+    ValueError stub set: the error says removed, WHY (never reachable from
+    the topology path), and names the replacement placement surface."""
+    from repro.parallel.pipeline_parallel import (bubble_fraction,
+                                                  pipeline_forward)
+
+    for name, call in (("pipeline_forward", lambda: pipeline_forward(
+            None, {}, None, None, axis="stage")),
+                       ("bubble_fraction", lambda: bubble_fraction(4, 8))):
+        with pytest.raises(ValueError, match=r"TopologySpec") as ei:
+            call()
+        msg = str(ei.value)
+        assert "removed" in msg and name in msg
+        assert "Mesh2DFleet" in msg and "DESIGN.md" in msg
+
+
+def test_topology_spelling_lint_flags_offenders(tmp_path):
+    """repro.api.lint.check_topology_spellings: the tree itself must scan
+    clean, and a planted offender (in a fake tree) must be caught with its
+    file:line."""
+    from repro.api import check_topology_spellings
+
+    assert check_topology_spellings() > 0      # real tree: clean, nonzero
+
+    bad = tmp_path / "src" / "repro"
+    bad.mkdir(parents=True)
+    (bad / "user.py").write_text(
+        "spec = FleetSpec(num_groups=4,\n"
+        "                 backend='sharded', mesh=my_mesh)\n")
+    with pytest.raises(AssertionError, match=r"user\.py:1"):
+        check_topology_spellings(root=str(tmp_path))
+
+
 def test_replacement_actually_computes_the_same_rule():
     """The error's named replacement is real: the program pair reproduces
     the trajectory the removed fused path used to produce (pinned against

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.api import (FleetSpec, FrugalEstimator, QuantileEstimator,
-                       QuantileFleet, StreamCursor)
+                       QuantileFleet, StreamCursor, TopologySpec)
 from repro.core import GroupedQuantileSketch, ingest_array, ingest_stream
 from repro.core import rng as crng
 from repro.parallel import ShardedGroupFleet, group_mesh
@@ -68,14 +68,17 @@ def test_q1_ingest_stream_matches_legacy_ingest_stream(chunk_t):
 
 
 def test_q1_sharded_fleet_reproduces_sharded_legacy():
+    """A lane-sharded topology reproduces the low-level ShardedGroupFleet
+    trajectory bit-for-bit (on one device the topology normalizes to the
+    single placement — same bits, the cross-backend contract)."""
     t, g = 200, 13
     items = _items(t, g, seed=3)
     key = jax.random.PRNGKey(1)
-    mesh = group_mesh(1)
+    mesh = group_mesh(min(2, len(jax.devices())))
     legacy = ShardedGroupFleet.create(g, quantile=0.5, algo="2u", mesh=mesh)
     legacy = legacy.ingest_array(items, key, chunk_t=48)
-    spec = FleetSpec(num_groups=g, quantiles=(0.5,), backend="sharded",
-                     chunk_t=48, mesh=mesh)
+    spec = FleetSpec(num_groups=g, quantiles=(0.5,), chunk_t=48,
+                     topology=TopologySpec(lanes=min(2, len(jax.devices()))))
     fleet = QuantileFleet.create(spec, seed=_seed(key)).ingest(items)
     np.testing.assert_array_equal(fleet.estimate(0.5), legacy.estimate())
 
@@ -115,10 +118,11 @@ def test_g_offset_cursor_respected_on_every_backend():
     items = _items(t, g, seed=12)
     qs = (0.5, 0.9)
     outs = []
-    for backend, mesh in (("jnp", None), ("fused", None),
-                          ("sharded", group_mesh(1))):
+    for backend, topo in (("jnp", None), ("fused", None),
+                          ("fused", TopologySpec(
+                              lanes=min(2, len(jax.devices()))))):
         spec = FleetSpec(num_groups=g, quantiles=qs, backend=backend,
-                         chunk_t=32, mesh=mesh)
+                         chunk_t=32, topology=topo)
         fl = QuantileFleet.create(
             spec, cursor=StreamCursor.create(seed=3, g_offset=off))
         outs.append(fl.ingest(items).estimate())
@@ -202,8 +206,9 @@ def test_checkpoint_restore_across_backends(tmp_path):
     fused_spec = FleetSpec(num_groups=g, quantiles=qs, chunk_t=32)
     half = QuantileFleet.create(fused_spec, seed=4).ingest(items[:70])
     half.checkpoint(str(tmp_path), step=1)
-    sharded_spec = FleetSpec(num_groups=g, quantiles=qs, backend="sharded",
-                             chunk_t=32, mesh=group_mesh(1))
+    sharded_spec = FleetSpec(num_groups=g, quantiles=qs, chunk_t=32,
+                             topology=TopologySpec(
+                                 lanes=len(jax.devices())))
     resumed = QuantileFleet.restore(str(tmp_path), sharded_spec)
     done_sh = resumed.ingest(items[70:])
     done_ref = QuantileFleet.create(fused_spec, seed=4).ingest(items)
@@ -376,8 +381,13 @@ def test_fleet_spec_validation():
         FleetSpec(num_groups=1, chunk_t=0)
     with pytest.raises(ValueError, match="num_groups"):
         FleetSpec(num_groups=0)
-    with pytest.raises(ValueError, match="mesh"):
-        FleetSpec(num_groups=1, backend="fused", mesh=group_mesh(1))
+    # (mesh=-without-sharded rejection is pinned in test_deprecations.py —
+    # the deprecated spelling lives only there and in the shim.)
+    with pytest.raises(ValueError, match="TopologySpec"):
+        FleetSpec(num_groups=1, topology="2x4")
+    with pytest.raises(ValueError, match="scan engine"):
+        FleetSpec(num_groups=1, backend="jnp",
+                  topology=TopologySpec(data=2))
     spec = FleetSpec(num_groups=4, quantiles=(0.5, 0.9))
     assert spec.num_lanes == 8
     assert spec.lane(2, 0.9) == 5

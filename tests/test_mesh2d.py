@@ -1,0 +1,320 @@
+"""2-D (data × lane) mesh fleets (parallel.mesh2d + the TopologySpec
+surface): chunk→replica assignment keyed off the ABSOLUTE tick, the pinned
+deterministic merge rule, elastic resharding, and cross-shape checkpoint
+restore. Single-device tier-1 drives the sequential replica loop; the
+multi-device CI job re-runs the same contracts over real shard_map meshes
+(plus tests/test_fault_tolerance.py's forced-8-device matrix leg, which
+pins loop ≡ shard_map bit-for-bit)."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.api import FleetSpec, QuantileFleet, TopologySpec
+from repro.core.sketch import GroupedQuantileSketch
+from repro.parallel.mesh2d import Mesh2DFleet, merge_replica_planes
+from repro.resilience import health as health_mod
+from repro.train import checkpoint as ckpt_lib, elastic
+
+G, T, CHUNK = 6, 400, 32
+QS = (0.5, 0.9)
+
+
+def _items(t=T, g=G, seed=4):
+    rng = np.random.default_rng(seed)
+    return rng.normal(3.0, 2.0, size=(t, g)).astype(np.float32)
+
+
+def _fleet(topo=None, seed=9, g=G, chunk=CHUNK, program="2u", **kw):
+    spec = FleetSpec(num_groups=g, quantiles=QS, chunk_t=chunk,
+                     topology=topo, program=program, **kw)
+    return QuantileFleet.create(spec, seed=seed)
+
+
+# --------------------------------------------------------------- TopologySpec
+def test_topology_spec_placement_and_validation():
+    assert TopologySpec().placement == "single"
+    assert TopologySpec(lanes=4).placement == "sharded"
+    assert TopologySpec(data=2).placement == "mesh2d"
+    assert TopologySpec(data=2, lanes=4).num_devices == 8
+    assert TopologySpec() == TopologySpec(data=1, lanes=1)
+    with pytest.raises(ValueError):
+        TopologySpec(data=0)
+    with pytest.raises(ValueError):
+        TopologySpec(lanes=-1)
+    d = TopologySpec(data=2, lanes=3).describe()
+    assert d == {"data": 2, "lanes": 3, "placement": "mesh2d"}
+
+
+def test_topology_resolve_single_device_falls_back_to_loop():
+    topo = TopologySpec(data=2, lanes=2).resolve()
+    n_dev = len(jax.devices())
+    if n_dev >= 4:
+        assert topo.on_devices and topo.mesh2d().devices.shape == (2, 2)
+    else:
+        assert not topo.on_devices
+        with pytest.raises(ValueError):
+            topo.mesh2d()
+
+
+# ------------------------------------------------- replica trajectory pinning
+def test_replica_state_is_single_fleet_over_its_chunk_shard():
+    """replica(c) = c mod R on the absolute chunk index: replica r's state
+    must be bit-identical to a SINGLE-device fleet that ingested exactly
+    r's chunks at their true absolute tick offsets — the 2-D bit-exactness
+    anchor (DESIGN.md §15)."""
+    items = _items()
+    fl = _fleet(TopologySpec(data=2)).ingest(items)
+    m2 = fl.state
+    assert isinstance(m2, Mesh2DFleet)
+    planes = m2.replica_planes()
+    for r in range(2):
+        single = _fleet()
+        cur = single.cursor
+        sk = single.state
+        for c in range(-(-T // CHUNK)):
+            if c % 2 != r:
+                continue
+            block = items[c * CHUNK:(c + 1) * CHUNK]
+            from repro.core import streaming
+            sk = streaming.ingest_array(
+                sk, block, seed=int(cur.seed), chunk_t=CHUNK,
+                t_offset=c * CHUNK, g_offset=0,
+                lanes_per_group=len(QS))
+        for f, p in zip(sk.program.layout.plane_fields, planes):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(sk, f)), p[r],
+                err_msg=f"replica {r} plane {f!r} != its sub-stream")
+
+
+def test_split_invariance_at_arbitrary_call_boundaries():
+    """Mid-chunk call splits NaN-pad both sides of the cut, so every item
+    lands on the same replica at the same tick regardless of batching."""
+    items = _items()
+    base = _fleet(TopologySpec(data=3))
+    one = base.ingest(items)
+    for cut in (1, 137, 320):
+        two = base.ingest(items[:cut]).ingest(items[cut:])
+        for a, b in zip(one.state.replica_planes(),
+                        two.state.replica_planes()):
+            np.testing.assert_array_equal(a, b, err_msg=f"cut={cut}")
+    streamed = base.ingest_stream([items[:50], items[50:211], items[211:]])
+    for a, b in zip(one.state.replica_planes(),
+                    streamed.state.replica_planes()):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_estimates_invariant_to_lane_shard_count_at_fixed_replicas():
+    items = _items()
+    ref = _fleet(TopologySpec(data=2, lanes=1)).ingest(items).estimate()
+    for lanes in (2, 3, 4):
+        got = _fleet(TopologySpec(data=2, lanes=lanes)).ingest(items)
+        np.testing.assert_array_equal(ref, got.estimate())
+
+
+# ----------------------------------------------------------- pinned merge rule
+def test_merge_rule_folds_by_invariant_domain():
+    """finite → fixed-order running mean; step → elementwise max; sign →
+    replica 0 (all IEEE-exact f32 elementwise, so host/numpy == device)."""
+    from repro.core import program as program_mod
+
+    prog = program_mod.family_base("2u")
+    rng = np.random.default_rng(1)
+    m = rng.normal(size=(3, 5)).astype(np.float32)
+    step = rng.integers(1, 100, (3, 5)).astype(np.float32)
+    sign = rng.choice([-1.0, 1.0], (3, 5)).astype(np.float32)
+    got = merge_replica_planes(prog, (m, step, sign))
+    acc = m[0]
+    for r in (1, 2):
+        acc = acc + (m[r] - acc) / np.float32(r + 1)
+    np.testing.assert_array_equal(got[0], acc)
+    np.testing.assert_array_equal(got[1], np.max(step, axis=0))
+    np.testing.assert_array_equal(got[2], sign[0])
+    # jnp produces the same bits
+    got_j = merge_replica_planes(prog, tuple(jnp.asarray(p)
+                                             for p in (m, step, sign)),
+                                 xp=jnp)
+    for a, b in zip(got, got_j):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_merge_of_equal_replicas_is_identity_and_r1_is_identity():
+    from repro.core import program as program_mod
+
+    prog = program_mod.family_base("2u")
+    rng = np.random.default_rng(2)
+    planes = (rng.normal(size=(5,)).astype(np.float32),
+              rng.integers(1, 50, (5,)).astype(np.float32),
+              rng.choice([-1.0, 1.0], (5,)).astype(np.float32))
+    eq = tuple(np.broadcast_to(p, (4,) + p.shape) for p in planes)
+    for a, b in zip(merge_replica_planes(prog, eq), planes):
+        np.testing.assert_array_equal(a, b)
+    r1 = tuple(p[None] for p in planes)
+    for a, b in zip(merge_replica_planes(prog, r1), planes):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_merged_state_satisfies_program_invariants():
+    """The fold must land INSIDE every declared invariant domain: finite
+    heads stay finite, step words stay pack-round-trippable (max of valid
+    steps is a valid step), signs stay exact ±1 — so health scans and
+    packed checkpoints accept merged state."""
+    items = _items()
+    for program in ("1u", "2u", "2u-window"):
+        fl = _fleet(TopologySpec(data=3), program=program).ingest(items)
+        sk = fl._lane_sketch()
+        prog = fl.spec.program
+        mask = health_mod.validate_planes(prog, sk.planes())
+        assert not bool(np.any(np.asarray(mask))), program
+        rt = GroupedQuantileSketch.from_packed(sk.packed())
+        for f in prog.layout.plane_fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(sk, f)), np.asarray(getattr(rt, f)),
+                err_msg=f"{program}: merged {f!r} not pack-round-trippable")
+
+
+def test_sync_is_idempotent_and_estimate_preserving():
+    fl = _fleet(TopologySpec(data=2, lanes=2)).ingest(_items())
+    synced = fl.sync()
+    np.testing.assert_array_equal(fl.estimate(), synced.estimate())
+    again = synced.sync()
+    for a, b in zip(synced.state.replica_planes(),
+                    again.state.replica_planes()):
+        np.testing.assert_array_equal(a, b)
+    # after sync every replica holds the canonical state
+    planes = synced.state.replica_planes()
+    for p in planes:
+        for r in range(1, p.shape[0]):
+            np.testing.assert_array_equal(p[0], p[r])
+
+
+# ------------------------------------------------------------------- elastic
+def test_reshard_matrix_preserves_or_syncs():
+    """(1×1) → (2×1) → (2×2) → (4×1) → (1×1): same-R reshard carries every
+    replica bit-for-bit; R-changing reshard passes through the pinned merge
+    (estimate invariant); the cursor never moves."""
+    items = _items()
+    fl = _fleet().ingest(items[:200])
+    est = fl.estimate()
+    t0 = int(fl.cursor.t_offset)
+
+    fl2 = fl.reshard(TopologySpec(data=2))          # 1 -> 2 replicas
+    assert isinstance(fl2.state, Mesh2DFleet)
+    np.testing.assert_array_equal(fl2.estimate(), est)
+    assert int(fl2.cursor.t_offset) == t0
+
+    fl2 = fl2.ingest(items[200:])                   # replicas diverge
+    est2 = fl2.estimate()
+    fl22 = fl2.reshard(TopologySpec(data=2, lanes=2))   # same R: bit-exact
+    for a, b in zip(fl2.state.replica_planes(),
+                    fl22.state.replica_planes()):
+        np.testing.assert_array_equal(a, b)
+
+    fl41 = fl22.reshard(TopologySpec(data=4))       # R change: sync point
+    np.testing.assert_array_equal(fl41.estimate(), est2)
+    back = fl41.reshard(TopologySpec())             # collapse to single
+    assert isinstance(back.state, GroupedQuantileSketch)
+    assert back.spec.backend == "fused"
+    np.testing.assert_array_equal(back.estimate(), est2)
+
+    # post-reshard ingest stays deterministic and placement-consistent:
+    # (2×1) and (2×2) fleets continue identically
+    more = _items(100, seed=77)
+    np.testing.assert_array_equal(fl2.ingest(more).estimate(),
+                                  fl22.ingest(more).estimate())
+
+
+def test_grow_mid_stream_keeps_existing_lanes_bit_for_bit():
+    items = _items()
+    fl = _fleet(TopologySpec(data=2, lanes=2)).ingest(items[:200])
+    before = fl.state.replica_planes()
+    grown = fl.grow_groups(G + 3)
+    after = grown.state.replica_planes()
+    L_old = G * len(QS)
+    for a, b in zip(after, before):
+        np.testing.assert_array_equal(a[:, :L_old], b)
+    # new lanes tick like lanes created at the current cursor: growth is
+    # equivalent to a wider fleet whose extra groups saw NaN (no-op) rows
+    wide = _fleet(TopologySpec(data=2, lanes=2), g=G + 3)
+    pad = np.full((200, 3), np.nan, np.float32)
+    wide = wide.ingest(np.concatenate([items[:200], pad], axis=1))
+    more = _items(100, g=G + 3, seed=5)
+    np.testing.assert_array_equal(grown.ingest(more).estimate(),
+                                  wide.ingest(more).estimate())
+
+
+def test_from_replica_planes_rejects_replica_count_change():
+    fl = _fleet(TopologySpec(data=2)).ingest(_items(64))
+    m2 = fl.state
+    quantile = np.asarray(jax.device_get(m2.sketch.quantile))[:, :G * 2]
+    with pytest.raises(ValueError, match="sync point"):
+        Mesh2DFleet.from_replica_planes(
+            m2.sketch, m2.replica_planes(), quantile,
+            TopologySpec(data=3), lanes_per_group=len(QS))
+
+
+# ---------------------------------------------------------------- checkpoints
+def test_checkpoint_records_topology_stanza_and_restores_cross_shape(
+        tmp_path):
+    items = _items()
+    fl = _fleet(TopologySpec(data=2, lanes=2)).ingest(items)
+    d = str(tmp_path)
+    fl.checkpoint(d, step=3)
+    man = ckpt_lib.read_manifest(d)
+    assert man["topology"] == {"data": 2, "lanes": 2,
+                               "placement": "mesh2d"}
+    assert man["format"] == 4
+    canon = fl._lane_sketch()
+    for topo in (TopologySpec(), TopologySpec(data=4),
+                 TopologySpec(data=3, lanes=2)):
+        rs = elastic.fleet_reshard_restore(d, fl.spec, topo)
+        rsk = rs._lane_sketch()
+        for f in fl.spec.program.layout.plane_fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(canon, f)), np.asarray(getattr(rsk, f)),
+                err_msg=f"plane {f!r} restored onto {topo}")
+        np.testing.assert_array_equal(fl.estimate(), rs.estimate())
+        assert int(rs.cursor.t_offset) == int(fl.cursor.t_offset)
+
+
+def test_single_placement_checkpoint_stanza(tmp_path):
+    fl = _fleet().ingest(_items(64))
+    fl.checkpoint(str(tmp_path), step=1)
+    man = ckpt_lib.read_manifest(str(tmp_path))
+    assert man["topology"]["placement"] == "single"
+
+
+# ------------------------------------------------------------------- facade
+def test_mesh2d_fleet_properties_and_event_mode_guard():
+    fl = _fleet(TopologySpec(data=2, lanes=2))
+    st = fl.state
+    assert st.data_replicas == 2
+    assert st.memory_words() == 2         # per lane per replica
+    assert fl.memory_words() == 2
+    n_dev = len(jax.devices())
+    assert st.mode == ("shard_map" if n_dev >= 4 else "loop")
+    with pytest.raises(NotImplementedError, match="meshed"):
+        fl.tick_lanes(np.zeros(fl.num_lanes, np.float32))
+    with pytest.raises(NotImplementedError, match="meshed"):
+        fl.tick_lanes_sparse(jnp.asarray([0]), jnp.asarray([1.0]))
+
+
+def test_quarantine_heals_on_2d_placement():
+    """Corrupt a merged read path lane: check_health under the 2-D
+    placement scans the MERGED canonical lanes and re-places the healed
+    sketch (a sync point) — the fleet comes back healthy."""
+    fl = _fleet(TopologySpec(data=2), health="quarantine").ingest(_items())
+    bad_sk = fl.state.sketch
+    m = np.asarray(jax.device_get(bad_sk.m)).copy()
+    m[0, 1] = np.nan                       # corrupt one replica's lane
+    bad = dataclasses.replace(
+        fl, state=dataclasses.replace(fl.state,
+                                      sketch=dataclasses.replace(
+                                          bad_sk, m=jnp.asarray(m))))
+    healed, rep = bad.check_health()
+    assert not rep.healthy and rep.quarantined
+    ok, rep2 = healed.check_health()
+    assert rep2.healthy
+    assert isinstance(healed.state, Mesh2DFleet)

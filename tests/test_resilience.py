@@ -28,10 +28,9 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.api import FleetSpec, QuantileFleet, StreamCursor
+from repro.api import FleetSpec, QuantileFleet, StreamCursor, TopologySpec
 from repro.data.pipeline import DataConfig, RetryPolicy, SyntheticCorpus, \
     with_retry
-from repro.parallel.group_sharding import group_mesh
 from repro.resilience import (CheckpointKilled, Fault, FaultPlan,
                               LaneCorruptionError, StreamInterrupted, chaos)
 from repro.serve.slo import SLOFleet
@@ -41,7 +40,11 @@ SEEDS = tuple(int(s) for s in os.environ.get("CHAOS_SEEDS", "0").split(","))
 
 G, T, CHUNK = 4, 200, 32
 N_CHUNKS = -(-T // CHUNK)
-BACKENDS = ("jnp", "fused", "sharded")
+# "sharded"/"mesh2d" are placement legs spelled via TopologySpec: the 1-D
+# lane mesh and the 2-D (data × lane) mesh. Crash consistency must hold
+# under every placement — a 2-D interrupt still lands on a chunk boundary
+# and each chunk belongs wholly to one replica.
+BACKENDS = ("jnp", "fused", "sharded", "mesh2d")
 
 
 def _data(seed=4):
@@ -56,10 +59,13 @@ def _blocks(data):
 
 
 def _spec(program, backend, **kw):
-    mesh = group_mesh(min(2, len(jax.devices()))) \
-        if backend == "sharded" else None
+    topo = None
+    if backend in ("sharded", "mesh2d"):
+        topo = TopologySpec(data=2 if backend == "mesh2d" else 1,
+                            lanes=min(2, len(jax.devices())))
+        backend = "fused"
     return FleetSpec(num_groups=G, quantiles=(0.5, 0.9), backend=backend,
-                     chunk_t=CHUNK, mesh=mesh, program=program, **kw)
+                     chunk_t=CHUNK, topology=topo, program=program, **kw)
 
 
 def _assert_fleet_equal(a: QuantileFleet, b: QuantileFleet, what=""):
@@ -327,12 +333,15 @@ def test_every_step_corrupt_raises_named_error(tmp_path):
     assert ckpt.committed_steps(d) == []
 
 
-def test_dropped_shard_read_skips_to_older_step(tmp_path):
+@pytest.mark.parametrize("backend", ("fused", "mesh2d"))
+def test_dropped_shard_read_skips_to_older_step(tmp_path, backend):
     """A shard read failing with ENOENT (GC race / transient FS) is a SKIP,
     not corruption: restore falls back without quarantining — the step's
-    bytes may be fine next scan."""
+    bytes may be fine next scan. Same contract under the 2-D placement
+    (checkpoints store merged canonical lanes, so the drop/fallback path is
+    placement-independent — pinned here anyway)."""
     data = _data()
-    spec = FleetSpec(num_groups=G, backend="fused")
+    spec = _spec("2u", backend)
     d, f1, _ = _two_step_dir(tmp_path, spec, data)
     with chaos.armed(FaultPlan(faults=[Fault(kind="drop_shard")])):
         restored = QuantileFleet.restore(d, spec)

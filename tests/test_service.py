@@ -25,11 +25,10 @@ import numpy as np
 import pytest
 import jax
 
-from repro.api import FleetSpec, QuantileFleet
+from repro.api import FleetSpec, QuantileFleet, TopologySpec
 from repro.core.program import make_program
 from repro.data.pipeline import DataConfig, SyntheticCorpus, \
     prefetch_to_device
-from repro.parallel.group_sharding import group_mesh
 from repro.resilience import FaultPlan, QueryStalled, chaos
 from repro.service import (IngestPipeline, Snapshot, StreamingService,
                            Telemetry, TenantPolicy, runtime_metadata)
@@ -37,7 +36,11 @@ from repro.service import (IngestPipeline, Snapshot, StreamingService,
 SEEDS = tuple(int(s) for s in os.environ.get("CHAOS_SEEDS", "0").split(","))
 
 G, CHUNK_T, N_CHUNKS = 8, 16, 6
-BACKENDS = ("jnp", "fused", "sharded")
+# "sharded"/"mesh2d" are PLACEMENT legs (spelled via TopologySpec below):
+# 1-D lane mesh and the 2-D (data × lane) mesh whose replicas ingest
+# disjoint chunk shards. On one device they degrade to single placement /
+# the sequential replica loop; the multi-device CI job runs them for real.
+BACKENDS = ("jnp", "fused", "sharded", "mesh2d")
 
 
 def _chunks(seed=0, n=N_CHUNKS, t=CHUNK_T, g=G):
@@ -47,10 +50,14 @@ def _chunks(seed=0, n=N_CHUNKS, t=CHUNK_T, g=G):
 
 
 def _spec(backend="fused", program=None, g=G, quantiles=(0.5, 0.9)):
-    mesh = group_mesh(min(2, len(jax.devices()))) \
-        if backend == "sharded" else None
+    topo = None
+    if backend in ("sharded", "mesh2d"):
+        lanes = min(2, len(jax.devices()))
+        topo = TopologySpec(data=2 if backend == "mesh2d" else 1,
+                            lanes=lanes)
+        backend = "fused"
     return FleetSpec(num_groups=g, quantiles=quantiles, backend=backend,
-                     chunk_t=CHUNK_T, mesh=mesh,
+                     chunk_t=CHUNK_T, topology=topo,
                      program=program if program is not None else "2u")
 
 
@@ -75,8 +82,11 @@ def test_snapshot_at_every_boundary_matches_replay(backend, program):
         svc.ingest(c)
     answers.append(svc.snapshot().estimate())
     # single-threaded replay on the jnp backend (cross-backend agreement is
-    # part of what this pins)
-    ref = QuantileFleet.create(_spec("jnp", program=prog), seed=11)
+    # part of what this pins). The 2-D leg replays on ITS OWN placement:
+    # replicas merge through the pinned rule, a deterministic but distinct
+    # estimator from the single trajectory (DESIGN.md §15).
+    ref_backend = "mesh2d" if backend == "mesh2d" else "jnp"
+    ref = QuantileFleet.create(_spec(ref_backend, program=prog), seed=11)
     np.testing.assert_array_equal(answers[0], ref.estimate())
     for i, c in enumerate(chunks):
         ref = ref.ingest(c)
