@@ -1,12 +1,12 @@
 """Perf-gate checker for the bench-regression CI job.
 
-Each systems benchmark (e7-e15) records its own gate threshold and verdict
+Each systems benchmark (e7-e16) records its own gate threshold and verdict
 in a repo-root BENCH_*.json (the PR-over-PR perf trajectory files). The
 benchmarks themselves only WARN on a miss — wall-clock on a shared CI
 runner is too noisy to hard-fail inside the bench — so this checker is the
 single place that turns a freshly-rerun gate verdict into a CI failure.
 
-Usage (after `python -m benchmarks.run --only e7,...,e15`
+Usage (after `python -m benchmarks.run --only e7,...,e16`
 rewrote files):  python -m benchmarks.check_gates
 """
 from __future__ import annotations
@@ -40,6 +40,10 @@ GATES = (
     ("BENCH_mesh2d.json", "e15",
      "2-D (2x4) aggregate ingest >= 0.5x the 1-D (8x1) lane shard at "
      "G=2^20, shard_map-vs-loop bit-exactness asserted pre-timing"),
+    ("BENCH_roofline.json", "e16",
+     "compiled kernel >= 0.35x its roofline prediction on tpu/gpu; on "
+     "CPU runners the interpret-fallback row gates on model consistency "
+     "(analytic bytes <= cost_analysis) + tuned-vs-default bit-exactness"),
 )
 
 # e9 is the one gate bound by RUNNER CAPABILITY, not code: it measures

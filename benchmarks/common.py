@@ -77,10 +77,31 @@ def fraction_within(errors: List[float], band: float = 0.1) -> float:
 def run_metadata() -> Dict:
     """Self-describing run-record stamp (wall-clock, device count, backend,
     versions) — one definition (repro.service.telemetry.runtime_metadata)
-    instead of each bench re-rolling its own ad hoc metadata."""
+    instead of each bench re-rolling its own ad hoc metadata — plus the
+    detected platform/device and its roofline HwSpec, so the perf
+    trajectory stays comparable across heterogeneous runners: a number from
+    an H100 runner and a number from a CPU runner carry their own
+    bandwidth context in-band."""
     from repro.service.telemetry import runtime_metadata
 
-    return runtime_metadata()
+    meta = runtime_metadata()
+    try:
+        from repro.configs.platform import detect_device_kind, detect_platform
+        from repro.roofline.analysis import detect_hw
+
+        hw = detect_hw()
+        meta["platform"] = detect_platform()
+        meta["device_kind"] = detect_device_kind()
+        meta["roofline_hw"] = {
+            "name": hw.name,
+            "known": hw.known,
+            "nominal": hw.nominal,
+            "hbm_bw": hw.hbm_bw,
+            "peak_flops": hw.peak_flops,
+        }
+    except Exception as e:  # pragma: no cover - stamp must never sink a bench
+        meta["roofline_hw"] = {"error": f"{type(e).__name__}: {e}"}
+    return meta
 
 
 def write_bench_json(path: str, payload: Dict,

@@ -24,7 +24,8 @@ def main() -> None:
         bench_convergence_theory, bench_program_engine,
         bench_kernel_throughput, bench_sharded_fleet, bench_fleet_api,
         bench_drift_tracking, bench_resilience_overhead,
-        bench_sparse_ingest, bench_service_e2e, bench_mesh2d)
+        bench_sparse_ingest, bench_service_e2e, bench_mesh2d,
+        bench_roofline)
 
     suite = {
         "e1": ("static_cauchy (paper Fig 4)", bench_static_cauchy.run),
@@ -51,6 +52,8 @@ def main() -> None:
                 bench_service_e2e.run),
         "e15": ("2-D mesh ingest vs 1-D + elastic reshard (ours)",
                 bench_mesh2d.run),
+        "e16": ("fraction-of-roofline for the compiled kernel (ours)",
+                bench_roofline.run),
     }
     only = set(args.only.split(",")) if args.only else None
     if only:

@@ -1,9 +1,14 @@
-"""Assigned-architecture configs (exact published numbers) + smoke reduction.
+"""Assigned-architecture configs (exact published numbers) + smoke reduction
++ the computation-platform entry point.
 
 `get_config(arch_id)` returns the full ModelConfig; `reduce_for_smoke(cfg)`
 shrinks it to a same-family toy (few layers, narrow, tiny vocab) that runs a
 real forward/train step on CPU — the full configs are exercised only via the
 ShapeDtypeStruct dry-run.
+
+`platform.py` (re-exported here) is the one place that pins the JAX backend
+(`set_platform` + the GPU XLA flag block) and detects the local device for
+the kernel dispatch and roofline registry seams.
 """
 from __future__ import annotations
 
@@ -11,6 +16,14 @@ import dataclasses
 import importlib
 
 from repro.models.config import ModelConfig
+from repro.configs.platform import (
+    set_platform,
+    set_cpu_devices,
+    detect_platform,
+    detect_device_kind,
+    supports_compiled_kernels,
+    GPU_XLA_FLAGS,
+)
 
 ARCH_IDS = [
     "qwen2_vl_2b",
@@ -81,3 +94,18 @@ def reduce_for_smoke(cfg: ModelConfig) -> ModelConfig:
     if cfg.mrope_sections:
         r["mrope_sections"] = (4, 6, 6)  # sums to head_dim//2 = 16
     return dataclasses.replace(cfg, **r)
+
+
+__all__ = [
+    "ARCH_IDS",
+    "ALIASES",
+    "ModelConfig",
+    "get_config",
+    "reduce_for_smoke",
+    "set_platform",
+    "set_cpu_devices",
+    "detect_platform",
+    "detect_device_kind",
+    "supports_compiled_kernels",
+    "GPU_XLA_FLAGS",
+]

@@ -1,13 +1,17 @@
 """Pallas TPU kernels for the frugal-sketch hot path.
 
   frugal_update.py — ONE pl.pallas_call kernel family parameterized by a
-                     core.program.LaneProgram (grouped frugal lanes, VMEM-
-                     resident state, sequential-T/parallel-G grid, on-chip
-                     counter RNG, packed plane-pair state words), plus the
-                     event-round scatter kernel (gather→tick→scatter
-                     against resident aliased state, DESIGN.md §13).
+                     core.program.LaneProgram in three bit-identical
+                     lowerings — the (G, T) revisit grid (interpret-mode
+                     workhorse), the Mosaic/TPU double-buffered-DMA path
+                     (state VMEM-resident for the whole stream, items
+                     streamed HBM→VMEM one tile ahead), and the Triton/GPU
+                     body (full T loop per CTA) — plus the event-round
+                     scatter kernel (gather→tick→scatter against resident
+                     aliased state, DESIGN.md §13).
   ops.py           — the single jit'd blocked/auto entry-point pair:
-                     padding, dtype, packing, TPU/interpret dispatch; and
+                     padding, dtype, packing, per-platform compiled-kernel
+                     dispatch with roofline-autotuned blocks; and
                      frugal_update_sparse, the O(events) event round
                      (donation-aware two-phase jnp scatter off-TPU).
                      (Plus ValueError stubs for the removed pre-program
@@ -15,8 +19,14 @@
   ref.py           — pure-jnp lax.scan oracles for bit-exact validation.
 """
 
-from .frugal_update import frugal_program_pallas, frugal_program_scatter_pallas
+from .frugal_update import (
+    frugal_program_pallas,
+    frugal_program_pallas_dma,
+    frugal_program_pallas_gpu,
+    frugal_program_scatter_pallas,
+)
 from .ops import (
+    block_override,
     frugal_update_auto,
     frugal_update_blocked,
     frugal_update_sparse,
@@ -42,7 +52,10 @@ from .ops import (
 # importable for the loud ValueError, but they are no longer part of the
 # public surface (repro.api.lint checks every listed name resolves).
 __all__ = [
+    "block_override",
     "frugal_program_pallas",
+    "frugal_program_pallas_dma",
+    "frugal_program_pallas_gpu",
     "frugal_program_scatter_pallas",
     "frugal_update_auto",
     "frugal_update_blocked",

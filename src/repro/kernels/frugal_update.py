@@ -109,6 +109,105 @@ def _program_kernel(seed_ref, q_ref, items_ref, *state_refs, program,
         r[0, :] = w
 
 
+def _program_kernel_dma(seed_ref, q_ref, items_hbm, *refs, program,
+                        block_t, block_g, n_chunks):
+    """The REAL-TPU lowering of the dense body: grid (G_blocks,) only, state
+    planes resident in VMEM for the WHOLE stream, items double-buffer-DMA'd
+    HBM→VMEM one [block_t, block_g] tile ahead of the tick loop.
+
+    The (G, T)-grid kernel above round-trips every state word through HBM at
+    each T-block revisit — fine in interpret mode, but on hardware it is
+    exactly the traffic the paper says we don't need to pay. Here the items
+    operand stays in memory-space ANY (never blocked through the pipeline);
+    chunk ci+1's DMA is issued before chunk ci is consumed, so the tick
+    loop hides the item transfer and state crosses HBM exactly once.
+    Same tick expressions, same absolute (seed, tick, lane) uniform keys —
+    bit-identical to the grid kernel and the jnp scan (pinned by the
+    conftest sweep in interpret mode, where make_async_copy is emulated).
+
+    ``refs`` = num_words input refs, num_words output refs, then the two
+    scratch refs: items VMEM [2, block_t, block_g] and a DMA semaphore [2].
+    """
+    layout = program.layout
+    nw = layout.num_words
+    in_refs, out_refs = refs[:nw], refs[nw:2 * nw]
+    scratch, sem = refs[2 * nw], refs[2 * nw + 1]
+    gi = pl.program_id(0)
+
+    def item_dma(slot, ci):
+        return pltpu.make_async_copy(
+            items_hbm.at[pl.ds(ci * block_t, block_t),
+                         pl.ds(gi * block_g, block_g)],
+            scratch.at[slot], sem.at[slot])
+
+    item_dma(0, 0).start()
+
+    q = q_ref[0, :]
+    seed = seed_ref[0]
+    g_ids = _lane_ids(gi, block_g, seed_ref[2])
+    scalars = tuple(seed_ref[3 + k] for k in range(len(layout.scalar_names)))
+    planes0 = layout.unpack_words(tuple(r[0, :] for r in in_refs))
+
+    def chunk(ci, planes):
+        slot = jax.lax.rem(ci, 2)
+
+        @pl.when(ci + 1 < n_chunks)
+        def _prefetch():
+            item_dma(jax.lax.rem(ci + 1, 2), ci + 1).start()
+
+        item_dma(slot, ci).wait()
+        t0 = seed_ref[1] + ci * block_t
+
+        def body(i, pls):
+            it = scratch[slot, i, :]
+            r = crng.counter_uniform(seed, t0 + i, g_ids)
+            ctx = frugal.TickCtx(quantile=q, t=t0 + i, seed=seed,
+                                 lanes=g_ids, scalars=scalars)
+            return program.run_tick(pls, it, r, ctx)
+
+        return jax.lax.fori_loop(0, block_t, body, planes)
+
+    planes = jax.lax.fori_loop(0, n_chunks, chunk, planes0)
+    for r, w in zip(out_refs, layout.pack_planes(planes)):
+        r[0, :] = w
+
+
+def _program_kernel_gpu(meta_ref, q_ref, items_ref, *state_refs, program,
+                        t_total, block_g):
+    """The Triton/GPU lowering of the SAME body. CUDA grid cells are
+    parallel CTAs with no sequential-revisit semantics, so the (G, T) grid
+    of the TPU kernel is invalid here: the grid is (G_blocks,) and the full
+    T loop runs in-kernel. Triton refs are lazy GMEM pointer views, so the
+    per-tick row load ``items_ref[i, :]`` reads [block_g] floats straight
+    from HBM (L2-cached across the warp) — no DMA choreography to write.
+    PrefetchScalarGridSpec is TPU-only, so the meta vector rides as a
+    regular [1, n] operand. No pltpu symbol is touched on this path, which
+    also makes it interpret-testable on CPU."""
+    layout = program.layout
+    nw = layout.num_words
+    in_refs, out_refs = state_refs[:nw], state_refs[nw:]
+    g_blk = pl.program_id(0)
+
+    q = q_ref[0, :]
+    seed = meta_ref[0, 0]
+    t0 = meta_ref[0, 1]
+    g_ids = _lane_ids(g_blk, block_g, meta_ref[0, 2])
+    scalars = tuple(meta_ref[0, 3 + k]
+                    for k in range(len(layout.scalar_names)))
+    planes0 = layout.unpack_words(tuple(r[0, :] for r in in_refs))
+
+    def body(i, planes):
+        it = items_ref[i, :]
+        r = crng.counter_uniform(seed, t0 + i, g_ids)
+        ctx = frugal.TickCtx(quantile=q, t=t0 + i, seed=seed, lanes=g_ids,
+                             scalars=scalars)
+        return program.run_tick(planes, it, r, ctx)
+
+    planes = jax.lax.fori_loop(0, t_total, body, planes0)
+    for r, w in zip(out_refs, layout.pack_planes(planes)):
+        r[0, :] = w
+
+
 def _seed_operand(seed, t_offset, g_offset, scalars=()) -> Array:
     """[3 + n] int32 scalar-prefetch operand: (counter seed, stream tick
     offset, fleet-global lane offset, *program scalar slots)."""
@@ -288,4 +387,106 @@ def frugal_program_pallas(
         interpret=interpret,
     )(_seed_operand(seed, t_offset, g_offset, scalars), quantile[None, :],
       items, *[w[None, :] for w in words])
+    return tuple(o[0] for o in outs)
+
+
+def frugal_program_pallas_dma(
+    program,          # core.program.LaneProgram (STATIC — compile key)
+    items: Array,     # [T, G] float32 (NaN = no-op tick), stays in HBM
+    words,            # layout.num_words state words, each [G]
+    quantile: Array,  # [G] float32
+    seed,
+    scalars=(),
+    *,
+    t_offset=0,
+    g_offset=0,
+    block_g: int = 128,
+    block_t: int = 256,
+    interpret: bool = False,
+):
+    """The Mosaic/TPU lowering with double-buffered item DMA — the path
+    `frugal_update_auto` compiles on real TPUs (and the autotuner tunes).
+
+    Contract identical to frugal_program_pallas (pre-padded shapes,
+    absolute-index RNG, updated word tuple back), but the grid is
+    (G_blocks,) with "parallel" semantics only: state planes load into
+    VMEM once, the whole T stream ticks against them, items arrive via
+    the 2-slot DMA pipeline in _program_kernel_dma. Interpret mode
+    emulates the DMA, so the bit-exactness sweep covers this path on CPU.
+    """
+    layout = program.layout
+    t, g = items.shape
+    assert t % block_t == 0 and g % block_g == 0, (t, g, block_t, block_g)
+    assert len(words) == layout.num_words, (len(words), layout.num_words)
+    n_chunks = t // block_t
+
+    state_spec = pl.BlockSpec((1, block_g), lambda gi, *_: (0, gi))
+    any_spec = pl.BlockSpec(memory_space=getattr(pltpu, "ANY", None)
+                            or pltpu.TPUMemorySpace.ANY)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(g // block_g,),
+        in_specs=[state_spec, any_spec] + [state_spec] * layout.num_words,
+        out_specs=[state_spec] * layout.num_words,
+        scratch_shapes=[
+            pltpu.VMEM((2, block_t, block_g), items.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    outs = pl.pallas_call(
+        functools.partial(_program_kernel_dma, program=program,
+                          block_t=block_t, block_g=block_g,
+                          n_chunks=n_chunks),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((1, g), dt)
+                   for dt in layout.word_dtypes],
+        compiler_params=_CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(_seed_operand(seed, t_offset, g_offset, scalars), quantile[None, :],
+      items, *[w[None, :] for w in words])
+    return tuple(o[0] for o in outs)
+
+
+def frugal_program_pallas_gpu(
+    program,          # core.program.LaneProgram (STATIC — compile key)
+    items: Array,     # [T, G] float32 (NaN = no-op tick)
+    words,            # layout.num_words state words, each [G]
+    quantile: Array,  # [G] float32
+    seed,
+    scalars=(),
+    *,
+    t_offset=0,
+    g_offset=0,
+    block_g: int = 128,
+    interpret: bool = False,
+):
+    """The Triton/GPU lowering of the dense body (see _program_kernel_gpu).
+
+    Contract identical to frugal_program_pallas except there is no
+    block_t: each of the G_blocks CTAs runs the full T loop in-kernel
+    (CUDA grids have no sequential-revisit semantics, so a T grid axis
+    cannot exist here). Requires G % block_g == 0 only. No pltpu symbols,
+    so interpret mode runs this exact path on CPU."""
+    layout = program.layout
+    t, g = items.shape
+    assert g % block_g == 0, (g, block_g)
+    assert len(words) == layout.num_words, (len(words), layout.num_words)
+    n_meta = 3 + len(layout.scalar_names)
+
+    state_spec = pl.BlockSpec((1, block_g), lambda gi: (0, gi))
+    outs = pl.pallas_call(
+        functools.partial(_program_kernel_gpu, program=program, t_total=t,
+                          block_g=block_g),
+        grid=(g // block_g,),
+        in_specs=[pl.BlockSpec((1, n_meta), lambda gi: (0, 0)),
+                  state_spec,
+                  pl.BlockSpec((t, block_g), lambda gi: (0, gi))]
+        + [state_spec] * layout.num_words,
+        out_specs=[state_spec] * layout.num_words,
+        out_shape=[jax.ShapeDtypeStruct((1, g), dt)
+                   for dt in layout.word_dtypes],
+        interpret=interpret,
+    )(_seed_operand(seed, t_offset, g_offset, scalars)[None, :],
+      quantile[None, :], items, *[w[None, :] for w in words])
     return tuple(o[0] for o in outs)

@@ -29,25 +29,43 @@ loudly with a migration pointer instead of an ImportError five frames up.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 
 import jax
 import jax.numpy as jnp
 
+from repro.configs.platform import detect_platform, supports_compiled_kernels
 from repro.core import frugal
 from repro.core import program as program_mod
 from repro.core import rng as crng
 
-from .frugal_update import frugal_program_pallas, frugal_program_scatter_pallas
+from .frugal_update import (
+    frugal_program_pallas,
+    frugal_program_pallas_dma,
+    frugal_program_pallas_gpu,
+    frugal_program_scatter_pallas,
+)
 
 Array = jax.Array
 
+# compiled lowering per platform: Mosaic DMA kernel on TPU, Triton body on
+# GPU, the (G, T) revisit grid as the interpret-mode/test workhorse
+_PLATFORM_KERNEL = {"tpu": "dma", "gpu": "gpu"}
+
 
 def _on_tpu() -> bool:
-    try:
-        return jax.devices()[0].platform == "tpu"
-    except Exception:  # pragma: no cover - device init failure
-        return False
+    return detect_platform() == "tpu"
+
+
+def _compiled_refusal(entry: str) -> ValueError:
+    return ValueError(
+        f"{entry}(interpret=False) requests the COMPILED Pallas kernel, but "
+        f"the local platform is {detect_platform()!r} — the kernel family "
+        "lowers on tpu (Mosaic) and gpu (Triton) only. Pass interpret=True "
+        "for the interpret-mode kernel, or use frugal_update_auto(...), "
+        "which dispatches the right lowering per platform (with roofline-"
+        "autotuned blocks) and the jitted jnp scan elsewhere.")
 
 
 def _pad_items(items: Array, block_t: int, block_g: int) -> Array:
@@ -70,9 +88,9 @@ def _pad_state(x: Array, block_g: int, fill: float) -> Array:
 # ------------------------------------------------------------------ blocked
 @functools.partial(jax.jit,
                    static_argnames=("program", "block_g", "block_t",
-                                    "interpret"))
+                                    "interpret", "kernel"))
 def _blocked_jit(items, planes, quantile, seed, scalars, t_offset, g_offset,
-                 *, program, block_g, block_t, interpret):
+                 *, program, block_g, block_t, interpret, kernel):
     layout = program.layout
     g = planes[0].shape[0]
     dt = planes[0].dtype
@@ -82,17 +100,27 @@ def _blocked_jit(items, planes, quantile, seed, scalars, t_offset, g_offset,
     q_p = _pad_state(jnp.broadcast_to(jnp.asarray(quantile, dt), (g,)),
                      block_g, 0.5)
     words = layout.pack_planes(planes_p)
-    out_words = frugal_program_pallas(
-        program, items, words, q_p, seed, scalars, t_offset=t_offset,
-        g_offset=g_offset, block_g=block_g, block_t=block_t,
-        interpret=interpret)
+    common = dict(t_offset=t_offset, g_offset=g_offset, interpret=interpret)
+    if kernel == "dma":
+        out_words = frugal_program_pallas_dma(
+            program, items, words, q_p, seed, scalars, block_g=block_g,
+            block_t=block_t, **common)
+    elif kernel == "gpu":
+        out_words = frugal_program_pallas_gpu(
+            program, items, words, q_p, seed, scalars, block_g=block_g,
+            **common)
+    else:
+        out_words = frugal_program_pallas(
+            program, items, words, q_p, seed, scalars, block_g=block_g,
+            block_t=block_t, **common)
     out = layout.unpack_words(out_words)
     return tuple(p.astype(dt)[:g] for p in out)
 
 
 def frugal_update_blocked(items, planes, quantile, seed, t_offset=0,
                           g_offset=0, *, program, block_g: int = 128,
-                          block_t: int = 256, interpret: bool = True):
+                          block_t: int = 256, interpret=True,
+                          kernel: str = "grid"):
     """One program-parameterized Pallas dispatch over a [T, G] block.
 
     `planes` is the program's ordered plane tuple (layout.plane_fields),
@@ -101,7 +129,19 @@ def frugal_update_blocked(items, planes, quantile, seed, t_offset=0,
     absolute stream tick of items[0] so chunked ingestion reproduces the
     unchunked trajectory; `g_offset` the absolute lane index of column 0 so
     a lane-sharded fleet reproduces the single-device trajectory.
+
+    `kernel` picks the lowering ("grid" = the (G, T) revisit grid, "dma" =
+    the Mosaic double-buffered DMA path, "gpu" = the Triton body); every
+    choice is bit-identical. `interpret` arms: True runs the kernel in
+    interpret mode anywhere (the default — this entry point doubles as the
+    test harness); False demands the COMPILED lowering and raises a
+    ValueError off tpu/gpu instead of crashing in Mosaic; None means
+    "compiled where the platform supports it, interpret elsewhere".
     """
+    if interpret is None:
+        interpret = not supports_compiled_kernels()
+    elif interpret is False and not supports_compiled_kernels():
+        raise _compiled_refusal("frugal_update_blocked")
     base = program_mod.family_base(program.kernel_family)
     scalars = tuple(jnp.asarray(v, jnp.int32)
                     for v in program.scalar_values())
@@ -110,7 +150,7 @@ def frugal_update_blocked(items, planes, quantile, seed, t_offset=0,
                         jnp.asarray(t_offset, jnp.int32),
                         jnp.asarray(g_offset, jnp.int32), program=base,
                         block_g=block_g, block_t=block_t,
-                        interpret=interpret)
+                        interpret=bool(interpret), kernel=kernel)
 
 
 # --------------------------------------------------------------------- auto
@@ -136,25 +176,85 @@ def _cpu_program(items, planes, quantile, seed, scalars, t_offset, g_offset,
     return out
 
 
+# --- block override: the test seam proving tuned blocks are pure chunking.
+# When active, frugal_update_auto routes through the interpret-mode Pallas
+# kernel with the override's (possibly autotuned) blocks even on CPU, so the
+# conftest bit-exactness sweep exercises the exact facade path a TPU/GPU
+# user gets — different blocking, same trajectory.
+_BLOCK_OVERRIDE = None
+
+
+@contextlib.contextmanager
+def block_override(block_g=None, block_t=None, *, autotune_hw=None,
+                   kernel: str = "dma"):
+    """Force frugal_update_auto through the interpret-mode Pallas `kernel`
+    with explicit blocks — or, when `autotune_hw` names an HwSpec (e.g.
+    "tpu-v5e"), with blocks the roofline autotuner picks for that hardware.
+    Deterministic, so tests can pin tuned-vs-default equality on CPU."""
+    global _BLOCK_OVERRIDE
+    prev = _BLOCK_OVERRIDE
+    _BLOCK_OVERRIDE = dict(block_g=block_g, block_t=block_t,
+                           autotune_hw=autotune_hw, kernel=kernel)
+    try:
+        yield
+    finally:
+        _BLOCK_OVERRIDE = prev
+
+
+def _tuned_blocks(program, g_lanes, t, hw=None):
+    """(block_g, block_t) from the roofline autotuner; the repo defaults on
+    any hardware the registry refuses to price."""
+    from repro.roofline.autotune import autotune_blocks
+
+    return autotune_blocks(program, int(g_lanes), int(t), 1, hw=hw)
+
+
 def frugal_update_auto(items, planes, quantile, key=None, *, seed=None,
                        program, t_offset=0, g_offset=0, lanes_per_group=1,
                        **kw):
-    """Program-parameterized fused dispatch: Pallas on TPU, the jitted
-    program scan elsewhere — bit-identical results.
+    """Program-parameterized fused dispatch: the compiled Pallas lowering
+    on TPU (Mosaic, double-buffered item DMA) and GPU (Triton), the jitted
+    program scan elsewhere — bit-identical results everywhere.
+
+    On the compiled paths (block_g, block_t) come from the roofline
+    autotuner (repro.roofline.autotune, cached per family × layout × hw ×
+    shape) unless the caller passes blocks explicitly — zero API change
+    for tuned blocks.
 
     With `lanes_per_group` = Q > 1, `planes`/`quantile` hold G·Q lanes
     while `items` stays [T, G]: the host→device transfer carries only the
     group columns and the Q-fold broadcast happens on device (in the scan
-    tick off TPU; as one device-side repeat ahead of the Pallas dispatch on
-    TPU).
+    tick off the compiled paths; as one device-side repeat ahead of the
+    Pallas dispatch on them).
     """
     s = _as_seed(key, seed)
-    if _on_tpu():
+    plat = detect_platform()
+    ov = _BLOCK_OVERRIDE
+    if ov is not None or plat in _PLATFORM_KERNEL:
         if lanes_per_group > 1:
             items = jnp.repeat(items, lanes_per_group, axis=1)
+        g_lanes = planes[0].shape[0]
+        if ov is not None:
+            hw = None
+            if ov["autotune_hw"] is not None:
+                from repro.roofline.analysis import hw_for
+                hw = hw_for(ov["autotune_hw"])
+            bg, bt = _tuned_blocks(program, g_lanes, items.shape[0], hw=hw) \
+                if hw is not None else (None, None)
+            kw.setdefault("block_g", ov["block_g"] or bg or 128)
+            kw.setdefault("block_t", ov["block_t"] or bt or 256)
+            return frugal_update_blocked(items, planes, quantile, s,
+                                         t_offset, g_offset, program=program,
+                                         interpret=True, kernel=ov["kernel"],
+                                         **kw)
+        if "block_g" not in kw or "block_t" not in kw:
+            bg, bt = _tuned_blocks(program, g_lanes, items.shape[0])
+            kw.setdefault("block_g", bg)
+            kw.setdefault("block_t", bt)
         return frugal_update_blocked(items, planes, quantile, s, t_offset,
                                      g_offset, program=program,
-                                     interpret=False, **kw)
+                                     interpret=False,
+                                     kernel=_PLATFORM_KERNEL[plat], **kw)
     dt = planes[0].dtype
     q = jnp.broadcast_to(jnp.asarray(quantile, dt), planes[0].shape)
     scalars = tuple(jnp.asarray(v, jnp.int32)
@@ -236,6 +336,16 @@ def frugal_update_sparse(lanes, items, mask, planes, ticks, quantile,
     On TPU the round runs as the gather→tick→scatter Pallas kernel
     (kernels/frugal_update.py) against resident state; elsewhere as the
     jitted jnp scatter pair. Bit-identical either way.
+
+    `interpret` arms: None (default) picks per platform — the compiled
+    scatter kernel on TPU, the jitted XLA scatter pair elsewhere (native
+    scatters ARE the O(events) path on cpu/gpu). True forces the scatter
+    kernel in interpret mode anywhere (test harness). False demands the
+    compiled scatter kernel, which is a Mosaic-only lowering — off TPU it
+    raises a ValueError naming frugal_update_auto instead of crashing in
+    the TPU lowering (the old dispatch forced the Pallas path for ANY
+    non-None `interpret`, so an explicit False off-TPU went down in
+    flames).
     """
     base = program_mod.family_base(program.kernel_family)
     scalars = tuple(jnp.asarray(v, jnp.int32) for v in scalars) \
@@ -244,7 +354,12 @@ def frugal_update_sparse(lanes, items, mask, planes, ticks, quantile,
     mask = jnp.asarray(mask, jnp.int32)
     items = jnp.asarray(items, planes[0].dtype)
     seed = jnp.asarray(seed, jnp.int32)
-    use_pallas = _on_tpu() if interpret is None else True
+    if interpret is None:
+        use_pallas = _on_tpu()
+    elif interpret is False and not _on_tpu():
+        raise _compiled_refusal("frugal_update_sparse")
+    else:
+        use_pallas = True
     if use_pallas:
         k = lanes.shape[0]
         kp = (-k) % block_k

@@ -257,7 +257,9 @@ def run_cell(arch: str, shape: str, mesh_kind: str, outdir: str,
         tokens = (specs_lib.SHAPES[shape]["batch"] *
                   (1 if kind == "decode" else specs_lib.SHAPES[shape]["seq"]))
         mf = model_flops(cfg, tokens, kind)
+        from repro.roofline.analysis import hw_for
         terms = roofline_terms(dev_flops, dev_bytes, dev_coll,
+                               hw=hw_for("tpu-v5e"),  # the assignment's target part
                                model_flops_global=mf, n_chips=mesh.size,
                                links=4)
         rec["roofline"] = terms

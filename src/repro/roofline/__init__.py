@@ -1,6 +1,32 @@
-"""Roofline analysis from compiled dry-run artifacts."""
+"""Roofline analysis: compiled-artifact parsing, the per-platform hardware
+registry, the frugal-kernel bandwidth model, and the block autotuner."""
 
-from .hlo_parse import collective_bytes
-from .analysis import roofline_terms, HW
+from .hlo_parse import collective_bytes, compiled_cost
+from .analysis import (
+    HW_REGISTRY,
+    HwSpec,
+    RooflineUnknownHardware,
+    detect_hw,
+    hw_for,
+    match_device_kind,
+    roofline_terms,
+)
+from .kernel_model import kernel_bytes_per_item, predict_kernel
+from .autotune import autotune_blocks, autotune_cache_info, clear_autotune_cache
 
-__all__ = ["collective_bytes", "roofline_terms", "HW"]
+__all__ = [
+    "collective_bytes",
+    "compiled_cost",
+    "HW_REGISTRY",
+    "HwSpec",
+    "RooflineUnknownHardware",
+    "detect_hw",
+    "hw_for",
+    "match_device_kind",
+    "roofline_terms",
+    "kernel_bytes_per_item",
+    "predict_kernel",
+    "autotune_blocks",
+    "autotune_cache_info",
+    "clear_autotune_cache",
+]

@@ -1,29 +1,154 @@
-"""Three-term roofline from the compiled dry-run artifact.
+"""Roofline terms + the per-platform hardware registry.
 
-Hardware constants (TPU v5e-like, per the assignment):
-  197 TFLOP/s bf16 per chip · 819 GB/s HBM · ~50 GB/s/link ICI.
+The registry replaced a hardcoded "TPU v5e-like, per the assignment" HW
+dict (and a 256-chip default) that predated this repo's fleets: every
+prediction now names the HwSpec it was computed against, the spec is
+DETECTED from the local device (`detect_hw`), and an unrecognized device
+maps to the explicit ``unknown`` entry — whose numbers are all zero and
+which every predictor REFUSES (RooflineUnknownHardware) rather than
+silently pricing a laptop like a v5e.
 
-Terms (seconds per step, PER CHIP — cost_analysis of the post-SPMD module
-reports per-device FLOPs/bytes, so no further division by chip count):
-  compute    = device_FLOPs / 197e12
-  memory     = device_HBM_bytes / 819e9
-  collective = device_wire_bytes / (50e9 × links)
+Roofline terms (seconds per step, PER CHIP — cost_analysis of the
+post-SPMD module reports per-device FLOPs/bytes, so no further division by
+chip count):
+  compute    = device_FLOPs / peak_flops
+  memory     = device_HBM_bytes / hbm_bw
+  collective = device_wire_bytes / (ici_bw_per_link × links)
 
 `links`: ICI links usable concurrently per chip for the dominant collective
-(2D torus: ~4; we use 4 for intra-pod, 1 for the DCN 'pod' axis — recorded
-with each result).
+(2D torus: ~4 intra-pod, 1 for the DCN 'pod' axis — recorded per result).
+
+The frugal-kernel bandwidth model that consumes these specs lives in
+roofline/kernel_model.py; the block autotuner in roofline/autotune.py.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, Optional
 
-HW = dict(
-    peak_flops_bf16=197e12,
-    hbm_bw=819e9,
-    ici_bw_per_link=50e9,
-    ici_links=4,
-    dcn_bw=25e9,     # per-chip share of inter-pod bandwidth (approx)
+
+class RooflineUnknownHardware(ValueError):
+    """Raised when a prediction is requested against the ``unknown``
+    HwSpec — the registry refuses to guess bandwidth numbers."""
+
+
+@dataclasses.dataclass(frozen=True)
+class HwSpec:
+    """One platform's roofline constants.
+
+    peak_flops / hbm_bw are the headline chip numbers; vmem_bytes bounds
+    what the autotuner may keep resident per core (VMEM on TPU, L2+shared
+    budget on GPU, last-level cache slice on CPU); cores is the number of
+    parallel grid executors (TensorCores / SMs / host threads) the G-block
+    grid should at least fill; grid_step_s and dma_issue_s are per-step /
+    per-transfer fixed overheads the block model charges, so the tuner
+    trades tile count against residency instead of always maxing tiles.
+    """
+
+    name: str                 # registry key, e.g. "tpu-v5e"
+    platform: str             # "tpu" | "gpu" | "cpu" | "unknown"
+    peak_flops: float         # FLOP/s (bf16 on TPU, dense fp16/bf16 on GPU)
+    hbm_bw: float             # bytes/s main-memory bandwidth
+    vmem_bytes: float         # fast-memory residency budget per core
+    cores: int                # parallel grid executors to fill
+    ici_bw_per_link: float = 0.0
+    ici_links: int = 0
+    dcn_bw: float = 0.0
+    grid_step_s: float = 1e-6     # fixed cost per grid step dispatched
+    dma_issue_s: float = 2e-6     # fixed cost per DMA/tile transfer issued
+    nominal: bool = False         # True when hbm_bw is a class estimate,
+                                  # not a measured part number (cpu entry)
+
+    @property
+    def known(self) -> bool:
+        return self.platform != "unknown"
+
+    def require_known(self) -> "HwSpec":
+        if not self.known:
+            raise RooflineUnknownHardware(
+                "roofline: local device did not match any registered "
+                "HwSpec — refusing to predict against unknown hardware. "
+                f"Registered platforms: {', '.join(sorted(HW_REGISTRY))}. "
+                "Add an entry to repro.roofline.analysis.HW_REGISTRY (or "
+                "pass hw= explicitly) to price this device.")
+        return self
+
+
+# Published part numbers (peak dense bf16/fp16 FLOP/s, HBM/DRAM bandwidth).
+# vmem: TPU VMEM per core; GPU L2+smem budget per SM kept conservative; CPU
+# an L2-slice figure. The cpu entry is NOMINAL (class-typical DDR5 dual
+# channel) — good enough to contextualize interpret-mode rows, flagged so
+# gates never anchor on it.
+HW_REGISTRY: Dict[str, HwSpec] = {
+    "tpu-v4": HwSpec("tpu-v4", "tpu", peak_flops=275e12, hbm_bw=1228e9,
+                     vmem_bytes=128 * 2**20, cores=2,
+                     ici_bw_per_link=50e9, ici_links=6, dcn_bw=25e9),
+    "tpu-v5e": HwSpec("tpu-v5e", "tpu", peak_flops=197e12, hbm_bw=819e9,
+                      vmem_bytes=128 * 2**20, cores=1,
+                      ici_bw_per_link=50e9, ici_links=4, dcn_bw=25e9),
+    "tpu-v5p": HwSpec("tpu-v5p", "tpu", peak_flops=459e12, hbm_bw=2765e9,
+                      vmem_bytes=128 * 2**20, cores=2,
+                      ici_bw_per_link=100e9, ici_links=6, dcn_bw=25e9),
+    "tpu-v6e": HwSpec("tpu-v6e", "tpu", peak_flops=918e12, hbm_bw=1640e9,
+                      vmem_bytes=128 * 2**20, cores=1,
+                      ici_bw_per_link=100e9, ici_links=4, dcn_bw=25e9),
+    "gpu-a100": HwSpec("gpu-a100", "gpu", peak_flops=312e12, hbm_bw=2039e9,
+                       vmem_bytes=40 * 2**20, cores=108,
+                       ici_bw_per_link=600e9, ici_links=1,
+                       grid_step_s=3e-6, dma_issue_s=1e-6),
+    "gpu-h100": HwSpec("gpu-h100", "gpu", peak_flops=989e12, hbm_bw=3350e9,
+                       vmem_bytes=50 * 2**20, cores=132,
+                       ici_bw_per_link=900e9, ici_links=1,
+                       grid_step_s=3e-6, dma_issue_s=1e-6),
+    "cpu": HwSpec("cpu", "cpu", peak_flops=1e12, hbm_bw=40e9,
+                  vmem_bytes=1 * 2**20, cores=8, nominal=True),
+    "unknown": HwSpec("unknown", "unknown", peak_flops=0.0, hbm_bw=0.0,
+                      vmem_bytes=0.0, cores=0),
+}
+
+# device_kind substring -> registry key, checked in order (first match
+# wins). jax reports e.g. "TPU v5 lite", "TPU v4", "NVIDIA A100-SXM4-80GB",
+# "NVIDIA H100 80GB HBM3", "cpu".
+_KIND_PATTERNS = (
+    ("tpu v5 lite", "tpu-v5e"),
+    ("tpu v5e", "tpu-v5e"),
+    ("tpu v5p", "tpu-v5p"),
+    ("tpu v5", "tpu-v5p"),
+    ("tpu v4", "tpu-v4"),
+    ("tpu v6 lite", "tpu-v6e"),
+    ("tpu v6e", "tpu-v6e"),
+    ("a100", "gpu-a100"),
+    ("h100", "gpu-h100"),
+    ("cpu", "cpu"),
 )
+
+
+def hw_for(name: str) -> HwSpec:
+    """Registry lookup by key; unknown keys are a hard error (the sentinel
+    entry is reachable as hw_for('unknown'), which every predictor then
+    refuses)."""
+    if name not in HW_REGISTRY:
+        raise KeyError(f"no HwSpec registered under {name!r}; registered: "
+                       f"{', '.join(sorted(HW_REGISTRY))}")
+    return HW_REGISTRY[name]
+
+
+def match_device_kind(kind: str) -> HwSpec:
+    """Map a jax device_kind string onto the registry; no match ->
+    the explicit ``unknown`` entry (predictors refuse it)."""
+    low = kind.lower()
+    for pat, key in _KIND_PATTERNS:
+        if pat in low:
+            return HW_REGISTRY[key]
+    return HW_REGISTRY["unknown"]
+
+
+def detect_hw(device=None) -> HwSpec:
+    """The local device's HwSpec — the registry seam every prediction,
+    autotune key, and bench meta stamp reads."""
+    from repro.configs.platform import detect_device_kind
+
+    return match_device_kind(detect_device_kind(device))
 
 
 def roofline_terms(
@@ -31,14 +156,22 @@ def roofline_terms(
     device_bytes: float,
     device_collective_bytes: float,
     *,
+    hw: HwSpec,
     model_flops_global: Optional[float] = None,
-    n_chips: int = 256,
-    links: int = 4,
+    n_chips: int = 1,
+    links: Optional[int] = None,
 ) -> Dict[str, float]:
-    compute_s = device_flops / HW["peak_flops_bf16"]
-    memory_s = device_bytes / HW["hbm_bw"]
-    coll_s = device_collective_bytes / (HW["ici_bw_per_link"] * links)
+    """Three-term roofline against an EXPLICIT HwSpec (detect_hw() or a
+    registry entry — there is no implicit default hardware anymore)."""
+    hw.require_known()
+    if links is None:
+        links = max(hw.ici_links, 1)
+    compute_s = device_flops / hw.peak_flops
+    memory_s = device_bytes / hw.hbm_bw
+    coll_s = (device_collective_bytes / (hw.ici_bw_per_link * links)
+              if device_collective_bytes else 0.0)
     terms = {
+        "hw": hw.name,
         "compute_s": compute_s,
         "memory_s": memory_s,
         "collective_s": coll_s,
@@ -53,7 +186,7 @@ def roofline_terms(
         terms["useful_compute_ratio"] = (
             model_flops_global / hlo_global if hlo_global else 0.0)
         # MFU-at-roofline: useful FLOPs / (chips × peak × step time lower bound)
-        denom = n_chips * HW["peak_flops_bf16"] * terms["step_lower_bound_s"]
+        denom = n_chips * hw.peak_flops * terms["step_lower_bound_s"]
         terms["roofline_mfu"] = model_flops_global / denom if denom else 0.0
     return terms
 

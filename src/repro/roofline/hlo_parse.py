@@ -59,6 +59,31 @@ def top_collectives(hlo_text: str, k: int = 12):
     return found[:k]
 
 
+def compiled_cost(compiled) -> Dict[str, float]:
+    """FLOPs / bytes-accessed of a ``jax.jit(...).lower(...).compile()``
+    object, via XLA's own cost_analysis — the real-cost feed for the
+    kernel bandwidth model (roofline/kernel_model.py compares its analytic
+    bytes against this).
+
+    cost_analysis() shape varies across jax versions (dict, or a list of
+    per-computation dicts); both are normalized to
+    ``{"flops": float, "bytes_accessed": float}``. On XLA:CPU
+    ``bytes accessed`` counts every post-fusion dataflow edge (fusion-
+    internal tiles included), so treat it as an UPPER bound on HBM traffic,
+    not a measurement — the analytic model should come out at or below it.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    if ca is None:
+        ca = {}
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed",
+                                       ca.get("bytes_accessed", 0.0))),
+    }
+
+
 def collective_bytes(hlo_text: str) -> Tuple[int, Dict[str, int], Dict[str, int]]:
     """Returns (total_wire_bytes, wire_bytes_by_op, op_counts)."""
     by_op: Dict[str, int] = defaultdict(int)

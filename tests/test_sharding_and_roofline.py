@@ -97,9 +97,12 @@ def test_collective_parser():
 
 
 def test_roofline_term_math():
+    from repro.roofline.analysis import hw_for
     t = roofline_terms(197e12 * 0.5, 819e9 * 0.25, 50e9 * 4 * 2.0,
+                       hw=hw_for("tpu-v5e"),
                        model_flops_global=197e12 * 0.5 * 256 * 0.8,
                        n_chips=256, links=4)
+    assert t["hw"] == "tpu-v5e"
     assert abs(t["compute_s"] - 0.5) < 1e-9
     assert abs(t["memory_s"] - 0.25) < 1e-9
     assert abs(t["collective_s"] - 2.0) < 1e-9
